@@ -1,0 +1,33 @@
+//! Figs 10-13: the mixed MR+Spark setting swept over small-job fractions
+//! (10% / 20% / 30% / 40%), DRESS vs Capacity.
+//!
+//!     cargo run --release --example mixed_workload [seed]
+
+use dress::expt::mixed_setting;
+use dress::report;
+
+fn main() {
+    let seed = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42u64);
+    println!("mixed workload sweep (20 jobs, seed {seed})\n");
+    let paper = [-76.1, -36.2, -21.9, -23.7];
+    for (i, frac) in [0.10, 0.20, 0.30, 0.40].iter().enumerate() {
+        let pair = mixed_setting(*frac, seed);
+        println!(
+            "{}",
+            report::fig_stacked_bars(
+                &format!("Fig {} — {:.0}% small jobs", 10 + i, frac * 100.0),
+                &pair.dress,
+                &pair.baseline,
+            )
+        );
+        println!(
+            "  small-job completion change: {:+.1}%  (paper: {:+.1}%)   makespan change {:+.1}%\n",
+            pair.comparison.small_completion_change_pct,
+            paper[i],
+            pair.comparison.makespan_change_pct,
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! Quickstart: run one congested 20-job mixed workload under DRESS and the
+//! Capacity baseline, and print the paper's headline metrics.
+//!
+//!     cargo run --release --example quickstart
+
+use dress::config::{ExperimentConfig, SchedKind};
+use dress::expt::run_pair;
+use dress::metrics::SchedulerSummary;
+use dress::report;
+use dress::workload::{generate, WorkloadMix};
+
+fn main() {
+    let cfg = ExperimentConfig::default(); // 5 nodes x 8 containers, paper params
+    let specs = generate(20, WorkloadMix::Mixed, 0.3, 5_000, 42);
+    println!(
+        "cluster: {} containers | workload: 20 mixed jobs, 5s arrivals, seed 42\n",
+        cfg.cluster.total_containers()
+    );
+
+    let pair = run_pair(&cfg, specs, SchedKind::Capacity);
+
+    println!(
+        "{}",
+        report::table2(&[
+            SchedulerSummary::of("capacity", &pair.baseline.system),
+            SchedulerSummary::of("dress", &pair.dress.system),
+        ])
+    );
+    let c = &pair.comparison;
+    println!("small jobs (demand <= 4): {:?}", c.small_ids);
+    println!("  completion change: {:+.1}% (paper: up to -76.1%)", c.small_completion_change_pct);
+    println!("  waiting change:    {:+.1}%", c.small_waiting_change_pct);
+    println!("  best single job:   {:+.1}%", c.best_small_reduction_pct);
+    println!("large jobs: completion change {:+.1}%", c.large_completion_change_pct);
+    println!("makespan change: {:+.1}% (paper: ~stable, +0.6%)", c.makespan_change_pct);
+}

@@ -1,0 +1,94 @@
+"""AOT bridge: lower the Layer-2 JAX graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+
+writes every artifact into the directory of ``--out`` (the Makefile keys the
+rebuild off ``model.hlo.txt``, which is the estimator module):
+
+* ``model.hlo.txt``      — estimator: (phases[256,6], tgrid[64]) -> (f32[2,64],)
+* ``taskwork.hlo.txt``   — task work: (a[64,64], x[64]) -> (f32[64],)
+* ``manifest.txt``       — shapes/constants the Rust runtime sanity-checks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_estimator() -> str:
+    lowered = jax.jit(model.estimator_model).lower(*model.estimator_example_args())
+    return to_hlo_text(lowered)
+
+
+def lower_taskwork() -> str:
+    lowered = jax.jit(model.taskwork_model).lower(*model.taskwork_example_args())
+    return to_hlo_text(lowered)
+
+
+def manifest() -> str:
+    from .kernels.release_estimator import PAD_PHASES, TIME_GRID, NUM_FIELDS
+
+    lines = [
+        "# DRESS AOT artifact manifest (read by rust/src/runtime/)",
+        f"pad_phases={PAD_PHASES}",
+        f"time_grid={TIME_GRID}",
+        f"num_fields={NUM_FIELDS}",
+        f"taskwork_dim={model.TASKWORK_DIM}",
+        f"taskwork_iters={model.TASKWORK_ITERS}",
+        f"jax_version={jax.__version__}",
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the estimator artifact; siblings written next to it")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    est = lower_estimator()
+    with open(args.out, "w") as f:
+        f.write(est)
+    print(f"wrote estimator HLO: {args.out} ({len(est)} chars)")
+
+    tw_path = os.path.join(out_dir, "taskwork.hlo.txt")
+    tw = lower_taskwork()
+    with open(tw_path, "w") as f:
+        f.write(tw)
+    print(f"wrote taskwork HLO: {tw_path} ({len(tw)} chars)")
+
+    man_path = os.path.join(out_dir, "manifest.txt")
+    with open(man_path, "w") as f:
+        f.write(manifest())
+    print(f"wrote manifest: {man_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for the DRESS resource-release estimator.
+
+`release_estimator` is the compute hot-spot: Eq. (1)-(3) of the paper,
+evaluated for a padded table of phases over a grid of future time points,
+reduced per job category (SD / LD).  `ref` holds the pure-jnp oracle the
+kernel is validated against (pytest + hypothesis).
+"""
+
+from .release_estimator import (  # noqa: F401
+    NUM_FIELDS,
+    PAD_PHASES,
+    TIME_GRID,
+    FieldIdx,
+    pack_phases,
+    release_curve,
+    release_curve_fn,
+)
+from . import ref  # noqa: F401

@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracle for the release-estimator Pallas kernel.
+
+Implements Eq. (1)-(3) of the DRESS paper with no pallas machinery; the
+kernel (and the Rust `estimator::release_model`) must agree with this to
+float32 tolerance.  Kept deliberately naive and readable.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .release_estimator import EPS, FieldIdx
+
+
+def phase_release(t, gamma, dps, c, alpha, beta):
+    """Eq. (3): containers released by one phase at time t (scalar/broadcast).
+
+    p_j(t) = ((t - gamma) / dps) * c  inside the release window, 0 outside,
+    gated by the job activity interval [alpha, beta] (Eq. 2).
+    """
+    # dps == 0 degenerates to a step: all containers release at gamma.
+    frac = jnp.where(
+        dps <= EPS, 1.0, jnp.clip((t - gamma) / jnp.maximum(dps, EPS), 0.0, 1.0)
+    )
+    in_window = (t >= gamma) & (t <= gamma + dps)
+    in_job = (t >= alpha) & (t <= beta)
+    return jnp.where(in_window & in_job, frac * c, 0.0)
+
+
+def release_curve_ref(phases, tgrid):
+    """Oracle for :func:`release_estimator.release_curve`.
+
+    Args:
+      phases: f32[P, 6] packed phase table.
+      tgrid: f32[T].
+
+    Returns:
+      f32[2, T]: per-category release curves (row 0 = SD, row 1 = LD).
+    """
+    phases = jnp.asarray(phases, dtype=jnp.float32)
+    tgrid = jnp.asarray(tgrid, dtype=jnp.float32)
+    gamma = phases[:, FieldIdx.GAMMA][:, None]
+    dps = phases[:, FieldIdx.DPS][:, None]
+    c = phases[:, FieldIdx.C][:, None]
+    alpha = phases[:, FieldIdx.ALPHA][:, None]
+    beta = phases[:, FieldIdx.BETA][:, None]
+    cat = phases[:, FieldIdx.CAT][:, None]
+
+    val = phase_release(tgrid[None, :], gamma, dps, c, alpha, beta)  # [P, T]
+    sd = jnp.sum(val * (1.0 - cat), axis=0)
+    ld = jnp.sum(val * cat, axis=0)
+    return jnp.stack([sd, ld])

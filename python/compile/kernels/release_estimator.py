@@ -1,0 +1,126 @@
+"""Pallas kernel for the DRESS per-phase resource-release estimator.
+
+Implements the paper's estimation function (Eq. 1-3):
+
+    p_j(t) = ((t - gamma_j) / dps_j) * c_j     for t in [gamma_j, gamma_j + dps_j]
+           = 0                                  otherwise
+    f_i(t) = sum_j p_j(t)                       for t in [alpha_i, beta_i], else 0
+    F_k(t) = sum_{J_i in category k} f_i(t)     k in {SD, LD}
+
+The kernel evaluates a *padded table* of phases (one row per phase of every
+running job, zero-padded to PAD_PHASES) over a grid of future time points and
+reduces the result per job category.  This is the computation the Layer-3
+coordinator runs every scheduling heartbeat; it is AOT-lowered (interpret
+mode) into ``artifacts/estimator.hlo.txt`` and executed from Rust via PJRT.
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation): the time grid is blocked
+via ``BlockSpec`` so each program instance holds one T-tile in VMEM, while
+the full phase table (PAD_PHASES x NUM_FIELDS f32 = 6 KiB) stays resident
+across instances.  The inner body is a vectorized masked broadcast over
+[P, T_block] — VPU work, no gathers, no MXU requirement.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# -- Artifact-interface constants (mirrored in rust/src/runtime/taskwork.rs) --
+
+#: Number of phase rows the AOT artifact is padded to.
+PAD_PHASES = 256
+#: Number of future time points evaluated per call.
+TIME_GRID = 64
+#: Fields per phase row (see :class:`FieldIdx`).
+NUM_FIELDS = 6
+#: Time-grid block per pallas program instance.
+TIME_BLOCK = 32
+#: Guard against dps == 0 (a phase whose tasks all started simultaneously
+#: releases as a step function; epsilon turns the ramp into ~step).
+EPS = 1e-6
+
+
+class FieldIdx:
+    """Column layout of a packed phase row (f32)."""
+
+    GAMMA = 0  #: earliest task finish time in the phase (release ramp start)
+    DPS = 1    #: starting-time variation Delta-ps (ramp width)
+    C = 2      #: containers occupied by the phase
+    ALPHA = 3  #: job start time (phase contributes only inside [alpha, beta])
+    BETA = 4   #: job finish horizon
+    CAT = 5    #: job category: 0.0 = SD (small demand), 1.0 = LD (large demand)
+
+
+def _release_kernel(phases_ref, tgrid_ref, out_ref):
+    """One program instance: full phase table x one T-tile -> [2, T-tile]."""
+    ph = phases_ref[...]          # [P, NUM_FIELDS]
+    t = tgrid_ref[...]            # [Tb]
+
+    gamma = ph[:, FieldIdx.GAMMA][:, None]   # [P, 1]
+    dps = ph[:, FieldIdx.DPS][:, None]
+    c = ph[:, FieldIdx.C][:, None]
+    alpha = ph[:, FieldIdx.ALPHA][:, None]
+    beta = ph[:, FieldIdx.BETA][:, None]
+    cat = ph[:, FieldIdx.CAT][:, None]
+
+    tt = t[None, :]               # [1, Tb]
+    # dps == 0 degenerates to a step: all containers release at gamma.
+    frac = jnp.where(
+        dps <= EPS, 1.0, jnp.clip((tt - gamma) / jnp.maximum(dps, EPS), 0.0, 1.0)
+    )
+    in_window = (tt >= gamma) & (tt <= gamma + dps)
+    in_job = (tt >= alpha) & (tt <= beta)
+    val = jnp.where(in_window & in_job, frac * c, 0.0)
+
+    out_ref[0, :] = jnp.sum(val * (1.0 - cat), axis=0)
+    out_ref[1, :] = jnp.sum(val * cat, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("time_block",))
+def release_curve(phases, tgrid, *, time_block=TIME_BLOCK):
+    """Evaluate F_SD(t), F_LD(t) over ``tgrid``.
+
+    Args:
+      phases: f32[P, NUM_FIELDS] packed phase table (zero rows are inert:
+        c == 0 contributes nothing).
+      tgrid: f32[T] future time points; T must be a multiple of time_block.
+      time_block: T-tile size per pallas program instance.
+
+    Returns:
+      f32[2, T]: row 0 = SD release curve, row 1 = LD release curve.
+    """
+    p, nf = phases.shape
+    (t_len,) = tgrid.shape
+    if t_len % time_block != 0:
+        raise ValueError(f"T={t_len} not a multiple of time_block={time_block}")
+    grid = (t_len // time_block,)
+    return pl.pallas_call(
+        _release_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, nf), lambda i: (0, 0)),       # phases: VMEM-resident
+            pl.BlockSpec((time_block,), lambda i: (i,)),   # tgrid: one tile
+        ],
+        out_specs=pl.BlockSpec((2, time_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((2, t_len), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(phases.astype(jnp.float32), tgrid.astype(jnp.float32))
+
+
+def release_curve_fn(phases, tgrid):
+    """AOT entrypoint: tuple-returning wrapper (rust side unwraps tuple1)."""
+    return (release_curve(phases, tgrid),)
+
+
+def pack_phases(rows, pad=PAD_PHASES):
+    """Pack a list of (gamma, dps, c, alpha, beta, cat) tuples into the padded
+    f32[pad, NUM_FIELDS] table the kernel/artifact expects."""
+    if len(rows) > pad:
+        raise ValueError(f"{len(rows)} phases exceed pad size {pad}")
+    table = jnp.zeros((pad, NUM_FIELDS), dtype=jnp.float32)
+    if rows:
+        table = table.at[: len(rows), :].set(jnp.asarray(rows, dtype=jnp.float32))
+    return table

@@ -1,0 +1,83 @@
+"""Layer-2 JAX compute graphs for the DRESS reproduction.
+
+Two graphs are AOT-lowered to HLO text (see ``aot.py``) and executed from
+the Rust coordinator via PJRT:
+
+* :func:`estimator_model` — the scheduling hot-spot: batched evaluation of
+  the per-category resource-release curves F_SD(t), F_LD(t) (Eq. 1-3),
+  delegating the inner loop to the Layer-1 Pallas kernel.
+
+* :func:`taskwork_model` — the *work a simulated task performs* in the
+  end-to-end example: a PageRank-style power iteration (``lax.scan``, not
+  unrolled — see DESIGN.md §Perf), matching the paper's HiBench PageRank /
+  NWeight workloads.  This grounds the simulator in real PJRT compute.
+
+Python never runs on the request path; these are build-time definitions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.release_estimator import (
+    PAD_PHASES,
+    TIME_GRID,
+    NUM_FIELDS,
+    release_curve,
+)
+
+#: Matrix side for the task-work power iteration.
+TASKWORK_DIM = 64
+#: Power-iteration steps per task work unit.
+TASKWORK_ITERS = 8
+
+
+def estimator_model(phases, tgrid):
+    """F(t) evaluation for the coordinator (tuple-returning for AOT).
+
+    Args:
+      phases: f32[PAD_PHASES, NUM_FIELDS] packed phase table.
+      tgrid: f32[TIME_GRID] future time points (relative ms).
+
+    Returns:
+      1-tuple of f32[2, TIME_GRID]: SD and LD release curves.
+    """
+    return (release_curve(phases, tgrid),)
+
+
+def taskwork_model(a, x):
+    """One task work unit: ``TASKWORK_ITERS`` steps of normalized power
+    iteration on a synthetic adjacency matrix (PageRank-like).
+
+    Args:
+      a: f32[TASKWORK_DIM, TASKWORK_DIM] column-stochastic-ish matrix.
+      x: f32[TASKWORK_DIM] initial rank vector.
+
+    Returns:
+      1-tuple of f32[TASKWORK_DIM]: the converged-ish rank vector (L1 norm 1).
+    """
+
+    def step(v, _):
+        v = a @ v
+        v = v / (jnp.sum(jnp.abs(v)) + 1e-9)
+        return v, None
+
+    out, _ = jax.lax.scan(step, x, None, length=TASKWORK_ITERS)
+    return (out,)
+
+
+def estimator_example_args():
+    """ShapeDtypeStructs matching the estimator artifact signature."""
+    return (
+        jax.ShapeDtypeStruct((PAD_PHASES, NUM_FIELDS), jnp.float32),
+        jax.ShapeDtypeStruct((TIME_GRID,), jnp.float32),
+    )
+
+
+def taskwork_example_args():
+    """ShapeDtypeStructs matching the taskwork artifact signature."""
+    return (
+        jax.ShapeDtypeStruct((TASKWORK_DIM, TASKWORK_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((TASKWORK_DIM,), jnp.float32),
+    )

@@ -1,0 +1,195 @@
+"""Kernel-vs-oracle correctness: the CORE signal for Layer 1.
+
+The Pallas release-estimator kernel must agree with the pure-jnp oracle
+(`kernels/ref.py`) on hand-written edge cases and on hypothesis-generated
+phase tables / time grids.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.release_estimator import (
+    NUM_FIELDS,
+    PAD_PHASES,
+    FieldIdx,
+    pack_phases,
+    release_curve,
+)
+
+ATOL = 1e-4
+RTOL = 1e-4
+
+
+def grid(t0, t1, n):
+    return jnp.linspace(t0, t1, n, dtype=jnp.float32)
+
+
+def assert_matches_ref(phases, tgrid, time_block=32):
+    got = np.asarray(release_curve(phases, tgrid, time_block=time_block))
+    want = np.asarray(ref.release_curve_ref(phases, tgrid))
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+    return got
+
+
+# ---------------------------------------------------------------- edge cases
+
+
+def test_empty_table_is_zero():
+    out = assert_matches_ref(pack_phases([]), grid(0, 100, 64))
+    assert np.all(out == 0.0)
+
+
+def test_single_phase_ramp_shape():
+    # gamma=10, dps=20, c=8: ramp 0 -> 8 over [10, 30], zero outside.
+    phases = pack_phases([(10.0, 20.0, 8.0, 0.0, 100.0, 0.0)])
+    t = jnp.array([0.0, 10.0, 20.0, 30.0, 31.0] + [1000.0] * 59, dtype=jnp.float32)
+    out = assert_matches_ref(phases, t)
+    np.testing.assert_allclose(out[0, :5], [0.0, 0.0, 4.0, 8.0, 0.0], atol=ATOL)
+    assert np.all(out[1] == 0.0)  # SD phase contributes nothing to LD
+
+
+def test_category_split():
+    rows = [
+        (0.0, 10.0, 4.0, 0.0, 50.0, 0.0),  # SD
+        (0.0, 10.0, 6.0, 0.0, 50.0, 1.0),  # LD
+    ]
+    out = assert_matches_ref(pack_phases(rows), grid(0, 10, 64))
+    # at t=10 both ramps are complete
+    np.testing.assert_allclose(out[0, -1], 4.0, atol=ATOL)
+    np.testing.assert_allclose(out[1, -1], 6.0, atol=ATOL)
+
+
+def test_zero_dps_is_step():
+    # dps == 0: all tasks started together; release is a step at gamma.
+    phases = pack_phases([(10.0, 0.0, 5.0, 0.0, 100.0, 0.0)])
+    t = jnp.array([9.0, 10.0, 10.5] + [500.0] * 61, dtype=jnp.float32)
+    out = assert_matches_ref(phases, t)
+    assert out[0, 0] == 0.0
+    np.testing.assert_allclose(out[0, 1], 5.0, atol=1e-2)
+    assert out[0, 2] == 0.0  # outside the zero-width window
+
+
+def test_job_interval_gates_release():
+    # Window [10, 30] but job interval [0, 15]: nothing after beta.
+    phases = pack_phases([(10.0, 20.0, 8.0, 0.0, 15.0, 0.0)])
+    t = jnp.array([12.0, 15.0, 20.0] + [500.0] * 61, dtype=jnp.float32)
+    out = assert_matches_ref(phases, t)
+    assert out[0, 0] > 0.0
+    assert out[0, 1] > 0.0
+    assert out[0, 2] == 0.0
+
+
+def test_phase_before_alpha_is_zero():
+    phases = pack_phases([(5.0, 10.0, 8.0, 20.0, 100.0, 1.0)])
+    out = assert_matches_ref(phases, grid(0, 18, 64))
+    assert np.all(out == 0.0)
+
+
+def test_full_pad_table():
+    rows = [
+        (float(i), 10.0 + i % 7, 1.0 + i % 5, 0.0, 1e4, float(i % 2))
+        for i in range(PAD_PHASES)
+    ]
+    assert_matches_ref(pack_phases(rows), grid(0, 300, 64))
+
+
+def test_release_bounded_by_total_containers():
+    rows = [(float(5 * i), 10.0, 3.0, 0.0, 1e4, 0.0) for i in range(40)]
+    out = assert_matches_ref(pack_phases(rows), grid(0, 250, 64))
+    assert np.all(out[0] <= 40 * 3.0 + 1e-3)
+    assert np.all(out >= 0.0)
+
+
+@pytest.mark.parametrize("t_len,blk", [(32, 32), (64, 32), (64, 64), (128, 32), (256, 64)])
+def test_time_block_shapes(t_len, blk):
+    rows = [(3.0, 7.0, 2.0, 0.0, 1e4, 0.0), (5.0, 9.0, 4.0, 0.0, 1e4, 1.0)]
+    phases = pack_phases(rows)
+    tgrid = grid(0, 20, t_len)
+    got = np.asarray(release_curve(phases, tgrid, time_block=blk))
+    want = np.asarray(ref.release_curve_ref(phases, tgrid))
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_bad_time_block_raises():
+    with pytest.raises(ValueError):
+        release_curve(pack_phases([]), grid(0, 1, 48), time_block=32)
+
+
+def test_pack_overflow_raises():
+    with pytest.raises(ValueError):
+        pack_phases([(0.0,) * NUM_FIELDS] * (PAD_PHASES + 1))
+
+
+# ------------------------------------------------------------- property sweep
+
+finite = st.floats(min_value=0.0, max_value=5e3, allow_nan=False, width=32)
+
+
+@st.composite
+def phase_rows(draw):
+    n = draw(st.integers(min_value=0, max_value=24))
+    rows = []
+    for _ in range(n):
+        alpha = draw(finite)
+        beta = alpha + draw(finite)
+        gamma = alpha + draw(st.floats(0.0, 1e3, width=32))
+        dps = draw(st.floats(0.0, 500.0, width=32))
+        c = draw(st.floats(0.0, 64.0, width=32))
+        cat = float(draw(st.booleans()))
+        rows.append((gamma, dps, c, alpha, beta, cat))
+    return rows
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=phase_rows(), t0=finite, span=st.floats(1.0, 5e3, width=32))
+def test_kernel_matches_ref_property(rows, t0, span):
+    phases = pack_phases(rows)
+    tgrid = grid(t0, t0 + span, 64)
+    assert_matches_ref(phases, tgrid)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=phase_rows())
+def test_curves_nonnegative_and_bounded(rows):
+    phases = pack_phases(rows)
+    out = np.asarray(release_curve(phases, grid(0, 6e3, 64)))
+    assert np.all(out >= 0.0)
+    total_c = sum(r[2] for r in rows)
+    assert np.all(out.sum(axis=0) <= total_c + 1e-2)
+
+
+# ----------------------------------------------------- extra robustness
+
+
+def test_accepts_f64_inputs_by_casting():
+    rows = [(10.0, 20.0, 8.0, 0.0, 100.0, 0.0)]
+    phases64 = jnp.asarray(rows + [(0.0,) * NUM_FIELDS] * (PAD_PHASES - 1),
+                           dtype=jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    t = grid(0, 50, 64).astype(phases64.dtype)
+    out = release_curve(phases64, t)
+    assert out.dtype == jnp.float32
+    want = ref.release_curve_ref(phases64, t)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=ATOL, rtol=RTOL)
+
+
+def test_large_beta_sentinel_matches_rust_side():
+    # Rust saturates beta=f64::MAX to 3e38 before packing; the kernel must
+    # treat that as "job still running".
+    phases = pack_phases([(10.0, 20.0, 8.0, 0.0, 3.0e38, 1.0)])
+    out = assert_matches_ref(phases, grid(0, 40, 64))
+    assert out[1].max() > 0.0
+
+
+def test_overlapping_phases_superpose():
+    rows = [
+        (0.0, 100.0, 10.0, 0.0, 1e6, 0.0),
+        (50.0, 100.0, 20.0, 0.0, 1e6, 0.0),
+    ]
+    out = assert_matches_ref(pack_phases(rows), jnp.asarray(
+        [75.0] + [1e6] * 63, dtype=jnp.float32))
+    # At t=75: phase1 ramp 7.5, phase2 ramp (25/100)*20 = 5 -> 12.5.
+    np.testing.assert_allclose(out[0, 0], 12.5, atol=1e-3)

@@ -1,0 +1,69 @@
+"""Layer-2 model checks: estimator wrapper + taskwork power iteration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.release_estimator import pack_phases
+
+
+def test_estimator_model_shape_and_tuple():
+    phases = pack_phases([(1.0, 2.0, 3.0, 0.0, 100.0, 0.0)])
+    tgrid = jnp.linspace(0, 10, model.TIME_GRID if hasattr(model, "TIME_GRID") else 64,
+                         dtype=jnp.float32)
+    out = model.estimator_model(phases, tgrid)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (2, 64)
+    np.testing.assert_allclose(
+        np.asarray(out[0]), np.asarray(ref.release_curve_ref(phases, tgrid)),
+        atol=1e-4, rtol=1e-4)
+
+
+def _stochastic(key, n):
+    a = jax.random.uniform(key, (n, n), dtype=jnp.float32) + 0.01
+    return a / a.sum(axis=0, keepdims=True)
+
+
+def test_taskwork_l1_normalized():
+    key = jax.random.PRNGKey(0)
+    a = _stochastic(key, model.TASKWORK_DIM)
+    x = jnp.ones((model.TASKWORK_DIM,), jnp.float32) / model.TASKWORK_DIM
+    (out,) = model.taskwork_model(a, x)
+    assert out.shape == (model.TASKWORK_DIM,)
+    np.testing.assert_allclose(float(jnp.sum(jnp.abs(out))), 1.0, atol=1e-4)
+
+
+def test_taskwork_deterministic():
+    key = jax.random.PRNGKey(7)
+    a = _stochastic(key, model.TASKWORK_DIM)
+    x = jnp.ones((model.TASKWORK_DIM,), jnp.float32)
+    (o1,) = model.taskwork_model(a, x)
+    (o2,) = model.taskwork_model(a, x)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_taskwork_matches_manual_unroll():
+    key = jax.random.PRNGKey(3)
+    a = _stochastic(key, model.TASKWORK_DIM)
+    x = jnp.ones((model.TASKWORK_DIM,), jnp.float32)
+    v = x
+    for _ in range(model.TASKWORK_ITERS):
+        v = a @ v
+        v = v / (jnp.sum(jnp.abs(v)) + 1e-9)
+    (out,) = model.taskwork_model(a, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_taskwork_converges_to_positive_vector(seed):
+    key = jax.random.PRNGKey(seed)
+    a = _stochastic(key, model.TASKWORK_DIM)
+    x = jnp.ones((model.TASKWORK_DIM,), jnp.float32)
+    (out,) = model.taskwork_model(a, x)
+    o = np.asarray(out)
+    assert np.all(np.isfinite(o))
+    assert np.all(o >= -1e-6)  # positive matrix keeps the iterate nonnegative

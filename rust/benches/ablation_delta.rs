@@ -1,0 +1,49 @@
+//! Ablation bench: the two design choices DESIGN.md calls out —
+//! dynamic δ (Algorithm 3) and the release estimator (Algorithms 1-2) —
+//! each removed in turn, vs the Capacity baseline.
+
+use dress::bench_harness::{bench_quick, black_box};
+use dress::expt::{ablation, DressVariant};
+use dress::util::stats;
+
+fn main() {
+    println!("=== ablation: DRESS design choices (20 mixed jobs vs Capacity) ===");
+    println!(
+        "{:<14} {:>14} {:>14} {:>14} {:>12}",
+        "variant", "small-compl%", "small-wait%", "makespan%", "final-δ"
+    );
+    for (name, v) in [
+        ("full", DressVariant::Full),
+        ("static-delta", DressVariant::StaticDelta),
+        ("no-estimator", DressVariant::NoEstimator),
+    ] {
+        // Average over seeds to smooth single-run noise.
+        let mut sc = Vec::new();
+        let mut sw = Vec::new();
+        let mut mk = Vec::new();
+        let mut final_delta = 0.0;
+        for seed in [42u64, 7, 1337] {
+            let pair = ablation(v, seed);
+            sc.push(pair.comparison.small_completion_change_pct);
+            sw.push(pair.comparison.small_waiting_change_pct);
+            mk.push(pair.comparison.makespan_change_pct);
+            final_delta = pair
+                .dress
+                .delta_history
+                .last()
+                .map(|&(_, d)| d)
+                .unwrap_or(f64::NAN);
+        }
+        println!(
+            "{:<14} {:>13.1}% {:>13.1}% {:>13.1}% {:>12.3}",
+            name,
+            stats::mean(&sc),
+            stats::mean(&sw),
+            stats::mean(&mk),
+            final_delta
+        );
+    }
+    bench_quick("ablation/full-variant-run", |i| {
+        black_box(ablation(DressVariant::Full, i as u64 + 1));
+    });
+}

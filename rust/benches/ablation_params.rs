@@ -1,0 +1,49 @@
+//! Parameter-sensitivity ablation — the analysis the paper omitted "due to
+//! the page limit" (§V.A.1): sweep the phase window pw, the thresholds
+//! t_s/t_e, the initial reserve δ₀, and the heartbeat period, reporting the
+//! small-job completion change and makespan change vs Capacity.
+
+use dress::bench_harness::{bench_quick, black_box};
+use dress::config::{ExperimentConfig, SchedKind};
+use dress::expt::run_pair;
+use dress::util::stats;
+use dress::workload::{generate, WorkloadMix};
+
+fn sweep(label: &str, apply: impl Fn(&mut ExperimentConfig, f64), values: &[f64]) {
+    println!("-- sweep: {label}");
+    for &v in values {
+        let mut sc = Vec::new();
+        let mut mk = Vec::new();
+        for seed in [42u64, 7, 1337] {
+            let mut cfg = ExperimentConfig::default();
+            apply(&mut cfg, v);
+            let specs = generate(20, WorkloadMix::Mixed, 0.3, 5_000, seed);
+            let pair = run_pair(&cfg, specs, SchedKind::Capacity);
+            sc.push(pair.comparison.small_completion_change_pct);
+            mk.push(pair.comparison.makespan_change_pct);
+        }
+        println!(
+            "   {label} = {v:>8}   small-compl {:>7.1}%   makespan {:>6.1}%",
+            stats::mean(&sc),
+            stats::mean(&mk)
+        );
+    }
+}
+
+fn main() {
+    println!("=== ablation: estimator/scheduler parameters (3-seed means) ===");
+    sweep("pw_ms", |c, v| c.sched.pw_ms = v as u64, &[2_000.0, 5_000.0, 10_000.0, 20_000.0]);
+    sweep("ts_te", |c, v| {
+        c.sched.ts = v as u32;
+        c.sched.te = v as u32;
+    }, &[1.0, 3.0, 5.0, 9.0]);
+    sweep("delta0", |c, v| c.sched.delta0 = v, &[0.05, 0.10, 0.25, 0.50]);
+    sweep("hb_ms", |c, v| c.cluster.hb_ms = v as u64, &[500.0, 1_000.0, 3_000.0]);
+    sweep("failure_prob", |c, v| c.cluster.task_failure_prob = v, &[0.0, 0.05, 0.15]);
+
+    bench_quick("ablation-params/one-pair", |i| {
+        let cfg = ExperimentConfig::default();
+        let specs = generate(20, WorkloadMix::Mixed, 0.3, 5_000, i as u64);
+        black_box(run_pair(&cfg, specs, SchedKind::Capacity));
+    });
+}

@@ -1,0 +1,56 @@
+//! Perf: end-to-end PJRT paths — taskwork execution latency and the
+//! full live-mode run (real compute per task).
+
+use dress::bench_harness::{bench, bench_quick, black_box};
+use dress::runtime::{find_artifacts_dir, Runtime, TaskWork};
+
+fn main() {
+    println!("=== perf: end-to-end PJRT ===");
+    let Some(dir) = find_artifacts_dir() else {
+        println!("(artifacts/ missing — run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let tw = TaskWork::load(&rt, dir.join("taskwork.hlo.txt").to_str().unwrap())
+        .expect("load taskwork");
+
+    bench("e2e/taskwork-unit (8 power steps, 64x64)", |i| {
+        black_box(tw.run_units(i as u64, 1).expect("run"));
+    });
+    bench_quick("e2e/taskwork-8units", |i| {
+        black_box(tw.run_units(i as u64, 8).expect("run"));
+    });
+
+    // Live mini-run: 3 jobs, 4 workers, real compute.
+    use dress::config::{SchedConfig, SchedKind};
+    use dress::live::{run_live, LiveConfig};
+    use dress::workload::{generate, WorkloadMix};
+    let mut specs = generate(3, WorkloadMix::Mixed, 0.4, 300, 42);
+    for s in specs.iter_mut() {
+        for p in s.phases.iter_mut() {
+            p.tasks.truncate(3);
+            for t in p.tasks.iter_mut() {
+                t.duration_ms = t.duration_ms.min(1_500);
+            }
+        }
+        s.demand = s.demand.min(3);
+        s.phases.truncate(1);
+    }
+    let cfg = LiveConfig {
+        workers: 4,
+        hb: std::time::Duration::from_millis(20),
+        units_per_sec: 0.5,
+        max_wall: std::time::Duration::from_secs(60),
+    };
+    let sched_cfg = SchedConfig { kind: SchedKind::Dress, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let sched = dress::sched::build(&sched_cfg, 4);
+    let rep = run_live(&cfg, &sched_cfg, specs, sched, dir.join("taskwork.hlo.txt").to_str().unwrap())
+        .expect("live run");
+    println!(
+        "bench e2e/live-3job-run: {:?} wall, {} tasks, checksum {:.3}",
+        t0.elapsed(),
+        rep.tasks_run,
+        rep.checksum
+    );
+}

@@ -1,0 +1,41 @@
+//! Perf: DES engine event throughput and full-experiment wall time.
+//! Target: >= 10^6 events/s equivalent (DESIGN.md §8).
+
+use dress::bench_harness::{bench, bench_quick, black_box};
+use dress::config::{ExperimentConfig, SchedKind};
+use dress::sim::engine::run_experiment;
+use dress::sim::{Event, EventQueue};
+use dress::workload::{generate, WorkloadMix};
+
+fn main() {
+    println!("=== perf: DES engine ===");
+
+    // Raw event-queue throughput (push+pop of 10k events per iteration).
+    bench("engine/event-queue/10k-push-pop", |i| {
+        let mut q = EventQueue::new();
+        for k in 0..10_000u64 {
+            q.push((i as u64 * 7 + k * 13) % 100_000, Event::SchedTick);
+        }
+        while let Some(e) = q.pop() {
+            black_box(e);
+        }
+    });
+
+    // Full 20-job experiments per scheduler.
+    for kind in [SchedKind::Capacity, SchedKind::Dress] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sched.kind = kind;
+        bench_quick(&format!("engine/20job-experiment/{}", kind.name()), |i| {
+            let specs = generate(20, WorkloadMix::Mixed, 0.3, 5_000, i as u64 + 1);
+            black_box(run_experiment(&cfg, specs));
+        });
+    }
+
+    // Scale: 100-job congested run under DRESS.
+    let mut cfg = ExperimentConfig::default();
+    cfg.sched.kind = SchedKind::Dress;
+    bench_quick("engine/100job-experiment/dress", |i| {
+        let specs = generate(100, WorkloadMix::Mixed, 0.3, 2_000, i as u64 + 1);
+        black_box(run_experiment(&cfg, specs));
+    });
+}

@@ -1,0 +1,51 @@
+//! Perf: Eq. (1)-(3) evaluation — pure-Rust model vs the PJRT-executed
+//! Pallas artifact, across phase-table occupancies.
+
+use dress::bench_harness::{bench, black_box};
+use dress::estimator::accel::PjrtEstimator;
+use dress::estimator::{eval_curves, predicted_release, PhaseEstimate};
+use dress::runtime::{find_artifacts_dir, Runtime, TIME_GRID};
+
+fn phases(n: usize) -> Vec<PhaseEstimate> {
+    (0..n)
+        .map(|i| PhaseEstimate {
+            gamma: 1_000.0 + i as f64 * 37.0,
+            dps: 500.0 + (i % 11) as f64 * 90.0,
+            c: 1.0 + (i % 8) as f64,
+            alpha: 0.0,
+            beta: f64::MAX,
+            cat: (i % 2) as u8,
+        })
+        .collect()
+}
+
+fn main() {
+    println!("=== perf: estimator Eq.(1)-(3) ===");
+    let grid: Vec<f64> = (0..TIME_GRID).map(|i| 900.0 + i as f64 * 40.0).collect();
+    let gridf: Vec<f32> = grid.iter().map(|&x| x as f32).collect();
+
+    for n in [8usize, 64, 256] {
+        let ps = phases(n);
+        bench(&format!("estimator/rust-curves/p{n}"), |_| {
+            black_box(eval_curves(&ps, &grid));
+        });
+        bench(&format!("estimator/rust-predict/p{n}"), |_| {
+            black_box(predicted_release(&ps, 0, 1_000.0, 2_000.0));
+        });
+    }
+
+    match find_artifacts_dir() {
+        Some(dir) => {
+            let rt = Runtime::cpu().expect("PJRT CPU client");
+            let path = dir.join("model.hlo.txt");
+            let mut est = PjrtEstimator::load(&rt, path.to_str().unwrap()).expect("load artifact");
+            for n in [8usize, 64, 256] {
+                let ps = phases(n);
+                bench(&format!("estimator/pjrt-curves/p{n}"), |_| {
+                    black_box(est.curves(&ps, &gridf).expect("pjrt exec"));
+                });
+            }
+        }
+        None => println!("(artifacts/ missing — skipping PJRT side; run `make artifacts`)"),
+    }
+}

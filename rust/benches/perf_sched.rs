@@ -1,0 +1,41 @@
+//! Perf: scheduler decision latency per heartbeat (all four schedulers)
+//! at 20 and 200 active jobs.  Target: <= 10 µs at 20 jobs (DESIGN.md §8).
+
+use dress::bench_harness::{bench, black_box};
+use dress::config::{SchedConfig, SchedKind};
+use dress::sched::{self, ClusterView, JobView};
+
+fn mk_jobs(n: u32) -> Vec<JobView> {
+    (0..n)
+        .map(|i| JobView {
+            id: i + 1,
+            demand: 2 + (i % 24),
+            submit_ms: i as u64 * 5_000,
+            started: i % 3 == 0,
+            finished: false,
+            pending_tasks: 1 + (i % 9),
+            occupied: if i % 3 == 0 { 1 + i % 5 } else { 0 },
+        })
+        .collect()
+}
+
+fn main() {
+    println!("=== perf: scheduler decision per heartbeat ===");
+    for kind in [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress] {
+        for njobs in [20u32, 200] {
+            let cfg = SchedConfig { kind, ..Default::default() };
+            let mut s = sched::build(&cfg, 40);
+            let jobs = mk_jobs(njobs);
+            bench(&format!("sched/{}/jobs{}", kind.name(), njobs), |i| {
+                let view = ClusterView {
+                    now: i as u64 * 1_000,
+                    free: 12,
+                    total: 40,
+                    jobs: jobs.clone(),
+                    transitions: &[],
+                };
+                black_box(s.schedule(&view));
+            });
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig 1 (motivating example) and time it.
+
+use dress::bench_harness::{bench_quick, black_box};
+use dress::report::comparison_row;
+
+fn main() {
+    println!("=== repro: Fig 1 (motivating example) ===");
+    let r = dress::expt::fig1();
+    for (claim, measured) in [
+        ("FIG1.fcfs-makespan-s", r.fcfs_makespan_s),
+        ("FIG1.fcfs-avg-wait-s", r.fcfs_avg_wait_s),
+        ("FIG1.rearranged-makespan-s", r.dress_makespan_s),
+        ("FIG1.rearranged-avg-wait-s", r.dress_avg_wait_s),
+    ] {
+        let (row, _) = comparison_row(&dress::expt::paper::claim(claim), measured);
+        println!("{row}");
+    }
+    bench_quick("fig1/full-experiment", |_| {
+        black_box(dress::expt::fig1());
+    });
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Figs 2-4 (task-execution characteristic traces).
+
+use dress::bench_harness::{bench_quick, black_box};
+use dress::expt::trace_benchmark;
+use dress::jobs::Platform;
+use dress::workload::Benchmark;
+
+fn main() {
+    println!("=== repro: Figs 2-4 (task traces) ===");
+
+    // Fig 2: WordCount, 20 map + 4 reduce, visible Δps per phase.
+    let r = trace_benchmark(Benchmark::WordCount, Platform::MapReduce, 42);
+    let dps0 = r.trace.phase_dps(1, 0).unwrap();
+    let dps1 = r.trace.phase_dps(1, 1).unwrap();
+    println!("FIG2 wordcount: {} tasks, Δps(map)={}ms Δps(reduce)={}ms", r.trace.tasks.len(), dps0, dps1);
+    assert!(r.trace.tasks.len() >= 24);
+
+    // Fig 3: PageRank MR heading task — min map-task duration well under max.
+    let r = trace_benchmark(Benchmark::PageRank, Platform::MapReduce, 42);
+    let durs: Vec<u64> = r.trace.job_tasks(1).iter().filter(|t| t.phase == 0).map(|t| t.duration()).collect();
+    let (min, max) = (*durs.iter().min().unwrap(), *durs.iter().max().unwrap());
+    println!("FIG3 pagerank-mr: heading ratio min/max = {:.2} (paper: 1.26s vs 18.25s ≈ 0.07)", min as f64 / max as f64);
+
+    // Fig 4: PageRank Spark trailing task — max stage duration over median.
+    let r = trace_benchmark(Benchmark::PageRank, Platform::Spark, 42);
+    let mut durs: Vec<u64> = r.trace.job_tasks(1).iter().filter(|t| t.phase == 0).map(|t| t.duration()).collect();
+    durs.sort_unstable();
+    let trail = durs[durs.len() - 1] as f64 / durs[durs.len() - 2] as f64;
+    println!("FIG4 pagerank-spark: trailing/second = {trail:.2} (paper: 1.38)");
+
+    bench_quick("fig2-4/trace-wordcount", |i| {
+        black_box(trace_benchmark(Benchmark::WordCount, Platform::MapReduce, i as u64));
+    });
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Figs 10-13 (mixed setting, small-fraction sweep).
+
+use dress::bench_harness::{bench_quick, black_box};
+use dress::expt::mixed_setting;
+use dress::report::comparison_row;
+
+fn main() {
+    println!("=== repro: Figs 10-13 (mixed jobs, 10-40% small) ===");
+    for (fig, frac) in [(10, 0.10), (11, 0.20), (12, 0.30), (13, 0.40)] {
+        let pair = mixed_setting(frac, 42);
+        let id = format!("FIG{fig}.small-completion-change-pct");
+        let (row, _) = comparison_row(
+            &dress::expt::paper::claim(&id),
+            pair.comparison.small_completion_change_pct,
+        );
+        println!("{row}   (makespan change {:+.1}%)", pair.comparison.makespan_change_pct);
+    }
+    bench_quick("mixed/30pct-pair", |i| {
+        black_box(mixed_setting(0.3, i as u64 + 1));
+    });
+}

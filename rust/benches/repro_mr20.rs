@@ -1,0 +1,24 @@
+//! Bench: regenerate Figs 8-9 (20 MapReduce jobs).
+
+use dress::bench_harness::{bench_quick, black_box};
+use dress::expt::mr20;
+use dress::report::comparison_row;
+
+fn main() {
+    println!("=== repro: Figs 8-9 (Hadoop YARN MapReduce, 20 jobs) ===");
+    let pair = mr20(42);
+    for (claim, measured) in [
+        ("FIG8.small-waiting-change-pct", pair.comparison.small_waiting_change_pct),
+        ("FIG9.small-completion-change-pct", pair.comparison.small_completion_change_pct),
+    ] {
+        let (row, _) = comparison_row(&dress::expt::paper::claim(claim), measured);
+        println!("{row}");
+    }
+    println!(
+        "small ids {:?}; best single-job reduction {:+.1}% (paper: Job 9 waiting 189.2s -> 19.98s)",
+        pair.comparison.small_ids, pair.comparison.best_small_reduction_pct
+    );
+    bench_quick("mr20/dress-vs-capacity-pair", |i| {
+        black_box(mr20(i as u64 + 1));
+    });
+}

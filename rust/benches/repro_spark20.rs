@@ -1,0 +1,30 @@
+//! Bench: regenerate Figs 6-7 + Table II (20 Spark-on-YARN jobs).
+
+use dress::bench_harness::{bench_quick, black_box};
+use dress::expt::spark20;
+use dress::metrics::SchedulerSummary;
+use dress::report::{self, comparison_row};
+
+fn main() {
+    println!("=== repro: Figs 6-7 + Table II (Spark-on-YARN, 20 jobs) ===");
+    let pair = spark20(42);
+    for (claim, measured) in [
+        ("FIG6.small-waiting-change-pct", pair.comparison.small_waiting_change_pct),
+        ("FIG7.small-completion-change-pct", pair.comparison.small_completion_change_pct),
+        ("FIG7.large-penalized-mean-pct", pair.comparison.large_penalized_mean_pct),
+        ("TAB2.makespan-change-pct", pair.comparison.makespan_change_pct),
+    ] {
+        let (row, _) = comparison_row(&dress::expt::paper::claim(claim), measured);
+        println!("{row}");
+    }
+    println!(
+        "{}",
+        report::table2(&[
+            SchedulerSummary::of("capacity", &pair.baseline.system),
+            SchedulerSummary::of("dress", &pair.dress.system),
+        ])
+    );
+    bench_quick("spark20/dress-vs-capacity-pair", |i| {
+        black_box(spark20(i as u64 + 1));
+    });
+}

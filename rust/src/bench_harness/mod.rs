@@ -1,0 +1,116 @@
+//! Criterion-style measurement harness (offline substitute): warmup,
+//! adaptive iteration count, and a stats summary per benchmark.  Used by
+//! the `rust/benches/*.rs` binaries (`harness = false`).
+
+use crate::util::stats::{self, Summary};
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in nanoseconds.
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.summary.mean
+    }
+
+    /// Human-readable time per iteration.
+    pub fn pretty(&self) -> String {
+        format!(
+            "bench {:<40} {:>12}/iter  (median {:>12}, p95 {:>12}, n={})",
+            self.name,
+            fmt_ns(self.summary.mean),
+            fmt_ns(self.summary.median),
+            fmt_ns(self.summary.p95),
+            self.iters
+        )
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Measure `f`, auto-scaling iterations to fill `target` wall time
+/// (default 1 s via [`bench`]). `f` receives the iteration index.
+pub fn bench_with_target(name: &str, target: Duration, mut f: impl FnMut(usize)) -> BenchResult {
+    // Warmup: 2 calls (fills caches, triggers lazy init).
+    f(0);
+    f(1);
+    // Estimate a single-iteration cost.
+    let t0 = Instant::now();
+    f(2);
+    let est = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((target.as_nanos() as f64 / est) as usize).clamp(5, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t = Instant::now();
+        f(i + 3);
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        summary: stats::Summary::of(&samples),
+    }
+}
+
+/// Measure with the default 1-second target and print the result.
+pub fn bench(name: &str, f: impl FnMut(usize)) -> BenchResult {
+    let r = bench_with_target(name, Duration::from_secs(1), f);
+    println!("{}", r.pretty());
+    r
+}
+
+/// Quick variant for expensive end-to-end benches (0.3 s target).
+pub fn bench_quick(name: &str, f: impl FnMut(usize)) -> BenchResult {
+    let r = bench_with_target(name, Duration::from_millis(300), f);
+    println!("{}", r.pretty());
+    r
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0usize;
+        let r = bench_with_target("noop", Duration::from_millis(5), |_| {
+            count += 1;
+            black_box(count);
+        });
+        assert!(r.iters >= 5);
+        assert_eq!(count, r.iters + 3);
+        assert!(r.summary.mean >= 0.0);
+        assert!(!r.pretty().is_empty());
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Minimal argument parser: `dress <subcommand> [positional] [--flag value]
+//! [--switch]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (without argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("empty flag `--`".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn flag_str<'s>(&'s self, name: &str, default: &'s str) -> &'s str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let raw: Vec<String> = s.split_whitespace().map(|x| x.to_string()).collect();
+        Args::parse(&raw).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("repro fig6 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("repro"));
+        assert_eq!(a.positional, vec!["fig6", "extra"]);
+    }
+
+    #[test]
+    fn flags_with_values_and_equals() {
+        let a = parse("run --sched dress --jobs=20 --seed 7");
+        assert_eq!(a.flag("sched"), Some("dress"));
+        assert_eq!(a.flag_u64("jobs", 0).unwrap(), 20);
+        assert_eq!(a.flag_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.flag_u64("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn switches() {
+        let a = parse("run --verbose --sched fair");
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+        assert_eq!(a.flag("sched"), Some("fair"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("bench --quick");
+        assert!(a.switch("quick"));
+    }
+
+    #[test]
+    fn bad_numeric_flag_errors() {
+        let a = parse("run --jobs abc");
+        assert!(a.flag_u64("jobs", 0).is_err());
+    }
+}

@@ -1,0 +1,426 @@
+//! CLI subcommands: `run`, `repro`, `trace`, `live`, `bench`.
+
+use super::args::Args;
+use crate::config::{ExperimentConfig, SchedKind};
+use crate::expt;
+use crate::jobs::Platform;
+use crate::metrics::SchedulerSummary;
+use crate::report::{self, comparison_row};
+use crate::sim::engine::run_experiment;
+use crate::workload::{generate, Benchmark, WorkloadMix};
+
+const USAGE: &str = "\
+dress — Dynamic RESource-reservation Scheme (paper reproduction)
+
+USAGE:
+  dress run   [--config file.toml] [--sched fifo|fair|capacity|dress]
+              [--jobs N] [--platform mapreduce|spark|mixed]
+              [--small-frac F] [--seed S] [--csv out-prefix]
+              [--trace in.trace] [--export-trace out.trace]
+  dress compare [--jobs N] [--platform mapreduce|spark|mixed] [--seed S]
+  dress repro <fig1|fig2|fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table2|all>
+              [--seed S]
+  dress trace <wordcount|pagerank-mr|pagerank-spark> [--seed S]
+  dress live  [--jobs N] [--workers W] [--sched dress|capacity] [--seed S]
+  dress bench
+";
+
+/// Entry point used by `main.rs`; returns a process exit code.
+pub fn run_cli(args: &Args) -> i32 {
+    match dispatch(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            1
+        }
+    }
+}
+
+fn dispatch(args: &Args) -> Result<(), String> {
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(args),
+        Some("compare") => cmd_compare(args),
+        Some("repro") => cmd_repro(args),
+        Some("trace") => cmd_trace(args),
+        Some("live") => cmd_live(args),
+        Some("bench") => cmd_bench(),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand `{other}`")),
+    }
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(s) = args.flag("sched") {
+        cfg.sched.kind = SchedKind::parse(s)?;
+    }
+    cfg.workload.jobs = args.flag_u64("jobs", cfg.workload.jobs as u64)? as u32;
+    cfg.workload.seed = args.flag_u64("seed", cfg.workload.seed)?;
+    cfg.workload.small_frac = args.flag_f64("small-frac", cfg.workload.small_frac)?;
+    if let Some(p) = args.flag("platform") {
+        cfg.workload.platform = p.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let specs = match args.flag("trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+            crate::workload::from_trace(&text)?
+        }
+        None => {
+            let mix = WorkloadMix::parse(&cfg.workload.platform)?;
+            generate(
+                cfg.workload.jobs,
+                mix,
+                cfg.workload.small_frac,
+                cfg.workload.arrival_ms,
+                cfg.workload.seed,
+            )
+        }
+    };
+    if let Some(path) = args.flag("export-trace") {
+        std::fs::write(path, crate::workload::to_trace(&specs))
+            .map_err(|e| format!("write {path}: {e}"))?;
+        println!("wrote workload trace to {path}");
+    }
+    println!(
+        "running {} jobs ({}) under `{}` on {}x{} containers, seed {}",
+        specs.len(),
+        cfg.workload.platform,
+        cfg.sched.kind.name(),
+        cfg.cluster.nodes,
+        cfg.cluster.slots_per_node,
+        cfg.workload.seed
+    );
+    let res = run_experiment(&cfg, specs);
+    let header = ["Job", "Demand", "Waiting (s)", "Completion (s)"];
+    let rows: Vec<Vec<String>> = res
+        .jobs
+        .iter()
+        .map(|j| {
+            vec![
+                format!("J{}", j.id),
+                j.demand.to_string(),
+                format!("{:.1}", j.waiting_ms as f64 / 1000.0),
+                format!("{:.1}", j.completion_ms as f64 / 1000.0),
+            ]
+        })
+        .collect();
+    println!("{}", report::render_table(&header, &rows));
+    let summary = SchedulerSummary::of(&res.scheduler, &res.system);
+    println!("{}", report::table2(&[summary]));
+    let slow = crate::metrics::slowdowns(&res.jobs);
+    let (small, large) = crate::metrics::by_class(&res.jobs, 4);
+    println!(
+        "fairness (Jain over slowdowns): {:.3} | small n={} avgC {:.1}s | large n={} avgC {:.1}s",
+        crate::metrics::jain_index(&slow),
+        small.n,
+        small.avg_completion_s,
+        large.n,
+        large.avg_completion_s
+    );
+    if !res.delta_history.is_empty() {
+        let ds: Vec<f64> = res.delta_history.iter().map(|&(_, d)| d).collect();
+        println!(
+            "δ trajectory: {}  (min {:.2}, max {:.2})",
+            crate::util::ascii_plot::sparkline(&ds),
+            ds.iter().copied().fold(f64::INFINITY, f64::min),
+            ds.iter().copied().fold(0.0, f64::max)
+        );
+    }
+    if let Some(base) = args.flag("csv") {
+        for (suffix, text) in [
+            ("jobs", report::jobs_csv(&res)),
+            ("trace", report::trace_csv(&res)),
+            ("delta", report::delta_csv(&res)),
+        ] {
+            let path = format!("{base}.{suffix}.csv");
+            std::fs::write(&path, text).map_err(|e| format!("write {path}: {e}"))?;
+            println!("wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+/// Run all four schedulers (plus the multi-category DRESS extension) on
+/// one identical workload and print Table-II rows + fairness.
+fn cmd_compare(args: &Args) -> Result<(), String> {
+    let mut cfg = load_config(args)?;
+    let mix = WorkloadMix::parse(&cfg.workload.platform)?;
+    let specs = generate(
+        cfg.workload.jobs,
+        mix,
+        cfg.workload.small_frac,
+        cfg.workload.arrival_ms,
+        cfg.workload.seed,
+    );
+    println!(
+        "comparing schedulers on {} {} jobs (seed {}, {} containers)\n",
+        specs.len(),
+        cfg.workload.platform,
+        cfg.workload.seed,
+        cfg.cluster.total_containers()
+    );
+    let mut rows = Vec::new();
+    let mut fairness = Vec::new();
+    for kind in [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress] {
+        cfg.sched.kind = kind;
+        let res = run_experiment(&cfg, specs.clone());
+        fairness.push((kind.name().to_string(), crate::metrics::jain_index(&crate::metrics::slowdowns(&res.jobs))));
+        rows.push(SchedulerSummary::of(kind.name(), &res.system));
+    }
+    // The paper's multi-category extension as a fifth row.
+    let multi = crate::sched::dress::MultiDress::new(vec![0.1, 0.4], cfg.cluster.total_containers());
+    let res = crate::sim::Engine::new(cfg.clone(), specs, Box::new(multi)).run();
+    fairness.push(("multi-dress".into(), crate::metrics::jain_index(&crate::metrics::slowdowns(&res.jobs))));
+    rows.push(SchedulerSummary::of("multi-dress", &res.system));
+
+    println!("{}", report::table2(&rows));
+    println!("Jain fairness over per-job slowdowns:");
+    for (name, j) in fairness {
+        println!("  {name:<12} {j:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<(), String> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let seed = args.flag_u64("seed", 42)?;
+    let mut all_ok = true;
+    let mut check = |row: (String, bool)| {
+        println!("{}", row.0);
+        all_ok &= row.1;
+    };
+
+    let wants = |id: &str| what == "all" || what == id;
+
+    if wants("fig1") {
+        let r = expt::fig1();
+        println!("Fig 1 — motivating example (6 containers, 4 jobs):");
+        check(comparison_row(&expt::paper::claim("FIG1.fcfs-makespan-s"), r.fcfs_makespan_s));
+        check(comparison_row(&expt::paper::claim("FIG1.fcfs-avg-wait-s"), r.fcfs_avg_wait_s));
+        check(comparison_row(&expt::paper::claim("FIG1.rearranged-makespan-s"), r.dress_makespan_s));
+        check(comparison_row(&expt::paper::claim("FIG1.rearranged-avg-wait-s"), r.dress_avg_wait_s));
+    }
+    if wants("fig2") || wants("fig3") || wants("fig4") {
+        for (id, bench, platform, title) in [
+            ("fig2", Benchmark::WordCount, Platform::MapReduce, "Fig 2 — WordCount on YARN (starting variation)"),
+            ("fig3", Benchmark::PageRank, Platform::MapReduce, "Fig 3 — PageRank MR (heading tasks)"),
+            ("fig4", Benchmark::PageRank, Platform::Spark, "Fig 4 — PageRank Spark (trailing tasks)"),
+        ] {
+            if !wants(id) {
+                continue;
+            }
+            let r = expt::trace_benchmark(bench, platform, seed);
+            println!("{}", report::fig_trace(title, &r.trace.job_tasks(1)));
+        }
+    }
+    if wants("fig6") || wants("fig7") || wants("table2") {
+        let pair = expt::spark20(seed);
+        if wants("fig6") {
+            println!("{}", report::fig_waiting_bars("Fig 6 — waiting, 20 Spark jobs", &pair.dress, &pair.baseline));
+            check(comparison_row(
+                &expt::paper::claim("FIG6.small-waiting-change-pct"),
+                pair.comparison.small_waiting_change_pct,
+            ));
+        }
+        if wants("fig7") {
+            println!("{}", report::fig_completion_bars("Fig 7 — completion, 20 Spark jobs", &pair.dress, &pair.baseline));
+            check(comparison_row(
+                &expt::paper::claim("FIG7.small-completion-change-pct"),
+                pair.comparison.small_completion_change_pct,
+            ));
+            check(comparison_row(
+                &expt::paper::claim("FIG7.large-penalized-mean-pct"),
+                pair.comparison.large_penalized_mean_pct,
+            ));
+        }
+        if wants("table2") {
+            let rows = vec![
+                SchedulerSummary::of("capacity", &pair.baseline.system),
+                SchedulerSummary::of("dress", &pair.dress.system),
+            ];
+            println!("Table II — overall system performance (Spark-on-YARN run):");
+            println!("{}", report::table2(&rows));
+            check(comparison_row(
+                &expt::paper::claim("TAB2.makespan-change-pct"),
+                pair.comparison.makespan_change_pct,
+            ));
+        }
+    }
+    if wants("fig8") || wants("fig9") {
+        let pair = expt::mr20(seed);
+        if wants("fig8") {
+            println!("{}", report::fig_waiting_bars("Fig 8 — waiting, 20 MapReduce jobs", &pair.dress, &pair.baseline));
+            check(comparison_row(
+                &expt::paper::claim("FIG8.small-waiting-change-pct"),
+                pair.comparison.small_waiting_change_pct,
+            ));
+        }
+        if wants("fig9") {
+            println!("{}", report::fig_completion_bars("Fig 9 — completion, 20 MapReduce jobs", &pair.dress, &pair.baseline));
+            check(comparison_row(
+                &expt::paper::claim("FIG9.small-completion-change-pct"),
+                pair.comparison.small_completion_change_pct,
+            ));
+        }
+    }
+    for (id, frac) in [("fig10", 0.10), ("fig11", 0.20), ("fig12", 0.30), ("fig13", 0.40)] {
+        if !wants(id) {
+            continue;
+        }
+        let pair = expt::mixed_setting(frac, seed);
+        println!(
+            "{}",
+            report::fig_stacked_bars(
+                &format!("Fig {} — mixed setting, {:.0}% small jobs", &id[3..], frac * 100.0),
+                &pair.dress,
+                &pair.baseline
+            )
+        );
+        check(comparison_row(
+            &expt::paper::claim(&format!("{}.small-completion-change-pct", id.to_uppercase())),
+            pair.comparison.small_completion_change_pct,
+        ));
+    }
+
+    println!();
+    println!(
+        "reproduction shape: {}",
+        if all_ok { "ALL CLAIMS HOLD" } else { "SOME CLAIMS MISSED (see rows above)" }
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let which = args
+        .positional
+        .first()
+        .ok_or("trace requires a benchmark name")?;
+    let seed = args.flag_u64("seed", 42)?;
+    let (bench, platform) = match which.as_str() {
+        "wordcount" => (Benchmark::WordCount, Platform::MapReduce),
+        "pagerank-mr" => (Benchmark::PageRank, Platform::MapReduce),
+        "pagerank-spark" => (Benchmark::PageRank, Platform::Spark),
+        other => return Err(format!("unknown trace target `{other}`")),
+    };
+    let r = expt::trace_benchmark(bench, platform, seed);
+    println!("{}", report::fig_trace(&format!("trace: {which}"), &r.trace.job_tasks(1)));
+    Ok(())
+}
+
+fn cmd_live(args: &Args) -> Result<(), String> {
+    let jobs = args.flag_u64("jobs", 6)? as u32;
+    let workers = args.flag_u64("workers", 8)? as usize;
+    let seed = args.flag_u64("seed", 42)?;
+    let kind = SchedKind::parse(args.flag_str("sched", "dress"))?;
+
+    let art = crate::runtime::find_artifacts_dir()
+        .ok_or("artifacts/ not found — run `make artifacts` first")?;
+    let taskwork = art.join("taskwork.hlo.txt");
+
+    let mut specs = generate(jobs, WorkloadMix::Mixed, 0.3, 2_000, seed);
+    // Live runs execute real compute: shrink tasks so the demo stays short.
+    for s in specs.iter_mut() {
+        for p in s.phases.iter_mut() {
+            p.tasks.truncate(4);
+            for t in p.tasks.iter_mut() {
+                t.duration_ms = t.duration_ms.min(4_000);
+            }
+        }
+        s.demand = s.demand.min(4);
+    }
+
+    let cfg = crate::live::LiveConfig { workers, ..Default::default() };
+    let sched_cfg = crate::config::SchedConfig { kind, ..Default::default() };
+    let sched = crate::sched::build(&sched_cfg, workers as u32);
+    let report = crate::live::run_live(&cfg, &sched_cfg, specs, sched, taskwork.to_str().unwrap())
+        .map_err(|e| format!("{e:#}"))?;
+    println!(
+        "live run: {} jobs, {} tasks of real PJRT compute, makespan {:.2?}, checksum {:.4}",
+        report.jobs.len(),
+        report.tasks_run,
+        report.makespan,
+        report.checksum
+    );
+    for j in &report.jobs {
+        println!(
+            "  J{:<3} demand {:<3} waiting {:>7.2}s completion {:>7.2}s",
+            j.id,
+            j.demand,
+            j.waiting_ms as f64 / 1000.0,
+            j.completion_ms as f64 / 1000.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench() -> Result<(), String> {
+    println!("use `cargo bench` for the full harness; quick in-process sample:");
+    let cfg = ExperimentConfig::default();
+    let specs = generate(20, WorkloadMix::Mixed, 0.3, 5_000, 42);
+    let t = std::time::Instant::now();
+    let res = run_experiment(&cfg, specs);
+    println!(
+        "20-job mixed experiment: {:?} wall, makespan {:.1}s, {} tasks",
+        t.elapsed(),
+        res.system.makespan_ms as f64 / 1000.0,
+        res.trace.tasks.len()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        let raw: Vec<String> = s.split_whitespace().map(|x| x.to_string()).collect();
+        Args::parse(&raw).unwrap()
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert_eq!(run_cli(&args("help")), 0);
+        assert_eq!(run_cli(&args("frobnicate")), 1);
+    }
+
+    #[test]
+    fn run_small_experiment() {
+        assert_eq!(run_cli(&args("run --jobs 4 --sched capacity --seed 3")), 0);
+    }
+
+    #[test]
+    fn trace_requires_target() {
+        assert_eq!(run_cli(&args("trace")), 1);
+        assert_eq!(run_cli(&args("trace wordcount --seed 2")), 0);
+    }
+
+    #[test]
+    fn compare_runs_all_schedulers() {
+        assert_eq!(run_cli(&args("compare --jobs 4 --seed 3")), 0);
+    }
+
+    #[test]
+    fn config_overrides() {
+        let cfg = load_config(&args("run --sched fair --jobs 7 --seed 9 --platform spark")).unwrap();
+        assert_eq!(cfg.sched.kind, SchedKind::Fair);
+        assert_eq!(cfg.workload.jobs, 7);
+        assert_eq!(cfg.workload.platform, "spark");
+    }
+}

@@ -1,0 +1,8 @@
+//! Command-line interface (offline substitute for `clap`): subcommand +
+//! `--key value` flag parsing, and the command implementations.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+pub use commands::run_cli;

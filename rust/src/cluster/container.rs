@@ -1,0 +1,149 @@
+//! The YARN container state machine.
+//!
+//! Paper §III.A.1: "the transition delay varies from time to time when a
+//! container's state moves from New to Running, that passes by the other
+//! three states, Reserved, Allocated, and Acquired."  Those stochastic
+//! per-hop delays, combined with multi-round allocation, produce the
+//! starting-time variation Δps that DRESS's estimator measures.
+
+use crate::jobs::JobId;
+use crate::util::Time;
+
+/// Container identifier (monotonically increasing per simulation).
+pub type ContainerId = u32;
+
+/// Container lifecycle states, in order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ContainerState {
+    New,
+    Reserved,
+    Allocated,
+    Acquired,
+    Running,
+    Completed,
+}
+
+impl ContainerState {
+    /// The successor state, or None for Completed.
+    pub fn next(self) -> Option<ContainerState> {
+        use ContainerState::*;
+        match self {
+            New => Some(Reserved),
+            Reserved => Some(Allocated),
+            Allocated => Some(Acquired),
+            Acquired => Some(Running),
+            Running => Some(Completed),
+            Completed => None,
+        }
+    }
+
+    /// All states in machine order.
+    pub const ALL: [ContainerState; 6] = [
+        ContainerState::New,
+        ContainerState::Reserved,
+        ContainerState::Allocated,
+        ContainerState::Acquired,
+        ContainerState::Running,
+        ContainerState::Completed,
+    ];
+}
+
+impl std::fmt::Display for ContainerState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ContainerState::New => "new",
+            ContainerState::Reserved => "reserved",
+            ContainerState::Allocated => "allocated",
+            ContainerState::Acquired => "acquired",
+            ContainerState::Running => "running",
+            ContainerState::Completed => "completed",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A live (or completed) container bound to one task of one job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Container {
+    pub id: ContainerId,
+    pub node: super::NodeId,
+    pub job: JobId,
+    /// Ground-truth phase index — available to the *simulator* and to
+    /// validation tests, but NOT to the estimator (which must infer phases
+    /// from timing alone, per Algorithms 1-2).
+    pub phase: usize,
+    pub task: usize,
+    pub state: ContainerState,
+    /// When the container entered `state`.
+    pub state_since: Time,
+    /// When the container entered Running (0 until then).
+    pub run_start: Time,
+}
+
+impl Container {
+    pub fn new(id: ContainerId, node: super::NodeId, job: JobId, phase: usize, task: usize, now: Time) -> Self {
+        Container {
+            id,
+            node,
+            job,
+            phase,
+            task,
+            state: ContainerState::New,
+            state_since: now,
+            run_start: 0,
+        }
+    }
+
+    /// Advance to the next state at time `now`; returns the new state.
+    /// Panics if called on a Completed container.
+    pub fn advance(&mut self, now: Time) -> ContainerState {
+        let next = self
+            .state
+            .next()
+            .unwrap_or_else(|| panic!("advance on completed container {}", self.id));
+        self.state = next;
+        self.state_since = now;
+        if next == ContainerState::Running {
+            self.run_start = now;
+        }
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_machine_order() {
+        let mut s = ContainerState::New;
+        let mut seen = vec![s];
+        while let Some(n) = s.next() {
+            seen.push(n);
+            s = n;
+        }
+        assert_eq!(seen, ContainerState::ALL.to_vec());
+        assert_eq!(ContainerState::Completed.next(), None);
+    }
+
+    #[test]
+    fn advance_walks_all_states() {
+        let mut c = Container::new(0, 0, 1, 0, 0, 10);
+        let mut t = 10;
+        for expect in &ContainerState::ALL[1..] {
+            t += 5;
+            assert_eq!(c.advance(t), *expect);
+            assert_eq!(c.state_since, t);
+        }
+        assert_eq!(c.run_start, 10 + 5 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "advance on completed")]
+    fn advance_past_completed_panics() {
+        let mut c = Container::new(0, 0, 1, 0, 0, 0);
+        for _ in 0..6 {
+            c.advance(1);
+        }
+    }
+}

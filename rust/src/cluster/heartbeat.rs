@@ -1,0 +1,82 @@
+//! Heartbeat observation channel.
+//!
+//! On YARN, slave nodes report container state transitions to the
+//! ResourceManager via periodic heartbeats; DRESS's "enriched heartbeat
+//! message" (paper §V.A.1) carries starting delays too.  Schedulers and the
+//! estimator may observe the cluster ONLY through these records — never by
+//! peeking at simulator ground truth.
+
+use super::container::{ContainerId, ContainerState};
+use crate::jobs::JobId;
+use crate::util::Time;
+
+/// One observed container state transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transition {
+    pub time: Time,
+    pub container: ContainerId,
+    pub job: JobId,
+    /// Task index *within the job* (YARN exposes task attempt ids).
+    pub task: usize,
+    pub to: ContainerState,
+}
+
+/// Accumulates transitions between scheduler ticks and hands them out as
+/// heartbeat batches.
+#[derive(Debug, Default, Clone)]
+pub struct HeartbeatLog {
+    buf: Vec<Transition>,
+    /// Complete history (for trace export / figures).
+    history: Vec<Transition>,
+}
+
+impl HeartbeatLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a transition (called by the engine when containers move).
+    pub fn record(&mut self, t: Transition) {
+        self.buf.push(t);
+        self.history.push(t);
+    }
+
+    /// Drain everything observed since the previous heartbeat.
+    pub fn drain(&mut self) -> Vec<Transition> {
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Full history (figures / validation only).
+    pub fn history(&self) -> &[Transition] {
+        &self.history
+    }
+
+    /// Pending (not yet drained) count.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(time: Time, c: ContainerId, to: ContainerState) -> Transition {
+        Transition { time, container: c, job: 1, task: 0, to }
+    }
+
+    #[test]
+    fn drain_clears_buffer_keeps_history() {
+        let mut log = HeartbeatLog::new();
+        log.record(tr(10, 0, ContainerState::Running));
+        log.record(tr(20, 1, ContainerState::Completed));
+        assert_eq!(log.pending(), 2);
+        let batch = log.drain();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(log.pending(), 0);
+        assert_eq!(log.history().len(), 2);
+        log.record(tr(30, 2, ContainerState::Running));
+        assert_eq!(log.drain().len(), 1);
+        assert_eq!(log.history().len(), 3);
+    }
+}

@@ -1,0 +1,127 @@
+//! YARN-fidelity cluster substrate: nodes with container slots, the
+//! container state machine (New -> Reserved -> Allocated -> Acquired ->
+//! Running -> Completed, paper §III.A.1), and heartbeat reports — the only
+//! observation channel schedulers and the estimator may use.
+
+pub mod container;
+pub mod heartbeat;
+pub mod node;
+
+pub use container::{Container, ContainerId, ContainerState};
+pub use heartbeat::{HeartbeatLog, Transition};
+pub use node::{Node, NodeId};
+
+use crate::jobs::JobId;
+use crate::util::Time;
+
+/// The cluster: a set of nodes plus live container records.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    /// All containers ever created (index == ContainerId).
+    pub containers: Vec<Container>,
+}
+
+impl Cluster {
+    /// `nodes` nodes with `slots` container slots each (paper: 5 nodes).
+    pub fn new(nodes: u16, slots: u32) -> Self {
+        Cluster {
+            nodes: (0..nodes).map(|id| Node::new(id, slots)).collect(),
+            containers: Vec::new(),
+        }
+    }
+
+    /// Total container capacity (the paper's `Tot_R`).
+    pub fn total(&self) -> u32 {
+        self.nodes.iter().map(|n| n.capacity).sum()
+    }
+
+    /// Currently free slots (the paper's `A_c`).
+    pub fn free(&self) -> u32 {
+        self.nodes.iter().map(|n| n.free()).sum()
+    }
+
+    /// Currently occupied slots.
+    pub fn used(&self) -> u32 {
+        self.nodes.iter().map(|n| n.in_use).sum()
+    }
+
+    /// Allocate a new container for (job, phase, task) on the least-loaded
+    /// node with a free slot. Returns the container id, or None if full.
+    pub fn allocate(
+        &mut self,
+        job: JobId,
+        phase: usize,
+        task: usize,
+        now: Time,
+    ) -> Option<ContainerId> {
+        let node = self
+            .nodes
+            .iter_mut()
+            .filter(|n| n.free() > 0)
+            .min_by_key(|n| n.in_use)?;
+        node.in_use += 1;
+        let id = self.containers.len() as ContainerId;
+        self.containers.push(Container::new(id, node.id, job, phase, task, now));
+        Some(id)
+    }
+
+    /// Release the slot held by a completed container.
+    pub fn release(&mut self, cid: ContainerId) {
+        let c = &self.containers[cid as usize];
+        debug_assert_eq!(c.state, ContainerState::Completed, "release of live container");
+        let node = &mut self.nodes[c.node as usize];
+        debug_assert!(node.in_use > 0);
+        node.in_use -= 1;
+    }
+
+    pub fn container(&self, cid: ContainerId) -> &Container {
+        &self.containers[cid as usize]
+    }
+
+    pub fn container_mut(&mut self, cid: ContainerId) -> &mut Container {
+        &mut self.containers[cid as usize]
+    }
+
+    /// Invariant: free + used == total (checked by property tests).
+    pub fn conservation_holds(&self) -> bool {
+        self.free() + self.used() == self.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_accounting() {
+        let mut cl = Cluster::new(5, 8);
+        assert_eq!(cl.total(), 40);
+        assert_eq!(cl.free(), 40);
+        let c0 = cl.allocate(1, 0, 0, 100).unwrap();
+        let _c1 = cl.allocate(1, 0, 1, 100).unwrap();
+        assert_eq!(cl.free(), 38);
+        assert!(cl.conservation_holds());
+        cl.container_mut(c0).state = ContainerState::Completed;
+        cl.release(c0);
+        assert_eq!(cl.free(), 39);
+        assert!(cl.conservation_holds());
+    }
+
+    #[test]
+    fn allocate_balances_nodes() {
+        let mut cl = Cluster::new(2, 2);
+        let a = cl.allocate(1, 0, 0, 0).unwrap();
+        let b = cl.allocate(1, 0, 1, 0).unwrap();
+        assert_ne!(cl.container(a).node, cl.container(b).node);
+    }
+
+    #[test]
+    fn allocate_exhausts_to_none() {
+        let mut cl = Cluster::new(1, 2);
+        assert!(cl.allocate(1, 0, 0, 0).is_some());
+        assert!(cl.allocate(1, 0, 1, 0).is_some());
+        assert!(cl.allocate(1, 0, 2, 0).is_none());
+        assert_eq!(cl.free(), 0);
+    }
+}

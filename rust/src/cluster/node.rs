@@ -1,0 +1,39 @@
+//! A slave node: a bundle of container slots plus occupancy accounting.
+
+/// Node identifier.
+pub type NodeId = u16;
+
+/// One slave node. The paper's testbed has 5 of these (c220g2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Node {
+    pub id: NodeId,
+    /// Container slots this node offers.
+    pub capacity: u32,
+    /// Slots currently held by live containers.
+    pub in_use: u32,
+}
+
+impl Node {
+    pub fn new(id: NodeId, capacity: u32) -> Self {
+        Node { id, capacity, in_use: 0 }
+    }
+
+    pub fn free(&self) -> u32 {
+        self.capacity - self.in_use
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_tracks_in_use() {
+        let mut n = Node::new(0, 8);
+        assert_eq!(n.free(), 8);
+        n.in_use = 3;
+        assert_eq!(n.free(), 5);
+        n.in_use = 8;
+        assert_eq!(n.free(), 0);
+    }
+}

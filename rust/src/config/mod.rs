@@ -1,0 +1,8 @@
+//! Configuration system: a TOML-subset parser (offline stand-in for
+//! `toml`/`serde`) plus the typed experiment schema with validation.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{ClusterConfig, DelayConfig, ExperimentConfig, SchedKind, SchedConfig, WorkloadConfig};
+pub use toml::{parse, TomlValue};

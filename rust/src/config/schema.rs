@@ -1,0 +1,323 @@
+//! Typed experiment configuration, loadable from TOML-subset files
+//! (`configs/*.toml`) with defaults matching the paper's testbed (§V.A).
+
+use super::toml::{self, Doc};
+use crate::util::Time;
+
+/// Scheduler selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    Fifo,
+    Fair,
+    Capacity,
+    Dress,
+}
+
+impl SchedKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Ok(SchedKind::Fifo),
+            "fair" => Ok(SchedKind::Fair),
+            "capacity" => Ok(SchedKind::Capacity),
+            "dress" => Ok(SchedKind::Dress),
+            other => Err(format!("unknown scheduler `{other}` (fifo|fair|capacity|dress)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedKind::Fifo => "fifo",
+            SchedKind::Fair => "fair",
+            SchedKind::Capacity => "capacity",
+            SchedKind::Dress => "dress",
+        }
+    }
+}
+
+/// Container state-transition delay model (medians + multiplicative spread;
+/// samples are log-normal, long-tailed like real YARN RPC latencies).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DelayConfig {
+    pub new_to_reserved_ms: f64,
+    pub reserved_to_allocated_ms: f64,
+    pub allocated_to_acquired_ms: f64,
+    pub acquired_to_running_ms: f64,
+    /// Log-normal sigma shared by all hops.
+    pub sigma: f64,
+}
+
+impl Default for DelayConfig {
+    fn default() -> Self {
+        DelayConfig {
+            new_to_reserved_ms: 120.0,
+            reserved_to_allocated_ms: 180.0,
+            allocated_to_acquired_ms: 250.0,
+            acquired_to_running_ms: 700.0,
+            sigma: 0.45,
+        }
+    }
+}
+
+/// Cluster shape. Paper: 5 nodes, deliberately small to create congestion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterConfig {
+    pub nodes: u16,
+    pub slots_per_node: u32,
+    /// Heartbeat / scheduling-round period.
+    pub hb_ms: Time,
+    pub delays: DelayConfig,
+    /// Probability a Running container fails mid-task (YARN re-attempts
+    /// the task; failure injection for robustness tests, default 0).
+    pub task_failure_prob: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 5,
+            slots_per_node: 8,
+            hb_ms: 1_000,
+            delays: DelayConfig::default(),
+            task_failure_prob: 0.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn total_containers(&self) -> u32 {
+        self.nodes as u32 * self.slots_per_node
+    }
+}
+
+/// Scheduler parameters (paper §V.A.1 values as defaults).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedConfig {
+    pub kind: SchedKind,
+    /// Job-indicator factor θ: demand > θ·A_c at submission => LD.
+    pub theta: f64,
+    /// Initial reserve ratio δ.
+    pub delta0: f64,
+    /// Algorithm 1 start threshold t_s (tasks).
+    pub ts: u32,
+    /// Algorithm 2 completion threshold t_e (tasks, filters heading tasks).
+    pub te: u32,
+    /// Phase window pw.
+    pub pw_ms: Time,
+    /// Gang admission: a job starts only when its full demand fits.
+    pub gang: bool,
+    /// Capacity scheduler queue weights (fraction of cluster per queue).
+    pub capacity_queues: [f64; 2],
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            kind: SchedKind::Dress,
+            theta: 0.10,
+            delta0: 0.10,
+            ts: 5,
+            te: 5,
+            pw_ms: 10_000,
+            gang: true,
+            capacity_queues: [1.0, 0.0],
+        }
+    }
+}
+
+/// Workload shape for generated experiments.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub jobs: u32,
+    /// "mapreduce" | "spark" | "mixed"
+    pub platform: String,
+    /// Fraction of small-demand jobs targeted by the generator (mixed runs).
+    pub small_frac: f64,
+    /// Inter-arrival gap (paper: 5 s).
+    pub arrival_ms: Time,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            jobs: 20,
+            platform: "mixed".into(),
+            small_frac: 0.3,
+            arrival_ms: 5_000,
+            seed: 42,
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ExperimentConfig {
+    pub cluster: ClusterConfig,
+    pub sched: SchedConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset string; unspecified keys keep defaults.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = toml::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+
+    fn apply(&mut self, doc: &Doc) -> Result<(), String> {
+        if let Some(v) = toml::get_int(doc, "cluster", "nodes") {
+            self.cluster.nodes = v as u16;
+        }
+        if let Some(v) = toml::get_int(doc, "cluster", "slots_per_node") {
+            self.cluster.slots_per_node = v as u32;
+        }
+        if let Some(v) = toml::get_int(doc, "cluster", "hb_ms") {
+            self.cluster.hb_ms = v as Time;
+        }
+        if let Some(v) = toml::get_float(doc, "cluster", "delay_sigma") {
+            self.cluster.delays.sigma = v;
+        }
+        if let Some(v) = toml::get_float(doc, "cluster", "acquired_to_running_ms") {
+            self.cluster.delays.acquired_to_running_ms = v;
+        }
+        if let Some(v) = toml::get_float(doc, "cluster", "task_failure_prob") {
+            self.cluster.task_failure_prob = v;
+        }
+        if let Some(s) = toml::get_str(doc, "sched", "kind") {
+            self.sched.kind = SchedKind::parse(s)?;
+        }
+        if let Some(v) = toml::get_float(doc, "sched", "theta") {
+            self.sched.theta = v;
+        }
+        if let Some(v) = toml::get_float(doc, "sched", "delta0") {
+            self.sched.delta0 = v;
+        }
+        if let Some(v) = toml::get_int(doc, "sched", "ts") {
+            self.sched.ts = v as u32;
+        }
+        if let Some(v) = toml::get_int(doc, "sched", "te") {
+            self.sched.te = v as u32;
+        }
+        if let Some(v) = toml::get_int(doc, "sched", "pw_ms") {
+            self.sched.pw_ms = v as Time;
+        }
+        if let Some(v) = toml::get_bool(doc, "sched", "gang") {
+            self.sched.gang = v;
+        }
+        if let Some(v) = toml::get_int(doc, "workload", "jobs") {
+            self.workload.jobs = v as u32;
+        }
+        if let Some(s) = toml::get_str(doc, "workload", "platform") {
+            self.workload.platform = s.to_string();
+        }
+        if let Some(v) = toml::get_float(doc, "workload", "small_frac") {
+            self.workload.small_frac = v;
+        }
+        if let Some(v) = toml::get_int(doc, "workload", "arrival_ms") {
+            self.workload.arrival_ms = v as Time;
+        }
+        if let Some(v) = toml::get_int(doc, "workload", "seed") {
+            self.workload.seed = v as u64;
+        }
+        Ok(())
+    }
+
+    /// Sanity checks (paper-parameter ranges).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cluster.nodes == 0 || self.cluster.slots_per_node == 0 {
+            return Err("cluster must have nodes and slots".into());
+        }
+        if self.cluster.hb_ms == 0 {
+            return Err("hb_ms must be > 0".into());
+        }
+        if !(0.0 < self.sched.theta && self.sched.theta < 1.0) {
+            return Err(format!("theta must be in (0,1), got {}", self.sched.theta));
+        }
+        if !(0.0 < self.sched.delta0 && self.sched.delta0 < 1.0) {
+            return Err(format!("delta0 must be in (0,1), got {}", self.sched.delta0));
+        }
+        if !(0.0..=1.0).contains(&self.workload.small_frac) {
+            return Err("small_frac must be in [0,1]".into());
+        }
+        if !(0.0..0.9).contains(&self.cluster.task_failure_prob) {
+            return Err("task_failure_prob must be in [0, 0.9)".into());
+        }
+        if self.workload.jobs == 0 {
+            return Err("workload.jobs must be > 0".into());
+        }
+        match self.workload.platform.as_str() {
+            "mapreduce" | "spark" | "mixed" => {}
+            other => return Err(format!("unknown platform `{other}`")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.cluster.nodes, 5);
+        assert_eq!(c.sched.theta, 0.10);
+        assert_eq!(c.sched.delta0, 0.10);
+        assert_eq!(c.sched.ts, 5);
+        assert_eq!(c.sched.te, 5);
+        assert_eq!(c.sched.pw_ms, 10_000);
+        assert_eq!(c.workload.arrival_ms, 5_000);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+[cluster]
+nodes = 3
+slots_per_node = 4
+hb_ms = 500
+[sched]
+kind = "capacity"
+theta = 0.2
+[workload]
+jobs = 8
+platform = "spark"
+seed = 7
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.nodes, 3);
+        assert_eq!(cfg.cluster.total_containers(), 12);
+        assert_eq!(cfg.sched.kind, SchedKind::Capacity);
+        assert_eq!(cfg.sched.theta, 0.2);
+        assert_eq!(cfg.workload.jobs, 8);
+        assert_eq!(cfg.workload.seed, 7);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(ExperimentConfig::from_toml("[sched]\ntheta = 1.5").is_err());
+        assert!(ExperimentConfig::from_toml("[sched]\nkind = \"bogus\"").is_err());
+        assert!(ExperimentConfig::from_toml("[workload]\njobs = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[workload]\nplatform = \"dask\"").is_err());
+    }
+
+    #[test]
+    fn sched_kind_roundtrip() {
+        for k in ["fifo", "fair", "capacity", "dress"] {
+            assert_eq!(SchedKind::parse(k).unwrap().name(), k);
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! A small TOML-subset parser sufficient for our config files:
+//! `[section]` headers, `key = value` with string / integer / float / bool
+//! values, `#` comments, and flat arrays of scalars.  No nested tables,
+//! no dotted keys, no datetimes — validated config surface only.
+
+use std::collections::BTreeMap;
+
+/// Parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`; keys before any header land in section "".
+pub type Doc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document. Errors carry 1-based line numbers.
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", ln + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", ln + 1));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`", ln + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", ln + 1));
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", ln + 1))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = split_array_items(inner)?
+            .into_iter()
+            .map(|it| parse_value(it.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("unrecognized value `{s}`"))
+}
+
+fn split_array_items(s: &str) -> Result<Vec<&str>, String> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    items.push(&s[start..]);
+    Ok(items)
+}
+
+/// Convenience typed lookups with config-style error messages.
+pub fn get_int(doc: &Doc, section: &str, key: &str) -> Option<i64> {
+    doc.get(section)?.get(key)?.as_int()
+}
+pub fn get_float(doc: &Doc, section: &str, key: &str) -> Option<f64> {
+    doc.get(section)?.get(key)?.as_float()
+}
+pub fn get_str<'d>(doc: &'d Doc, section: &str, key: &str) -> Option<&'d str> {
+    doc.get(section)?.get(key)?.as_str()
+}
+pub fn get_bool(doc: &Doc, section: &str, key: &str) -> Option<bool> {
+    doc.get(section)?.get(key)?.as_bool()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+# top comment
+top = 1
+[cluster]
+nodes = 5
+slots = 8            # trailing comment
+hb_ms = 1_000
+name = "cloudlab # c220g2"
+congested = true
+ratio = 0.35
+"#,
+        )
+        .unwrap();
+        assert_eq!(get_int(&doc, "", "top"), Some(1));
+        assert_eq!(get_int(&doc, "cluster", "nodes"), Some(5));
+        assert_eq!(get_int(&doc, "cluster", "hb_ms"), Some(1000));
+        assert_eq!(get_str(&doc, "cluster", "name"), Some("cloudlab # c220g2"));
+        assert_eq!(get_bool(&doc, "cluster", "congested"), Some(true));
+        assert_eq!(get_float(&doc, "cluster", "ratio"), Some(0.35));
+        // int readable as float too
+        assert_eq!(get_float(&doc, "cluster", "nodes"), Some(5.0));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nempty = []").unwrap();
+        match &doc[""]["xs"] {
+            TomlValue::Array(v) => assert_eq!(v.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        match &doc[""]["empty"] {
+            TomlValue::Array(v) => assert!(v.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        assert!(parse("[unterminated").unwrap_err().contains("line 1"));
+        assert!(parse("\nkey").unwrap_err().contains("line 2"));
+        assert!(parse("k = ").unwrap_err().contains("line 1"));
+        assert!(parse("k = \"oops").unwrap_err().contains("unterminated"));
+        assert!(parse("k = zzz").unwrap_err().contains("unrecognized"));
+    }
+
+    #[test]
+    fn negative_and_underscore_numbers() {
+        let doc = parse("a = -42\nb = 1_000_000\nc = -0.5").unwrap();
+        assert_eq!(get_int(&doc, "", "a"), Some(-42));
+        assert_eq!(get_int(&doc, "", "b"), Some(1_000_000));
+        assert_eq!(get_float(&doc, "", "c"), Some(-0.5));
+    }
+}

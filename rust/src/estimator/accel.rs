@@ -1,0 +1,73 @@
+//! PJRT-accelerated evaluation of Eq. (1)-(3): packs [`PhaseEstimate`]s into
+//! the padded table the AOT Pallas kernel expects and executes
+//! `artifacts/model.hlo.txt`.  Must agree with [`super::release_model`] —
+//! cross-validated in `rust/tests/runtime_integration.rs`.
+
+use super::release_model::PhaseEstimate;
+use crate::runtime::{Executable, Runtime, NUM_FIELDS, PAD_PHASES, TIME_GRID};
+use anyhow::{bail, Result};
+
+/// The estimator artifact, loaded and compiled once.
+pub struct PjrtEstimator {
+    exe: Executable,
+    /// Reused input buffer (hot path: no per-call allocation of the table).
+    table: Vec<f32>,
+}
+
+impl PjrtEstimator {
+    pub fn load(rt: &Runtime, path: &str) -> Result<Self> {
+        Ok(PjrtEstimator {
+            exe: rt.load_hlo_text(path)?,
+            table: vec![0f32; PAD_PHASES * NUM_FIELDS],
+        })
+    }
+
+    /// Evaluate the per-category release curves over `tgrid`
+    /// (len == TIME_GRID).  Returns (SD curve, LD curve).
+    pub fn curves(
+        &mut self,
+        phases: &[PhaseEstimate],
+        tgrid: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if phases.len() > PAD_PHASES {
+            bail!("{} phases exceed artifact pad {}", phases.len(), PAD_PHASES);
+        }
+        if tgrid.len() != TIME_GRID {
+            bail!("tgrid len {} != artifact TIME_GRID {}", tgrid.len(), TIME_GRID);
+        }
+        self.table.fill(0.0);
+        for (i, p) in phases.iter().enumerate() {
+            self.table[i * NUM_FIELDS..(i + 1) * NUM_FIELDS].copy_from_slice(&p.to_row());
+        }
+        let out = self.exe.run_f32(&[
+            (&self.table, &[PAD_PHASES as i64, NUM_FIELDS as i64]),
+            (tgrid, &[TIME_GRID as i64]),
+        ])?;
+        if out.len() != 2 * TIME_GRID {
+            bail!("artifact returned {} values, expected {}", out.len(), 2 * TIME_GRID);
+        }
+        Ok((out[..TIME_GRID].to_vec(), out[TIME_GRID..].to_vec()))
+    }
+
+    /// Build a uniform grid of TIME_GRID points over (now, horizon].
+    pub fn grid(now: f64, horizon: f64) -> Vec<f32> {
+        let span = (horizon - now).max(1.0);
+        (0..TIME_GRID)
+            .map(|i| (now + span * (i + 1) as f64 / TIME_GRID as f64) as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_interval() {
+        let g = PjrtEstimator::grid(1_000.0, 2_000.0);
+        assert_eq!(g.len(), TIME_GRID);
+        assert!(g[0] > 1_000.0);
+        assert!((g[TIME_GRID - 1] - 2_000.0).abs() < 1e-3);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+}

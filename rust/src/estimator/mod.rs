@@ -1,0 +1,154 @@
+//! Resource-release estimation (paper §III.B, §IV).
+//!
+//! The estimator watches container state transitions arriving in heartbeat
+//! batches — never simulator ground truth — and maintains, per running job,
+//! the detected phases with their parameters:
+//!
+//! * `Δps_j` — starting-time variation of phase j (Algorithm 1),
+//! * `γ_j`   — earliest "bulk" finish time, heading tasks filtered (Algorithm 2),
+//! * `c_j`   — containers occupied by the phase.
+//!
+//! [`release_model`] then evaluates Eq. (1)-(3) to predict per-category
+//! container availability F₁(t), F₂(t); [`accel`] offloads the same
+//! evaluation to the AOT-compiled Pallas kernel via PJRT.
+
+pub mod accel;
+pub mod phase_detect;
+pub mod release_model;
+
+pub use phase_detect::JobEstimator;
+pub use release_model::{eval_curves, eval_phase, predicted_release, PhaseEstimate};
+
+use crate::cluster::Transition;
+use crate::jobs::JobId;
+use crate::util::Time;
+use std::collections::BTreeMap;
+
+/// Estimator configuration (paper §V.A.1: t_s = t_e = 5, pw = 10 s).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EstimatorParams {
+    pub ts: u32,
+    pub te: u32,
+    pub pw_ms: Time,
+}
+
+impl Default for EstimatorParams {
+    fn default() -> Self {
+        EstimatorParams { ts: 5, te: 5, pw_ms: 10_000 }
+    }
+}
+
+/// Per-cluster estimator: one [`JobEstimator`] per observed job.
+#[derive(Debug, Default)]
+pub struct EstimatorBank {
+    params: EstimatorParams,
+    jobs: BTreeMap<JobId, JobEstimator>,
+    /// Category per job (0 = SD, 1 = LD), registered by the scheduler.
+    cats: BTreeMap<JobId, u8>,
+}
+
+impl EstimatorBank {
+    pub fn new(params: EstimatorParams) -> Self {
+        EstimatorBank { params, jobs: BTreeMap::new(), cats: BTreeMap::new() }
+    }
+
+    /// Register a job's category at submission (θ classification).
+    pub fn register(&mut self, job: JobId, cat: u8) {
+        self.cats.insert(job, cat);
+    }
+
+    /// Ingest a heartbeat transition batch.
+    pub fn ingest(&mut self, transitions: &[Transition]) {
+        for tr in transitions {
+            let params = self.params;
+            let cat = self.cats.get(&tr.job).copied().unwrap_or(0);
+            self.jobs
+                .entry(tr.job)
+                .or_insert_with(|| JobEstimator::new(tr.job, cat, params))
+                .on_transition(tr);
+        }
+    }
+
+    /// Advance window-based detection to `now` (each heartbeat).
+    pub fn tick(&mut self, now: Time) {
+        for est in self.jobs.values_mut() {
+            est.tick(now);
+        }
+    }
+
+    /// Snapshot all live phase estimates (input to Eq. 1-3 / the kernel).
+    pub fn snapshot(&self) -> Vec<PhaseEstimate> {
+        self.jobs.values().flat_map(|j| j.estimates()).collect()
+    }
+
+    /// Predicted containers released by category `cat` in (now, horizon].
+    pub fn predicted_release(&self, cat: u8, now: Time, horizon: Time) -> f64 {
+        let (f1, f2) = self.predicted_release_pair(now, horizon);
+        if cat == 0 {
+            f1
+        } else {
+            f2
+        }
+    }
+
+    /// Both categories in one allocation-free pass (the DRESS hot path).
+    pub fn predicted_release_pair(&self, now: Time, horizon: Time) -> (f64, f64) {
+        let (now, horizon) = (now as f64, horizon as f64);
+        let (mut f1, mut f2) = (0.0, 0.0);
+        for est in self.jobs.values() {
+            est.for_each_estimate(|p| {
+                let d = release_model::phase_release_delta(&p, now, horizon);
+                if p.cat == 0 {
+                    f1 += d;
+                } else {
+                    f2 += d;
+                }
+            });
+        }
+        (f1, f2)
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&JobEstimator> {
+        self.jobs.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ContainerState;
+
+    fn tr(time: Time, job: JobId, task: usize, to: ContainerState) -> Transition {
+        Transition { time, container: task as u32, job, task, to }
+    }
+
+    #[test]
+    fn bank_tracks_jobs_independently() {
+        let mut bank = EstimatorBank::new(EstimatorParams::default());
+        bank.register(1, 0);
+        bank.register(2, 1);
+        bank.ingest(&[
+            tr(1_000, 1, 0, ContainerState::Running),
+            tr(1_200, 2, 0, ContainerState::Running),
+        ]);
+        assert_eq!(bank.len(), 2);
+        bank.tick(2_000);
+        assert!(bank.job(1).is_some());
+        assert!(bank.job(2).is_some());
+    }
+
+    #[test]
+    fn empty_bank_predicts_zero() {
+        let bank = EstimatorBank::new(EstimatorParams::default());
+        assert_eq!(bank.predicted_release(0, 0, 1_000), 0.0);
+        assert!(bank.snapshot().is_empty());
+    }
+}

@@ -1,0 +1,394 @@
+//! Algorithms 1 & 2: per-job phase detection from heartbeat observations.
+//!
+//! Algorithm 1 (starting variation): tasks whose containers enter Running
+//! are grouped into phases by watching the running count inside a sliding
+//! window `pw`; a burst of more than `t_s` new starts opens a phase, a
+//! window with no new starts closes its start ramp and fixes
+//! `Δps = ps_last - ps_first`.
+//!
+//! Algorithm 2 (start-release time): a burst of more than `t_e` completions
+//! inside `pw` marks the phase's release start `γ` (taking the minimum
+//! finish *within the triggering window*, which filters heading tasks that
+//! completed abnormally early); a completion stall with tasks still running
+//! marks those as trailing tasks, counted into the next phase.
+//!
+//! Adaptation (documented, paper is ambiguous here): the paper sets
+//! t_s = t_e = 5 for 5-node HiBench jobs, but small jobs can have phases
+//! with fewer than 5 tasks which would then never be detected.  We apply
+//! the paper's thresholds for burst detection but additionally open/close
+//! on *stability*: an unassigned start/finish older than a full window is
+//! folded in even if the burst threshold was never crossed.
+
+use super::release_model::PhaseEstimate;
+use super::EstimatorParams;
+use crate::cluster::{ContainerState, Transition};
+use crate::jobs::JobId;
+use crate::util::Time;
+
+/// One detected phase (observation side of the paper's `p_j`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseObs {
+    /// Start of the first task (`ps_jf`).
+    pub ps_first: Time,
+    /// Start of the last task (`ps_jl`), once the ramp closed.
+    pub ps_last: Option<Time>,
+    /// Containers assigned to this phase (`c_pj`), including trailing
+    /// carry-over from the previous phase.
+    pub c: u32,
+    /// Release start (`γ_j`), once detected.
+    pub gamma: Option<Time>,
+    /// Completions attributed to this phase so far.
+    pub completed: u32,
+    /// Phase considered fully drained (no more release expected).
+    pub closed: bool,
+}
+
+impl PhaseObs {
+    /// Δps; while the ramp is still open, the provisional spread so far.
+    pub fn dps(&self, latest_start: Time) -> Time {
+        self.ps_last.unwrap_or(latest_start).saturating_sub(self.ps_first)
+    }
+}
+
+/// Per-job online estimator (Algorithms 1 + 2 fused over one event stream).
+#[derive(Debug)]
+pub struct JobEstimator {
+    pub job: JobId,
+    pub cat: u8,
+    params: EstimatorParams,
+    /// Job start `α_i`: first Running observed.
+    pub alpha: Option<Time>,
+    /// Job end `β_i`: set when running drops to zero with no pending ramp.
+    pub beta: Option<Time>,
+    /// Start times not yet assigned to a phase.
+    unassigned_starts: Vec<Time>,
+    /// Finish times not yet attributed to a phase's release.
+    unassigned_finishes: Vec<Time>,
+    /// Currently running containers.
+    pub running: u32,
+    /// Detected phases in order.
+    pub phases: Vec<PhaseObs>,
+    /// Index of the phase whose start ramp is currently open.
+    open_phase: Option<usize>,
+    /// Trailing tasks carried into the next phase (Algorithm 2 line 12).
+    carry_c: u32,
+    latest_start: Time,
+    /// Latest Completed transition observed (for β).
+    last_finish: Option<Time>,
+}
+
+impl JobEstimator {
+    pub fn new(job: JobId, cat: u8, params: EstimatorParams) -> Self {
+        JobEstimator {
+            job,
+            cat,
+            params,
+            alpha: None,
+            beta: None,
+            unassigned_starts: Vec::new(),
+            unassigned_finishes: Vec::new(),
+            running: 0,
+            phases: Vec::new(),
+            open_phase: None,
+            carry_c: 0,
+            latest_start: 0,
+            last_finish: None,
+        }
+    }
+
+    /// Feed one observed transition (only Running / Completed matter).
+    pub fn on_transition(&mut self, tr: &Transition) {
+        debug_assert_eq!(tr.job, self.job);
+        match tr.to {
+            ContainerState::Running => {
+                self.alpha = Some(self.alpha.map_or(tr.time, |a| a.min(tr.time)));
+                self.latest_start = self.latest_start.max(tr.time);
+                self.unassigned_starts.push(tr.time);
+                self.running += 1;
+            }
+            ContainerState::Completed => {
+                self.unassigned_finishes.push(tr.time);
+                self.last_finish = Some(self.last_finish.map_or(tr.time, |f| f.max(tr.time)));
+                self.running = self.running.saturating_sub(1);
+            }
+            _ => {}
+        }
+    }
+
+    /// Sliding-window pass (call at each heartbeat with the current time).
+    pub fn tick(&mut self, now: Time) {
+        self.detect_phase_starts(now);
+        self.detect_release(now);
+        if self.running == 0
+            && self.unassigned_starts.is_empty()
+            && self.open_phase.is_none()
+            && self.alpha.is_some()
+            && self.phases.iter().all(|p| p.closed)
+        {
+            // All observed work drained: β_i = latest finish (Algo 2 line 14).
+            if let Some(last) = self.last_finish {
+                self.beta = Some(self.beta.map_or(last, |b| b.max(last)));
+            }
+        }
+    }
+
+    // --- Algorithm 1 ---------------------------------------------------
+    fn detect_phase_starts(&mut self, now: Time) {
+        let pw = self.params.pw_ms;
+        let win_lo = now.saturating_sub(pw);
+        let in_window =
+            self.unassigned_starts.iter().filter(|&&t| t > win_lo).count() as u32;
+
+        if self.open_phase.is_none() && !self.unassigned_starts.is_empty() {
+            let oldest = *self.unassigned_starts.iter().min().unwrap();
+            // Burst (line 11) or stability fallback for narrow phases.
+            if in_window > self.params.ts || oldest <= win_lo {
+                let ps_first = oldest;
+                self.phases.push(PhaseObs {
+                    ps_first,
+                    ps_last: None,
+                    c: self.carry_c,
+                    gamma: None,
+                    completed: 0,
+                    closed: false,
+                });
+                self.carry_c = 0;
+                self.open_phase = Some(self.phases.len() - 1);
+            }
+        }
+
+        if let Some(pi) = self.open_phase {
+            // Absorb all observed starts into the open phase.
+            let n = self.unassigned_starts.len() as u32;
+            if n > 0 {
+                self.phases[pi].c += n;
+                let last = *self.unassigned_starts.iter().max().unwrap();
+                self.phases[pi].ps_last =
+                    Some(self.phases[pi].ps_last.map_or(last, |l| l.max(last)));
+                self.unassigned_starts.clear();
+            }
+            // Ramp closes when a full window passes with no new starts
+            // (lines 14-16): ps_last is final, Δps fixed.
+            let last = self.phases[pi].ps_last.unwrap_or(self.phases[pi].ps_first);
+            if now.saturating_sub(last) >= pw {
+                self.open_phase = None;
+            }
+        }
+    }
+
+    // --- Algorithm 2 ---------------------------------------------------
+    fn detect_release(&mut self, now: Time) {
+        let pw = self.params.pw_ms;
+        let win_lo = now.saturating_sub(pw);
+
+        // Find the earliest phase that has started but not closed: releases
+        // are attributed oldest-phase-first (phases are barriers).
+        let Some(pi) = self.phases.iter().position(|p| !p.closed) else {
+            return;
+        };
+
+        let in_window: Vec<Time> = self
+            .unassigned_finishes
+            .iter()
+            .copied()
+            .filter(|&t| t > win_lo)
+            .collect();
+
+        if self.phases[pi].gamma.is_none() && !self.unassigned_finishes.is_empty() {
+            let oldest = *self.unassigned_finishes.iter().min().unwrap();
+            if in_window.len() as u32 > self.params.te {
+                // Burst: γ = min finish inside the window — heading tasks
+                // that completed before the bulk are filtered out (line 8-10).
+                self.phases[pi].gamma = in_window.iter().copied().min();
+            } else if self.phases[pi].c <= self.params.te
+                && oldest <= win_lo
+                && in_window.is_empty()
+            {
+                // Stability fallback ONLY for phases narrower than t_e —
+                // a wide phase must wait for its completion burst, otherwise
+                // an isolated heading task would masquerade as γ and the
+                // stalled bulk would be misread as trailing tasks.
+                self.phases[pi].gamma = Some(oldest);
+            }
+        }
+
+        if self.phases[pi].gamma.is_some() {
+            // Attribute all drained finishes to this phase.
+            let n = self.unassigned_finishes.len() as u32;
+            self.phases[pi].completed += n;
+            self.unassigned_finishes.clear();
+
+            let done = self.phases[pi].completed >= self.phases[pi].c;
+            let latest_finish_stalled = in_window.is_empty();
+            if done {
+                self.phases[pi].closed = true;
+            } else if latest_finish_stalled && self.running > 0 {
+                // Completion stall with tasks still running: trailing tasks —
+                // count them into the next phase (lines 11-12) and close.
+                let remaining = self.phases[pi].c - self.phases[pi].completed;
+                self.carry_c += remaining;
+                self.phases[pi].c = self.phases[pi].completed;
+                self.phases[pi].closed = true;
+            }
+        }
+    }
+
+    /// Live phase estimates for Eq. (1)-(3): phases with a known γ that have
+    /// not fully drained contribute a release ramp.
+    pub fn estimates(&self) -> Vec<PhaseEstimate> {
+        let mut out = Vec::new();
+        self.for_each_estimate(|p| out.push(p));
+        out
+    }
+
+    /// Allocation-free visitor over live phase estimates (perf iter 3: the
+    /// DRESS heartbeat calls this once per tick instead of materializing
+    /// snapshot vectors per category).
+    pub fn for_each_estimate(&self, mut f: impl FnMut(PhaseEstimate)) {
+        let Some(alpha) = self.alpha else { return };
+        let alpha = alpha as f64;
+        let beta = self.beta.map_or(f64::MAX, |b| b as f64);
+        for p in &self.phases {
+            let Some(gamma) = p.gamma else { continue };
+            f(PhaseEstimate {
+                gamma: gamma as f64,
+                dps: p.dps(self.latest_start) as f64,
+                c: p.c as f64,
+                alpha,
+                beta,
+                cat: self.cat,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(time: Time, task: usize, to: ContainerState) -> Transition {
+        Transition { time, container: task as u32, job: 1, task, to }
+    }
+
+    fn est() -> JobEstimator {
+        JobEstimator::new(1, 0, EstimatorParams { ts: 5, te: 5, pw_ms: 10_000 })
+    }
+
+    /// Drive a wave of `n` task starts around `t0` spaced `gap` apart,
+    /// then finishes around `f0`.
+    fn wave(e: &mut JobEstimator, n: usize, t0: Time, gap: Time) {
+        for i in 0..n {
+            e.on_transition(&tr(t0 + i as Time * gap, i, ContainerState::Running));
+        }
+    }
+
+    #[test]
+    fn burst_opens_phase_and_measures_dps() {
+        let mut e = est();
+        wave(&mut e, 8, 5_000, 500); // starts 5000..8500 (Δps = 3500)
+        e.tick(9_000); // 8 starts within window > ts=5 -> phase opens
+        assert_eq!(e.phases.len(), 1);
+        assert_eq!(e.phases[0].c, 8);
+        assert_eq!(e.phases[0].ps_first, 5_000);
+        // ramp closes after a quiet window
+        e.tick(20_000);
+        assert_eq!(e.phases[0].ps_last, Some(8_500));
+        assert_eq!(e.phases[0].dps(0), 3_500);
+        assert_eq!(e.alpha, Some(5_000));
+    }
+
+    #[test]
+    fn small_phase_detected_by_stability() {
+        let mut e = est();
+        wave(&mut e, 2, 1_000, 300); // only 2 tasks, below ts
+        e.tick(2_000);
+        assert!(e.phases.is_empty(), "burst threshold not crossed yet");
+        e.tick(12_000); // oldest start now outside window -> stability open
+        assert_eq!(e.phases.len(), 1);
+        assert_eq!(e.phases[0].c, 2);
+    }
+
+    #[test]
+    fn gamma_from_completion_burst_filters_heading() {
+        let mut e = est();
+        wave(&mut e, 9, 0, 200);
+        e.tick(3_000);
+        assert_eq!(e.phases.len(), 1);
+        // Heading task finishes abnormally early (paper Fig 3: 1.26 s vs 18 s).
+        e.on_transition(&tr(2_000, 0, ContainerState::Completed));
+        e.tick(4_000);
+        // Bulk completes much later, within one window.
+        for i in 1..8 {
+            e.on_transition(&tr(20_000 + i as Time * 300, i, ContainerState::Completed));
+        }
+        e.tick(24_000);
+        let gamma = e.phases[0].gamma.expect("gamma detected");
+        // γ is min finish in the *triggering window*: 20_300, not the
+        // heading task's 2_000.
+        assert_eq!(gamma, 20_300);
+    }
+
+    #[test]
+    fn trailing_tasks_carry_to_next_phase() {
+        let mut e = est();
+        wave(&mut e, 8, 0, 100);
+        e.tick(1_000);
+        assert_eq!(e.phases[0].c, 8);
+        // 7 finish promptly; 1 trails (data skew).
+        for i in 0..7 {
+            e.on_transition(&tr(10_000 + i as Time * 200, i, ContainerState::Completed));
+        }
+        e.tick(12_000);
+        assert!(e.phases[0].gamma.is_some());
+        // Long stall while the trailing task still runs.
+        e.tick(30_000);
+        assert!(e.phases[0].closed);
+        assert_eq!(e.phases[0].c, 7, "trailing task excluded");
+        // Next wave: trailing carry lands in phase 2's count.
+        wave(&mut e, 4, 31_000, 100); // tasks 8..11? reuse indices: fine
+        e.tick(45_000);
+        assert_eq!(e.phases.len(), 2);
+        assert_eq!(e.phases[1].c, 4 + 1, "carry_c included");
+    }
+
+    #[test]
+    fn beta_set_when_drained() {
+        let mut e = est();
+        wave(&mut e, 6, 0, 100);
+        e.tick(1_000);
+        for i in 0..6 {
+            e.on_transition(&tr(5_000 + i as Time * 100, i, ContainerState::Completed));
+        }
+        // Heartbeats arrive every second in reality: the completion burst is
+        // observed inside a pw window (6 > t_e), fixing γ and closing the phase.
+        e.tick(6_000);
+        e.tick(16_000);
+        e.tick(17_000);
+        assert_eq!(e.running, 0);
+        assert_eq!(e.beta, Some(5_500));
+    }
+
+    #[test]
+    fn estimates_empty_before_any_start() {
+        let e = est();
+        assert!(e.estimates().is_empty());
+    }
+
+    #[test]
+    fn estimates_expose_release_ramp() {
+        let mut e = est();
+        wave(&mut e, 8, 0, 500);
+        e.tick(5_000);
+        for i in 0..8 {
+            e.on_transition(&tr(15_000 + i as Time * 400, i, ContainerState::Completed));
+        }
+        e.tick(19_000);
+        let ests = e.estimates();
+        assert_eq!(ests.len(), 1);
+        let p = &ests[0];
+        assert_eq!(p.c, 8.0);
+        assert_eq!(p.gamma, 15_000.0);
+        assert_eq!(p.alpha, 0.0);
+        assert!(p.dps > 0.0);
+    }
+}

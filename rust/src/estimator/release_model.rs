@@ -1,0 +1,229 @@
+//! Eq. (1)-(3): the resource-release model, evaluated in pure Rust.
+//!
+//! This is the authoritative CPU implementation; the Pallas kernel
+//! (`python/compile/kernels/release_estimator.py`) and the PJRT-executed
+//! artifact must agree with it bit-closely (see `rust/tests/` and
+//! `python/tests/test_kernel.py` — all three share the same EPS and the
+//! same dps == 0 step semantics).
+
+/// Mirror of the kernel's EPS guard.
+pub const EPS: f64 = 1e-6;
+
+/// One phase's release parameters (the kernel's packed row layout:
+/// gamma, dps, c, alpha, beta, cat).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseEstimate {
+    /// Earliest bulk finish time γ (ms).
+    pub gamma: f64,
+    /// Starting variation Δps (ms).
+    pub dps: f64,
+    /// Containers occupied by the phase.
+    pub c: f64,
+    /// Job start α (ms).
+    pub alpha: f64,
+    /// Job end β (ms; f64::MAX while the job runs).
+    pub beta: f64,
+    /// 0 = SD, 1 = LD.
+    pub cat: u8,
+}
+
+impl PhaseEstimate {
+    /// Packed f32 row for the AOT artifact.
+    pub fn to_row(&self) -> [f32; 6] {
+        // f64::MAX would overflow f32; saturate to a large finite sentinel.
+        let beta = if self.beta > 1e30 { 3.0e38 } else { self.beta };
+        [
+            self.gamma as f32,
+            self.dps as f32,
+            self.c as f32,
+            self.alpha as f32,
+            beta as f32,
+            self.cat as f32,
+        ]
+    }
+}
+
+/// Eq. (3): containers released by one phase at absolute time `t`, gated by
+/// the job interval (Eq. 2).  `dps <= EPS` degenerates to a step at γ.
+pub fn eval_phase(p: &PhaseEstimate, t: f64) -> f64 {
+    let in_window = t >= p.gamma && t <= p.gamma + p.dps;
+    let in_job = t >= p.alpha && t <= p.beta;
+    if !(in_window && in_job) {
+        return 0.0;
+    }
+    let frac = if p.dps <= EPS {
+        1.0
+    } else {
+        ((t - p.gamma) / p.dps).clamp(0.0, 1.0)
+    };
+    frac * p.c
+}
+
+/// Eq. (1): per-category curves over a time grid — the Rust mirror of the
+/// Pallas kernel (used to cross-validate the PJRT artifact).
+///
+/// Perf (EXPERIMENTS.md §Perf iter 1): for ascending grids — the scheduler
+/// always evaluates ascending horizons — each phase touches only the grid
+/// indices inside its release window (binary search), instead of testing
+/// every (phase, t) pair.  Unsorted grids fall back to the naive product.
+pub fn eval_curves(phases: &[PhaseEstimate], tgrid: &[f64]) -> [Vec<f64>; 2] {
+    let mut sd = vec![0.0; tgrid.len()];
+    let mut ld = vec![0.0; tgrid.len()];
+    let sorted = tgrid.windows(2).all(|w| w[0] <= w[1]);
+    for p in phases {
+        let out = if p.cat == 0 { &mut sd } else { &mut ld };
+        if !sorted {
+            for (i, &t) in tgrid.iter().enumerate() {
+                out[i] += eval_phase(p, t);
+            }
+            continue;
+        }
+        // Active interval = release window ∩ job interval.
+        let lo_t = p.gamma.max(p.alpha);
+        let hi_t = (p.gamma + p.dps).min(p.beta);
+        if hi_t < lo_t {
+            continue;
+        }
+        let lo = tgrid.partition_point(|&t| t < lo_t);
+        let hi = tgrid.partition_point(|&t| t <= hi_t);
+        if p.dps <= EPS {
+            for v in &mut out[lo..hi] {
+                *v += p.c;
+            }
+        } else {
+            let inv = p.c / p.dps;
+            for (i, v) in out[lo..hi].iter_mut().enumerate() {
+                let frac = (tgrid[lo + i] - p.gamma).clamp(0.0, p.dps);
+                *v += frac * inv;
+            }
+        }
+    }
+    [sd, ld]
+}
+
+/// Eq. (3) treated as *cumulative*: a phase past its window has fully
+/// released, so the curve saturates at `c` instead of dropping to zero.
+/// This is the form the delta prediction needs.
+pub fn saturating_eval(p: &PhaseEstimate, t: f64) -> f64 {
+    if t > p.gamma + p.dps && t >= p.alpha && p.gamma + p.dps <= p.beta {
+        p.c
+    } else {
+        eval_phase(p, t)
+    }
+}
+
+/// Containers one phase is predicted to release in (now, horizon]:
+/// max(0, p(horizon) - p(now)) in saturating form — the delta avoids
+/// double-counting containers already returned to A_c before `now`.
+pub fn phase_release_delta(p: &PhaseEstimate, now: f64, horizon: f64) -> f64 {
+    (saturating_eval(p, horizon) - saturating_eval(p, now)).max(0.0)
+}
+
+/// Containers category `cat` is predicted to release in (now, horizon].
+pub fn predicted_release(phases: &[PhaseEstimate], cat: u8, now: f64, horizon: f64) -> f64 {
+    phases
+        .iter()
+        .filter(|p| p.cat == cat)
+        .map(|p| phase_release_delta(p, now, horizon))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ph(gamma: f64, dps: f64, c: f64, cat: u8) -> PhaseEstimate {
+        PhaseEstimate { gamma, dps, c, alpha: 0.0, beta: f64::MAX, cat }
+    }
+
+    #[test]
+    fn ramp_endpoints() {
+        let p = ph(10.0, 20.0, 8.0, 0);
+        assert_eq!(eval_phase(&p, 9.9), 0.0);
+        assert_eq!(eval_phase(&p, 10.0), 0.0);
+        assert!((eval_phase(&p, 20.0) - 4.0).abs() < 1e-12);
+        assert!((eval_phase(&p, 30.0) - 8.0).abs() < 1e-12);
+        assert_eq!(eval_phase(&p, 30.1), 0.0, "eq3: zero after the window");
+    }
+
+    #[test]
+    fn step_when_dps_zero() {
+        let p = ph(10.0, 0.0, 5.0, 0);
+        assert_eq!(eval_phase(&p, 9.0), 0.0);
+        assert_eq!(eval_phase(&p, 10.0), 5.0);
+        assert_eq!(eval_phase(&p, 10.5), 0.0);
+    }
+
+    #[test]
+    fn job_interval_gates() {
+        let mut p = ph(10.0, 20.0, 8.0, 0);
+        p.beta = 15.0;
+        assert!(eval_phase(&p, 12.0) > 0.0);
+        assert_eq!(eval_phase(&p, 16.0), 0.0);
+        p.alpha = 11.0;
+        assert_eq!(eval_phase(&p, 10.5), 0.0);
+    }
+
+    #[test]
+    fn curves_split_categories() {
+        let phases = [ph(0.0, 10.0, 4.0, 0), ph(0.0, 10.0, 6.0, 1)];
+        let grid = [0.0, 5.0, 10.0];
+        let [sd, ld] = eval_curves(&phases, &grid);
+        assert_eq!(sd, vec![0.0, 2.0, 4.0]);
+        assert_eq!(ld, vec![0.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn predicted_release_delta_form() {
+        let phases = [ph(100.0, 100.0, 10.0, 0)];
+        // Mid-ramp to later mid-ramp: the delta, not the absolute value.
+        let d = predicted_release(&phases, 0, 150.0, 175.0);
+        assert!((d - 2.5).abs() < 1e-12, "{d}");
+        // Before the ramp to after it: everything.
+        assert!((predicted_release(&phases, 0, 0.0, 1e6) - 10.0).abs() < 1e-12);
+        // After the window: nothing left.
+        assert_eq!(predicted_release(&phases, 0, 300.0, 400.0), 0.0);
+        // Wrong category: nothing.
+        assert_eq!(predicted_release(&phases, 1, 150.0, 175.0), 0.0);
+    }
+
+    /// The window-clipped fast path must agree with per-point eval_phase on
+    /// both sorted and unsorted grids (perf iter 1 regression guard).
+    #[test]
+    fn fast_path_matches_naive() {
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
+        for case in 0..200 {
+            let n = (rng.next_u64() % 12) as usize;
+            let phases: Vec<PhaseEstimate> = (0..n)
+                .map(|i| PhaseEstimate {
+                    gamma: rng.range_f64(0.0, 2_000.0),
+                    dps: if i % 4 == 0 { 0.0 } else { rng.range_f64(0.0, 800.0) },
+                    c: rng.range_f64(0.0, 20.0),
+                    alpha: rng.range_f64(0.0, 500.0),
+                    beta: if i % 3 == 0 { f64::MAX } else { rng.range_f64(500.0, 4_000.0) },
+                    cat: (i % 2) as u8,
+                })
+                .collect();
+            let mut grid: Vec<f64> = (0..33).map(|_| rng.range_f64(0.0, 4_000.0)).collect();
+            if case % 2 == 0 {
+                grid.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            let [sd, ld] = eval_curves(&phases, &grid);
+            for (i, &t) in grid.iter().enumerate() {
+                let want_sd: f64 = phases.iter().filter(|p| p.cat == 0).map(|p| eval_phase(p, t)).sum();
+                let want_ld: f64 = phases.iter().filter(|p| p.cat == 1).map(|p| eval_phase(p, t)).sum();
+                assert!((sd[i] - want_sd).abs() < 1e-9, "case {case} sd[{i}]");
+                assert!((ld[i] - want_ld).abs() < 1e-9, "case {case} ld[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn to_row_saturates_beta() {
+        let p = ph(1.0, 2.0, 3.0, 1);
+        let row = p.to_row();
+        assert_eq!(row[0], 1.0);
+        assert_eq!(row[5], 1.0);
+        assert!(row[4].is_finite());
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment registry: one entry per table/figure of the paper's
+//! evaluation (§V), each reproducible from the CLI (`dress repro <id>`),
+//! from benches (`cargo bench`), and from integration tests.
+
+pub mod experiments;
+pub mod paper;
+
+pub use experiments::{
+    ablation, fig1, mixed_setting, mr20, run_pair, spark20, trace_benchmark, DressVariant,
+    ExperimentPair, Fig1Result,
+};
+pub use paper::paper_claims;

@@ -1,0 +1,66 @@
+//! The paper's published numbers, encoded as [`PaperClaim`]s so every run
+//! prints paper-vs-measured rows (EXPERIMENTS.md records them).
+
+use crate::report::PaperClaim;
+
+fn c(id: &str, description: &str, paper: f64, direction: i8) -> PaperClaim {
+    PaperClaim { id: id.into(), description: description.into(), paper, direction }
+}
+
+/// All claims extracted from §I, §V.B and Table II.
+pub fn paper_claims() -> Vec<PaperClaim> {
+    vec![
+        // Fig 1 (motivating example, §I).
+        c("FIG1.fcfs-makespan-s", "FCFS makespan of the 4-job example", 40.0, 0),
+        c("FIG1.fcfs-avg-wait-s", "FCFS average waiting time", 16.0, 0),
+        c("FIG1.rearranged-makespan-s", "rearranged makespan (DRESS should reach <= ~30s)", 30.0, 0),
+        c("FIG1.rearranged-avg-wait-s", "rearranged average waiting (DRESS <= 5.75s)", 5.75, 2),
+        // Fig 6/7 + Table II (Spark-on-YARN, 20 jobs).
+        c("FIG6.small-waiting-change-pct", "small-job waiting reduction (Spark)", -80.0, -1),
+        c("FIG7.small-completion-change-pct", "small-job completion change (Spark), paper -27.6%", -27.6, -1),
+        c("FIG7.large-penalized-mean-pct", "affected large jobs pay a bounded penalty, paper +16.1%", 16.1, 1),
+        c("TAB2.makespan-change-pct", "makespan stays stable (paper +0.64%; band |x|<=10%)", 0.64, 3),
+        c("TAB2.avg-wait-change-pct", "avg waiting improves (paper -14.7%)", -14.7, -1),
+        c("TAB2.avg-completion-change-pct", "avg completion improves (paper -6.6%)", -6.6, -1),
+        // Fig 8/9 (MapReduce, 20 jobs).
+        c("FIG8.small-waiting-change-pct", "small-job waiting reduction (MR)", -80.0, -1),
+        c("FIG9.small-completion-change-pct", "small-job completion change (MR), paper -25.7%", -25.7, -1),
+        // Fig 10-13 (mixed, small fraction sweep).
+        c("FIG10.small-completion-change-pct", "10% small jobs, paper -76.1% (best pair)", -76.1, -1),
+        c("FIG11.small-completion-change-pct", "20% small jobs, paper -36.2%", -36.2, -1),
+        c("FIG12.small-completion-change-pct", "30% small jobs, paper -21.9%", -21.9, -1),
+        c("FIG13.small-completion-change-pct", "40% small jobs, paper -23.7%", -23.7, -1),
+    ]
+}
+
+/// Look up one claim by id.
+pub fn claim(id: &str) -> PaperClaim {
+    paper_claims()
+        .into_iter()
+        .find(|c| c.id == id)
+        .unwrap_or_else(|| panic!("unknown paper claim {id}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claims_cover_all_figures_and_table() {
+        let ids: Vec<String> = paper_claims().iter().map(|c| c.id.clone()).collect();
+        for fig in ["FIG1", "FIG6", "FIG7", "FIG8", "FIG9", "FIG10", "FIG11", "FIG12", "FIG13", "TAB2"] {
+            assert!(ids.iter().any(|i| i.starts_with(fig)), "missing {fig}");
+        }
+    }
+
+    #[test]
+    fn claim_lookup() {
+        assert_eq!(claim("FIG1.fcfs-makespan-s").paper, 40.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown paper claim")]
+    fn unknown_claim_panics() {
+        claim("FIG99.nope");
+    }
+}

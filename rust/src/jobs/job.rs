@@ -1,0 +1,195 @@
+//! Runtime job state tracked by the simulation engine.
+
+use super::spec::{JobId, JobSpec};
+use crate::cluster::ContainerId;
+use crate::util::Time;
+
+/// Lifecycle of one task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// Waiting for a container grant.
+    Pending,
+    /// Granted; its container is working through the YARN state machine.
+    Launching(ContainerId),
+    /// Executing.
+    Running { container: ContainerId, start: Time },
+    /// Finished.
+    Done { start: Time, finish: Time },
+}
+
+/// Runtime task record.
+#[derive(Debug, Clone)]
+pub struct TaskRt {
+    pub duration_ms: Time,
+    pub state: TaskState,
+}
+
+/// Runtime job record: spec + mutable execution state.
+#[derive(Debug, Clone)]
+pub struct JobRt {
+    pub spec: JobSpec,
+    /// Index of the phase currently eligible to launch tasks.
+    pub cur_phase: usize,
+    /// Per-phase task states, mirroring `spec.phases`.
+    pub tasks: Vec<Vec<TaskRt>>,
+    /// Set once the job has been observed by the scheduler (submission).
+    pub submitted: bool,
+    /// Time the first task entered Running (defines waiting time).
+    pub first_start: Option<Time>,
+    /// Time the last task completed (defines completion time).
+    pub finish: Option<Time>,
+    /// Containers currently held (Launching + Running tasks).
+    pub occupied: u32,
+}
+
+impl JobRt {
+    pub fn new(spec: JobSpec) -> Self {
+        let tasks = spec
+            .phases
+            .iter()
+            .map(|p| {
+                p.tasks
+                    .iter()
+                    .map(|t| TaskRt { duration_ms: t.duration_ms, state: TaskState::Pending })
+                    .collect()
+            })
+            .collect();
+        JobRt {
+            spec,
+            cur_phase: 0,
+            tasks,
+            submitted: false,
+            first_start: None,
+            finish: None,
+            occupied: 0,
+        }
+    }
+
+    pub fn id(&self) -> JobId {
+        self.spec.id
+    }
+
+    pub fn started(&self) -> bool {
+        self.first_start.is_some()
+    }
+
+    pub fn finished(&self) -> bool {
+        self.finish.is_some()
+    }
+
+    /// Number of tasks in the current phase still waiting for a container.
+    pub fn pending_tasks(&self) -> u32 {
+        if self.finished() || self.cur_phase >= self.tasks.len() {
+            return 0;
+        }
+        self.tasks[self.cur_phase]
+            .iter()
+            .filter(|t| t.state == TaskState::Pending)
+            .count() as u32
+    }
+
+    /// Pick the next pending task in the current phase (engine side).
+    pub fn next_pending(&self) -> Option<(usize, usize)> {
+        if self.cur_phase >= self.tasks.len() {
+            return None;
+        }
+        self.tasks[self.cur_phase]
+            .iter()
+            .position(|t| t.state == TaskState::Pending)
+            .map(|i| (self.cur_phase, i))
+    }
+
+    /// True when every task of `phase` is Done.
+    pub fn phase_complete(&self, phase: usize) -> bool {
+        self.tasks[phase]
+            .iter()
+            .all(|t| matches!(t.state, TaskState::Done { .. }))
+    }
+
+    /// Advance the phase cursor past completed phases (barrier semantics).
+    pub fn advance_phase(&mut self) {
+        while self.cur_phase < self.tasks.len() && self.phase_complete(self.cur_phase) {
+            self.cur_phase += 1;
+        }
+    }
+
+    /// True when all tasks in all phases are done.
+    pub fn all_done(&self) -> bool {
+        self.tasks.iter().all(|p| {
+            p.iter().all(|t| matches!(t.state, TaskState::Done { .. }))
+        })
+    }
+
+    /// Waiting time (submission -> first task running), once known.
+    pub fn waiting_ms(&self) -> Option<Time> {
+        self.first_start.map(|s| s.saturating_sub(self.spec.submit_ms))
+    }
+
+    /// Completion time (submission -> last task finished), once known.
+    pub fn completion_ms(&self) -> Option<Time> {
+        self.finish.map(|f| f.saturating_sub(self.spec.submit_ms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::spec::{PhaseKind, PhaseSpec, Platform};
+
+    fn rt() -> JobRt {
+        JobRt::new(JobSpec {
+            id: 3,
+            name: "sort".into(),
+            platform: Platform::MapReduce,
+            submit_ms: 1_000,
+            demand: 2,
+            phases: vec![
+                PhaseSpec::new(PhaseKind::Map, &[5_000, 6_000]),
+                PhaseSpec::new(PhaseKind::Reduce, &[4_000]),
+            ],
+        })
+    }
+
+    #[test]
+    fn initial_state() {
+        let j = rt();
+        assert_eq!(j.pending_tasks(), 2);
+        assert!(!j.started() && !j.finished());
+        assert_eq!(j.next_pending(), Some((0, 0)));
+    }
+
+    #[test]
+    fn barrier_blocks_next_phase() {
+        let mut j = rt();
+        j.tasks[0][0].state = TaskState::Done { start: 0, finish: 5_000 };
+        j.advance_phase();
+        assert_eq!(j.cur_phase, 0, "phase 0 not fully done yet");
+        assert_eq!(j.pending_tasks(), 1);
+        j.tasks[0][1].state = TaskState::Done { start: 0, finish: 6_000 };
+        j.advance_phase();
+        assert_eq!(j.cur_phase, 1);
+        assert_eq!(j.pending_tasks(), 1);
+    }
+
+    #[test]
+    fn completion_metrics() {
+        let mut j = rt();
+        j.first_start = Some(3_000);
+        j.finish = Some(15_000);
+        assert_eq!(j.waiting_ms(), Some(2_000));
+        assert_eq!(j.completion_ms(), Some(14_000));
+    }
+
+    #[test]
+    fn all_done_detects_end() {
+        let mut j = rt();
+        for p in 0..j.tasks.len() {
+            for t in 0..j.tasks[p].len() {
+                j.tasks[p][t].state = TaskState::Done { start: 0, finish: 1 };
+            }
+        }
+        assert!(j.all_done());
+        j.advance_phase();
+        assert_eq!(j.pending_tasks(), 0);
+    }
+}

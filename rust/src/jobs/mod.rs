@@ -1,0 +1,14 @@
+//! Job / phase / task domain model.
+//!
+//! A job (paper notation `J_i`) is a DAG-flattened sequence of *phases*
+//! (`p_j`), each a set of *tasks* (`t_i`) that run in parallel, one task per
+//! container.  Phases are barriers: phase `j+1` cannot launch until every
+//! task of phase `j` completed (MapReduce map->reduce, Spark stage
+//! boundaries).  A job's *resource demand* `r_i` is the number of containers
+//! it requests from the scheduler.
+
+pub mod job;
+pub mod spec;
+
+pub use job::{JobRt, TaskRt, TaskState};
+pub use spec::{JobId, JobSpec, PhaseKind, PhaseSpec, Platform, TaskSpec};

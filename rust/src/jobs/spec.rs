@@ -1,0 +1,168 @@
+//! Immutable job specifications (what the workload generator produces and
+//! the simulator consumes).
+
+use crate::util::Time;
+
+/// Job identifier (index into the experiment's job list, 1-based in reports
+/// to match the paper's figures).
+pub type JobId = u32;
+
+/// Which platform the job runs on (paper §V.A.2 runs both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Platform {
+    /// Classic MapReduce on YARN: distinct Map / Reduce phases.
+    MapReduce,
+    /// Spark-on-YARN: stages without a Map/Reduce split, data-skew prone.
+    Spark,
+}
+
+impl std::fmt::Display for Platform {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Platform::MapReduce => write!(f, "mapreduce"),
+            Platform::Spark => write!(f, "spark"),
+        }
+    }
+}
+
+/// Phase flavor — informs trace labels and figure rendering only; the
+/// scheduler treats all phases uniformly (as YARN does).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    Map,
+    Reduce,
+    SparkStage,
+}
+
+/// One task: nominal execution length once its container reaches Running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskSpec {
+    pub duration_ms: Time,
+}
+
+/// One phase: a parallel wave of tasks behind a barrier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSpec {
+    pub kind: PhaseKind,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl PhaseSpec {
+    pub fn new(kind: PhaseKind, durations_ms: &[Time]) -> Self {
+        PhaseSpec {
+            kind,
+            tasks: durations_ms.iter().map(|&d| TaskSpec { duration_ms: d }).collect(),
+        }
+    }
+
+    pub fn width(&self) -> u32 {
+        self.tasks.len() as u32
+    }
+}
+
+/// A complete job specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: JobId,
+    /// Benchmark name, e.g. "wordcount", "pagerank" (HiBench-style).
+    pub name: String,
+    pub platform: Platform,
+    /// Submission time (ms since experiment start).
+    pub submit_ms: Time,
+    /// Containers requested — the paper's `r_i`, the SD/LD classification key.
+    pub demand: u32,
+    pub phases: Vec<PhaseSpec>,
+}
+
+impl JobSpec {
+    /// Total number of tasks across phases.
+    pub fn total_tasks(&self) -> u32 {
+        self.phases.iter().map(|p| p.width()).sum()
+    }
+
+    /// Widest phase — a lower bound sanity check against `demand`.
+    pub fn max_phase_width(&self) -> u32 {
+        self.phases.iter().map(|p| p.width()).max().unwrap_or(0)
+    }
+
+    /// Total serial work if run with unlimited containers (critical path).
+    pub fn critical_path_ms(&self) -> Time {
+        self.phases
+            .iter()
+            .map(|p| p.tasks.iter().map(|t| t.duration_ms).max().unwrap_or(0))
+            .sum()
+    }
+
+    /// Total container-milliseconds of work.
+    pub fn work_ms(&self) -> Time {
+        self.phases
+            .iter()
+            .flat_map(|p| p.tasks.iter().map(|t| t.duration_ms))
+            .sum()
+    }
+
+    /// Structural validity: at least one phase, no empty phase, demand >= 1.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.phases.is_empty() {
+            return Err(format!("job {} has no phases", self.id));
+        }
+        if self.phases.iter().any(|p| p.tasks.is_empty()) {
+            return Err(format!("job {} has an empty phase", self.id));
+        }
+        if self.demand == 0 {
+            return Err(format!("job {} demands 0 containers", self.id));
+        }
+        if self.phases.iter().any(|p| p.tasks.iter().any(|t| t.duration_ms == 0)) {
+            return Err(format!("job {} has a zero-length task", self.id));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            id: 1,
+            name: "wordcount".into(),
+            platform: Platform::MapReduce,
+            submit_ms: 0,
+            demand: 4,
+            phases: vec![
+                PhaseSpec::new(PhaseKind::Map, &[10_000, 12_000, 11_000]),
+                PhaseSpec::new(PhaseKind::Reduce, &[8_000]),
+            ],
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let s = spec();
+        assert_eq!(s.total_tasks(), 4);
+        assert_eq!(s.max_phase_width(), 3);
+        assert_eq!(s.critical_path_ms(), 20_000);
+        assert_eq!(s.work_ms(), 41_000);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = spec();
+        s.demand = 0;
+        assert!(s.validate().is_err());
+
+        let mut s = spec();
+        s.phases.clear();
+        assert!(s.validate().is_err());
+
+        let mut s = spec();
+        s.phases[0].tasks.clear();
+        assert!(s.validate().is_err());
+
+        let mut s = spec();
+        s.phases[1].tasks[0].duration_ms = 0;
+        assert!(s.validate().is_err());
+    }
+}

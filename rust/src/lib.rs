@@ -1,0 +1,46 @@
+//! # dress — Dynamic RESource-reservation Scheme
+//!
+//! A full reproduction of *DRESS: Dynamic RESource-reservation Scheme for
+//! Congested Data-intensive Computing Platforms* (Mao et al., 2018) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a YARN-fidelity cluster
+//!   simulator, the DRESS scheduler with its release estimator
+//!   (Algorithms 1-3), the Fair/Capacity/FIFO baselines, workload
+//!   generation, metrics, and the experiment registry reproducing every
+//!   figure and table of the paper's evaluation.
+//! * **Layer 2** — `python/compile/model.py`: JAX compute graphs, AOT-lowered
+//!   once to HLO text.
+//! * **Layer 1** — `python/compile/kernels/release_estimator.py`: the Pallas
+//!   kernel evaluating Eq. (1)-(3), executed from Rust via PJRT
+//!   ([`runtime`], [`estimator::accel`]).
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use dress::config::ExperimentConfig;
+//! use dress::sim::engine::run_experiment;
+//! use dress::workload::{generate, WorkloadMix};
+//!
+//! let mut cfg = ExperimentConfig::default();
+//! cfg.sched.kind = dress::config::SchedKind::Dress;
+//! let jobs = generate(20, WorkloadMix::Mixed, 0.3, 5_000, 42);
+//! let result = run_experiment(&cfg, jobs);
+//! println!("makespan: {} ms", result.system.makespan_ms);
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod estimator;
+pub mod expt;
+pub mod jobs;
+pub mod live;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,12 @@
+//! `dress` binary — Layer-3 coordinator CLI.
+
+fn main() {
+    let args = match dress::cli::Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    };
+    std::process::exit(dress::cli::run_cli(&args));
+}

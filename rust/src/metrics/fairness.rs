@@ -1,0 +1,103 @@
+//! Fairness and per-category breakdowns: Jain's fairness index over
+//! per-job slowdowns, and SD/LD aggregate views — used by reports and by
+//! the Fair-scheduler validation tests.
+
+use super::JobMetrics;
+use crate::util::stats;
+
+/// Jain's fairness index over a set of nonnegative values:
+/// (Σx)² / (n·Σx²); 1.0 = perfectly fair, 1/n = maximally unfair.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sq)
+}
+
+/// Per-job slowdown: completion time normalized by in-cluster execution
+/// time (1.0 = no queueing at all).
+pub fn slowdowns(jobs: &[JobMetrics]) -> Vec<f64> {
+    jobs.iter()
+        .map(|j| j.completion_ms as f64 / j.execution_ms.max(1) as f64)
+        .collect()
+}
+
+/// Aggregate metrics of one demand class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassAggregate {
+    pub n: usize,
+    pub avg_waiting_s: f64,
+    pub avg_completion_s: f64,
+    pub avg_slowdown: f64,
+}
+
+/// Split jobs at `small_threshold` demand and aggregate each side.
+pub fn by_class(jobs: &[JobMetrics], small_threshold: u32) -> (ClassAggregate, ClassAggregate) {
+    let agg = |sel: Vec<&JobMetrics>| {
+        let w: Vec<f64> = sel.iter().map(|j| j.waiting_ms as f64 / 1000.0).collect();
+        let c: Vec<f64> = sel.iter().map(|j| j.completion_ms as f64 / 1000.0).collect();
+        let s: Vec<f64> = sel
+            .iter()
+            .map(|j| j.completion_ms as f64 / j.execution_ms.max(1) as f64)
+            .collect();
+        ClassAggregate {
+            n: sel.len(),
+            avg_waiting_s: stats::mean(&w),
+            avg_completion_s: stats::mean(&c),
+            avg_slowdown: stats::mean(&s),
+        }
+    };
+    (
+        agg(jobs.iter().filter(|j| j.demand <= small_threshold).collect()),
+        agg(jobs.iter().filter(|j| j.demand > small_threshold).collect()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jm(id: u32, demand: u32, wait: u64, completion: u64) -> JobMetrics {
+        JobMetrics {
+            id,
+            demand,
+            submit_ms: 0,
+            waiting_ms: wait,
+            completion_ms: completion,
+            execution_ms: completion - wait,
+        }
+    }
+
+    #[test]
+    fn jain_bounds() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert!((jain_index(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        let unfair = jain_index(&[10.0, 0.0, 0.0, 0.0]);
+        assert!((unfair - 0.25).abs() < 1e-12);
+        let mid = jain_index(&[1.0, 2.0, 3.0]);
+        assert!(0.25 < mid && mid < 1.0);
+    }
+
+    #[test]
+    fn slowdown_of_unqueued_job_is_one() {
+        let s = slowdowns(&[jm(1, 2, 0, 10_000)]);
+        assert!((s[0] - 1.0).abs() < 1e-12);
+        let s = slowdowns(&[jm(2, 2, 10_000, 20_000)]);
+        assert!((s[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn by_class_splits_at_threshold() {
+        let jobs = [jm(1, 2, 1_000, 3_000), jm(2, 20, 4_000, 10_000), jm(3, 4, 0, 2_000)];
+        let (small, large) = by_class(&jobs, 4);
+        assert_eq!(small.n, 2);
+        assert_eq!(large.n, 1);
+        assert!((small.avg_completion_s - 2.5).abs() < 1e-12);
+        assert!((large.avg_waiting_s - 4.0).abs() < 1e-12);
+    }
+}

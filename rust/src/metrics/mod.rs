@@ -1,0 +1,120 @@
+//! Evaluation metrics (paper §V.A.3): per-job waiting time and completion
+//! time, system makespan, plus the Table-II style summaries.
+
+pub mod fairness;
+pub mod summary;
+
+pub use fairness::{by_class, jain_index, slowdowns, ClassAggregate};
+pub use summary::{compare_small_large, SchedulerSummary, SmallLargeComparison};
+
+use crate::jobs::{JobId, JobRt};
+use crate::util::stats;
+use crate::util::Time;
+
+/// Final per-job metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobMetrics {
+    pub id: JobId,
+    pub demand: u32,
+    pub submit_ms: Time,
+    /// Submission -> first task Running.
+    pub waiting_ms: Time,
+    /// Submission -> last task Completed.
+    pub completion_ms: Time,
+    /// Completion - waiting = in-cluster execution span.
+    pub execution_ms: Time,
+}
+
+impl JobMetrics {
+    pub fn of(job: &JobRt) -> JobMetrics {
+        let waiting = job.waiting_ms().expect("job never started");
+        let completion = job.completion_ms().expect("job never finished");
+        JobMetrics {
+            id: job.id(),
+            demand: job.spec.demand,
+            submit_ms: job.spec.submit_ms,
+            waiting_ms: waiting,
+            completion_ms: completion,
+            execution_ms: completion - waiting,
+        }
+    }
+}
+
+/// System-level metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemMetrics {
+    /// First submission -> last completion (paper: "total execution time
+    /// for all jobs").
+    pub makespan_ms: Time,
+    pub avg_waiting_ms: f64,
+    pub median_waiting_ms: f64,
+    pub avg_completion_ms: f64,
+    pub median_completion_ms: f64,
+    /// Mean fraction of containers busy across tick samples.
+    pub mean_utilization: f64,
+}
+
+impl SystemMetrics {
+    pub fn of(jobs: &[JobMetrics], util: &[(Time, u32)], total_containers: u32) -> SystemMetrics {
+        let first_submit = jobs.iter().map(|j| j.submit_ms).min().unwrap_or(0);
+        let last_finish = jobs
+            .iter()
+            .map(|j| j.submit_ms + j.completion_ms)
+            .max()
+            .unwrap_or(0);
+        let w: Vec<f64> = jobs.iter().map(|j| j.waiting_ms as f64).collect();
+        let c: Vec<f64> = jobs.iter().map(|j| j.completion_ms as f64).collect();
+        let u: Vec<f64> = util
+            .iter()
+            .map(|&(_, used)| used as f64 / total_containers.max(1) as f64)
+            .collect();
+        SystemMetrics {
+            makespan_ms: last_finish - first_submit,
+            avg_waiting_ms: stats::mean(&w),
+            median_waiting_ms: stats::median(&w),
+            avg_completion_ms: stats::mean(&c),
+            median_completion_ms: stats::median(&c),
+            mean_utilization: stats::mean(&u),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jm(id: JobId, submit: Time, wait: Time, completion: Time) -> JobMetrics {
+        JobMetrics {
+            id,
+            demand: 4,
+            submit_ms: submit,
+            waiting_ms: wait,
+            completion_ms: completion,
+            execution_ms: completion - wait,
+        }
+    }
+
+    #[test]
+    fn makespan_spans_first_submit_to_last_finish() {
+        let jobs = [jm(1, 0, 1_000, 10_000), jm(2, 5_000, 2_000, 20_000)];
+        let m = SystemMetrics::of(&jobs, &[], 10);
+        assert_eq!(m.makespan_ms, 25_000);
+        assert_eq!(m.avg_waiting_ms, 1_500.0);
+        assert_eq!(m.avg_completion_ms, 15_000.0);
+    }
+
+    #[test]
+    fn utilization_mean() {
+        let jobs = [jm(1, 0, 0, 1_000)];
+        let util = [(0, 5), (1_000, 10), (2_000, 0)];
+        let m = SystemMetrics::of(&jobs, &util, 10);
+        assert!((m.mean_utilization - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_jobs_zero_metrics() {
+        let m = SystemMetrics::of(&[], &[], 10);
+        assert_eq!(m.makespan_ms, 0);
+        assert_eq!(m.avg_waiting_ms, 0.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Table-II style scheduler summaries and small-vs-large breakdowns
+//! (the numbers quoted throughout paper §V.B).
+
+use super::JobMetrics;
+use crate::util::stats;
+
+/// One row of the paper's Table II.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerSummary {
+    pub scheduler: String,
+    pub makespan_s: f64,
+    pub avg_waiting_s: f64,
+    pub median_waiting_s: f64,
+    pub avg_completion_s: f64,
+    pub median_completion_s: f64,
+}
+
+impl SchedulerSummary {
+    pub fn of(scheduler: &str, sys: &crate::metrics::SystemMetrics) -> Self {
+        SchedulerSummary {
+            scheduler: scheduler.to_string(),
+            makespan_s: sys.makespan_ms as f64 / 1000.0,
+            avg_waiting_s: sys.avg_waiting_ms / 1000.0,
+            median_waiting_s: sys.median_waiting_ms / 1000.0,
+            avg_completion_s: sys.avg_completion_ms / 1000.0,
+            median_completion_s: sys.median_completion_ms / 1000.0,
+        }
+    }
+}
+
+/// Small-vs-large job comparison between DRESS and a baseline
+/// (the "%-reduction for small jobs" headline numbers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SmallLargeComparison {
+    /// IDs classified small (demand <= threshold).
+    pub small_ids: Vec<u32>,
+    /// Mean completion-time change for small jobs, % (negative = faster).
+    pub small_completion_change_pct: f64,
+    /// Mean completion-time change for large jobs, %.
+    pub large_completion_change_pct: f64,
+    /// Mean completion-time *increase* among the large jobs that got slower
+    /// (the paper's "+16.1% on average" is over affected jobs only).
+    pub large_penalized_mean_pct: f64,
+    /// Mean waiting-time change for small jobs, %.
+    pub small_waiting_change_pct: f64,
+    /// Max single-job completion reduction among small jobs, %.
+    pub best_small_reduction_pct: f64,
+    /// Makespan change, %.
+    pub makespan_change_pct: f64,
+}
+
+/// Compare DRESS vs a baseline on the same workload. `small_threshold` is
+/// the demand cutoff used for reporting (the paper uses "< 10 containers"
+/// for the Spark set; we use the θ rule's realized cutoff).
+pub fn compare_small_large(
+    dress: &[JobMetrics],
+    baseline: &[JobMetrics],
+    dress_makespan_ms: u64,
+    baseline_makespan_ms: u64,
+    small_threshold: u32,
+) -> SmallLargeComparison {
+    assert_eq!(dress.len(), baseline.len(), "same workload required");
+    let mut small_ids = Vec::new();
+    let mut small_c = Vec::new();
+    let mut large_c = Vec::new();
+    let mut large_pen = Vec::new();
+    let mut small_w = Vec::new();
+    let mut best = 0.0_f64;
+    for (d, b) in dress.iter().zip(baseline) {
+        assert_eq!(d.id, b.id, "job order must match");
+        let dc = stats::pct_change(b.completion_ms as f64, d.completion_ms as f64);
+        let dw = stats::pct_change(b.waiting_ms.max(1) as f64, d.waiting_ms.max(1) as f64);
+        if d.demand <= small_threshold {
+            small_ids.push(d.id);
+            small_c.push(dc);
+            small_w.push(dw);
+            best = best.min(dc);
+        } else {
+            large_c.push(dc);
+            if dc > 0.0 {
+                large_pen.push(dc);
+            }
+        }
+    }
+    SmallLargeComparison {
+        small_ids,
+        small_completion_change_pct: stats::mean(&small_c),
+        large_completion_change_pct: stats::mean(&large_c),
+        large_penalized_mean_pct: stats::mean(&large_pen),
+        small_waiting_change_pct: stats::mean(&small_w),
+        best_small_reduction_pct: best,
+        makespan_change_pct: stats::pct_change(baseline_makespan_ms as f64, dress_makespan_ms as f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SystemMetrics;
+
+    fn jm(id: u32, demand: u32, wait: u64, completion: u64) -> JobMetrics {
+        JobMetrics {
+            id,
+            demand,
+            submit_ms: 0,
+            waiting_ms: wait,
+            completion_ms: completion,
+            execution_ms: completion - wait,
+        }
+    }
+
+    #[test]
+    fn comparison_classifies_by_demand() {
+        let dress = [jm(1, 2, 100, 1_000), jm(2, 20, 500, 6_000)];
+        let base = [jm(1, 2, 400, 2_000), jm(2, 20, 400, 5_000)];
+        let cmp = compare_small_large(&dress, &base, 10_000, 10_000, 4);
+        assert_eq!(cmp.small_ids, vec![1]);
+        assert!((cmp.small_completion_change_pct + 50.0).abs() < 1e-9);
+        assert!((cmp.large_completion_change_pct - 20.0).abs() < 1e-9);
+        assert!((cmp.large_penalized_mean_pct - 20.0).abs() < 1e-9);
+        assert!((cmp.best_small_reduction_pct + 50.0).abs() < 1e-9);
+        assert_eq!(cmp.makespan_change_pct, 0.0);
+    }
+
+    #[test]
+    fn summary_converts_to_seconds() {
+        let jobs = [jm(1, 2, 1_000, 3_000)];
+        let sys = SystemMetrics::of(&jobs, &[], 10);
+        let s = SchedulerSummary::of("dress", &sys);
+        assert_eq!(s.avg_waiting_s, 1.0);
+        assert_eq!(s.avg_completion_s, 3.0);
+        assert_eq!(s.scheduler, "dress");
+    }
+
+    #[test]
+    #[should_panic(expected = "same workload")]
+    fn mismatched_lengths_panic() {
+        compare_small_large(&[], &[jm(1, 1, 1, 1)], 0, 0, 4);
+    }
+}

@@ -1,0 +1,79 @@
+//! Paper-vs-measured comparison rows: each experiment declares the paper's
+//! claim (a qualitative *shape*: who wins, by roughly what factor) and the
+//! harness prints both side by side for EXPERIMENTS.md.
+
+/// One claim from the paper, checked against a measured value.
+#[derive(Debug, Clone)]
+pub struct PaperClaim {
+    /// e.g. "FIG7.small-completion-reduction".
+    pub id: String,
+    pub description: String,
+    /// The paper's number (percent or seconds, see description).
+    pub paper: f64,
+    /// The direction that must hold for the shape to reproduce:
+    /// -1 => measured should be negative/below zero (a reduction),
+    /// +1 => positive, 0 => "close to paper value" (|measured-paper| small),
+    ///  2 => measured should be <= the paper value (not worse than),
+    ///  3 => stability: |measured| small in absolute terms (<= 10).
+    pub direction: i8,
+}
+
+/// Render one comparison row and evaluate whether the shape holds.
+pub fn comparison_row(claim: &PaperClaim, measured: f64) -> (String, bool) {
+    let holds = match claim.direction {
+        -1 => measured < 0.0,
+        1 => measured > 0.0,
+        2 => measured <= claim.paper * 1.05,
+        3 => measured.abs() <= 10.0,
+        _ => {
+            let denom = claim.paper.abs().max(1e-9);
+            (measured - claim.paper).abs() / denom < 0.35
+        }
+    };
+    let marker = if holds { "OK " } else { "MISS" };
+    (
+        format!(
+            "[{marker}] {:<44} paper {:>9.1}  measured {:>9.1}",
+            claim.id, claim.paper, measured
+        ),
+        holds,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn claim(direction: i8, paper: f64) -> PaperClaim {
+        PaperClaim {
+            id: "TEST.x".into(),
+            description: "test".into(),
+            paper,
+            direction,
+        }
+    }
+
+    #[test]
+    fn reduction_claims_need_negative_measured() {
+        let (row, ok) = comparison_row(&claim(-1, -76.1), -40.0);
+        assert!(ok && row.contains("OK"));
+        let (_, bad) = comparison_row(&claim(-1, -76.1), 5.0);
+        assert!(!bad);
+    }
+
+    #[test]
+    fn closeness_claims_use_relative_band() {
+        let (_, ok) = comparison_row(&claim(0, 100.0), 110.0);
+        assert!(ok);
+        let (_, bad) = comparison_row(&claim(0, 100.0), 200.0);
+        assert!(!bad);
+    }
+
+    #[test]
+    fn positive_claims() {
+        let (_, ok) = comparison_row(&claim(1, 10.0), 0.5);
+        assert!(ok);
+        let (_, bad) = comparison_row(&claim(1, 10.0), -0.5);
+        assert!(!bad);
+    }
+}

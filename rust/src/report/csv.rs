@@ -1,0 +1,99 @@
+//! CSV export of run results — for plotting the figures outside the
+//! terminal (gnuplot/matplotlib), and for EXPERIMENTS.md appendices.
+
+use crate::sim::RunResult;
+
+/// Per-job metrics CSV (header + one row per job).
+pub fn jobs_csv(run: &RunResult) -> String {
+    let mut out =
+        String::from("job_id,demand,submit_s,waiting_s,completion_s,execution_s\n");
+    for j in &run.jobs {
+        out.push_str(&format!(
+            "{},{},{:.3},{:.3},{:.3},{:.3}\n",
+            j.id,
+            j.demand,
+            j.submit_ms as f64 / 1000.0,
+            j.waiting_ms as f64 / 1000.0,
+            j.completion_ms as f64 / 1000.0,
+            j.execution_ms as f64 / 1000.0,
+        ));
+    }
+    out
+}
+
+/// Task trace CSV (Figs 2-4 raw data).
+pub fn trace_csv(run: &RunResult) -> String {
+    let mut out = String::from("job_id,phase,task,start_s,finish_s,duration_s\n");
+    for t in &run.trace.tasks {
+        out.push_str(&format!(
+            "{},{},{},{:.3},{:.3},{:.3}\n",
+            t.job,
+            t.phase,
+            t.task,
+            t.start as f64 / 1000.0,
+            t.finish as f64 / 1000.0,
+            t.duration() as f64 / 1000.0,
+        ));
+    }
+    out
+}
+
+/// δ trajectory CSV (DRESS only; empty body for baselines).
+pub fn delta_csv(run: &RunResult) -> String {
+    let mut out = String::from("time_s,delta\n");
+    for &(t, d) in &run.delta_history {
+        out.push_str(&format!("{:.3},{:.6}\n", t as f64 / 1000.0, d));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{JobMetrics, SystemMetrics};
+    use crate::sim::{TaskTrace, TraceRecorder};
+
+    fn run() -> RunResult {
+        let jobs = vec![JobMetrics {
+            id: 1,
+            demand: 4,
+            submit_ms: 1_000,
+            waiting_ms: 500,
+            completion_ms: 2_500,
+            execution_ms: 2_000,
+        }];
+        let system = SystemMetrics::of(&jobs, &[], 10);
+        let mut trace = TraceRecorder::new();
+        trace.record(TaskTrace { job: 1, phase: 0, task: 0, granted: 900, start: 1_500, finish: 3_500 });
+        RunResult {
+            scheduler: "dress".into(),
+            jobs,
+            system,
+            trace,
+            delta_history: vec![(0, 0.1), (1_000, 0.15)],
+            failures: 0,
+        }
+    }
+
+    #[test]
+    fn jobs_csv_shape() {
+        let csv = jobs_csv(&run());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("job_id,"));
+        assert!(lines[1].starts_with("1,4,1.000,0.500,2.500,2.000"));
+    }
+
+    #[test]
+    fn trace_csv_shape() {
+        let csv = trace_csv(&run());
+        assert!(csv.contains("1,0,0,1.500,3.500,2.000"));
+    }
+
+    #[test]
+    fn delta_csv_shape() {
+        let csv = delta_csv(&run());
+        assert!(csv.contains("0.000,0.100000"));
+        assert!(csv.contains("1.000,0.150000"));
+    }
+}

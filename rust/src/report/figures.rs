@@ -1,0 +1,129 @@
+//! Per-figure renderers: turn [`RunResult`]s into the paper's plots.
+
+use crate::metrics::JobMetrics;
+use crate::sim::{RunResult, TaskTrace};
+use crate::util::ascii_plot;
+
+fn job_labels(jobs: &[JobMetrics]) -> Vec<String> {
+    jobs.iter().map(|j| format!("J{}", j.id)).collect()
+}
+
+/// Figs 6 / 8: per-job waiting times, DRESS vs baseline.
+pub fn fig_waiting_bars(title: &str, dress: &RunResult, baseline: &RunResult) -> String {
+    let cats = job_labels(&dress.jobs);
+    let d: Vec<f64> = dress.jobs.iter().map(|j| j.waiting_ms as f64 / 1000.0).collect();
+    let b: Vec<f64> = baseline.jobs.iter().map(|j| j.waiting_ms as f64 / 1000.0).collect();
+    ascii_plot::grouped_bars(title, &cats, &[("DRESS", d), ("Capacity", b)], 46)
+}
+
+/// Figs 7 / 9: per-job completion times.
+pub fn fig_completion_bars(title: &str, dress: &RunResult, baseline: &RunResult) -> String {
+    let cats = job_labels(&dress.jobs);
+    let d: Vec<f64> = dress.jobs.iter().map(|j| j.completion_ms as f64 / 1000.0).collect();
+    let b: Vec<f64> = baseline.jobs.iter().map(|j| j.completion_ms as f64 / 1000.0).collect();
+    ascii_plot::grouped_bars(title, &cats, &[("DRESS", d), ("Capacity", b)], 46)
+}
+
+/// Figs 10-13: stacked wait+exec per job (two bars per job id).
+pub fn fig_stacked_bars(title: &str, dress: &RunResult, baseline: &RunResult) -> String {
+    let mut out = format!("── {title}\n");
+    out.push_str("    (per job: waiting ░ + execution █; left bar DRESS, right bar Capacity)\n");
+    let max_c = dress
+        .jobs
+        .iter()
+        .chain(&baseline.jobs)
+        .map(|j| j.completion_ms)
+        .max()
+        .unwrap_or(1)
+        .max(1) as f64;
+    let width = 44.0;
+    for (d, b) in dress.jobs.iter().zip(&baseline.jobs) {
+        for (tag, j) in [("D", d), ("C", b)] {
+            let wait = (j.waiting_ms as f64 / max_c * width).round() as usize;
+            let exec = (j.execution_ms as f64 / max_c * width).round() as usize;
+            out.push_str(&format!(
+                "J{:<3}{tag} {}{} {:>7.1}s (w {:.1}s)\n",
+                j.id,
+                "░".repeat(wait),
+                "█".repeat(exec.max(1)),
+                j.completion_ms as f64 / 1000.0,
+                j.waiting_ms as f64 / 1000.0,
+            ));
+        }
+    }
+    out
+}
+
+/// Figs 2-4: per-task trace of one job.
+pub fn fig_trace(title: &str, tasks: &[TaskTrace]) -> String {
+    let rows: Vec<(String, f64, f64)> = tasks
+        .iter()
+        .map(|t| {
+            (
+                format!("p{}-t{}", t.phase, t.task),
+                t.start as f64 / 1000.0,
+                t.duration() as f64 / 1000.0,
+            )
+        })
+        .collect();
+    ascii_plot::task_trace(title, &rows, 56)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SystemMetrics;
+    use crate::sim::TraceRecorder;
+
+    fn run(waits: &[u64], comps: &[u64]) -> RunResult {
+        let jobs: Vec<JobMetrics> = waits
+            .iter()
+            .zip(comps)
+            .enumerate()
+            .map(|(i, (&w, &c))| JobMetrics {
+                id: i as u32 + 1,
+                demand: 4,
+                submit_ms: 0,
+                waiting_ms: w,
+                completion_ms: c,
+                execution_ms: c - w,
+            })
+            .collect();
+        let system = SystemMetrics::of(&jobs, &[], 10);
+        RunResult {
+            scheduler: "x".into(),
+            jobs,
+            system,
+            trace: TraceRecorder::new(),
+            delta_history: vec![],
+            failures: 0,
+        }
+    }
+
+    #[test]
+    fn waiting_bars_render_both_series() {
+        let d = run(&[1_000, 2_000], &[5_000, 9_000]);
+        let c = run(&[3_000, 4_000], &[6_000, 8_000]);
+        let s = fig_waiting_bars("Fig 6", &d, &c);
+        assert!(s.contains("DRESS") && s.contains("Capacity"));
+        assert!(s.contains("J1") && s.contains("J2"));
+    }
+
+    #[test]
+    fn stacked_bars_contain_all_jobs() {
+        let d = run(&[1_000], &[5_000]);
+        let c = run(&[2_000], &[6_000]);
+        let s = fig_stacked_bars("Fig 10", &d, &c);
+        assert!(s.contains("J1  D") && s.contains("J1  C"));
+    }
+
+    #[test]
+    fn trace_renders_tasks() {
+        let tasks = vec![
+            TaskTrace { job: 1, phase: 0, task: 0, granted: 0, start: 1_000, finish: 5_000 },
+            TaskTrace { job: 1, phase: 1, task: 0, granted: 0, start: 6_000, finish: 8_000 },
+        ];
+        let s = fig_trace("Fig 2", &tasks);
+        assert!(s.contains("p0-t0") && s.contains("p1-t0"));
+    }
+}

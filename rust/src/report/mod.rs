@@ -1,0 +1,12 @@
+//! Report rendering: ASCII tables for Table II, grouped bars for Figs 6-13,
+//! task traces for Figs 2-4, and paper-vs-measured comparison rows.
+
+pub mod compare;
+pub mod csv;
+pub mod figures;
+pub mod table;
+
+pub use compare::{comparison_row, PaperClaim};
+pub use csv::{delta_csv, jobs_csv, trace_csv};
+pub use figures::{fig_completion_bars, fig_stacked_bars, fig_trace, fig_waiting_bars};
+pub use table::{render_table, table2};

@@ -1,0 +1,99 @@
+//! ASCII table rendering + the paper's Table II.
+
+use crate::metrics::SchedulerSummary;
+
+/// Render rows as an aligned ASCII table. `header` defines column count.
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncol, "row arity mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let mut line = String::new();
+    for (i, h) in header.iter().enumerate() {
+        line.push_str(&format!("| {:<w$} ", h, w = widths[i]));
+    }
+    line.push('|');
+    out.push_str(&line);
+    out.push('\n');
+    out.push_str(&"-".repeat(line.len()));
+    out.push('\n');
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            out.push_str(&format!("| {:<w$} ", cell, w = widths[i]));
+        }
+        out.push_str("|\n");
+    }
+    out
+}
+
+/// Table II: overall system performance, one row per scheduler.
+pub fn table2(rows: &[SchedulerSummary]) -> String {
+    let header = ["Scheduler", "Makespan", "Avg. W.", "Median W.", "Avg. C.", "Median C."];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|s| {
+            vec![
+                s.scheduler.clone(),
+                format!("{:.1}", s.makespan_s),
+                format!("{:.1}", s.avg_waiting_s),
+                format!("{:.1}", s.median_waiting_s),
+                format!("{:.1}", s.avg_completion_s),
+                format!("{:.1}", s.median_completion_s),
+            ]
+        })
+        .collect();
+    render_table(&header, &body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = render_table(
+            &["a", "long-header"],
+            &[vec!["x".into(), "y".into()], vec!["wide-cell".into(), "z".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert!(lines.len() >= 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[0].contains("long-header"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        render_table(&["a", "b"], &[vec!["only-one".into()]]);
+    }
+
+    #[test]
+    fn table2_contains_schedulers() {
+        let rows = vec![
+            SchedulerSummary {
+                scheduler: "capacity".into(),
+                makespan_s: 1028.6,
+                avg_waiting_s: 310.1,
+                median_waiting_s: 381.0,
+                avg_completion_s: 570.1,
+                median_completion_s: 542.8,
+            },
+            SchedulerSummary {
+                scheduler: "dress".into(),
+                makespan_s: 1035.2,
+                avg_waiting_s: 264.5,
+                median_waiting_s: 190.3,
+                avg_completion_s: 532.2,
+                median_completion_s: 325.1,
+            },
+        ];
+        let t = table2(&rows);
+        assert!(t.contains("capacity") && t.contains("dress"));
+        assert!(t.contains("1028.6") && t.contains("325.1"));
+    }
+}

@@ -1,0 +1,80 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and execute them from the Rust hot path.
+//! Python is never on the request path — the binary is self-contained once
+//! artifacts exist.
+
+pub mod executable;
+pub mod taskwork;
+
+pub use executable::{Executable, Runtime};
+pub use taskwork::TaskWork;
+
+/// Default artifact locations relative to the repo root.
+pub const ESTIMATOR_HLO: &str = "artifacts/model.hlo.txt";
+pub const TASKWORK_HLO: &str = "artifacts/taskwork.hlo.txt";
+pub const MANIFEST: &str = "artifacts/manifest.txt";
+
+/// Artifact-interface constants (mirrors `python/compile/kernels`).
+pub const PAD_PHASES: usize = 256;
+pub const NUM_FIELDS: usize = 6;
+pub const TIME_GRID: usize = 64;
+pub const TASKWORK_DIM: usize = 64;
+
+/// Locate the artifacts directory: walk up from cwd looking for
+/// `artifacts/manifest.txt` (lets tests/benches run from any subdir).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts").join("manifest.txt");
+        if cand.is_file() {
+            return Some(dir.join("artifacts"));
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Parse `key=value` lines from the manifest and sanity-check the constants
+/// this binary was compiled against.
+pub fn check_manifest(text: &str) -> Result<(), String> {
+    let want = [
+        ("pad_phases", PAD_PHASES),
+        ("time_grid", TIME_GRID),
+        ("num_fields", NUM_FIELDS),
+        ("taskwork_dim", TASKWORK_DIM),
+    ];
+    for (key, expect) in want {
+        let found = text
+            .lines()
+            .find_map(|l| l.strip_prefix(&format!("{key}=")))
+            .ok_or_else(|| format!("manifest missing `{key}`"))?;
+        let got: usize = found
+            .trim()
+            .parse()
+            .map_err(|e| format!("manifest {key}: {e}"))?;
+        if got != expect {
+            return Err(format!("manifest {key}={got}, binary expects {expect} — re-run `make artifacts`"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_check_accepts_current() {
+        let text = "pad_phases=256\ntime_grid=64\nnum_fields=6\ntaskwork_dim=64\ntaskwork_iters=8\n";
+        assert!(check_manifest(text).is_ok());
+    }
+
+    #[test]
+    fn manifest_check_rejects_mismatch() {
+        let text = "pad_phases=128\ntime_grid=64\nnum_fields=6\ntaskwork_dim=64\n";
+        let err = check_manifest(text).unwrap_err();
+        assert!(err.contains("pad_phases"));
+        assert!(check_manifest("time_grid=64").is_err(), "missing keys rejected");
+    }
+}

@@ -1,0 +1,106 @@
+//! The real compute executed per simulated task in the end-to-end example:
+//! a PageRank-style power iteration AOT-lowered from JAX (`taskwork.hlo.txt`).
+
+use super::{Executable, Runtime, TASKWORK_DIM};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// A loaded task-work executable plus input synthesis.
+pub struct TaskWork {
+    exe: Executable,
+}
+
+impl TaskWork {
+    pub fn load(rt: &Runtime, path: &str) -> Result<Self> {
+        Ok(TaskWork { exe: rt.load_hlo_text(path)? })
+    }
+
+    /// Build a column-stochastic matrix + uniform rank vector from a seed.
+    pub fn make_inputs(seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let n = TASKWORK_DIM;
+        let mut rng = Rng::new(seed);
+        let mut a = vec![0f32; n * n];
+        for v in a.iter_mut() {
+            *v = rng.next_f64() as f32 + 0.01;
+        }
+        // Normalize columns so the iteration is a proper PageRank walk.
+        for col in 0..n {
+            let s: f32 = (0..n).map(|row| a[row * n + col]).sum();
+            for row in 0..n {
+                a[row * n + col] /= s;
+            }
+        }
+        let x = vec![1.0f32 / n as f32; n];
+        (a, x)
+    }
+
+    /// Run `units` power-iteration work units; returns a checksum of the
+    /// final rank vector (proof the compute actually ran).
+    pub fn run_units(&self, seed: u64, units: u32) -> Result<f32> {
+        let (a, mut x) = Self::make_inputs(seed);
+        let n = TASKWORK_DIM as i64;
+        for _ in 0..units.max(1) {
+            x = self.exe.run_f32(&[(&a, &[n, n]), (&x, &[n])])?;
+        }
+        Ok(x.iter().sum())
+    }
+}
+
+/// CPU reference of one work unit (8 power-iteration steps), for validating
+/// the PJRT path in integration tests.
+pub fn reference_unit(a: &[f32], x0: &[f32]) -> Vec<f32> {
+    let n = TASKWORK_DIM;
+    let mut x = x0.to_vec();
+    for _ in 0..8 {
+        let mut y = vec![0f32; n];
+        for row in 0..n {
+            let mut acc = 0f32;
+            for col in 0..n {
+                acc += a[row * n + col] * x[col];
+            }
+            y[row] = acc;
+        }
+        let norm: f32 = y.iter().map(|v| v.abs()).sum::<f32>() + 1e-9;
+        for v in y.iter_mut() {
+            *v /= norm;
+        }
+        x = y;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inputs_are_column_stochastic() {
+        let (a, x) = TaskWork::make_inputs(7);
+        let n = TASKWORK_DIM;
+        assert_eq!(a.len(), n * n);
+        assert_eq!(x.len(), n);
+        for col in 0..n {
+            let s: f32 = (0..n).map(|row| a[row * n + col]).sum();
+            assert!((s - 1.0).abs() < 1e-4, "col {col} sums to {s}");
+        }
+        let xs: f32 = x.iter().sum();
+        assert!((xs - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn inputs_deterministic_per_seed() {
+        let (a1, _) = TaskWork::make_inputs(3);
+        let (a2, _) = TaskWork::make_inputs(3);
+        let (a3, _) = TaskWork::make_inputs(4);
+        assert_eq!(a1, a2);
+        assert_ne!(a1, a3);
+    }
+
+    #[test]
+    fn reference_unit_preserves_l1_norm() {
+        let (a, x) = TaskWork::make_inputs(5);
+        let out = reference_unit(&a, &x);
+        let norm: f32 = out.iter().map(|v| v.abs()).sum();
+        assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Capacity scheduler baseline — the paper's primary comparator.
+//!
+//! YARN's CapacityScheduler shares a cluster between queues with guaranteed
+//! capacities; *within* a queue, applications are admitted
+//! first-come-first-serve (paper §I: "both of them add jobs to the queues
+//! following a first-come-first-serve manner").  The paper's experiments
+//! use the stock single-queue setup, which this reproduces by default; the
+//! two-queue configuration is exercised in tests/ablations.
+
+use super::{refill_started, Allocation, ClusterView, Scheduler};
+use crate::jobs::JobId;
+
+#[derive(Debug, Clone)]
+pub struct CapacityScheduler {
+    gang: bool,
+    /// Guaranteed fraction of the cluster per queue (must sum to <= 1).
+    queue_caps: Vec<f64>,
+    /// Routing: job -> queue (default: everything to queue 0).
+    route: fn(JobId) -> usize,
+}
+
+fn route_all_to_default(_j: JobId) -> usize {
+    0
+}
+
+impl CapacityScheduler {
+    /// Stock single-queue Capacity scheduler (the paper's baseline).
+    pub fn new(gang: bool) -> Self {
+        CapacityScheduler { gang, queue_caps: vec![1.0], route: route_all_to_default }
+    }
+
+    /// Multi-queue variant for ablations.
+    pub fn with_queues(gang: bool, caps: Vec<f64>, route: fn(JobId) -> usize) -> Self {
+        assert!(!caps.is_empty());
+        let sum: f64 = caps.iter().sum();
+        assert!(sum <= 1.0 + 1e-9, "queue capacities exceed cluster: {sum}");
+        CapacityScheduler { gang, queue_caps: caps, route }
+    }
+}
+
+impl Scheduler for CapacityScheduler {
+    fn name(&self) -> &'static str {
+        "capacity"
+    }
+
+    fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation> {
+        // Refill admitted jobs first (YARN serves outstanding requests of
+        // running apps before admitting new ones).
+        let (mut allocs, mut free) = refill_started(view, view.free);
+
+        // Per-queue occupancy (running jobs count against their queue).
+        let nq = self.queue_caps.len();
+        let mut used = vec![0u32; nq];
+        for j in view.jobs.iter().filter(|j| !j.finished) {
+            used[(self.route)(j.id).min(nq - 1)] += j.occupied;
+        }
+        for a in &allocs {
+            used[(self.route)(a.job).min(nq - 1)] += a.n;
+        }
+
+        // FCFS admission within each queue, respecting queue guarantees.
+        let mut blocked = vec![false; nq];
+        for j in view.jobs.iter().filter(|j| !j.started && !j.finished) {
+            if free == 0 {
+                break;
+            }
+            let q = (self.route)(j.id).min(nq - 1);
+            if blocked[q] {
+                continue; // FIFO within queue: head blocks its own queue only
+            }
+            let cap = (self.queue_caps[q] * view.total as f64).round() as u32;
+            let head_room = cap.saturating_sub(used[q]).min(free);
+            let want = j.demand.min(j.pending_tasks);
+            if want == 0 {
+                continue;
+            }
+            if self.gang && want > head_room {
+                blocked[q] = true;
+                continue;
+            }
+            let n = want.min(head_room);
+            if n == 0 {
+                blocked[q] = true;
+                continue;
+            }
+            allocs.push(Allocation { job: j.id, n });
+            used[q] += n;
+            free -= n;
+        }
+        allocs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::*;
+
+    #[test]
+    fn single_queue_behaves_fcfs_gang() {
+        let jobs = vec![jv(1, 3, 3), jv(2, 4, 4), jv(3, 2, 2)];
+        let mut s = CapacityScheduler::new(true);
+        let allocs = s.schedule(&view(6, 6, jobs));
+        // J1 admitted (3), J2 needs 4 > 3 free -> queue blocks; J3 waits.
+        assert_eq!(allocs, vec![Allocation { job: 1, n: 3 }]);
+    }
+
+    #[test]
+    fn refill_before_admission() {
+        // 8-container queue: J1 (occupies 2, wants 2 more), J2 gang-needs 4.
+        let jobs = vec![started(jv(1, 4, 2), 2), jv(2, 4, 4)];
+        let mut s = CapacityScheduler::new(true);
+        let allocs = s.schedule(&view(6, 8, jobs));
+        assert_eq!(
+            allocs,
+            vec![Allocation { job: 1, n: 2 }, Allocation { job: 2, n: 4 }]
+        );
+    }
+
+    fn route_even_odd(j: JobId) -> usize {
+        (j % 2) as usize
+    }
+
+    #[test]
+    fn queues_isolate_head_of_line_blocking() {
+        // Queue 0 (even ids) capacity 0.5, queue 1 (odd) 0.5 of 8 = 4 each.
+        // J1 (odd, demand 6) blocks queue 1; J2 (even, demand 3) admitted.
+        let jobs = vec![jv(1, 6, 6), jv(2, 3, 3)];
+        let mut s = CapacityScheduler::with_queues(true, vec![0.5, 0.5], route_even_odd);
+        let allocs = s.schedule(&view(8, 8, jobs));
+        assert_eq!(allocs, vec![Allocation { job: 2, n: 3 }]);
+    }
+
+    #[test]
+    fn queue_cap_limits_admission() {
+        // Queue 0 cap = 25% of 8 = 2: J2 (even, demand 3) cannot gang-start.
+        let jobs = vec![jv(2, 3, 3)];
+        let mut s = CapacityScheduler::with_queues(true, vec![0.25, 0.75], route_even_odd);
+        assert!(s.schedule(&view(8, 8, jobs)).is_empty());
+        // Non-gang: partial admission up to the queue cap.
+        let jobs = vec![jv(2, 3, 3)];
+        let mut s = CapacityScheduler::with_queues(false, vec![0.25, 0.75], route_even_odd);
+        assert_eq!(s.schedule(&view(8, 8, jobs)), vec![Allocation { job: 2, n: 2 }]);
+    }
+
+    #[test]
+    #[should_panic(expected = "queue capacities exceed")]
+    fn overcommitted_queues_rejected() {
+        CapacityScheduler::with_queues(true, vec![0.7, 0.7], route_even_odd);
+    }
+}

@@ -1,0 +1,380 @@
+//! DRESS — the paper's contribution: two category pools with a dynamically
+//! adjusted reserve ratio δ, driven by the release estimator.
+//!
+//! Per heartbeat:
+//! 1. classify newly submitted jobs (θ rule, [`categories`]),
+//! 2. feed heartbeat transitions to the estimator (Algorithms 1-2),
+//! 3. adjust δ (Algorithm 3, [`reserve`]) using F₁/F₂(t+1),
+//! 4. allocate: refill running jobs from their category pool, admit
+//!    waiting jobs FCFS-within-category against the pool quota, and move
+//!    LD leftovers to SD jobs (ascending demand) when both pools are
+//!    congested.
+
+pub mod categories;
+pub mod multi;
+pub mod reserve;
+
+pub use categories::{Category, Classifier};
+pub use multi::MultiDress;
+pub use reserve::{adjust, ReserveInputs};
+
+use super::{Allocation, ClusterView, JobView, Scheduler};
+use crate::config::SchedConfig;
+use crate::estimator::{EstimatorBank, EstimatorParams};
+use crate::jobs::JobId;
+use crate::util::Time;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DressStats {
+    pub delta: f64,
+    pub sd_jobs: u32,
+    pub ld_jobs: u32,
+}
+
+pub struct DressScheduler {
+    classifier: Classifier,
+    estimator: EstimatorBank,
+    delta: f64,
+    total: u32,
+    hb_ms: Time,
+    gang: bool,
+    /// Ablation: freeze δ at its initial value (disables Algorithm 3).
+    pub freeze_delta: bool,
+    /// Ablation: ignore the release estimator (F₁ = F₂ = 0 in Algorithm 3).
+    pub disable_estimator: bool,
+    /// δ history for figures/ablation (time, δ).
+    pub delta_history: Vec<(Time, f64)>,
+}
+
+impl DressScheduler {
+    pub fn new(cfg: &SchedConfig, total: u32) -> Self {
+        DressScheduler {
+            classifier: Classifier::new(cfg.theta),
+            estimator: EstimatorBank::new(EstimatorParams {
+                ts: cfg.ts,
+                te: cfg.te,
+                pw_ms: cfg.pw_ms,
+            }),
+            delta: cfg.delta0,
+            total,
+            hb_ms: 1_000,
+            gang: cfg.gang,
+            freeze_delta: false,
+            disable_estimator: false,
+            delta_history: Vec::new(),
+        }
+    }
+
+    pub fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    pub fn stats(&self, view: &ClusterView) -> DressStats {
+        let (mut sd, mut ld) = (0, 0);
+        for j in view.active_jobs() {
+            match self.classifier.get(j.id) {
+                Some(Category::Sd) => sd += 1,
+                Some(Category::Ld) => ld += 1,
+                None => {}
+            }
+        }
+        DressStats { delta: self.delta, sd_jobs: sd, ld_jobs: ld }
+    }
+
+    fn category(&self, job: JobId) -> Category {
+        self.classifier.get(job).unwrap_or(Category::Sd)
+    }
+
+    /// Pool quotas: SD gets round(δ·Tot), LD the rest.
+    fn quotas(&self) -> (u32, u32) {
+        let sd = ((self.delta * self.total as f64).round() as u32).clamp(1, self.total - 1);
+        (sd, self.total - sd)
+    }
+
+    /// Occupied containers per category.
+    fn occupancy(&self, view: &ClusterView) -> (u32, u32) {
+        let mut occ = (0u32, 0u32);
+        for j in view.jobs.iter().filter(|j| !j.finished) {
+            match self.category(j.id) {
+                Category::Sd => occ.0 += j.occupied,
+                Category::Ld => occ.1 += j.occupied,
+            }
+        }
+        occ
+    }
+
+    /// FCFS-with-ascending-fallback admission inside one category.
+    ///
+    /// `borrow` is extra headroom lent by the *other* category's idle pool
+    /// (used when LD admits while no SD job is waiting — without it, a job
+    /// demanding more than the LD quota could starve forever even on an
+    /// idle cluster).  Deducted only after the own pool is exhausted.
+    fn admit_category(
+        &self,
+        waiting: &[&JobView],
+        pool_free: &mut u32,
+        borrow: &mut u32,
+        free: &mut u32,
+        allocs: &mut Vec<Allocation>,
+    ) {
+        let mut grant = |j: &JobView, pool_free: &mut u32, borrow: &mut u32, free: &mut u32| -> Option<u32> {
+            let want = j.demand.min(j.pending_tasks);
+            if want == 0 {
+                return Some(0);
+            }
+            let room = (*pool_free + *borrow).min(*free);
+            if self.gang && want > room {
+                return None;
+            }
+            let n = want.min(room);
+            if n == 0 {
+                return None;
+            }
+            let own = n.min(*pool_free);
+            *pool_free -= own;
+            *borrow -= n - own;
+            *free -= n;
+            Some(n)
+        };
+        // First pass: FCFS gang.
+        let mut blocked: Vec<&JobView> = Vec::new();
+        for j in waiting {
+            match grant(j, pool_free, borrow, free) {
+                Some(n) if n > 0 => {
+                    allocs.push(Allocation { job: j.id, n });
+                }
+                Some(_) => {}
+                None => blocked.push(j),
+            }
+        }
+        // Second pass (Algorithm 3 lines 12-20): ascending-demand packing of
+        // the blocked jobs — small requests squeeze into the remainder.
+        blocked.sort_by_key(|j| (j.demand, j.submit_ms));
+        for j in blocked {
+            if let Some(n) = grant(j, pool_free, borrow, free) {
+                if n > 0 {
+                    allocs.push(Allocation { job: j.id, n });
+                }
+            }
+        }
+    }
+}
+
+impl Scheduler for DressScheduler {
+    fn name(&self) -> &'static str {
+        "dress"
+    }
+
+    fn reserve_ratio(&self) -> Option<f64> {
+        Some(self.delta)
+    }
+
+    fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation> {
+        // (1) classify new arrivals against observed A_c.
+        for j in &view.jobs {
+            if self.classifier.get(j.id).is_none() {
+                let cat = self.classifier.classify(j.id, j.demand, view.free, view.total);
+                self.estimator.register(j.id, cat.index());
+            }
+        }
+
+        // (2) estimator ingest + tick (Algorithms 1-2).
+        self.estimator.ingest(view.transitions);
+        self.estimator.tick(view.now);
+
+        // (3) Algorithm 3: adjust δ with F(t+1) over the next heartbeat.
+        let horizon = view.now + self.hb_ms;
+        let (f1, f2) = if self.disable_estimator {
+            (0.0, 0.0)
+        } else {
+            self.estimator.predicted_release_pair(view.now, horizon)
+        };
+        let (sd_quota, ld_quota) = self.quotas();
+        let (occ_sd, occ_ld) = self.occupancy(view);
+        // Free containers attributable per pool: quota minus occupancy,
+        // bounded by what is globally free.
+        let ac1 = sd_quota.saturating_sub(occ_sd).min(view.free) as f64;
+        let ac2 = ld_quota
+            .saturating_sub(occ_ld)
+            .min(view.free.saturating_sub(ac1 as u32)) as f64;
+        let mut sd_demands: Vec<u32> = Vec::new();
+        let mut ld_demands: Vec<u32> = Vec::new();
+        for j in view.jobs.iter().filter(|j| !j.started && !j.finished) {
+            match self.category(j.id) {
+                Category::Sd => sd_demands.push(j.demand),
+                Category::Ld => ld_demands.push(j.demand),
+            }
+        }
+        sd_demands.sort_unstable();
+        ld_demands.sort_unstable();
+        if !self.freeze_delta {
+            self.delta = adjust(
+                self.delta,
+                &ReserveInputs {
+                    total: self.total,
+                    ac1,
+                    ac2,
+                    f1,
+                    f2,
+                    sd_demands,
+                    ld_demands,
+                },
+            );
+        }
+        self.delta_history.push((view.now, self.delta));
+
+        // (4) allocation against the adjusted quotas.
+        let (sd_quota, ld_quota) = self.quotas();
+        let (occ_sd, occ_ld) = self.occupancy(view);
+        let mut sd_free = sd_quota.saturating_sub(occ_sd);
+        let mut ld_free = ld_quota.saturating_sub(occ_ld);
+        let mut free = view.free;
+        let mut allocs: Vec<Allocation> = Vec::new();
+
+        // 4a. refill running jobs from their own pools.
+        for j in view.jobs.iter().filter(|j| j.started && !j.finished) {
+            if free == 0 {
+                break;
+            }
+            let budget = j.demand.saturating_sub(j.occupied).min(j.pending_tasks);
+            if budget == 0 {
+                continue;
+            }
+            let pool = match self.category(j.id) {
+                Category::Sd => &mut sd_free,
+                Category::Ld => &mut ld_free,
+            };
+            let n = budget.min(*pool).min(free);
+            if n > 0 {
+                allocs.push(Allocation { job: j.id, n });
+                *pool -= n;
+                free -= n;
+            }
+        }
+
+        // 4b. admit waiting jobs per category.
+        let sd_wait: Vec<&JobView> = view
+            .jobs
+            .iter()
+            .filter(|j| !j.started && !j.finished && self.category(j.id) == Category::Sd)
+            .collect();
+        let ld_wait: Vec<&JobView> = view
+            .jobs
+            .iter()
+            .filter(|j| !j.started && !j.finished && self.category(j.id) == Category::Ld)
+            .collect();
+        let mut no_borrow = 0u32;
+        self.admit_category(&sd_wait, &mut sd_free, &mut no_borrow, &mut free, &mut allocs);
+        // LD may borrow the idle SD reserve when no SD job is waiting for it.
+        let mut sd_idle = if sd_wait.is_empty() { sd_free } else { 0 };
+        self.admit_category(&ld_wait, &mut ld_free, &mut sd_idle, &mut free, &mut allocs);
+        if sd_wait.is_empty() {
+            sd_free = sd_idle;
+        }
+
+        // 4c. LD leftovers flow to SD jobs (ascending demand), lines 21-24.
+        if free > 0 && ld_free > 0 {
+            let mut granted: Vec<JobId> = allocs.iter().map(|a| a.job).collect();
+            let mut rest: Vec<&JobView> = sd_wait
+                .iter()
+                .filter(|j| !granted.contains(&j.id))
+                .copied()
+                .collect();
+            rest.sort_by_key(|j| (j.demand, j.submit_ms));
+            for j in rest {
+                let want = j.demand.min(j.pending_tasks);
+                let room = (sd_free + ld_free).min(free);
+                if want == 0 || want > room {
+                    continue;
+                }
+                allocs.push(Allocation { job: j.id, n: want });
+                let from_sd = want.min(sd_free);
+                sd_free -= from_sd;
+                ld_free -= want - from_sd;
+                free -= want;
+                granted.push(j.id);
+                // δ grows with each migrated reservation (line 23).
+                if !self.freeze_delta {
+                    self.delta = (self.delta + want as f64 / self.total as f64)
+                        .clamp(reserve::DELTA_MIN, reserve::DELTA_MAX);
+                }
+            }
+        }
+
+        allocs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedConfig;
+    use crate::sched::testutil::*;
+
+    fn dress(total: u32) -> DressScheduler {
+        DressScheduler::new(&SchedConfig::default(), total)
+    }
+
+    #[test]
+    fn small_job_bypasses_large_head_of_line() {
+        // 40-container cluster. J1 (LD, 30) running with 30; J2 (LD, 20)
+        // blocked; J3 (SD, 3) must still get in via the SD reserve.
+        let jobs = vec![
+            started(jv(1, 30, 0), 30),
+            jv(2, 20, 20),
+            jv(3, 3, 3),
+        ];
+        let mut s = dress(40);
+        let allocs = s.schedule(&view(10, 40, jobs));
+        assert!(
+            allocs.iter().any(|a| a.job == 3 && a.n == 3),
+            "SD job admitted: {allocs:?}"
+        );
+        assert!(!allocs.iter().any(|a| a.job == 2), "LD J2 stays blocked");
+    }
+
+    #[test]
+    fn classification_happens_on_first_view() {
+        let jobs = vec![jv(1, 3, 3), jv(2, 30, 30)];
+        let mut s = dress(40);
+        s.schedule(&view(40, 40, jobs));
+        assert_eq!(s.classifier.get(1), Some(Category::Sd));
+        assert_eq!(s.classifier.get(2), Some(Category::Ld));
+    }
+
+    #[test]
+    fn delta_recorded_every_tick() {
+        let mut s = dress(40);
+        for t in 0..5u64 {
+            let v = ClusterView {
+                now: t * 1_000,
+                free: 40,
+                total: 40,
+                jobs: vec![],
+                transitions: &[],
+            };
+            s.schedule(&v);
+        }
+        assert_eq!(s.delta_history.len(), 5);
+        assert!(s.reserve_ratio().is_some());
+    }
+
+    #[test]
+    fn ld_leftover_serves_small_jobs() {
+        // Mostly idle: SD quota tiny (δ=0.1 -> 4), LD huge. An SD job with
+        // demand 6 exceeds its pool but fits with LD leftovers.
+        let jobs = vec![jv(1, 4, 4)]; // SD (4 <= 0.1*40)
+        let mut s = dress(40);
+        let allocs = s.schedule(&view(40, 40, jobs.clone()));
+        assert!(allocs.iter().any(|a| a.job == 1 && a.n == 4), "{allocs:?}");
+    }
+
+    #[test]
+    fn respects_global_free_limit() {
+        let jobs = vec![jv(1, 4, 4), jv(2, 30, 30)];
+        let mut s = dress(40);
+        let allocs = s.schedule(&view(5, 40, jobs));
+        let total: u32 = allocs.iter().map(|a| a.n).sum();
+        assert!(total <= 5, "over-allocated: {allocs:?}");
+    }
+}

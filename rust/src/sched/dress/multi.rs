@@ -1,0 +1,286 @@
+//! N-category DRESS — the paper's stated extension (§IV.C: "It's easy to
+//! classify incoming jobs into more categories by applying a similar
+//! strategy").
+//!
+//! Jobs are bucketed by demand against a ladder of thresholds
+//! θ₁ < θ₂ < … (fractions of cluster capacity); each bucket owns a reserve
+//! share, renormalized each heartbeat by pending demand (the Algorithm-3
+//! surplus/deficit idea applied pairwise down the ladder).  Idle shares are
+//! borrowable by larger buckets, so the scheduler is livelock-free.
+
+use super::super::{Allocation, ClusterView, JobView, Scheduler};
+use crate::jobs::JobId;
+
+/// N-category DRESS scheduler.
+pub struct MultiDress {
+    /// Ascending demand thresholds as fractions of total; bucket k holds
+    /// jobs with demand <= thresholds[k] * total, last bucket the rest.
+    thresholds: Vec<f64>,
+    /// Current reserve share per bucket (sums to 1).
+    shares: Vec<f64>,
+    total: u32,
+    cats: Vec<Option<usize>>, // job id -> bucket, sticky
+}
+
+impl MultiDress {
+    /// `thresholds` must be ascending, in (0,1). Buckets = len + 1.
+    pub fn new(thresholds: Vec<f64>, total: u32) -> Self {
+        assert!(!thresholds.is_empty());
+        assert!(thresholds.windows(2).all(|w| w[0] < w[1]));
+        assert!(thresholds.iter().all(|&t| 0.0 < t && t < 1.0));
+        let n = thresholds.len() + 1;
+        MultiDress {
+            thresholds,
+            shares: vec![1.0 / n as f64; n],
+            total,
+            cats: Vec::new(),
+        }
+    }
+
+    pub fn buckets(&self) -> usize {
+        self.thresholds.len() + 1
+    }
+
+    pub fn shares(&self) -> &[f64] {
+        &self.shares
+    }
+
+    fn classify(&mut self, job: JobId, demand: u32) -> usize {
+        let idx = job as usize;
+        if idx >= self.cats.len() {
+            self.cats.resize(idx + 1, None);
+        }
+        if let Some(b) = self.cats[idx] {
+            return b;
+        }
+        let b = self
+            .thresholds
+            .iter()
+            .position(|&t| (demand as f64) <= t * self.total as f64)
+            .unwrap_or(self.thresholds.len());
+        self.cats[idx] = Some(b);
+        b
+    }
+
+    fn bucket_of(&self, job: JobId) -> usize {
+        self.cats
+            .get(job as usize)
+            .copied()
+            .flatten()
+            .unwrap_or(self.buckets() - 1)
+    }
+
+    /// Renormalize shares toward pending demand per bucket (EWMA so the
+    /// reservation has the paper's "dynamic" character without thrash).
+    /// Each bucket with pending work gets a floor large enough for its
+    /// smallest waiting job, so no bucket starves on share arithmetic.
+    fn adjust_shares(&mut self, pending: &[f64], min_pending_demand: &[u32]) {
+        let total: f64 = pending.iter().sum();
+        let n = self.buckets();
+        let mut target: Vec<f64> = if total <= 0.0 {
+            vec![1.0 / n as f64; n]
+        } else {
+            pending.iter().map(|&p| (p / total).max(0.02)).collect()
+        };
+        for (k, t) in target.iter_mut().enumerate() {
+            if min_pending_demand[k] > 0 {
+                let floor = (min_pending_demand[k] as f64 + 1.0) / self.total as f64;
+                *t = t.max(floor);
+            }
+        }
+        let norm: f64 = target.iter().sum();
+        for (s, t) in self.shares.iter_mut().zip(&target) {
+            *s = 0.7 * *s + 0.3 * (t / norm);
+        }
+        let sum: f64 = self.shares.iter().sum();
+        for s in self.shares.iter_mut() {
+            *s /= sum;
+        }
+    }
+}
+
+impl Scheduler for MultiDress {
+    fn name(&self) -> &'static str {
+        "multi-dress"
+    }
+
+    fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation> {
+        let n = self.buckets();
+        for j in &view.jobs {
+            self.classify(j.id, j.demand);
+        }
+
+        // Pending demand per bucket -> share adjustment.
+        let mut pending = vec![0.0; n];
+        let mut min_pending = vec![0u32; n];
+        for j in view.jobs.iter().filter(|j| !j.started && !j.finished) {
+            let b = self.bucket_of(j.id);
+            pending[b] += j.demand as f64;
+            let d = j.demand.min(self.total);
+            min_pending[b] = if min_pending[b] == 0 { d } else { min_pending[b].min(d) };
+        }
+        self.adjust_shares(&pending, &min_pending);
+
+        // Pool accounting.
+        let mut occupied = vec![0u32; n];
+        for j in view.jobs.iter().filter(|j| !j.finished) {
+            occupied[self.bucket_of(j.id)] += j.occupied;
+        }
+        let mut pool: Vec<u32> = self
+            .shares
+            .iter()
+            .zip(&occupied)
+            .map(|(&s, &occ)| ((s * self.total as f64).round() as u32).saturating_sub(occ))
+            .collect();
+
+        let mut free = view.free;
+        let mut allocs = Vec::new();
+
+        // Refill running jobs from their pools.
+        for j in view.jobs.iter().filter(|j| j.started && !j.finished) {
+            if free == 0 {
+                break;
+            }
+            let b = self.bucket_of(j.id);
+            let budget = j.demand.saturating_sub(j.occupied).min(j.pending_tasks);
+            let m = budget.min(pool[b]).min(free);
+            if m > 0 {
+                allocs.push(Allocation { job: j.id, n: m });
+                pool[b] -= m;
+                free -= m;
+            }
+        }
+
+        // Admit FCFS within bucket, smallest bucket first; idle pools of
+        // smaller buckets are borrowable by larger ones.
+        for b in 0..n {
+            let waiting: Vec<&JobView> = view
+                .jobs
+                .iter()
+                .filter(|j| !j.started && !j.finished && self.bucket_of(j.id) == b)
+                .collect();
+            for j in waiting {
+                let want = j.demand.min(j.pending_tasks).min(self.total);
+                if want == 0 || free == 0 {
+                    continue;
+                }
+                // Own pool plus pools of smaller, currently idle buckets.
+                let idle_smaller: u32 = (0..b)
+                    .filter(|&k| pending[k] == 0.0)
+                    .map(|k| pool[k])
+                    .sum();
+                let room = (pool[b] + idle_smaller).min(free);
+                if want > room {
+                    continue; // ascending-demand: later (smaller) jobs may fit
+                }
+                allocs.push(Allocation { job: j.id, n: want });
+                let own = want.min(pool[b]);
+                pool[b] -= own;
+                let mut borrow = want - own;
+                for k in 0..b {
+                    if borrow == 0 {
+                        break;
+                    }
+                    if pending[k] == 0.0 {
+                        let take = borrow.min(pool[k]);
+                        pool[k] -= take;
+                        borrow -= take;
+                    }
+                }
+                free -= want;
+            }
+        }
+
+        // Progress guarantee: on an idle cluster with nothing granted this
+        // round, admit the smallest waiting job directly — share EWMA must
+        // never deadlock the system.
+        if allocs.is_empty() && view.free == view.total {
+            if let Some(j) = view
+                .jobs
+                .iter()
+                .filter(|j| !j.started && !j.finished && j.pending_tasks > 0)
+                .min_by_key(|j| (j.demand, j.submit_ms))
+            {
+                let want = j.demand.min(j.pending_tasks).min(view.free);
+                if want > 0 {
+                    allocs.push(Allocation { job: j.id, n: want });
+                }
+            }
+        }
+        allocs
+    }
+
+    fn reserve_ratio(&self) -> Option<f64> {
+        Some(self.shares[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::*;
+
+    fn md() -> MultiDress {
+        // Buckets: <=10% (4), <=40% (16), rest — on a 40-container cluster.
+        MultiDress::new(vec![0.1, 0.4], 40)
+    }
+
+    #[test]
+    fn classification_ladder() {
+        let mut m = md();
+        assert_eq!(m.classify(1, 3), 0);
+        assert_eq!(m.classify(2, 10), 1);
+        assert_eq!(m.classify(3, 30), 2);
+        // sticky
+        assert_eq!(m.classify(1, 30), 0);
+    }
+
+    #[test]
+    fn small_jobs_not_blocked_by_large_head() {
+        let mut m = md();
+        let jobs = vec![
+            started(jv(1, 30, 0), 30), // bucket 2, running
+            jv(2, 25, 25),             // bucket 2, blocked
+            jv(3, 3, 3),               // bucket 0, should fit
+        ];
+        let allocs = m.schedule(&view(10, 40, jobs));
+        assert!(allocs.iter().any(|a| a.job == 3), "{allocs:?}");
+        assert!(!allocs.iter().any(|a| a.job == 2));
+    }
+
+    #[test]
+    fn shares_track_pending_demand() {
+        let mut m = md();
+        // Only bucket-0 demand pending: its share must grow.
+        let jobs = vec![jv(1, 3, 3), jv(2, 4, 4), jv(3, 3, 3)];
+        let before = m.shares()[0];
+        for _ in 0..10 {
+            m.schedule(&view(0, 40, jobs.clone()));
+        }
+        assert!(m.shares()[0] > before, "share {} !> {}", m.shares()[0], before);
+        let sum: f64 = m.shares().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn borrowing_prevents_livelock() {
+        let mut m = md();
+        // A bucket-2 job demanding 38 of 40: needs to borrow idle pools.
+        let jobs = vec![jv(1, 38, 38)];
+        let mut started_ok = false;
+        for _ in 0..20 {
+            let allocs = m.schedule(&view(40, 40, jobs.clone()));
+            if allocs.iter().any(|a| a.job == 1 && a.n == 38) {
+                started_ok = true;
+                break;
+            }
+        }
+        assert!(started_ok, "large job starved by reserves");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_ascending_thresholds() {
+        MultiDress::new(vec![0.4, 0.1], 40);
+    }
+}

@@ -1,0 +1,171 @@
+//! Algorithm 3: dynamic adjustment of the reserve ratio δ.
+//!
+//! δ·Tot_R containers are reserved for SD jobs, (1-δ)·Tot_R for LD.  Each
+//! heartbeat the scheduler recomputes δ from (a) the estimated release
+//! curves F₁/F₂(t+1), (b) per-category free containers A_c1/A_c2, and
+//! (c) pending demands P₁/P₂.
+
+/// Inputs to one Algorithm-3 adjustment round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReserveInputs {
+    /// Total containers in the system (Tot_R).
+    pub total: u32,
+    /// Free containers currently attributable to SD / LD pools.
+    pub ac1: f64,
+    pub ac2: f64,
+    /// Estimated releases into each pool by the next heartbeat, F_k(t+1).
+    pub f1: f64,
+    pub f2: f64,
+    /// Pending demands per category, ascending-sorted (r_i of waiting jobs).
+    pub sd_demands: Vec<u32>,
+    pub ld_demands: Vec<u32>,
+}
+
+/// δ is kept inside (0,1) with a numeric guard band; the paper leaves the
+/// bound implicit ("δ ∈ (0,1)").
+pub const DELTA_MIN: f64 = 0.02;
+pub const DELTA_MAX: f64 = 0.95;
+
+/// One Algorithm-3 round: returns the new δ.
+pub fn adjust(delta: f64, inp: &ReserveInputs) -> f64 {
+    let tot = inp.total.max(1) as f64;
+    let p1: f64 = inp.sd_demands.iter().map(|&d| d as f64).sum();
+    let p2: f64 = inp.ld_demands.iter().map(|&d| d as f64).sum();
+    let avail1 = inp.ac1 + inp.f1;
+    let avail2 = inp.ac2 + inp.f2;
+
+    let mut delta = delta;
+    if avail1 >= p1 {
+        // Lines 7-8: SD has surplus — return it to LD.
+        delta -= (avail1 - p1) / tot;
+    } else if avail2 >= p2 {
+        // Lines 9-11: SD starved but LD has surplus — enlarge the reserve.
+        delta += (avail2 - p2) / tot;
+    } else {
+        // Lines 12-24: both starved. Greedy-pack ascending demands within
+        // each category, then move LD leftovers to the next SD jobs.
+        let mut a1 = avail1;
+        for &r in &inp.sd_demands {
+            let r = r as f64;
+            if a1 - r > 0.0 {
+                a1 -= r;
+            }
+        }
+        let mut a2 = avail2;
+        let mut unserved_sd: Vec<f64> = Vec::new();
+        {
+            // Jobs SD could not serve, in ascending order (lines 21-24 walk
+            // "from the request of J_{i+1}").
+            let mut a1_probe = avail1;
+            for &r in &inp.sd_demands {
+                let r = r as f64;
+                if a1_probe - r > 0.0 {
+                    a1_probe -= r;
+                } else {
+                    unserved_sd.push(r);
+                }
+            }
+        }
+        for &r in &inp.ld_demands {
+            let r = r as f64;
+            if a2 - r > 0.0 {
+                a2 -= r;
+            }
+        }
+        // Combined leftovers serve further SD jobs; each such migration
+        // grows the SD reserve (line 23: δ = δ + r_i / Tot_R).
+        for r in unserved_sd {
+            if r < a1 + a2 {
+                let take_from_ld = (r - a1).max(0.0);
+                a1 = (a1 - r).max(0.0);
+                a2 -= take_from_ld;
+                delta += r / tot;
+            } else {
+                break;
+            }
+        }
+    }
+    delta.clamp(DELTA_MIN, DELTA_MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ReserveInputs {
+        ReserveInputs {
+            total: 40,
+            ac1: 0.0,
+            ac2: 0.0,
+            f1: 0.0,
+            f2: 0.0,
+            sd_demands: vec![],
+            ld_demands: vec![],
+        }
+    }
+
+    #[test]
+    fn surplus_sd_shrinks_delta() {
+        let mut inp = base();
+        inp.ac1 = 8.0; // SD pool free
+        inp.sd_demands = vec![2]; // pending needs only 2
+        let d = adjust(0.30, &inp);
+        // surplus 6 / 40 = 0.15 returned to LD
+        assert!((d - 0.15).abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn starved_sd_with_ld_surplus_grows_delta() {
+        let mut inp = base();
+        inp.sd_demands = vec![4, 4]; // P1 = 8, avail1 = 0
+        inp.ac2 = 10.0;
+        inp.ld_demands = vec![5]; // P2 = 5, surplus 5
+        let d = adjust(0.10, &inp);
+        assert!((d - 0.225).abs() < 1e-9, "{d}"); // +5/40
+    }
+
+    #[test]
+    fn both_starved_migrates_leftovers_to_sd() {
+        let mut inp = base();
+        // SD: 3 free, jobs [2, 4] -> serves 2 (leftover ~1), job 4 unserved.
+        inp.ac1 = 3.0;
+        inp.sd_demands = vec![2, 4];
+        // LD: 9 free, jobs [5, 30] -> serves 5 (leftover 4), job 30 unserved.
+        inp.ac2 = 9.0;
+        inp.ld_demands = vec![5, 30];
+        // leftovers 1 + 4 = 5 > 4 -> SD job 4 served, δ += 4/40.
+        let d = adjust(0.10, &inp);
+        assert!((d - 0.20).abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn estimated_release_counts_toward_pools() {
+        let mut inp = base();
+        inp.f1 = 6.0; // releases land in SD pool next tick
+        inp.sd_demands = vec![2];
+        let d = adjust(0.5, &inp);
+        assert!((d - 0.4).abs() < 1e-9, "{d}"); // surplus 4/40 returned
+    }
+
+    #[test]
+    fn delta_stays_in_bounds() {
+        let mut inp = base();
+        inp.ac1 = 40.0; // giant SD surplus
+        assert!(adjust(0.05, &inp) >= DELTA_MIN);
+        inp.ac1 = 0.0;
+        inp.ac2 = 40.0;
+        inp.sd_demands = vec![40];
+        assert!(adjust(0.90, &inp) <= DELTA_MAX);
+    }
+
+    #[test]
+    fn idle_system_drifts_down_to_min() {
+        // No pending demands, no frees: SD branch (0 >= 0) with 0 surplus.
+        let inp = base();
+        let mut d = 0.10;
+        for _ in 0..100 {
+            d = adjust(d, &inp);
+        }
+        assert!((DELTA_MIN..=0.10).contains(&d));
+    }
+}

@@ -1,0 +1,112 @@
+//! Fair scheduler baseline: "assigning resources to jobs such that all jobs
+//! get, on average, an equal share of resources over time" (paper §I).
+//!
+//! Max-min fairness over containers, no preemption: each heartbeat the free
+//! containers are granted to the active jobs furthest below their fair
+//! share (water-filling), capped by demand and pending tasks.
+
+use super::{Allocation, ClusterView, Scheduler};
+
+#[derive(Debug, Clone, Default)]
+pub struct FairScheduler;
+
+impl FairScheduler {
+    pub fn new() -> Self {
+        FairScheduler
+    }
+}
+
+impl Scheduler for FairScheduler {
+    fn name(&self) -> &'static str {
+        "fair"
+    }
+
+    fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation> {
+        // Jobs that can absorb containers now.
+        let mut eligible: Vec<(u32, u32, u32)> = view // (idx, occupied, cap)
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| !j.finished && j.pending_tasks > 0 && j.occupied < j.demand)
+            .map(|(i, j)| {
+                let cap = j.occupied + j.demand.saturating_sub(j.occupied).min(j.pending_tasks);
+                (i as u32, j.occupied, cap)
+            })
+            .collect();
+        if eligible.is_empty() {
+            return Vec::new();
+        }
+
+        // Water-filling: repeatedly grant one container to the eligible job
+        // with the lowest current occupancy (FIFO tie-break by index).
+        let mut grants = vec![0u32; view.jobs.len()];
+        let mut free = view.free;
+        while free > 0 {
+            let Some(best) = eligible
+                .iter_mut()
+                .filter(|(_, occ, cap)| *occ < *cap)
+                .min_by_key(|(idx, occ, _)| (*occ, *idx))
+            else {
+                break;
+            };
+            best.1 += 1;
+            grants[best.0 as usize] += 1;
+            free -= 1;
+        }
+
+        grants
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| Allocation { job: view.jobs[i].id, n })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::*;
+
+    #[test]
+    fn equal_split_between_equal_jobs() {
+        let jobs = vec![jv(1, 6, 6), jv(2, 6, 6)];
+        let mut s = FairScheduler::new();
+        let allocs = s.schedule(&view(6, 6, jobs));
+        assert_eq!(allocs, vec![Allocation { job: 1, n: 3 }, Allocation { job: 2, n: 3 }]);
+    }
+
+    #[test]
+    fn waterfill_favors_underfilled() {
+        // J1 already holds 4; J2 holds 0. 4 free -> J2 gets all 4.
+        let jobs = vec![started(jv(1, 8, 4), 4), jv(2, 8, 8)];
+        let mut s = FairScheduler::new();
+        let allocs = s.schedule(&view(4, 8, jobs));
+        assert_eq!(allocs, vec![Allocation { job: 2, n: 4 }]);
+    }
+
+    #[test]
+    fn demand_and_pending_cap_shares() {
+        // J1 can take at most 2 (demand), J2 at most 1 (pending).
+        let jobs = vec![jv(1, 2, 5), jv(2, 8, 1)];
+        let mut s = FairScheduler::new();
+        let allocs = s.schedule(&view(8, 8, jobs));
+        assert_eq!(allocs, vec![Allocation { job: 1, n: 2 }, Allocation { job: 2, n: 1 }]);
+    }
+
+    #[test]
+    fn no_eligible_jobs_no_allocs() {
+        let jobs = vec![started(jv(1, 2, 0), 2)];
+        let mut s = FairScheduler::new();
+        assert!(s.schedule(&view(6, 8, jobs)).is_empty());
+    }
+
+    #[test]
+    fn leftover_when_all_capped() {
+        let jobs = vec![jv(1, 1, 1), jv(2, 1, 1)];
+        let mut s = FairScheduler::new();
+        let allocs = s.schedule(&view(8, 8, jobs));
+        let total: u32 = allocs.iter().map(|a| a.n).sum();
+        assert_eq!(total, 2);
+    }
+}

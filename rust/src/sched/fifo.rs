@@ -1,0 +1,160 @@
+//! Strict first-come-first-serve scheduler — the "FCFS manner" of the
+//! paper's motivating example (Fig. 1): the head-of-line job blocks
+//! everything behind it until it can start.
+
+use super::{refill_started, Allocation, ClusterView, Scheduler};
+
+/// FIFO with optional gang admission.
+///
+/// * `gang = true` (paper's Fig. 1 semantics): an unstarted job launches
+///   only when its *full* demand fits in the free pool.
+/// * `gang = false`: the head job may start with partial resources.
+///
+/// In both modes, jobs behind an unstartable head wait (no skipping).
+///
+/// `strict` additionally freezes the queue behind any job that was ever
+/// delayed, until that job *finishes* — the paper's idealized Fig. 1 FCFS
+/// narrative (J3/J4 wait for J2's completion even though containers are
+/// free).  Real YARN backfills; strict mode exists to reproduce the
+/// motivating example's exact arithmetic.
+#[derive(Debug, Clone)]
+pub struct FifoScheduler {
+    gang: bool,
+    strict: bool,
+    delayed: std::collections::BTreeSet<crate::jobs::JobId>,
+}
+
+impl FifoScheduler {
+    pub fn new(gang: bool) -> Self {
+        FifoScheduler { gang, strict: false, delayed: Default::default() }
+    }
+
+    /// The paper's Fig. 1 FCFS (gang + frozen queue behind delayed jobs).
+    pub fn strict() -> Self {
+        FifoScheduler { gang: true, strict: true, delayed: Default::default() }
+    }
+}
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation> {
+        // 1. Keep feeding already-admitted jobs.
+        let (mut allocs, mut free) = refill_started(view, view.free);
+        // Strict mode: a once-delayed job freezes the queue until it ends.
+        if self.strict
+            && view
+                .jobs
+                .iter()
+                .any(|j| j.started && !j.finished && self.delayed.contains(&j.id))
+        {
+            return allocs;
+        }
+        // 2. Admit unstarted jobs strictly in submission order.
+        for j in view.jobs.iter().filter(|j| !j.started && !j.finished) {
+            if free == 0 {
+                break;
+            }
+            let want = j.demand.min(j.pending_tasks);
+            if want == 0 {
+                continue;
+            }
+            if self.gang && want > free {
+                self.delayed.insert(j.id);
+                break; // head-of-line blocks the queue
+            }
+            let n = want.min(free);
+            allocs.push(Allocation { job: j.id, n });
+            free -= n;
+            if self.strict && self.delayed.contains(&j.id) {
+                break; // a once-delayed job freezes the queue as it starts
+            }
+            if !self.gang && free == 0 {
+                break;
+            }
+        }
+        allocs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::*;
+
+    #[test]
+    fn gang_head_of_line_blocks() {
+        // Fig 1: 6 containers; J1 (R3) running, J2 (R4) can't fit, so J3
+        // (R2) and J4 (R2) must wait even though they would fit.
+        let jobs = vec![
+            started(jv(1, 3, 0), 3),
+            jv(2, 4, 4),
+            jv(3, 2, 2),
+            jv(4, 2, 2),
+        ];
+        let mut s = FifoScheduler::new(true);
+        let allocs = s.schedule(&view(3, 6, jobs));
+        assert!(allocs.is_empty(), "J2 blocks: {allocs:?}");
+    }
+
+    #[test]
+    fn gang_admits_in_order_when_fits() {
+        let jobs = vec![jv(1, 3, 3), jv(2, 2, 2), jv(3, 4, 4)];
+        let mut s = FifoScheduler::new(true);
+        let allocs = s.schedule(&view(6, 6, jobs));
+        // J1 (3) + J2 (2) fit; J3 (4) blocks at 1 free.
+        assert_eq!(allocs, vec![Allocation { job: 1, n: 3 }, Allocation { job: 2, n: 2 }]);
+    }
+
+    #[test]
+    fn non_gang_takes_partial() {
+        let jobs = vec![jv(1, 8, 8)];
+        let mut s = FifoScheduler::new(false);
+        let allocs = s.schedule(&view(3, 6, jobs));
+        assert_eq!(allocs, vec![Allocation { job: 1, n: 3 }]);
+    }
+
+    #[test]
+    fn demand_caps_even_with_more_pending() {
+        // Job pending tasks 10 but demand 4: only 4 granted.
+        let jobs = vec![jv(1, 4, 10)];
+        let mut s = FifoScheduler::new(true);
+        let allocs = s.schedule(&view(10, 10, jobs));
+        assert_eq!(allocs, vec![Allocation { job: 1, n: 4 }]);
+    }
+
+    #[test]
+    fn strict_mode_freezes_queue_behind_delayed_job() {
+        let mut s = FifoScheduler::strict();
+        // Round 1: J2 (R4) blocks with 3 free -> marked delayed.
+        let jobs = vec![started(jv(1, 3, 0), 3), jv(2, 4, 4), jv(3, 2, 2)];
+        assert!(s.schedule(&view(3, 6, jobs)).is_empty());
+        // Round 2: J1 done; J2 admitted; J3 must NOT backfill while the
+        // once-delayed J2 runs, even with 2 containers free.
+        let jobs = vec![jv(2, 4, 4), jv(3, 2, 2)];
+        let allocs = s.schedule(&view(6, 6, jobs));
+        assert_eq!(allocs, vec![Allocation { job: 2, n: 4 }]);
+        // Round 3: J2 running (started, delayed) -> queue frozen.
+        let jobs = vec![started(jv(2, 4, 0), 4), jv(3, 2, 2)];
+        assert!(s.schedule(&view(2, 6, jobs)).is_empty());
+        // Round 4: J2 finished -> J3 finally admitted.
+        let mut f = jv(2, 4, 0);
+        f.finished = true;
+        f.started = true;
+        let jobs = vec![f, jv(3, 2, 2)];
+        let allocs = s.schedule(&view(6, 6, jobs));
+        assert_eq!(allocs, vec![Allocation { job: 3, n: 2 }]);
+    }
+
+    #[test]
+    fn finished_jobs_are_skipped() {
+        let mut f = jv(1, 4, 0);
+        f.finished = true;
+        let jobs = vec![f, jv(2, 2, 2)];
+        let mut s = FifoScheduler::new(true);
+        let allocs = s.schedule(&view(6, 6, jobs));
+        assert_eq!(allocs, vec![Allocation { job: 2, n: 2 }]);
+    }
+}

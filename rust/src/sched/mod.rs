@@ -1,0 +1,176 @@
+//! Scheduler interface and implementations.
+//!
+//! The engine invokes the scheduler once per heartbeat with a [`ClusterView`]
+//! (observable state only: free containers, job queue, and the heartbeat
+//! transition batch).  The scheduler returns [`Allocation`]s; the engine
+//! enforces feasibility (never more than free capacity, never more than a
+//! job's pending tasks).
+
+pub mod capacity;
+pub mod dress;
+pub mod fair;
+pub mod fifo;
+
+pub use capacity::CapacityScheduler;
+pub use dress::DressScheduler;
+pub use fair::FairScheduler;
+pub use fifo::FifoScheduler;
+
+use crate::cluster::Transition;
+use crate::config::{SchedConfig, SchedKind};
+use crate::jobs::JobId;
+use crate::util::Time;
+
+/// What the scheduler can see about one job (observable via YARN requests
+/// and heartbeats — no ground-truth task durations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobView {
+    pub id: JobId,
+    /// Containers requested at submission (`r_i`).
+    pub demand: u32,
+    pub submit_ms: Time,
+    /// Job has at least one task past Pending.
+    pub started: bool,
+    pub finished: bool,
+    /// Tasks of the current runnable phase still waiting for containers.
+    pub pending_tasks: u32,
+    /// Containers currently held.
+    pub occupied: u32,
+}
+
+/// Observable cluster state at a heartbeat.
+#[derive(Debug, Clone)]
+pub struct ClusterView<'a> {
+    pub now: Time,
+    /// Free containers (the paper's `A_c`).
+    pub free: u32,
+    /// Total containers (the paper's `Tot_R`).
+    pub total: u32,
+    /// All submitted jobs in submission order (finished ones included).
+    pub jobs: Vec<JobView>,
+    /// Container transitions observed since the previous heartbeat.
+    pub transitions: &'a [Transition],
+}
+
+impl ClusterView<'_> {
+    pub fn active_jobs(&self) -> impl Iterator<Item = &JobView> {
+        self.jobs.iter().filter(|j| !j.finished)
+    }
+}
+
+/// A grant of `n` containers to a job this round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Allocation {
+    pub job: JobId,
+    pub n: u32,
+}
+
+/// The scheduler interface.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Called once per heartbeat. Must return feasible allocations; the
+    /// engine additionally clamps to free capacity and pending tasks.
+    fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation>;
+
+    /// Introspection for reports: DRESS's current reserve ratio δ.
+    fn reserve_ratio(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Construct a scheduler from config. `total` is the cluster container
+/// count (needed by DRESS for δ·Tot_R bookkeeping).
+pub fn build(cfg: &SchedConfig, total: u32) -> Box<dyn Scheduler> {
+    match cfg.kind {
+        SchedKind::Fifo => Box::new(FifoScheduler::new(cfg.gang)),
+        SchedKind::Fair => Box::new(FairScheduler::new()),
+        SchedKind::Capacity => Box::new(CapacityScheduler::new(cfg.gang)),
+        SchedKind::Dress => Box::new(DressScheduler::new(cfg, total)),
+    }
+}
+
+/// Shared helper: refill already-started, unfinished jobs up to their demand
+/// (YARN keeps feeding an admitted application's outstanding requests).
+/// Returns allocations and the remaining free count.
+pub(crate) fn refill_started(view: &ClusterView, mut free: u32) -> (Vec<Allocation>, u32) {
+    let mut out = Vec::new();
+    for j in view.jobs.iter().filter(|j| j.started && !j.finished) {
+        if free == 0 {
+            break;
+        }
+        let budget = j.demand.saturating_sub(j.occupied);
+        let want = budget.min(j.pending_tasks).min(free);
+        if want > 0 {
+            out.push(Allocation { job: j.id, n: want });
+            free -= want;
+        }
+    }
+    (out, free)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Build a ClusterView for scheduler unit tests.
+    pub fn view(free: u32, total: u32, jobs: Vec<JobView>) -> ClusterView<'static> {
+        ClusterView { now: 0, free, total, jobs, transitions: &[] }
+    }
+
+    pub fn jv(id: JobId, demand: u32, pending: u32) -> JobView {
+        JobView {
+            id,
+            demand,
+            submit_ms: id as Time * 1_000,
+            started: false,
+            finished: false,
+            pending_tasks: pending,
+            occupied: 0,
+        }
+    }
+
+    pub fn started(mut j: JobView, occupied: u32) -> JobView {
+        j.started = true;
+        j.occupied = occupied;
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+    use crate::config::SchedConfig;
+
+    #[test]
+    fn build_all_kinds() {
+        for kind in [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress] {
+            let cfg = SchedConfig { kind, ..SchedConfig::default() };
+            let s = build(&cfg, 40);
+            assert_eq!(s.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn refill_prioritizes_started_jobs() {
+        let jobs = vec![
+            started(jv(1, 4, 2), 2), // wants 2 more
+            jv(2, 10, 10),           // not started: ignored by refill
+            started(jv(3, 6, 9), 3), // budget 3, pending 9 -> 3
+        ];
+        let v = view(4, 40, jobs);
+        let (allocs, free) = refill_started(&v, v.free);
+        assert_eq!(allocs, vec![Allocation { job: 1, n: 2 }, Allocation { job: 3, n: 2 }]);
+        assert_eq!(free, 0);
+    }
+
+    #[test]
+    fn refill_respects_demand_cap() {
+        let jobs = vec![started(jv(1, 4, 10), 4)]; // at demand: no refill
+        let v = view(8, 40, jobs);
+        let (allocs, free) = refill_started(&v, v.free);
+        assert!(allocs.is_empty());
+        assert_eq!(free, 8);
+    }
+}

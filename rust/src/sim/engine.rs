@@ -1,0 +1,461 @@
+//! The discrete-event simulation engine: drives jobs, containers, and the
+//! scheduler through heartbeat rounds, enforcing feasibility and recording
+//! metrics + traces.
+
+use super::event::{Event, EventQueue};
+use super::trace::{TaskTrace, TraceRecorder};
+use crate::cluster::{Cluster, ContainerState, HeartbeatLog, Transition};
+use crate::config::ExperimentConfig;
+use crate::jobs::{JobRt, JobSpec, TaskState};
+use crate::metrics::{JobMetrics, SystemMetrics};
+use crate::sched::{Allocation, ClusterView, JobView, Scheduler};
+use crate::util::rng::Rng;
+use crate::util::Time;
+
+/// Outcome of one simulated experiment.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub scheduler: String,
+    pub jobs: Vec<JobMetrics>,
+    pub system: SystemMetrics,
+    pub trace: TraceRecorder,
+    /// DRESS δ history, empty for baselines.
+    pub delta_history: Vec<(Time, f64)>,
+    /// Injected container failures survived (task re-attempts).
+    pub failures: u32,
+}
+
+/// The engine. Owns everything for one run.
+pub struct Engine {
+    cfg: ExperimentConfig,
+    cluster: Cluster,
+    jobs: Vec<JobRt>,
+    queue: EventQueue,
+    heartbeats: HeartbeatLog,
+    sched: Box<dyn Scheduler>,
+    rng: Rng,
+    now: Time,
+    trace: TraceRecorder,
+    /// Utilization samples (time, used containers) at each tick.
+    pub util: Vec<(Time, u32)>,
+    /// δ samples per tick (schedulers without a reserve ratio yield none).
+    delta_trace: Vec<(Time, f64)>,
+    failures: u32,
+    /// Safety valve against pathological schedules.
+    max_ms: Time,
+}
+
+impl Engine {
+    pub fn new(cfg: ExperimentConfig, specs: Vec<JobSpec>, sched: Box<dyn Scheduler>) -> Self {
+        for s in &specs {
+            s.validate().unwrap_or_else(|e| panic!("invalid job spec: {e}"));
+        }
+        let cluster = Cluster::new(cfg.cluster.nodes, cfg.cluster.slots_per_node);
+        let seed = cfg.workload.seed ^ 0xD8E5_5000;
+        let mut queue = EventQueue::new();
+        for s in &specs {
+            queue.push(s.submit_ms, Event::JobSubmit(s.id));
+        }
+        queue.push(0, Event::SchedTick);
+        Engine {
+            cfg,
+            cluster,
+            jobs: specs.into_iter().map(JobRt::new).collect(),
+            queue,
+            heartbeats: HeartbeatLog::new(),
+            sched,
+            rng: Rng::new(seed),
+            now: 0,
+            trace: TraceRecorder::new(),
+            util: Vec::new(),
+            delta_trace: Vec::new(),
+            failures: 0,
+            max_ms: 40 * 3_600 * 1_000, // 40 simulated hours
+        }
+    }
+
+    fn job_index(&self, id: u32) -> usize {
+        self.jobs
+            .iter()
+            .position(|j| j.id() == id)
+            .unwrap_or_else(|| panic!("unknown job {id}"))
+    }
+
+    fn all_finished(&self) -> bool {
+        self.jobs.iter().all(|j| j.finished())
+    }
+
+    fn build_view<'a>(&self, transitions: &'a [Transition]) -> ClusterView<'a> {
+        // A demand above cluster capacity can never gang-start; YARN callers
+        // are granted at most the cluster, so the view clamps (prevents
+        // head-of-line livelock for oversized requests).
+        let total = self.cluster.total();
+        let jobs = self
+            .jobs
+            .iter()
+            .filter(|j| j.submitted)
+            .map(|j| JobView {
+                id: j.id(),
+                demand: j.spec.demand.min(total),
+                submit_ms: j.spec.submit_ms,
+                started: j.started(),
+                finished: j.finished(),
+                pending_tasks: j.pending_tasks(),
+                occupied: j.occupied,
+            })
+            .collect();
+        ClusterView {
+            now: self.now,
+            free: self.cluster.free(),
+            total: self.cluster.total(),
+            jobs,
+            transitions,
+        }
+    }
+
+    /// Apply one feasible allocation: create containers in the YARN state
+    /// machine for up to `n` pending tasks of the job.
+    fn apply_allocation(&mut self, alloc: Allocation) {
+        let ji = self.job_index(alloc.job);
+        for _ in 0..alloc.n {
+            if self.cluster.free() == 0 {
+                break;
+            }
+            let Some((phase, task)) = self.jobs[ji].next_pending() else {
+                break;
+            };
+            let cid = self
+                .cluster
+                .allocate(alloc.job, phase, task, self.now)
+                .expect("free checked above");
+            self.jobs[ji].tasks[phase][task].state = TaskState::Launching(cid);
+            self.jobs[ji].occupied += 1;
+            self.record_transition(cid, ContainerState::New);
+            self.schedule_advance(cid);
+        }
+    }
+
+    fn record_transition(&mut self, cid: u32, to: ContainerState) {
+        let c = self.cluster.container(cid);
+        self.heartbeats.record(Transition {
+            time: self.now,
+            container: cid,
+            job: c.job,
+            task: c.task,
+            to,
+        });
+    }
+
+    /// Sample the delay for the container's next state hop and enqueue it.
+    fn schedule_advance(&mut self, cid: u32) {
+        let state = self.cluster.container(cid).state;
+        let d = &self.cfg.cluster.delays;
+        let median = match state {
+            ContainerState::New => d.new_to_reserved_ms,
+            ContainerState::Reserved => d.reserved_to_allocated_ms,
+            ContainerState::Allocated => d.allocated_to_acquired_ms,
+            ContainerState::Acquired => d.acquired_to_running_ms,
+            _ => return,
+        };
+        let delay = self.rng.lognormal(median, d.sigma).max(1.0) as Time;
+        self.queue.push(self.now + delay, Event::ContainerAdvance(cid));
+    }
+
+    fn on_container_advance(&mut self, cid: u32) {
+        let new_state = self.cluster.container_mut(cid).advance(self.now);
+        self.record_transition(cid, new_state);
+        let (job, phase, task) = {
+            let c = self.cluster.container(cid);
+            (c.job, c.phase, c.task)
+        };
+        if new_state == ContainerState::Running {
+            let ji = self.job_index(job);
+            self.jobs[ji].tasks[phase][task].state =
+                TaskState::Running { container: cid, start: self.now };
+            if self.jobs[ji].first_start.is_none() {
+                self.jobs[ji].first_start = Some(self.now);
+            }
+            let dur = self.jobs[ji].tasks[phase][task].duration_ms;
+            // Failure injection: the container may die mid-task; the task
+            // is then re-attempted in a fresh container (YARN AM behavior).
+            let pf = self.cfg.cluster.task_failure_prob;
+            if pf > 0.0 && self.rng.chance(pf) {
+                let at = self.now + (dur as f64 * self.rng.range_f64(0.1, 0.9)) as Time;
+                self.queue.push(at.max(self.now + 1), Event::TaskFail(cid));
+            } else {
+                self.queue.push(self.now + dur, Event::TaskFinish(cid));
+            }
+        } else {
+            self.schedule_advance(cid);
+        }
+    }
+
+    fn on_task_finish(&mut self, cid: u32) {
+        let new_state = self.cluster.container_mut(cid).advance(self.now);
+        debug_assert_eq!(new_state, ContainerState::Completed);
+        self.record_transition(cid, ContainerState::Completed);
+        let (job, phase, task, granted, run_start) = {
+            let c = self.cluster.container(cid);
+            (c.job, c.phase, c.task, c.state_since, c.run_start)
+        };
+        let _ = granted;
+        self.cluster.release(cid);
+
+        let ji = self.job_index(job);
+        let start = match self.jobs[ji].tasks[phase][task].state {
+            TaskState::Running { start, .. } => start,
+            other => panic!("finish of non-running task: {other:?}"),
+        };
+        debug_assert_eq!(start, run_start);
+        self.jobs[ji].tasks[phase][task].state = TaskState::Done { start, finish: self.now };
+        self.jobs[ji].occupied -= 1;
+        self.trace.record(TaskTrace {
+            job,
+            phase,
+            task,
+            granted: run_start, // grant time folded into startup elsewhere
+            start,
+            finish: self.now,
+        });
+        self.jobs[ji].advance_phase();
+        if self.jobs[ji].all_done() && self.jobs[ji].finish.is_none() {
+            self.jobs[ji].finish = Some(self.now);
+        }
+    }
+
+    /// Container dies mid-task: release the slot, reset the task to
+    /// Pending so the scheduler re-grants it.
+    fn on_task_fail(&mut self, cid: u32) {
+        let new_state = self.cluster.container_mut(cid).advance(self.now);
+        debug_assert_eq!(new_state, ContainerState::Completed);
+        self.record_transition(cid, ContainerState::Completed);
+        let (job, phase, task) = {
+            let c = self.cluster.container(cid);
+            (c.job, c.phase, c.task)
+        };
+        self.cluster.release(cid);
+        let ji = self.job_index(job);
+        debug_assert!(matches!(
+            self.jobs[ji].tasks[phase][task].state,
+            TaskState::Running { .. }
+        ));
+        self.jobs[ji].tasks[phase][task].state = TaskState::Pending;
+        self.jobs[ji].occupied -= 1;
+        self.failures += 1;
+    }
+
+    fn on_sched_tick(&mut self) {
+        let transitions = self.heartbeats.drain();
+        let view = self.build_view(&transitions);
+        let allocs = self.sched.schedule(&view);
+        // Feasibility enforcement: total grants bounded by free capacity.
+        let mut free = self.cluster.free();
+        for a in allocs {
+            let ji = self.job_index(a.job);
+            let pending = self.jobs[ji].pending_tasks();
+            let n = a.n.min(pending).min(free);
+            if n == 0 {
+                continue;
+            }
+            free -= n;
+            self.apply_allocation(Allocation { job: a.job, n });
+        }
+        self.util.push((self.now, self.cluster.used()));
+        if let Some(delta) = self.sched.reserve_ratio() {
+            self.delta_trace.push((self.now, delta));
+        }
+        debug_assert!(self.cluster.conservation_holds());
+        if !self.all_finished() {
+            self.queue
+                .push(self.now + self.cfg.cluster.hb_ms, Event::SchedTick);
+        }
+    }
+
+    /// Run to completion and produce the result bundle.
+    pub fn run(mut self) -> RunResult {
+        while let Some((t, ev)) = self.queue.pop() {
+            assert!(t >= self.now, "time went backwards");
+            self.now = t;
+            if self.now > self.max_ms {
+                panic!("simulation exceeded {} ms — livelocked schedule?", self.max_ms);
+            }
+            match ev {
+                Event::JobSubmit(id) => {
+                    let ji = self.job_index(id);
+                    self.jobs[ji].submitted = true;
+                }
+                Event::SchedTick => self.on_sched_tick(),
+                Event::ContainerAdvance(cid) => self.on_container_advance(cid),
+                Event::TaskFinish(cid) => self.on_task_finish(cid),
+                Event::TaskFail(cid) => self.on_task_fail(cid),
+            }
+            if self.all_finished() {
+                break;
+            }
+        }
+        assert!(self.all_finished(), "run ended with unfinished jobs (starvation)");
+
+        let jobs: Vec<JobMetrics> = self.jobs.iter().map(JobMetrics::of).collect();
+        let system = SystemMetrics::of(&jobs, &self.util, self.cluster.total());
+        RunResult {
+            scheduler: self.sched.name().to_string(),
+            jobs,
+            system,
+            trace: self.trace,
+            delta_history: self.delta_trace,
+            failures: self.failures,
+        }
+    }
+}
+
+/// Convenience: build + run one experiment with the configured scheduler.
+pub fn run_experiment(cfg: &ExperimentConfig, specs: Vec<JobSpec>) -> RunResult {
+    let sched = crate::sched::build(&cfg.sched, cfg.cluster.total_containers());
+    Engine::new(cfg.clone(), specs, sched).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedKind;
+    use crate::jobs::{PhaseKind, PhaseSpec, Platform};
+
+    fn tiny_job(id: u32, submit: Time, demand: u32, durs: &[Time]) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("job{id}"),
+            platform: Platform::MapReduce,
+            submit_ms: submit,
+            demand,
+            phases: vec![PhaseSpec::new(PhaseKind::Map, durs)],
+        }
+    }
+
+    fn cfg(kind: SchedKind) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.cluster.nodes = 2;
+        c.cluster.slots_per_node = 3;
+        c.sched.kind = kind;
+        c
+    }
+
+    #[test]
+    fn single_job_completes() {
+        let res = run_experiment(&cfg(SchedKind::Fifo), vec![tiny_job(1, 0, 2, &[5_000, 5_000])]);
+        assert_eq!(res.jobs.len(), 1);
+        let j = &res.jobs[0];
+        assert!(j.waiting_ms > 0, "startup delays imply nonzero waiting");
+        assert!(j.completion_ms >= 5_000);
+        assert_eq!(res.trace.tasks.len(), 2);
+    }
+
+    #[test]
+    fn all_schedulers_complete_congested_mix() {
+        let specs = vec![
+            tiny_job(1, 0, 4, &[8_000, 8_000, 9_000, 9_000]),
+            tiny_job(2, 1_000, 4, &[7_000, 7_000, 7_000, 7_000]),
+            tiny_job(3, 2_000, 2, &[3_000, 3_000]),
+            tiny_job(4, 3_000, 2, &[4_000, 4_000]),
+        ];
+        for kind in [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress] {
+            let res = run_experiment(&cfg(kind), specs.clone());
+            assert_eq!(res.jobs.len(), 4, "{kind:?}");
+            assert!(res.system.makespan_ms > 0);
+            assert_eq!(res.trace.tasks.len(), 12, "{kind:?}: every task ran");
+        }
+    }
+
+    #[test]
+    fn dress_records_delta_history() {
+        let res = run_experiment(&cfg(SchedKind::Dress), vec![tiny_job(1, 0, 2, &[2_000, 2_000])]);
+        assert!(!res.delta_history.is_empty());
+        assert!(res.delta_history.iter().all(|&(_, d)| (0.0..=1.0).contains(&d)));
+        let fifo = run_experiment(&cfg(SchedKind::Fifo), vec![tiny_job(1, 0, 2, &[2_000, 2_000])]);
+        assert!(fifo.delta_history.is_empty());
+    }
+
+    #[test]
+    fn multi_phase_barrier_ordering() {
+        let spec = JobSpec {
+            id: 1,
+            name: "two-phase".into(),
+            platform: Platform::MapReduce,
+            submit_ms: 0,
+            demand: 3,
+            phases: vec![
+                PhaseSpec::new(PhaseKind::Map, &[4_000, 4_500, 5_000]),
+                PhaseSpec::new(PhaseKind::Reduce, &[3_000]),
+            ],
+        };
+        let res = run_experiment(&cfg(SchedKind::Capacity), vec![spec]);
+        let map_finish = res
+            .trace
+            .tasks
+            .iter()
+            .filter(|t| t.phase == 0)
+            .map(|t| t.finish)
+            .max()
+            .unwrap();
+        let reduce_start = res
+            .trace
+            .tasks
+            .iter()
+            .find(|t| t.phase == 1)
+            .map(|t| t.start)
+            .unwrap();
+        assert!(
+            reduce_start >= map_finish,
+            "reduce started {reduce_start} before last map finished {map_finish}"
+        );
+    }
+
+    #[test]
+    fn failure_injection_retries_until_done() {
+        let mut c = cfg(SchedKind::Capacity);
+        c.cluster.task_failure_prob = 0.3;
+        let specs = vec![
+            tiny_job(1, 0, 3, &[4_000, 4_000, 4_000]),
+            tiny_job(2, 1_000, 2, &[3_000, 3_000]),
+        ];
+        let res = run_experiment(&c, specs);
+        // All tasks eventually completed despite failures; failed attempts
+        // do not appear in the trace (only successful runs do).
+        assert_eq!(res.trace.tasks.len(), 5);
+        assert!(res.failures > 0, "with p=0.3 over 5+ attempts, expect failures");
+        // Failures lengthen the run vs the failure-free baseline.
+        let mut clean = cfg(SchedKind::Capacity);
+        clean.cluster.task_failure_prob = 0.0;
+        let base = run_experiment(&clean, vec![
+            tiny_job(1, 0, 3, &[4_000, 4_000, 4_000]),
+            tiny_job(2, 1_000, 2, &[3_000, 3_000]),
+        ]);
+        assert_eq!(base.failures, 0);
+        assert!(res.system.makespan_ms >= base.system.makespan_ms);
+    }
+
+    #[test]
+    fn dress_survives_failures_under_congestion() {
+        let mut c = cfg(SchedKind::Dress);
+        c.cluster.task_failure_prob = 0.15;
+        let specs = crate::workload::generate(
+            8,
+            crate::workload::WorkloadMix::Mixed,
+            0.3,
+            2_000,
+            11,
+        );
+        let expected: usize = specs.iter().map(|s| s.total_tasks() as usize).sum();
+        let res = run_experiment(&c, specs);
+        assert_eq!(res.trace.tasks.len(), expected);
+        assert!(res.delta_history.iter().all(|&(_, d)| (0.0..1.0).contains(&d)));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let specs = vec![tiny_job(1, 0, 3, &[4_000, 5_000, 6_000])];
+        let a = run_experiment(&cfg(SchedKind::Capacity), specs.clone());
+        let b = run_experiment(&cfg(SchedKind::Capacity), specs);
+        assert_eq!(a.system.makespan_ms, b.system.makespan_ms);
+        assert_eq!(a.jobs[0].waiting_ms, b.jobs[0].waiting_ms);
+    }
+}

@@ -1,0 +1,144 @@
+//! Event types and the time-ordered event queue.
+
+use crate::cluster::ContainerId;
+use crate::jobs::JobId;
+use crate::util::Time;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulation events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// A job arrives in the cluster.
+    JobSubmit(JobId),
+    /// Scheduling round (heartbeat aggregation + scheduler invocation).
+    SchedTick,
+    /// A container moves to its next lifecycle state.
+    ContainerAdvance(ContainerId),
+    /// A running task completes.
+    TaskFinish(ContainerId),
+    /// A running container dies mid-task (failure injection); the task is
+    /// re-attempted in a fresh container, as on YARN.
+    TaskFail(ContainerId),
+}
+
+/// Min-heap event queue ordered by (time, insertion sequence) — FIFO among
+/// simultaneous events, which keeps runs deterministic.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<(Time, u64, EventEntry)>>,
+    seq: u64,
+}
+
+/// Wrapper to give Event a total order for the heap (by discriminant; the
+/// (time, seq) prefix dominates in practice).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct EventEntry(u8, u32, u32);
+
+impl EventEntry {
+    fn pack(e: Event) -> Self {
+        match e {
+            Event::JobSubmit(j) => EventEntry(0, j, 0),
+            Event::SchedTick => EventEntry(1, 0, 0),
+            Event::ContainerAdvance(c) => EventEntry(2, c, 0),
+            Event::TaskFinish(c) => EventEntry(3, c, 0),
+            Event::TaskFail(c) => EventEntry(4, c, 0),
+        }
+    }
+
+    fn unpack(self) -> Event {
+        match self.0 {
+            0 => Event::JobSubmit(self.1),
+            1 => Event::SchedTick,
+            2 => Event::ContainerAdvance(self.1),
+            3 => Event::TaskFinish(self.1),
+            _ => Event::TaskFail(self.1),
+        }
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: Time, event: Event) {
+        self.heap.push(Reverse((time, self.seq, EventEntry::pack(event))));
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(Time, Event)> {
+        self.heap
+            .pop()
+            .map(|Reverse((t, _, e))| (t, e.unpack()))
+    }
+
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, Event::SchedTick);
+        q.push(10, Event::JobSubmit(1));
+        q.push(20, Event::TaskFinish(5));
+        assert_eq!(q.pop(), Some((10, Event::JobSubmit(1))));
+        assert_eq!(q.pop(), Some((20, Event::TaskFinish(5))));
+        assert_eq!(q.pop(), Some((30, Event::SchedTick)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_among_simultaneous() {
+        let mut q = EventQueue::new();
+        q.push(5, Event::JobSubmit(1));
+        q.push(5, Event::JobSubmit(2));
+        q.push(5, Event::SchedTick);
+        assert_eq!(q.pop(), Some((5, Event::JobSubmit(1))));
+        assert_eq!(q.pop(), Some((5, Event::JobSubmit(2))));
+        assert_eq!(q.pop(), Some((5, Event::SchedTick)));
+    }
+
+    #[test]
+    fn roundtrips_all_event_kinds() {
+        let events = [
+            Event::JobSubmit(7),
+            Event::SchedTick,
+            Event::ContainerAdvance(9),
+            Event::TaskFinish(11),
+            Event::TaskFail(13),
+        ];
+        let mut q = EventQueue::new();
+        for (i, e) in events.iter().enumerate() {
+            q.push(i as Time, *e);
+        }
+        for e in events {
+            assert_eq!(q.pop().unwrap().1, e);
+        }
+    }
+
+    #[test]
+    fn peek_time_matches_next_pop() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(42, Event::SchedTick);
+        q.push(7, Event::SchedTick);
+        assert_eq!(q.peek_time(), Some(7));
+        q.pop();
+        assert_eq!(q.peek_time(), Some(42));
+    }
+}

@@ -1,0 +1,9 @@
+//! Discrete-event simulation core: event queue, engine, trace recording.
+
+pub mod engine;
+pub mod event;
+pub mod trace;
+
+pub use engine::{Engine, RunResult};
+pub use event::{Event, EventQueue};
+pub use trace::{TaskTrace, TraceRecorder};

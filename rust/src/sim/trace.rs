@@ -1,0 +1,106 @@
+//! Per-task execution traces — the raw material for Figs. 2-4 (starting
+//! variation, heading tasks, trailing tasks) and for estimator validation.
+
+use crate::jobs::JobId;
+use crate::util::Time;
+
+/// One task's observed lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskTrace {
+    pub job: JobId,
+    pub phase: usize,
+    pub task: usize,
+    /// Container grant time.
+    pub granted: Time,
+    /// Execution start (container reached Running).
+    pub start: Time,
+    pub finish: Time,
+}
+
+impl TaskTrace {
+    pub fn duration(&self) -> Time {
+        self.finish - self.start
+    }
+
+    /// Startup latency: grant -> running (the paper's transition delay).
+    pub fn startup(&self) -> Time {
+        self.start - self.granted
+    }
+}
+
+/// Collects task traces during a run.
+#[derive(Debug, Default, Clone)]
+pub struct TraceRecorder {
+    pub tasks: Vec<TaskTrace>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, t: TaskTrace) {
+        self.tasks.push(t);
+    }
+
+    /// Tasks of one job, ordered by start time.
+    pub fn job_tasks(&self, job: JobId) -> Vec<TaskTrace> {
+        let mut v: Vec<TaskTrace> =
+            self.tasks.iter().copied().filter(|t| t.job == job).collect();
+        v.sort_by_key(|t| (t.start, t.task));
+        v
+    }
+
+    /// Ground-truth starting variation of (job, phase): max(start)-min(start).
+    pub fn phase_dps(&self, job: JobId, phase: usize) -> Option<Time> {
+        let starts: Vec<Time> = self
+            .tasks
+            .iter()
+            .filter(|t| t.job == job && t.phase == phase)
+            .map(|t| t.start)
+            .collect();
+        if starts.is_empty() {
+            return None;
+        }
+        Some(starts.iter().max().unwrap() - starts.iter().min().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tt(job: JobId, phase: usize, task: usize, start: Time, finish: Time) -> TaskTrace {
+        TaskTrace { job, phase, task, granted: start.saturating_sub(500), start, finish }
+    }
+
+    #[test]
+    fn durations_and_startup() {
+        let t = tt(1, 0, 0, 1_000, 4_000);
+        assert_eq!(t.duration(), 3_000);
+        assert_eq!(t.startup(), 500);
+    }
+
+    #[test]
+    fn job_tasks_sorted_by_start() {
+        let mut r = TraceRecorder::new();
+        r.record(tt(1, 0, 1, 2_000, 3_000));
+        r.record(tt(1, 0, 0, 1_000, 3_000));
+        r.record(tt(2, 0, 0, 500, 900));
+        let ts = r.job_tasks(1);
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].task, 0);
+        assert_eq!(ts[1].task, 1);
+    }
+
+    #[test]
+    fn phase_dps_ground_truth() {
+        let mut r = TraceRecorder::new();
+        r.record(tt(1, 0, 0, 1_000, 5_000));
+        r.record(tt(1, 0, 1, 2_500, 6_000));
+        r.record(tt(1, 1, 0, 7_000, 9_000));
+        assert_eq!(r.phase_dps(1, 0), Some(1_500));
+        assert_eq!(r.phase_dps(1, 1), Some(0));
+        assert_eq!(r.phase_dps(1, 2), None);
+    }
+}

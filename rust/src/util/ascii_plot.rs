@@ -1,0 +1,109 @@
+//! Terminal rendering for the paper's figures: grouped bar charts (Figs
+//! 6-13) and per-task Gantt-ish traces (Figs 2-4).  Pure text, so figure
+//! reproduction works in CI logs and EXPERIMENTS.md.
+
+/// Render a horizontal grouped bar chart. `series` are (label, values);
+/// all series must share `cats.len()` values. Values are scaled to `width`.
+pub fn grouped_bars(title: &str, cats: &[String], series: &[(&str, Vec<f64>)], width: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("── {title}\n"));
+    let max = series
+        .iter()
+        .flat_map(|(_, v)| v.iter().copied())
+        .fold(0.0_f64, f64::max)
+        .max(1e-9);
+    let cat_w = cats.iter().map(|c| c.len()).max().unwrap_or(0).max(4);
+    for (i, cat) in cats.iter().enumerate() {
+        for (si, (name, vals)) in series.iter().enumerate() {
+            let v = vals.get(i).copied().unwrap_or(0.0);
+            let n = ((v / max) * width as f64).round() as usize;
+            let glyph = ["█", "░", "▒", "▓"][si % 4];
+            let label = if si == 0 { cat.clone() } else { String::new() };
+            out.push_str(&format!(
+                "{label:>cat_w$} {glyph_bar:<width$} {v:>9.1} {name}\n",
+                glyph_bar = glyph.repeat(n),
+            ));
+        }
+    }
+    out
+}
+
+/// Render a task trace (one line per task): `rows` are (task_label, start,
+/// duration) in seconds; the timeline is scaled to `width` columns.
+pub fn task_trace(title: &str, rows: &[(String, f64, f64)], width: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("── {title}\n"));
+    let end = rows
+        .iter()
+        .map(|(_, s, d)| s + d)
+        .fold(0.0_f64, f64::max)
+        .max(1e-9);
+    let lab_w = rows.iter().map(|(l, _, _)| l.len()).max().unwrap_or(0).max(4);
+    for (label, start, dur) in rows {
+        let pre = ((start / end) * width as f64).round() as usize;
+        let len = (((dur / end) * width as f64).round() as usize).max(1);
+        out.push_str(&format!(
+            "{label:>lab_w$} |{}{} {start:>7.2}s +{dur:.2}s\n",
+            " ".repeat(pre.min(width)),
+            "▇".repeat(len.min(width.saturating_sub(pre))),
+        ));
+    }
+    out.push_str(&format!("{:>lab_w$} 0s {:>w$.1}s\n", "", end, w = width));
+    out
+}
+
+/// A simple sparkline for utilization curves.
+pub fn sparkline(values: &[f64]) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = values.iter().copied().fold(0.0_f64, f64::max).max(1e-9);
+    values
+        .iter()
+        .map(|v| GLYPHS[(((v / max) * 7.0).round() as usize).min(7)])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_include_labels_and_values() {
+        let cats = vec!["J1".to_string(), "J2".to_string()];
+        let s = grouped_bars(
+            "fig",
+            &cats,
+            &[("DRESS", vec![10.0, 20.0]), ("Capacity", vec![15.0, 5.0])],
+            20,
+        );
+        assert!(s.contains("J1") && s.contains("J2"));
+        assert!(s.contains("DRESS") && s.contains("Capacity"));
+        assert!(s.contains("20.0"));
+    }
+
+    #[test]
+    fn bars_handle_empty_and_zero() {
+        let s = grouped_bars("empty", &[], &[], 10);
+        assert!(s.contains("empty"));
+        let cats = vec!["a".to_string()];
+        let s = grouped_bars("z", &cats, &[("x", vec![0.0])], 10);
+        assert!(s.contains("0.0"));
+    }
+
+    #[test]
+    fn trace_scales_to_width() {
+        let rows = vec![
+            ("t0".to_string(), 0.0, 5.0),
+            ("t1".to_string(), 5.0, 5.0),
+        ];
+        let s = task_trace("trace", &rows, 40);
+        assert!(s.lines().count() >= 3);
+        assert!(s.contains("t0") && s.contains("t1"));
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.ends_with('█'));
+    }
+}

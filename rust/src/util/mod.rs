@@ -1,0 +1,33 @@
+//! Foundation utilities built in-tree (the environment is offline; see
+//! DESIGN.md §2): deterministic RNG + distributions, descriptive statistics,
+//! ASCII plotting for figure reproduction, and a tiny property-test runner.
+
+pub mod ascii_plot;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+
+/// Simulation time in milliseconds.
+pub type Time = u64;
+
+/// Convert milliseconds to fractional seconds (reporting only).
+pub fn ms_to_s(ms: Time) -> f64 {
+    ms as f64 / 1000.0
+}
+
+/// Convert fractional seconds to milliseconds (config ingestion).
+pub fn s_to_ms(s: f64) -> Time {
+    (s * 1000.0).round() as Time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ms_s_roundtrip() {
+        assert_eq!(s_to_ms(1.5), 1500);
+        assert!((ms_to_s(2500) - 2.5).abs() < 1e-12);
+        assert_eq!(s_to_ms(ms_to_s(123_456)), 123_456);
+    }
+}

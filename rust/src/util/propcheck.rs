@@ -1,0 +1,85 @@
+//! Minimal property-based testing runner (offline stand-in for `proptest`).
+//!
+//! Usage pattern (in `#[cfg(test)]` or `rust/tests/`):
+//!
+//! ```ignore
+//! propcheck::forall("delta stays in (0,1)", 200, |rng| gen_world(rng), |w| {
+//!     check(w).map_err(|e| format!("{e}"))
+//! });
+//! ```
+//!
+//! On failure the runner re-reports the failing case index and the seed so
+//! the exact input can be regenerated deterministically.
+
+use super::rng::Rng;
+
+/// Run `cases` random trials of `prop` over inputs drawn by `gen`.
+/// Panics (test failure) on the first counterexample, printing the base
+/// seed, the case index, and the property's error message.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall_seeded(name, 0xD12E55, cases, &mut gen, &mut prop);
+}
+
+/// Seeded variant, for reproducing a failure printed by [`forall`].
+pub fn forall_seeded<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: &mut impl FnMut(&mut Rng) -> T,
+    prop: &mut impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = root.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("u64 parity total", 50, |r| r.next_u64(), |_| {
+            Ok(())
+        });
+        forall("count side effect", 10, |r| r.next_u64() % 7, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        forall("always fails", 5, |r| r.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn same_seed_same_inputs() {
+        let mut first: Vec<u64> = Vec::new();
+        forall_seeded("collect", 99, 20, &mut |r| r.next_u64(), &mut |x| {
+            first.push(*x);
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        forall_seeded("collect2", 99, 20, &mut |r| r.next_u64(), &mut |x| {
+            second.push(*x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,92 @@
+//! Dataset chunk / block / split arithmetic — the mechanism behind heading
+//! tasks (paper §III.A.2 and Fig. 5): a dataset is stored in chunks, each
+//! chunk split into fixed-size blocks; the final block of each chunk is
+//! usually underloaded, so the task processing it finishes abnormally fast.
+
+/// A dataset as a list of chunk sizes (MB).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub chunks_mb: Vec<u64>,
+    /// Block size == map split size (paper uses 512 MB).
+    pub block_mb: u64,
+}
+
+impl Dataset {
+    pub fn new(chunks_mb: Vec<u64>, block_mb: u64) -> Self {
+        assert!(block_mb > 0);
+        Dataset { chunks_mb, block_mb }
+    }
+
+    /// The paper's Fig. 5 example: 1,664 MB + 1,280 MB at 512 MB splits.
+    pub fn paper_fig5() -> Self {
+        Dataset::new(vec![1_664, 1_280], 512)
+    }
+
+    /// Per-block payload sizes in MB, chunk by chunk. One map task per block.
+    pub fn block_sizes_mb(&self) -> Vec<u64> {
+        let mut blocks = Vec::new();
+        for &chunk in &self.chunks_mb {
+            let full = chunk / self.block_mb;
+            for _ in 0..full {
+                blocks.push(self.block_mb);
+            }
+            let rem = chunk % self.block_mb;
+            if rem > 0 {
+                blocks.push(rem);
+            }
+        }
+        blocks
+    }
+
+    /// Map-task duration multipliers: processing time scales with payload,
+    /// so underloaded final blocks yield heading tasks (<1.0 multipliers).
+    pub fn task_multipliers(&self) -> Vec<f64> {
+        self.block_sizes_mb()
+            .iter()
+            .map(|&b| b as f64 / self.block_mb as f64)
+            .collect()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.block_sizes_mb().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig5_block_layout() {
+        // Data A: 1664 = 3*512 + 128; Data B: 1280 = 2*512 + 256.
+        let d = Dataset::paper_fig5();
+        assert_eq!(
+            d.block_sizes_mb(),
+            vec![512, 512, 512, 128, 512, 512, 256]
+        );
+        assert_eq!(d.n_tasks(), 7);
+    }
+
+    #[test]
+    fn multipliers_flag_heading_tasks() {
+        let d = Dataset::paper_fig5();
+        let m = d.task_multipliers();
+        // Heading tasks: 128/512 = 0.25 and 256/512 = 0.5.
+        assert!((m[3] - 0.25).abs() < 1e-12);
+        assert!((m[6] - 0.5).abs() < 1e-12);
+        assert_eq!(m.iter().filter(|&&x| x < 1.0).count(), 2);
+    }
+
+    #[test]
+    fn exact_fit_has_no_heading_task() {
+        let d = Dataset::new(vec![1_024], 512);
+        assert_eq!(d.block_sizes_mb(), vec![512, 512]);
+        assert!(d.task_multipliers().iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn tiny_chunk_single_block() {
+        let d = Dataset::new(vec![100], 512);
+        assert_eq!(d.block_sizes_mb(), vec![100]);
+    }
+}

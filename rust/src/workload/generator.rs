@@ -1,0 +1,170 @@
+//! Experiment workload generation: randomized benchmark mixes with a target
+//! small-job fraction and fixed inter-arrival gap (paper: jobs submitted
+//! one-by-one, 5 s apart), plus the hand-built Fig. 1 motivating example.
+
+use super::hibench::{build_job, Benchmark};
+use crate::jobs::{JobSpec, PhaseKind, PhaseSpec, Platform};
+use crate::util::rng::Rng;
+use crate::util::Time;
+
+/// Which platform mix to generate (paper §V.A.2's three combinations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadMix {
+    MapReduce,
+    Spark,
+    Mixed,
+}
+
+impl WorkloadMix {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "mapreduce" => Ok(WorkloadMix::MapReduce),
+            "spark" => Ok(WorkloadMix::Spark),
+            "mixed" => Ok(WorkloadMix::Mixed),
+            other => Err(format!("unknown platform mix `{other}`")),
+        }
+    }
+}
+
+/// Largest container request the generator emits.  The paper's biggest jobs
+/// request ~75% of the 40-container cluster; capping below capacity keeps
+/// gang admission livelock-free under every scheduler (a demand above the
+/// DRESS LD pool quota could otherwise never start).
+pub const DEMAND_CAP: u32 = 30;
+
+/// Generate `n` jobs with ~`small_frac` small-demand jobs, submitted
+/// `arrival_ms` apart. Deterministic per seed.
+pub fn generate(
+    n: u32,
+    mix: WorkloadMix,
+    small_frac: f64,
+    arrival_ms: Time,
+    seed: u64,
+) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed);
+    // Pre-plan which job indices are small so the fraction is exact-ish
+    // (round(n * frac)), then shuffle their positions.
+    let n_small = ((n as f64) * small_frac).round() as u32;
+    let mut smalls: Vec<bool> = (0..n).map(|i| i < n_small).collect();
+    rng.shuffle(&mut smalls);
+
+    (0..n)
+        .map(|i| {
+            let platform = match mix {
+                WorkloadMix::MapReduce => Platform::MapReduce,
+                WorkloadMix::Spark => Platform::Spark,
+                WorkloadMix::Mixed => {
+                    if rng.chance(0.5) {
+                        Platform::MapReduce
+                    } else {
+                        Platform::Spark
+                    }
+                }
+            };
+            let small = smalls[i as usize];
+            let bench = pick_benchmark(&mut rng, platform, small);
+            // Paper-scale congestion: 20 jobs on 40 containers with ~1000 s
+            // makespan needs sizeable datasets (large jobs dominate work).
+            let size = if small { rng.range_f64(0.5, 1.0) } else { rng.range_f64(1.2, 2.6) };
+            let mut spec = build_job(
+                i + 1,
+                bench,
+                platform,
+                small,
+                i as Time * arrival_ms,
+                size,
+                &mut rng,
+            );
+            spec.demand = spec.demand.min(DEMAND_CAP);
+            spec
+        })
+        .collect()
+}
+
+fn pick_benchmark(rng: &mut Rng, platform: Platform, small: bool) -> Benchmark {
+    let pool: Vec<Benchmark> = Benchmark::ALL
+        .iter()
+        .copied()
+        .filter(|b| b.supports(platform))
+        .filter(|b| !small || b.naturally_small() || matches!(b, Benchmark::WordCount | Benchmark::Scan | Benchmark::Join | Benchmark::KMeans | Benchmark::LogisticRegression))
+        .collect();
+    pool[rng.index(pool.len())]
+}
+
+/// The paper's Fig. 1 motivating workload: 6-container cluster, 4 jobs
+/// submitted 1 s apart — J1 (R3, L10), J2 (R4, L20), J3 (R2, L5),
+/// J4 (R2, L8).  Single-phase jobs with uniform task lengths.
+pub fn motivating_example() -> Vec<JobSpec> {
+    let mk = |id: u32, submit_s: u64, r: u32, len_s: u64| JobSpec {
+        id,
+        name: format!("fig1-j{id}"),
+        platform: Platform::MapReduce,
+        submit_ms: submit_s * 1_000,
+        demand: r,
+        phases: vec![PhaseSpec::new(
+            PhaseKind::Map,
+            &vec![len_s * 1_000; r as usize],
+        )],
+    };
+    vec![mk(1, 0, 3, 10), mk(2, 1, 4, 20), mk(3, 2, 2, 5), mk(4, 3, 2, 8)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_count_and_arrivals() {
+        let jobs = generate(20, WorkloadMix::Mixed, 0.3, 5_000, 42);
+        assert_eq!(jobs.len(), 20);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i as u32 + 1);
+            assert_eq!(j.submit_ms, i as Time * 5_000);
+            j.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn small_fraction_respected() {
+        let jobs = generate(20, WorkloadMix::Mixed, 0.3, 5_000, 7);
+        let small = jobs.iter().filter(|j| j.demand <= 4).count();
+        assert!(small >= 6, "expected >= 6 small jobs, got {small}");
+    }
+
+    #[test]
+    fn platform_mixes() {
+        let mr = generate(10, WorkloadMix::MapReduce, 0.3, 5_000, 1);
+        assert!(mr.iter().all(|j| j.platform == Platform::MapReduce));
+        let sp = generate(10, WorkloadMix::Spark, 0.3, 5_000, 1);
+        assert!(sp.iter().all(|j| j.platform == Platform::Spark));
+        let mix = generate(30, WorkloadMix::Mixed, 0.3, 5_000, 1);
+        assert!(mix.iter().any(|j| j.platform == Platform::MapReduce));
+        assert!(mix.iter().any(|j| j.platform == Platform::Spark));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(12, WorkloadMix::Mixed, 0.25, 5_000, 99);
+        let b = generate(12, WorkloadMix::Mixed, 0.25, 5_000, 99);
+        assert_eq!(a, b);
+        let c = generate(12, WorkloadMix::Mixed, 0.25, 5_000, 100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn motivating_example_matches_fig1() {
+        let jobs = motivating_example();
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[0].demand, 3);
+        assert_eq!(jobs[1].demand, 4);
+        assert_eq!(jobs[0].critical_path_ms(), 10_000);
+        assert_eq!(jobs[1].critical_path_ms(), 20_000);
+        assert_eq!(jobs[3].submit_ms, 3_000);
+    }
+
+    #[test]
+    fn mix_parse() {
+        assert_eq!(WorkloadMix::parse("mixed").unwrap(), WorkloadMix::Mixed);
+        assert!(WorkloadMix::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,361 @@
+//! HiBench benchmark profiles (paper §V.A.2): the ten benchmarks across
+//! five categories, parameterized so the generated jobs reproduce the
+//! paper's trace shapes (Fig. 2 WordCount 20 map / 4 reduce; Fig. 3
+//! PageRank-MR 4 phases with a heading task; Fig. 4 PageRank-Spark with a
+//! trailing task).
+//!
+//! Durations are *profiles*, not measurements: each benchmark defines its
+//! phase structure, nominal per-task lengths, and data sensitivity; actual
+//! task durations are sampled per job (scale factor + jitter + heading /
+//! trailing effects).
+
+use super::dataset::Dataset;
+use super::skew::zipf_partition_weights;
+use crate::jobs::{JobId, JobSpec, PhaseKind, PhaseSpec, Platform, TaskSpec};
+use crate::util::rng::Rng;
+use crate::util::Time;
+
+/// The ten HiBench benchmarks used in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    WordCount,
+    Sort,
+    TeraSort,
+    KMeans,
+    LogisticRegression,
+    Bayes,
+    Scan,
+    Join,
+    PageRank,
+    NWeight,
+}
+
+impl Benchmark {
+    pub const ALL: [Benchmark; 10] = [
+        Benchmark::WordCount,
+        Benchmark::Sort,
+        Benchmark::TeraSort,
+        Benchmark::KMeans,
+        Benchmark::LogisticRegression,
+        Benchmark::Bayes,
+        Benchmark::Scan,
+        Benchmark::Join,
+        Benchmark::PageRank,
+        Benchmark::NWeight,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Benchmark::WordCount => "wordcount",
+            Benchmark::Sort => "sort",
+            Benchmark::TeraSort => "terasort",
+            Benchmark::KMeans => "kmeans",
+            Benchmark::LogisticRegression => "lr",
+            Benchmark::Bayes => "bayes",
+            Benchmark::Scan => "scan",
+            Benchmark::Join => "join",
+            Benchmark::PageRank => "pagerank",
+            Benchmark::NWeight => "nweight",
+        }
+    }
+
+    /// Benchmarks runnable on each platform (paper: MR runs 1-10, Spark
+    /// runs 4-6 and 9-10).
+    pub fn supports(&self, platform: Platform) -> bool {
+        match platform {
+            Platform::MapReduce => true,
+            Platform::Spark => matches!(
+                self,
+                Benchmark::KMeans
+                    | Benchmark::LogisticRegression
+                    | Benchmark::Bayes
+                    | Benchmark::PageRank
+                    | Benchmark::NWeight
+            ),
+        }
+    }
+
+    /// Is this a small-demand benchmark flavor? (Scan/Join Hive queries and
+    /// small WordCounts are the paper's typical SD jobs.)
+    pub fn naturally_small(&self) -> bool {
+        matches!(self, Benchmark::Scan | Benchmark::Join)
+    }
+}
+
+pub fn benchmark_names() -> Vec<&'static str> {
+    Benchmark::ALL.iter().map(|b| b.name()).collect()
+}
+
+/// Profile internals: phase templates per benchmark & platform.
+struct Profile {
+    /// (kind, task-count base, nominal task ms) per phase; task count
+    /// scales with the job's size factor.
+    phases: Vec<(PhaseKind, u32, Time)>,
+    /// Spark partition skew (0 for MR; drives trailing tasks).
+    skew: f64,
+    /// Dataset chunks (MB) for MR map phases (drives heading tasks).
+    chunks_mb: Vec<u64>,
+}
+
+fn profile(b: Benchmark, platform: Platform, small: bool) -> Profile {
+    use Benchmark::*;
+    use PhaseKind::*;
+    // (task base counts, nominal durations in ms) tuned so a 20-job run on
+    // a 40-container cluster is congested with a makespan around 10^3 s,
+    // matching the paper's scale.
+    let p = match (b, platform) {
+        (WordCount, Platform::MapReduce) => Profile {
+            phases: vec![(Map, 20, 28_000), (Reduce, 4, 16_000)],
+            skew: 0.0,
+            chunks_mb: vec![1_664, 1_280],
+        },
+        (Sort, Platform::MapReduce) => Profile {
+            phases: vec![(Map, 12, 18_000), (Reduce, 8, 34_000)],
+            skew: 0.0,
+            chunks_mb: vec![2_048, 1_536],
+        },
+        (TeraSort, Platform::MapReduce) => Profile {
+            phases: vec![(Map, 24, 30_000), (Reduce, 12, 42_000)],
+            skew: 0.0,
+            chunks_mb: vec![4_096, 2_048, 1_664],
+        },
+        (KMeans, Platform::MapReduce) => Profile {
+            phases: vec![(Map, 12, 26_000), (Reduce, 4, 14_000), (Map, 12, 24_000), (Reduce, 4, 13_000)],
+            skew: 0.0,
+            chunks_mb: vec![1_536, 1_024],
+        },
+        (KMeans, Platform::Spark) => Profile {
+            phases: vec![(SparkStage, 14, 22_000), (SparkStage, 14, 19_000), (SparkStage, 6, 12_000)],
+            skew: 0.5,
+            chunks_mb: vec![],
+        },
+        (LogisticRegression, Platform::MapReduce) => Profile {
+            phases: vec![(Map, 10, 24_000), (Reduce, 4, 15_000)],
+            skew: 0.0,
+            chunks_mb: vec![1_280, 768],
+        },
+        (LogisticRegression, Platform::Spark) => Profile {
+            phases: vec![(SparkStage, 12, 20_000), (SparkStage, 12, 18_000), (SparkStage, 4, 9_000)],
+            skew: 0.45,
+            chunks_mb: vec![],
+        },
+        (Bayes, Platform::MapReduce) => Profile {
+            phases: vec![(Map, 14, 26_000), (Reduce, 6, 18_000)],
+            skew: 0.0,
+            chunks_mb: vec![1_792, 1_024],
+        },
+        (Bayes, Platform::Spark) => Profile {
+            phases: vec![(SparkStage, 12, 21_000), (SparkStage, 8, 16_000)],
+            skew: 0.55,
+            chunks_mb: vec![],
+        },
+        (Scan, _) => Profile {
+            phases: vec![(Map, 3, 14_000)],
+            skew: 0.0,
+            chunks_mb: vec![640],
+        },
+        (Join, _) => Profile {
+            phases: vec![(Map, 3, 16_000), (Reduce, 1, 11_000)],
+            skew: 0.0,
+            chunks_mb: vec![512, 256],
+        },
+        // Fig 3: PageRank MR = two stages x (map + reduce) = 4 phases,
+        // reduce-1 has 9 tasks with one heading task.
+        (PageRank, Platform::MapReduce) => Profile {
+            phases: vec![(Map, 16, 24_000), (Reduce, 9, 18_250), (Map, 14, 21_000), (Reduce, 8, 16_000)],
+            skew: 0.0,
+            chunks_mb: vec![2_048, 1_664],
+        },
+        (PageRank, Platform::Spark) => Profile {
+            phases: vec![(SparkStage, 16, 12_800), (SparkStage, 12, 11_000), (SparkStage, 8, 9_000)],
+            skew: 0.65, // Fig 4 trailing task
+            chunks_mb: vec![],
+        },
+        (NWeight, Platform::Spark) => Profile {
+            phases: vec![(SparkStage, 16, 26_000), (SparkStage, 16, 24_000), (SparkStage, 10, 18_000), (SparkStage, 6, 12_000)],
+            skew: 0.6,
+            chunks_mb: vec![],
+        },
+        (NWeight, Platform::MapReduce) => Profile {
+            phases: vec![(Map, 16, 28_000), (Reduce, 8, 20_000), (Map, 12, 22_000), (Reduce, 6, 15_000)],
+            skew: 0.0,
+            chunks_mb: vec![2_560, 1_536],
+        },
+        (b, p) => unreachable!("unsupported benchmark/platform combo {b:?}/{p} (guarded by supports())"),
+    };
+    if small {
+        // Small-demand variant: tiny dataset — few tasks, shorter phases.
+        Profile {
+            phases: p
+                .phases
+                .iter()
+                .map(|&(k, n, d)| (k, (n / 4).max(1), d / 2))
+                .collect(),
+            skew: p.skew,
+            chunks_mb: p.chunks_mb.iter().map(|c| (c / 4).max(128)).collect(),
+        }
+    } else {
+        p
+    }
+}
+
+/// Materialize one job from a benchmark profile.
+///
+/// `size_factor` scales task counts (0.5 .. 1.5 typical); task durations
+/// get per-task jitter plus heading (MR map phases, from the dataset block
+/// layout) and trailing (Spark stages, from zipf skew) effects.
+pub fn build_job(
+    id: JobId,
+    b: Benchmark,
+    platform: Platform,
+    small: bool,
+    submit_ms: Time,
+    size_factor: f64,
+    rng: &mut Rng,
+) -> JobSpec {
+    assert!(b.supports(platform), "{b:?} not runnable on {platform}");
+    let prof = profile(b, platform, small);
+    let mut phases = Vec::new();
+    for (pi, &(kind, base_n, base_ms)) in prof.phases.iter().enumerate() {
+        let mut n = ((base_n as f64 * size_factor).round() as u32).max(1);
+        let mut multipliers: Vec<f64>;
+        if kind == PhaseKind::Map && !prof.chunks_mb.is_empty() {
+            // Heading tasks from block arithmetic: derive the task count
+            // from the dataset layout scaled to n blocks.
+            let ds = Dataset::new(
+                prof.chunks_mb
+                    .iter()
+                    .map(|&c| ((c as f64 * size_factor) as u64).max(128))
+                    .collect(),
+                512,
+            );
+            multipliers = ds.task_multipliers();
+            // Resize to ~n tasks by tiling full blocks (keeps the
+            // underloaded final blocks).
+            while (multipliers.len() as u32) < n {
+                multipliers.insert(0, 1.0);
+            }
+            n = multipliers.len() as u32;
+        } else if kind == PhaseKind::SparkStage && prof.skew > 0.0 {
+            multipliers = zipf_partition_weights(rng, n as usize, prof.skew);
+        } else {
+            multipliers = vec![1.0; n as usize];
+        }
+        let durations: Vec<Time> = multipliers
+            .iter()
+            .map(|&m| {
+                // ±8% execution jitter on top of the data-size multiplier.
+                let jitter = rng.range_f64(0.92, 1.08);
+                ((base_ms as f64 * m * jitter) as Time).max(500)
+            })
+            .collect();
+        let _ = pi;
+        phases.push(PhaseSpec {
+            kind,
+            tasks: durations.iter().map(|&d| TaskSpec { duration_ms: d }).collect(),
+        });
+    }
+    // Demand r_i: what the job asks the RM for — its widest phase, capped
+    // for small jobs at a genuinely small request.
+    let width = phases.iter().map(|p| p.tasks.len() as u32).max().unwrap_or(1);
+    let demand = if small { width.min(4).max(1) } else { width };
+    JobSpec {
+        id,
+        name: format!("{}-{}", b.name(), if small { "small" } else { "full" }),
+        platform,
+        submit_ms,
+        demand,
+        phases,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_benchmarks_build_valid_mr_jobs() {
+        let mut rng = Rng::new(1);
+        for (i, b) in Benchmark::ALL.iter().enumerate() {
+            let j = build_job(i as u32 + 1, *b, Platform::MapReduce, false, 0, 1.0, &mut rng);
+            j.validate().unwrap();
+            assert!(j.demand >= 1);
+        }
+    }
+
+    #[test]
+    fn spark_subset_builds() {
+        let mut rng = Rng::new(2);
+        for b in Benchmark::ALL.iter().filter(|b| b.supports(Platform::Spark)) {
+            let j = build_job(1, *b, Platform::Spark, false, 0, 1.0, &mut rng);
+            j.validate().unwrap();
+            assert!(j.phases.iter().all(|p| p.kind == PhaseKind::SparkStage));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not runnable")]
+    fn wordcount_not_on_spark() {
+        let mut rng = Rng::new(3);
+        build_job(1, Benchmark::WordCount, Platform::Spark, false, 0, 1.0, &mut rng);
+    }
+
+    #[test]
+    fn wordcount_matches_fig2_shape() {
+        let mut rng = Rng::new(4);
+        let j = build_job(1, Benchmark::WordCount, Platform::MapReduce, false, 0, 1.0, &mut rng);
+        assert_eq!(j.phases.len(), 2);
+        assert_eq!(j.phases[1].tasks.len(), 4, "4 reduce tasks");
+        assert!(j.phases[0].tasks.len() >= 20, "~20 map tasks");
+    }
+
+    #[test]
+    fn pagerank_mr_has_heading_task() {
+        let mut rng = Rng::new(5);
+        let j = build_job(1, Benchmark::PageRank, Platform::MapReduce, false, 0, 1.0, &mut rng);
+        assert_eq!(j.phases.len(), 4, "two MR stages = 4 phases");
+        // Map phases contain underloaded block tasks (heading).
+        let map_durs: Vec<Time> = j.phases[0].tasks.iter().map(|t| t.duration_ms).collect();
+        let max = *map_durs.iter().max().unwrap() as f64;
+        let min = *map_durs.iter().min().unwrap() as f64;
+        assert!(min < 0.8 * max, "heading task expected: {map_durs:?}");
+    }
+
+    #[test]
+    fn pagerank_spark_has_trailing_task() {
+        let mut rng = Rng::new(6);
+        let j = build_job(1, Benchmark::PageRank, Platform::Spark, false, 0, 1.0, &mut rng);
+        let durs: Vec<Time> = j.phases[0].tasks.iter().map(|t| t.duration_ms).collect();
+        let mut sorted = durs.clone();
+        sorted.sort_unstable();
+        let max = sorted[sorted.len() - 1] as f64;
+        let second = sorted[sorted.len() - 2] as f64;
+        assert!(max > second * 1.05, "trailing task expected: {durs:?}");
+    }
+
+    #[test]
+    fn small_variant_has_small_demand() {
+        let mut rng = Rng::new(7);
+        let j = build_job(1, Benchmark::Scan, Platform::MapReduce, true, 0, 1.0, &mut rng);
+        assert!(j.demand <= 4, "small job demand {} > 4", j.demand);
+        let big = build_job(2, Benchmark::TeraSort, Platform::MapReduce, false, 0, 1.0, &mut rng);
+        assert!(big.demand > 10);
+    }
+
+    #[test]
+    fn size_factor_scales_tasks() {
+        let mut rng = Rng::new(8);
+        let s = build_job(1, Benchmark::Sort, Platform::MapReduce, false, 0, 0.5, &mut rng);
+        let l = build_job(2, Benchmark::Sort, Platform::MapReduce, false, 0, 1.5, &mut rng);
+        assert!(l.total_tasks() > s.total_tasks());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = build_job(1, Benchmark::Bayes, Platform::Spark, false, 0, 1.0, &mut r1);
+        let b = build_job(1, Benchmark::Bayes, Platform::Spark, false, 0, 1.0, &mut r2);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,21 @@
+//! HiBench-fidelity workload model (paper §V.A.2): ten benchmark profiles
+//! across MapReduce and Spark-on-YARN, with the three task-execution
+//! characteristics of §III.A built in:
+//!
+//! * starting-time variation — emerges from the simulator's multi-round
+//!   allocation + container transition delays (not synthesized here);
+//! * heading tasks — from dataset chunk/block/split arithmetic
+//!   ([`dataset`]): the last block of each chunk is underloaded;
+//! * trailing tasks — from Zipf partition skew on Spark stages ([`skew`]).
+
+pub mod dataset;
+pub mod generator;
+pub mod hibench;
+pub mod skew;
+pub mod tracefile;
+
+pub use dataset::Dataset;
+pub use generator::{generate, motivating_example, WorkloadMix};
+pub use hibench::{benchmark_names, build_job, Benchmark};
+pub use skew::zipf_partition_weights;
+pub use tracefile::{from_trace, to_trace};

@@ -1,0 +1,73 @@
+//! Data-skew model for Spark stages — the mechanism behind trailing tasks
+//! (paper §III.A.3): partition sizes follow a Zipf-like distribution, so a
+//! few tasks process far more data and run correspondingly longer (the
+//! paper's Fig. 4 trailing task runs +38% over the second longest).
+
+use crate::util::rng::Rng;
+
+/// Partition weight multipliers for `n` tasks: mean ~1.0, with a heavy
+/// right tail controlled by `skew` (0 = uniform; paper-like behavior at
+/// ~0.4-0.8).  Deterministic per `rng` stream.
+pub fn zipf_partition_weights(rng: &mut Rng, n: usize, skew: f64) -> Vec<f64> {
+    if n == 0 {
+        return Vec::new();
+    }
+    if skew <= 0.0 {
+        return vec![1.0; n];
+    }
+    // Draw ranks from a zipf law, then normalize to mean 1.0.
+    let raw: Vec<f64> = (0..n)
+        .map(|_| {
+            let rank = rng.zipf(n.max(2), 1.0 + skew) as f64;
+            // weight inversely related to rank: rank 1 = heaviest partition
+            1.0 / rank.powf(0.5)
+        })
+        .collect();
+    let mean: f64 = raw.iter().sum::<f64>() / n as f64;
+    // Invert: most draws land on rank 1 (weight 1.0); rare high ranks are
+    // light. To get a heavy *tail* instead, reciprocate around the mean.
+    let weights: Vec<f64> = raw.iter().map(|w| (mean / w).max(0.25)).collect();
+    let m2: f64 = weights.iter().sum::<f64>() / n as f64;
+    weights.iter().map(|w| w / m2).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_when_no_skew() {
+        let mut rng = Rng::new(1);
+        let w = zipf_partition_weights(&mut rng, 8, 0.0);
+        assert_eq!(w, vec![1.0; 8]);
+    }
+
+    #[test]
+    fn mean_stays_near_one() {
+        let mut rng = Rng::new(2);
+        let w = zipf_partition_weights(&mut rng, 64, 0.6);
+        let mean: f64 = w.iter().sum::<f64>() / w.len() as f64;
+        assert!((mean - 1.0).abs() < 1e-9, "mean {mean}");
+    }
+
+    #[test]
+    fn skew_produces_trailing_tasks() {
+        let mut rng = Rng::new(3);
+        let w = zipf_partition_weights(&mut rng, 32, 0.8);
+        let max = w.iter().copied().fold(0.0_f64, f64::max);
+        let mut sorted = w.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let second = sorted[sorted.len() - 2];
+        // At least one partition clearly dominates (paper: +38%).
+        assert!(max / second > 1.05, "max {max} second {second}");
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let mut rng = Rng::new(4);
+        assert!(zipf_partition_weights(&mut rng, 0, 0.5).is_empty());
+        let one = zipf_partition_weights(&mut rng, 1, 0.5);
+        assert_eq!(one.len(), 1);
+        assert!((one[0] - 1.0).abs() < 1e-9);
+    }
+}

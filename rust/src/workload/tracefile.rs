@@ -1,0 +1,141 @@
+//! Workload trace files: import/export job specs as a line-oriented text
+//! format, so experiments can run recorded traces (the paper's evaluation
+//! methodology) rather than only generated mixes.
+//!
+//! Format (one job per line, `#` comments):
+//!
+//! ```text
+//! job <id> <name> <platform> <submit_ms> <demand> phases <kind>:<ms>,<ms>... [<kind>:...]
+//! job 1 wordcount mapreduce 0 4 phases map:28000,27500,7000 reduce:16000
+//! ```
+
+use crate::jobs::{JobSpec, PhaseKind, PhaseSpec, Platform, TaskSpec};
+use crate::util::Time;
+
+/// Serialize specs to the trace format.
+pub fn to_trace(specs: &[JobSpec]) -> String {
+    let mut out = String::from("# dress workload trace v1\n");
+    for s in specs {
+        out.push_str(&format!(
+            "job {} {} {} {} {} phases",
+            s.id, s.name, s.platform, s.submit_ms, s.demand
+        ));
+        for p in &s.phases {
+            let kind = match p.kind {
+                PhaseKind::Map => "map",
+                PhaseKind::Reduce => "reduce",
+                PhaseKind::SparkStage => "stage",
+            };
+            let durs: Vec<String> =
+                p.tasks.iter().map(|t| t.duration_ms.to_string()).collect();
+            out.push_str(&format!(" {kind}:{}", durs.join(",")));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a trace. Errors carry 1-based line numbers.
+pub fn from_trace(text: &str) -> Result<Vec<JobSpec>, String> {
+    let mut specs = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |m: &str| format!("line {}: {m}", ln + 1);
+        let mut it = line.split_whitespace();
+        if it.next() != Some("job") {
+            return Err(err("expected `job`"));
+        }
+        let id: u32 = it
+            .next()
+            .ok_or_else(|| err("missing id"))?
+            .parse()
+            .map_err(|e| err(&format!("id: {e}")))?;
+        let name = it.next().ok_or_else(|| err("missing name"))?.to_string();
+        let platform = match it.next().ok_or_else(|| err("missing platform"))? {
+            "mapreduce" => Platform::MapReduce,
+            "spark" => Platform::Spark,
+            other => return Err(err(&format!("unknown platform `{other}`"))),
+        };
+        let submit_ms: Time = it
+            .next()
+            .ok_or_else(|| err("missing submit_ms"))?
+            .parse()
+            .map_err(|e| err(&format!("submit_ms: {e}")))?;
+        let demand: u32 = it
+            .next()
+            .ok_or_else(|| err("missing demand"))?
+            .parse()
+            .map_err(|e| err(&format!("demand: {e}")))?;
+        if it.next() != Some("phases") {
+            return Err(err("expected `phases`"));
+        }
+        let mut phases = Vec::new();
+        for tok in it {
+            let (kind_s, durs_s) = tok
+                .split_once(':')
+                .ok_or_else(|| err(&format!("bad phase token `{tok}`")))?;
+            let kind = match kind_s {
+                "map" => PhaseKind::Map,
+                "reduce" => PhaseKind::Reduce,
+                "stage" => PhaseKind::SparkStage,
+                other => return Err(err(&format!("unknown phase kind `{other}`"))),
+            };
+            let tasks: Vec<TaskSpec> = durs_s
+                .split(',')
+                .map(|d| {
+                    d.parse::<Time>()
+                        .map(|duration_ms| TaskSpec { duration_ms })
+                        .map_err(|e| err(&format!("duration `{d}`: {e}")))
+                })
+                .collect::<Result<_, _>>()?;
+            phases.push(PhaseSpec { kind, tasks });
+        }
+        let spec = JobSpec { id, name, platform, submit_ms, demand, phases };
+        spec.validate().map_err(|e| err(&e))?;
+        specs.push(spec);
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, WorkloadMix};
+
+    #[test]
+    fn roundtrip_generated_workload() {
+        let specs = generate(8, WorkloadMix::Mixed, 0.3, 2_000, 42);
+        let text = to_trace(&specs);
+        let back = from_trace(&text).unwrap();
+        assert_eq!(specs, back);
+    }
+
+    #[test]
+    fn parses_hand_written_trace() {
+        let specs = from_trace(
+            "# comment\n\
+             job 1 wordcount mapreduce 0 4 phases map:28000,27500,7000 reduce:16000\n\
+             job 2 pagerank spark 5000 8 phases stage:12000,12800 stage:9000\n",
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].phases.len(), 2);
+        assert_eq!(specs[0].phases[0].tasks.len(), 3);
+        assert_eq!(specs[1].platform, Platform::Spark);
+        assert_eq!(specs[1].submit_ms, 5_000);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        assert!(from_trace("nope").unwrap_err().contains("line 1"));
+        assert!(from_trace("\njob x").unwrap_err().contains("line 2"));
+        assert!(from_trace("job 1 a mapreduce 0 4 phases map:abc")
+            .unwrap_err()
+            .contains("duration"));
+        // invalid spec (no phases) rejected via validate()
+        assert!(from_trace("job 1 a mapreduce 0 4 phases").is_err());
+    }
+}

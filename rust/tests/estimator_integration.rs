@@ -1,0 +1,120 @@
+//! Estimator vs simulator ground truth: Algorithms 1-2 must recover phase
+//! structure (Δps, γ, c) from heartbeat observations alone.
+
+use dress::cluster::ContainerState;
+use dress::config::{ExperimentConfig, SchedKind};
+use dress::estimator::{EstimatorBank, EstimatorParams};
+use dress::expt::trace_benchmark;
+use dress::jobs::Platform;
+use dress::sim::engine::run_experiment;
+use dress::workload::{generate, Benchmark, WorkloadMix};
+
+/// Re-drive an estimator from a finished run's heartbeat history.
+fn replay(res: &dress::sim::RunResult, params: EstimatorParams) -> EstimatorBank {
+    let mut bank = EstimatorBank::new(params);
+    // Synthesize heartbeats at 1 s granularity from the task trace: feed
+    // Running/Completed transitions in time order, tick every second.
+    let mut events: Vec<(u64, u32, usize, ContainerState)> = Vec::new();
+    for t in &res.trace.tasks {
+        events.push((t.start, t.job, t.task, ContainerState::Running));
+        events.push((t.finish, t.job, t.task, ContainerState::Completed));
+    }
+    events.sort_by_key(|&(t, ..)| t);
+    let end = events.last().map(|&(t, ..)| t).unwrap_or(0);
+    let mut ei = 0;
+    for now in (0..=end + 30_000).step_by(1_000) {
+        let mut batch = Vec::new();
+        while ei < events.len() && events[ei].0 <= now {
+            let (time, job, task, to) = events[ei];
+            bank.register(job, 0);
+            batch.push(dress::cluster::Transition { time, container: task as u32, job, task, to });
+            ei += 1;
+        }
+        bank.ingest(&batch);
+        bank.tick(now);
+    }
+    bank
+}
+
+#[test]
+fn wordcount_phases_detected_with_correct_widths() {
+    let res = trace_benchmark(Benchmark::WordCount, Platform::MapReduce, 42);
+    let bank = replay(&res, EstimatorParams::default());
+    let est = bank.job(1).expect("job observed");
+    assert!(
+        est.phases.len() >= 2,
+        "map + reduce phases expected, got {}",
+        est.phases.len()
+    );
+    // Total containers across detected phases == total tasks run.
+    let total_c: u32 = est.phases.iter().map(|p| p.c).sum();
+    assert_eq!(total_c as usize, res.trace.tasks.len());
+    // First phase should be the wide map phase.
+    assert!(est.phases[0].c >= 16, "map phase width {}", est.phases[0].c);
+}
+
+#[test]
+fn detected_dps_close_to_ground_truth() {
+    let res = trace_benchmark(Benchmark::WordCount, Platform::MapReduce, 7);
+    let bank = replay(&res, EstimatorParams::default());
+    let est = bank.job(1).unwrap();
+    let truth = res.trace.phase_dps(1, 0).unwrap() as f64;
+    let detected = est.phases[0].dps(0) as f64;
+    // Within 50% or 2 s absolute — observation is windowed, truth is exact.
+    assert!(
+        (detected - truth).abs() <= (0.5 * truth).max(2_000.0),
+        "detected Δps {detected} vs truth {truth}"
+    );
+}
+
+#[test]
+fn gamma_detected_after_first_bulk_finish() {
+    let res = trace_benchmark(Benchmark::WordCount, Platform::MapReduce, 3);
+    let bank = replay(&res, EstimatorParams::default());
+    let est = bank.job(1).unwrap();
+    let p0 = &est.phases[0];
+    let gamma = p0.gamma.expect("gamma detected for map phase") as u64;
+    let first_finish = res
+        .trace
+        .tasks
+        .iter()
+        .filter(|t| t.phase == 0)
+        .map(|t| t.finish)
+        .min()
+        .unwrap();
+    let last_finish = res
+        .trace
+        .tasks
+        .iter()
+        .filter(|t| t.phase == 0)
+        .map(|t| t.finish)
+        .max()
+        .unwrap();
+    assert!(
+        gamma >= first_finish && gamma <= last_finish,
+        "gamma {gamma} outside [{first_finish}, {last_finish}]"
+    );
+}
+
+#[test]
+fn beta_set_once_job_drains() {
+    let res = trace_benchmark(Benchmark::Scan, Platform::MapReduce, 5);
+    let bank = replay(&res, EstimatorParams::default());
+    let est = bank.job(1).unwrap();
+    let last = res.trace.tasks.iter().map(|t| t.finish).max().unwrap();
+    assert_eq!(est.beta, Some(last));
+    assert_eq!(est.running, 0);
+}
+
+#[test]
+fn estimator_inside_dress_produces_nonzero_predictions() {
+    // During a congested DRESS run, the estimator must at some point
+    // predict a strictly positive release (δ history then moves).
+    let mut cfg = ExperimentConfig::default();
+    cfg.sched.kind = SchedKind::Dress;
+    let res = run_experiment(&cfg, generate(12, WorkloadMix::Mixed, 0.3, 2_000, 42));
+    let deltas: Vec<f64> = res.delta_history.iter().map(|&(_, d)| d).collect();
+    let min = deltas.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = deltas.iter().copied().fold(0.0f64, f64::max);
+    assert!(max > min, "δ never moved: [{min}, {max}]");
+}

@@ -1,0 +1,76 @@
+//! Live-mode integration: a miniature end-to-end run with real PJRT
+//! compute per task (skipped if artifacts are missing).
+
+use dress::config::{SchedConfig, SchedKind};
+use dress::live::{run_live, LiveConfig};
+use dress::runtime::find_artifacts_dir;
+use dress::workload::{generate, WorkloadMix};
+
+fn tiny_specs(n: u32, seed: u64) -> Vec<dress::jobs::JobSpec> {
+    let mut specs = generate(n, WorkloadMix::Mixed, 0.5, 200, seed);
+    for s in specs.iter_mut() {
+        s.phases.truncate(1);
+        for p in s.phases.iter_mut() {
+            p.tasks.truncate(2);
+            for t in p.tasks.iter_mut() {
+                t.duration_ms = t.duration_ms.min(1_000);
+            }
+        }
+        s.demand = s.demand.min(2);
+    }
+    specs
+}
+
+#[test]
+fn live_run_completes_with_real_compute() {
+    let Some(dir) = find_artifacts_dir() else {
+        eprintln!("NOTE: artifacts/ missing — skipping live test");
+        return;
+    };
+    let cfg = LiveConfig {
+        workers: 3,
+        hb: std::time::Duration::from_millis(20),
+        units_per_sec: 1.0,
+        max_wall: std::time::Duration::from_secs(120),
+    };
+    let sched_cfg = SchedConfig { kind: SchedKind::Dress, ..Default::default() };
+    let sched = dress::sched::build(&sched_cfg, 3);
+    let rep = run_live(
+        &cfg,
+        &sched_cfg,
+        tiny_specs(3, 42),
+        sched,
+        dir.join("taskwork.hlo.txt").to_str().unwrap(),
+    )
+    .expect("live run");
+    assert_eq!(rep.jobs.len(), 3);
+    assert!(rep.tasks_run >= 3, "tasks {}", rep.tasks_run);
+    assert!(rep.checksum.is_finite() && rep.checksum != 0.0);
+    for j in &rep.jobs {
+        assert!(j.completion_ms > 0);
+        assert!(j.waiting_ms <= j.completion_ms);
+    }
+}
+
+#[test]
+fn live_capacity_baseline_also_completes() {
+    let Some(dir) = find_artifacts_dir() else { return };
+    let cfg = LiveConfig {
+        workers: 2,
+        hb: std::time::Duration::from_millis(20),
+        units_per_sec: 1.0,
+        max_wall: std::time::Duration::from_secs(120),
+    };
+    let sched_cfg = SchedConfig { kind: SchedKind::Capacity, ..Default::default() };
+    let sched = dress::sched::build(&sched_cfg, 2);
+    let rep = run_live(
+        &cfg,
+        &sched_cfg,
+        tiny_specs(2, 7),
+        sched,
+        dir.join("taskwork.hlo.txt").to_str().unwrap(),
+    )
+    .expect("live run");
+    assert_eq!(rep.scheduler, "capacity");
+    assert_eq!(rep.jobs.len(), 2);
+}

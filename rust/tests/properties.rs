@@ -1,0 +1,187 @@
+//! Property-based invariants over randomized workloads (DESIGN.md §7),
+//! run with the in-tree `propcheck` runner.
+
+use dress::config::{ExperimentConfig, SchedKind};
+use dress::estimator::{eval_curves, PhaseEstimate};
+use dress::sim::engine::run_experiment;
+use dress::util::propcheck::forall;
+use dress::util::rng::Rng;
+use dress::workload::{generate, WorkloadMix};
+
+/// Random small experiment: 4-10 jobs on a 2-4 node cluster.
+fn gen_world(rng: &mut Rng) -> (ExperimentConfig, u64, u32) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.cluster.nodes = 2 + (rng.next_u64() % 3) as u16;
+    cfg.cluster.slots_per_node = 4 + (rng.next_u64() % 5) as u32;
+    cfg.workload.seed = rng.next_u64();
+    let seed = cfg.workload.seed;
+    let jobs = 4 + (rng.next_u64() % 7) as u32;
+    (cfg, seed, jobs)
+}
+
+#[test]
+fn every_job_completes_under_every_scheduler() {
+    forall(
+        "no starvation",
+        12,
+        |rng| {
+            let (cfg, seed, jobs) = gen_world(rng);
+            let kind = [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress]
+                [(rng.next_u64() % 4) as usize];
+            (cfg, seed, jobs, kind)
+        },
+        |(cfg, seed, jobs, kind)| {
+            let mut cfg = cfg.clone();
+            cfg.sched.kind = *kind;
+            let specs = generate(*jobs, WorkloadMix::Mixed, 0.3, 2_000, *seed);
+            let expected_tasks: usize = specs.iter().map(|s| s.total_tasks() as usize).sum();
+            // run_experiment asserts all_finished internally.
+            let res = run_experiment(&cfg, specs);
+            if res.trace.tasks.len() != expected_tasks {
+                return Err(format!(
+                    "{:?}: ran {} tasks, expected {expected_tasks}",
+                    kind,
+                    res.trace.tasks.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn waiting_below_completion_and_positive_makespan() {
+    forall(
+        "metric sanity",
+        10,
+        |rng| gen_world(rng),
+        |(cfg, seed, jobs)| {
+            let mut cfg = cfg.clone();
+            cfg.sched.kind = SchedKind::Dress;
+            let res = run_experiment(&cfg, generate(*jobs, WorkloadMix::Mixed, 0.3, 2_000, *seed));
+            for j in &res.jobs {
+                if j.waiting_ms > j.completion_ms {
+                    return Err(format!("J{}: waiting {} > completion {}", j.id, j.waiting_ms, j.completion_ms));
+                }
+            }
+            if res.system.makespan_ms == 0 {
+                return Err("zero makespan".into());
+            }
+            if !(0.0..=1.0).contains(&res.system.mean_utilization) {
+                return Err(format!("utilization {}", res.system.mean_utilization));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dress_delta_always_in_unit_interval() {
+    forall(
+        "delta in (0,1)",
+        10,
+        |rng| gen_world(rng),
+        |(cfg, seed, jobs)| {
+            let mut cfg = cfg.clone();
+            cfg.sched.kind = SchedKind::Dress;
+            let res = run_experiment(&cfg, generate(*jobs, WorkloadMix::Mixed, 0.4, 1_500, *seed));
+            for &(t, d) in &res.delta_history {
+                if !(0.0 < d && d < 1.0) {
+                    return Err(format!("delta {d} at t={t}"));
+                }
+            }
+            if res.delta_history.is_empty() {
+                return Err("no delta history".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fifo_starts_jobs_in_submission_order() {
+    forall(
+        "fifo ordering",
+        10,
+        |rng| gen_world(rng),
+        |(cfg, seed, jobs)| {
+            let mut cfg = cfg.clone();
+            cfg.sched.kind = SchedKind::Fifo;
+            let res = run_experiment(&cfg, generate(*jobs, WorkloadMix::Mixed, 0.3, 2_000, *seed));
+            // first-start times must be non-decreasing in job id (submission order)
+            let mut starts: Vec<(u32, u64)> = res
+                .jobs
+                .iter()
+                .map(|j| (j.id, j.submit_ms + j.waiting_ms))
+                .collect();
+            starts.sort_by_key(|&(id, _)| id);
+            for w in starts.windows(2) {
+                if w[1].1 + 1 < w[0].1 {
+                    // +1 ms tolerance for same-tick grants
+                    return Err(format!("J{} started before J{}", w[1].0, w[0].0));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dress_makespan_within_bound_of_capacity() {
+    forall(
+        "makespan stability",
+        8,
+        |rng| gen_world(rng),
+        |(cfg, seed, jobs)| {
+            let specs = generate(*jobs, WorkloadMix::Mixed, 0.3, 2_000, *seed);
+            let mut d = cfg.clone();
+            d.sched.kind = SchedKind::Dress;
+            let mut c = cfg.clone();
+            c.sched.kind = SchedKind::Capacity;
+            let rd = run_experiment(&d, specs.clone());
+            let rc = run_experiment(&c, specs);
+            let ratio = rd.system.makespan_ms as f64 / rc.system.makespan_ms.max(1) as f64;
+            // Paper: "maintains a stable overall system performance".
+            if ratio > 1.5 {
+                return Err(format!("DRESS makespan {ratio:.2}x Capacity"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn release_curves_nonnegative_and_bounded() {
+    forall(
+        "eq3 bounds",
+        50,
+        |rng| {
+            let n = (rng.next_u64() % 20) as usize;
+            let phases: Vec<PhaseEstimate> = (0..n)
+                .map(|_| PhaseEstimate {
+                    gamma: rng.range_f64(0.0, 5_000.0),
+                    dps: rng.range_f64(0.0, 2_000.0),
+                    c: rng.range_f64(0.0, 40.0),
+                    alpha: rng.range_f64(0.0, 1_000.0),
+                    beta: rng.range_f64(1_000.0, 50_000.0),
+                    cat: (rng.next_u64() % 2) as u8,
+                })
+                .collect();
+            let grid: Vec<f64> = (0..64).map(|i| i as f64 * 100.0).collect();
+            (phases, grid)
+        },
+        |(phases, grid)| {
+            let [sd, ld] = eval_curves(phases, grid);
+            let total_c: f64 = phases.iter().map(|p| p.c).sum();
+            for (i, (&s, &l)) in sd.iter().zip(ld.iter()).enumerate() {
+                if s < 0.0 || l < 0.0 {
+                    return Err(format!("negative release at t[{i}]"));
+                }
+                if s + l > total_c + 1e-9 {
+                    return Err(format!("release {} exceeds total c {total_c}", s + l));
+                }
+            }
+            Ok(())
+        },
+    );
+}

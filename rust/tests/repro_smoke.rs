@@ -1,0 +1,87 @@
+//! Smoke tests over the experiment registry: every figure/table claim of
+//! the paper must hold in its reproduction shape on the default seed.
+
+use dress::expt::{fig1, mixed_setting, mr20, spark20, trace_benchmark};
+use dress::jobs::Platform;
+use dress::report::comparison_row;
+use dress::workload::Benchmark;
+
+fn holds(claim_id: &str, measured: f64) -> bool {
+    let (row, ok) = comparison_row(&dress::expt::paper::claim(claim_id), measured);
+    if !ok {
+        eprintln!("{row}");
+    }
+    ok
+}
+
+#[test]
+fn fig1_claims() {
+    let r = fig1();
+    assert!(holds("FIG1.fcfs-makespan-s", r.fcfs_makespan_s));
+    assert!(holds("FIG1.fcfs-avg-wait-s", r.fcfs_avg_wait_s));
+    assert!(holds("FIG1.rearranged-makespan-s", r.dress_makespan_s));
+    assert!(holds("FIG1.rearranged-avg-wait-s", r.dress_avg_wait_s));
+}
+
+#[test]
+fn fig2_to_4_trace_shapes() {
+    // Fig 2: two phases with measurable starting variation.
+    let r = trace_benchmark(Benchmark::WordCount, Platform::MapReduce, 42);
+    assert!(r.trace.phase_dps(1, 0).unwrap() > 0);
+    // Fig 3: heading task — min map duration well below the max.
+    let r = trace_benchmark(Benchmark::PageRank, Platform::MapReduce, 42);
+    let durs: Vec<u64> = r
+        .trace
+        .job_tasks(1)
+        .iter()
+        .filter(|t| t.phase == 0)
+        .map(|t| t.duration())
+        .collect();
+    let min = *durs.iter().min().unwrap() as f64;
+    let max = *durs.iter().max().unwrap() as f64;
+    assert!(min < 0.8 * max, "heading task: {durs:?}");
+    // Fig 4: trailing task — max stage duration above the second-longest.
+    let r = trace_benchmark(Benchmark::PageRank, Platform::Spark, 42);
+    let mut durs: Vec<u64> = r
+        .trace
+        .job_tasks(1)
+        .iter()
+        .filter(|t| t.phase == 0)
+        .map(|t| t.duration())
+        .collect();
+    durs.sort_unstable();
+    assert!(
+        durs[durs.len() - 1] as f64 > durs[durs.len() - 2] as f64 * 1.03,
+        "trailing task: {durs:?}"
+    );
+}
+
+#[test]
+fn spark20_claims() {
+    let pair = spark20(42);
+    assert!(holds("FIG6.small-waiting-change-pct", pair.comparison.small_waiting_change_pct));
+    assert!(holds("FIG7.small-completion-change-pct", pair.comparison.small_completion_change_pct));
+    assert!(holds("FIG7.large-penalized-mean-pct", pair.comparison.large_penalized_mean_pct));
+    assert!(holds("TAB2.makespan-change-pct", pair.comparison.makespan_change_pct));
+}
+
+#[test]
+fn mr20_claims() {
+    let pair = mr20(42);
+    assert!(holds("FIG8.small-waiting-change-pct", pair.comparison.small_waiting_change_pct));
+    assert!(holds("FIG9.small-completion-change-pct", pair.comparison.small_completion_change_pct));
+}
+
+#[test]
+fn mixed_sweep_claims() {
+    for (fig, frac) in [(10, 0.10), (11, 0.20), (12, 0.30), (13, 0.40)] {
+        let pair = mixed_setting(frac, 42);
+        assert!(
+            holds(
+                &format!("FIG{fig}.small-completion-change-pct"),
+                pair.comparison.small_completion_change_pct
+            ),
+            "fig{fig}"
+        );
+    }
+}

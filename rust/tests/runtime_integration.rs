@@ -1,0 +1,99 @@
+//! PJRT runtime integration: the AOT Pallas artifact must agree with the
+//! pure-Rust release model, and the taskwork artifact with its CPU
+//! reference.  Skipped (with a loud note) when artifacts are missing.
+
+use dress::estimator::accel::PjrtEstimator;
+use dress::estimator::{eval_curves, PhaseEstimate};
+use dress::runtime::taskwork::reference_unit;
+use dress::runtime::{check_manifest, find_artifacts_dir, Runtime, TaskWork, TIME_GRID};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = find_artifacts_dir();
+    if dir.is_none() {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping PJRT tests");
+    }
+    dir
+}
+
+#[test]
+fn manifest_matches_binary_constants() {
+    let Some(dir) = artifacts() else { return };
+    let text = std::fs::read_to_string(dir.join("manifest.txt")).unwrap();
+    check_manifest(&text).expect("manifest/binary mismatch");
+}
+
+#[test]
+fn pjrt_estimator_matches_rust_model() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let mut est = PjrtEstimator::load(&rt, dir.join("model.hlo.txt").to_str().unwrap())
+        .expect("load estimator artifact");
+
+    let phases: Vec<PhaseEstimate> = (0..37)
+        .map(|i| PhaseEstimate {
+            gamma: 500.0 + i as f64 * 119.0,
+            dps: (i % 7) as f64 * 333.0, // includes dps == 0 step case
+            c: 1.0 + (i % 9) as f64,
+            alpha: 100.0,
+            beta: if i % 5 == 0 { f64::MAX } else { 20_000.0 },
+            cat: (i % 2) as u8,
+        })
+        .collect();
+    let grid: Vec<f64> = (0..TIME_GRID).map(|i| 400.0 + i as f64 * 77.0).collect();
+    let gridf: Vec<f32> = grid.iter().map(|&x| x as f32).collect();
+
+    let (sd_pjrt, ld_pjrt) = est.curves(&phases, &gridf).expect("pjrt exec");
+    let [sd_rust, ld_rust] = eval_curves(&phases, &grid);
+
+    for i in 0..TIME_GRID {
+        assert!(
+            (sd_pjrt[i] as f64 - sd_rust[i]).abs() < 1e-2,
+            "SD[{i}]: pjrt {} vs rust {}",
+            sd_pjrt[i],
+            sd_rust[i]
+        );
+        assert!(
+            (ld_pjrt[i] as f64 - ld_rust[i]).abs() < 1e-2,
+            "LD[{i}]: pjrt {} vs rust {}",
+            ld_pjrt[i],
+            ld_rust[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_estimator_empty_table_is_zero() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut est = PjrtEstimator::load(&rt, dir.join("model.hlo.txt").to_str().unwrap()).unwrap();
+    let grid: Vec<f32> = (0..TIME_GRID).map(|i| i as f32).collect();
+    let (sd, ld) = est.curves(&[], &grid).unwrap();
+    assert!(sd.iter().all(|&x| x == 0.0));
+    assert!(ld.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn taskwork_matches_cpu_reference() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let tw = TaskWork::load(&rt, dir.join("taskwork.hlo.txt").to_str().unwrap()).unwrap();
+    let (a, x) = TaskWork::make_inputs(42);
+    let want = reference_unit(&a, &x);
+    // One unit through PJRT:
+    let got_sum = tw.run_units(42, 1).unwrap();
+    let want_sum: f32 = want.iter().sum();
+    assert!(
+        (got_sum - want_sum).abs() < 1e-3,
+        "pjrt {got_sum} vs reference {want_sum}"
+    );
+}
+
+#[test]
+fn taskwork_deterministic_across_calls() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let tw = TaskWork::load(&rt, dir.join("taskwork.hlo.txt").to_str().unwrap()).unwrap();
+    let a = tw.run_units(7, 2).unwrap();
+    let b = tw.run_units(7, 2).unwrap();
+    assert_eq!(a, b);
+}

@@ -1,0 +1,176 @@
+//! Cross-scheduler integration: the paper's qualitative results must hold
+//! across seeds, and each scheduler must behave according to its policy.
+
+use dress::config::{ExperimentConfig, SchedKind};
+use dress::expt::{mixed_setting, mr20, run_pair, spark20};
+use dress::sim::engine::run_experiment;
+use dress::workload::{generate, WorkloadMix};
+
+#[test]
+fn dress_reduces_small_job_completion_across_seeds() {
+    let mut wins = 0;
+    for seed in [7u64, 42, 1337] {
+        let pair = mixed_setting(0.3, seed);
+        if pair.comparison.small_completion_change_pct < 0.0 {
+            wins += 1;
+        }
+    }
+    assert!(wins >= 2, "DRESS should win on small jobs in most seeds, won {wins}/3");
+}
+
+#[test]
+fn spark20_reproduces_paper_shape() {
+    let pair = spark20(42);
+    let c = &pair.comparison;
+    assert!(c.small_completion_change_pct < 0.0, "small jobs faster: {c:?}");
+    assert!(c.small_waiting_change_pct < 0.0, "small jobs wait less: {c:?}");
+    assert!(c.makespan_change_pct.abs() < 15.0, "makespan stable: {c:?}");
+    assert!(!c.small_ids.is_empty());
+}
+
+#[test]
+fn mr20_reproduces_paper_shape() {
+    let pair = mr20(42);
+    let c = &pair.comparison;
+    assert!(c.small_completion_change_pct < 0.0, "{c:?}");
+    assert!(c.large_penalized_mean_pct >= 0.0, "{c:?}");
+}
+
+#[test]
+fn small_fraction_sweep_always_helps_small_jobs() {
+    for frac in [0.1, 0.2, 0.3, 0.4] {
+        let pair = mixed_setting(frac, 42);
+        assert!(
+            pair.comparison.small_completion_change_pct < 0.0,
+            "frac {frac}: {:?}",
+            pair.comparison
+        );
+    }
+}
+
+#[test]
+fn fair_spreads_waiting_more_evenly_than_fifo() {
+    let cfg = ExperimentConfig::default();
+    let specs = generate(12, WorkloadMix::Mixed, 0.3, 2_000, 9);
+    let mut fifo_cfg = cfg.clone();
+    fifo_cfg.sched.kind = SchedKind::Fifo;
+    let mut fair_cfg = cfg.clone();
+    fair_cfg.sched.kind = SchedKind::Fair;
+    let fifo = run_experiment(&fifo_cfg, specs.clone());
+    let fair = run_experiment(&fair_cfg, specs);
+    let spread = |r: &dress::sim::RunResult| {
+        let w: Vec<f64> = r.jobs.iter().map(|j| j.waiting_ms as f64).collect();
+        dress::util::stats::stddev(&w)
+    };
+    assert!(
+        spread(&fair) <= spread(&fifo) * 1.2,
+        "fair spread {} vs fifo {}",
+        spread(&fair),
+        spread(&fifo)
+    );
+}
+
+#[test]
+fn capacity_two_queue_ablation_unblocks_other_queue() {
+    // With two queues and a router splitting odd/even ids, a blocked head
+    // in one queue must not delay the other queue's jobs.
+    use dress::sched::CapacityScheduler;
+    use dress::sim::Engine;
+    let mut cfg = ExperimentConfig::default();
+    cfg.cluster.nodes = 1;
+    cfg.cluster.slots_per_node = 8;
+    // Demands must fit the 4-container queue guarantee to gang-start.
+    let mut specs = generate(6, WorkloadMix::Mixed, 0.5, 1_000, 5);
+    for s in specs.iter_mut() {
+        s.demand = s.demand.min(3);
+    }
+    fn route(j: u32) -> usize {
+        (j % 2) as usize
+    }
+    let sched = CapacityScheduler::with_queues(true, vec![0.5, 0.5], route);
+    let res = Engine::new(cfg, specs, Box::new(sched)).run();
+    assert_eq!(res.jobs.len(), 6);
+}
+
+#[test]
+fn multi_category_dress_extension_completes_and_helps_small_jobs() {
+    // The paper's §IV.C extension: >2 categories. Three buckets on the
+    // standard congested mix; small jobs must not regress vs Capacity.
+    use dress::sched::dress::MultiDress;
+    use dress::sim::Engine;
+    let cfg = ExperimentConfig::default();
+    let specs = generate(16, WorkloadMix::Mixed, 0.3, 3_000, 13);
+
+    let multi = MultiDress::new(vec![0.1, 0.4], cfg.cluster.total_containers());
+    let multi_run = Engine::new(cfg.clone(), specs.clone(), Box::new(multi)).run();
+
+    let mut cap_cfg = cfg;
+    cap_cfg.sched.kind = SchedKind::Capacity;
+    let cap_run = run_experiment(&cap_cfg, specs);
+
+    let small_wait = |r: &dress::sim::RunResult| {
+        let w: Vec<f64> = r
+            .jobs
+            .iter()
+            .filter(|j| j.demand <= 4)
+            .map(|j| j.waiting_ms as f64)
+            .collect();
+        dress::util::stats::mean(&w)
+    };
+    assert_eq!(multi_run.jobs.len(), 16);
+    assert!(
+        small_wait(&multi_run) <= small_wait(&cap_run) * 1.1,
+        "multi-dress small wait {} vs capacity {}",
+        small_wait(&multi_run),
+        small_wait(&cap_run)
+    );
+}
+
+#[test]
+fn trace_roundtrip_reproduces_run() {
+    // Export a workload as a trace file, reload it, and verify the runs
+    // are identical (trace-driven methodology).
+    let cfg = ExperimentConfig::default();
+    let specs = generate(6, WorkloadMix::Mixed, 0.3, 2_000, 3);
+    let text = dress::workload::to_trace(&specs);
+    let reloaded = dress::workload::from_trace(&text).unwrap();
+    let a = run_experiment(&cfg, specs);
+    let b = run_experiment(&cfg, reloaded);
+    assert_eq!(a.system.makespan_ms, b.system.makespan_ms);
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.completion_ms, y.completion_ms);
+    }
+}
+
+#[test]
+fn run_pair_compares_identical_workloads() {
+    let cfg = ExperimentConfig::default();
+    let specs = generate(8, WorkloadMix::Spark, 0.4, 2_000, 11);
+    let pair = run_pair(&cfg, specs, SchedKind::Capacity);
+    assert_eq!(pair.dress.jobs.len(), pair.baseline.jobs.len());
+    for (d, b) in pair.dress.jobs.iter().zip(&pair.baseline.jobs) {
+        assert_eq!(d.id, b.id);
+        assert_eq!(d.demand, b.demand);
+    }
+    assert_eq!(pair.dress.scheduler, "dress");
+    assert_eq!(pair.baseline.scheduler, "capacity");
+}
+
+#[test]
+fn gang_vs_nongang_ablation() {
+    // Non-gang Capacity should start the head job earlier (partial grants).
+    let specs = generate(10, WorkloadMix::MapReduce, 0.2, 1_000, 21);
+    let mut gang = ExperimentConfig::default();
+    gang.sched.kind = SchedKind::Capacity;
+    gang.sched.gang = true;
+    let mut nogang = gang.clone();
+    nogang.sched.gang = false;
+    let rg = run_experiment(&gang, specs.clone());
+    let rn = run_experiment(&nogang, specs);
+    assert!(
+        rn.system.avg_waiting_ms <= rg.system.avg_waiting_ms * 1.05,
+        "non-gang waiting {} should not exceed gang {}",
+        rn.system.avg_waiting_ms,
+        rg.system.avg_waiting_ms
+    );
+}
