@@ -4,8 +4,8 @@
 use dress::bench_harness::{bench, bench_quick, black_box};
 use dress::config::{ExperimentConfig, SchedKind};
 use dress::sim::engine::run_experiment;
-use dress::sim::{Event, EventQueue};
-use dress::workload::{generate, WorkloadMix};
+use dress::sim::{run_experiment_with, EngineOptions, Event, EventQueue};
+use dress::workload::{congested_burst, generate, WorkloadMix};
 
 fn main() {
     println!("=== perf: DES engine ===");
@@ -37,5 +37,13 @@ fn main() {
     bench_quick("engine/100job-experiment/dress", |i| {
         let specs = generate(100, WorkloadMix::Mixed, 0.3, 2_000, i as u64 + 1);
         black_box(run_experiment(&cfg, specs));
+    });
+
+    // Scale: 1k-job heavy-tailed burst, trace recording off (the indexed
+    // hot path; see benches/perf_throughput.rs for 5k/10k + events/sec).
+    let opts = EngineOptions { record_trace: false, ..Default::default() };
+    bench_quick("engine/1kjob-burst/dress", |i| {
+        let specs = congested_burst(1_000, 50, i as u64 + 1);
+        black_box(run_experiment_with(&cfg, specs, opts));
     });
 }

@@ -31,7 +31,7 @@ fn main() {
                     now: i as u64 * 1_000,
                     free: 12,
                     total: 40,
-                    jobs: jobs.clone(),
+                    jobs: &jobs,
                     transitions: &[],
                 };
                 black_box(s.schedule(&view));

@@ -1,0 +1,96 @@
+//! Perf: engine throughput at scale — events/sec and sched-ticks/sec on
+//! heavy-tailed congested bursts of 1k / 5k / 10k jobs (trace recording
+//! off, so the numbers measure scheduling, not trace-vector growth), plus
+//! the indexed-vs-naive hot-path speedup against the seed engine's
+//! rebuild-every-tick reference path.
+//!
+//! Emits `BENCH_engine.json` in the working directory for trajectory
+//! tracking (schema documented in docs/PERFORMANCE.md):
+//!
+//!     cargo bench --bench perf_throughput
+
+use dress::bench_harness::black_box;
+use dress::config::{ExperimentConfig, SchedKind};
+use dress::sim::{run_experiment_with, EngineOptions, RunResult};
+use dress::workload::congested_burst;
+use std::time::Instant;
+
+const ARRIVAL_MEAN_MS: u64 = 50;
+const SEED: u64 = 0xD8E5;
+
+fn timed(cfg: &ExperimentConfig, n: u32, opts: EngineOptions) -> (RunResult, f64) {
+    let specs = congested_burst(n, ARRIVAL_MEAN_MS, SEED);
+    let t0 = Instant::now();
+    let res = run_experiment_with(cfg, specs, opts);
+    (res, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    println!("=== perf: engine throughput at scale (congested_burst) ===");
+    let opts = EngineOptions { record_trace: false, ..Default::default() };
+    let mut runs_json: Vec<String> = Vec::new();
+
+    for n in [1_000u32, 5_000, 10_000] {
+        for kind in [SchedKind::Capacity, SchedKind::Dress] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.sched.kind = kind;
+            let (res, wall_s) = timed(&cfg, n, opts);
+            let eps = res.events as f64 / wall_s;
+            let tps = res.sched_ticks as f64 / wall_s;
+            println!(
+                "bench engine-throughput/{:<8}/jobs{:<6} {:>12.0} events/s {:>10.0} ticks/s  \
+                 ({} events, {} ticks, {:.2} s wall, makespan {:.0} s)",
+                kind.name(),
+                n,
+                eps,
+                tps,
+                res.events,
+                res.sched_ticks,
+                wall_s,
+                res.system.makespan_ms as f64 / 1000.0
+            );
+            runs_json.push(format!(
+                "    {{\"jobs\": {n}, \"scheduler\": \"{}\", \"events\": {}, \
+                 \"sched_ticks\": {}, \"wall_ms\": {:.3}, \"events_per_sec\": {:.1}, \
+                 \"ticks_per_sec\": {:.1}, \"makespan_ms\": {}}}",
+                kind.name(),
+                res.events,
+                res.sched_ticks,
+                wall_s * 1000.0,
+                eps,
+                tps,
+                res.system.makespan_ms
+            ));
+            black_box(res);
+        }
+    }
+
+    // Indexed engine vs the seed's rebuild-every-tick hot path, identical
+    // 1k-job workload under DRESS (the naive path is O(jobs) per event, so
+    // larger sizes are pointless to wait on).
+    let mut cfg = ExperimentConfig::default();
+    cfg.sched.kind = SchedKind::Dress;
+    let (fast, fast_s) = timed(&cfg, 1_000, opts);
+    let (naive, naive_s) =
+        timed(&cfg, 1_000, EngineOptions { record_trace: false, naive_hot_path: true });
+    assert_eq!(
+        fast.system.makespan_ms, naive.system.makespan_ms,
+        "hot paths must simulate identically"
+    );
+    let speedup = naive_s / fast_s;
+    println!(
+        "bench engine-throughput/indexed-vs-naive/jobs1000: {speedup:.2}x speedup \
+         (indexed {fast_s:.2} s vs naive {naive_s:.2} s, identical makespan)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"perf_throughput\",\n  \"workload\": \"congested_burst(n, \
+         {ARRIVAL_MEAN_MS}, {SEED:#x})\",\n  \"trace_recording\": false,\n  \
+         \"speedup_indexed_vs_naive_1k\": {speedup:.2},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        runs_json.join(",\n")
+    );
+    match std::fs::write("BENCH_engine.json", &json) {
+        Ok(()) => println!("wrote BENCH_engine.json"),
+        Err(e) => eprintln!("could not write BENCH_engine.json: {e}"),
+    }
+}

@@ -17,7 +17,7 @@ use dress::live::{run_live, LiveConfig};
 use dress::util::stats;
 use dress::workload::{generate, WorkloadMix};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dress::util::error::Result<()> {
     let art = dress::runtime::find_artifacts_dir()
         .expect("artifacts/ not found — run `make artifacts` first");
     let taskwork = art.join("taskwork.hlo.txt");

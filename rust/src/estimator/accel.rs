@@ -4,8 +4,9 @@
 //! cross-validated in `rust/tests/runtime_integration.rs`.
 
 use super::release_model::PhaseEstimate;
+use crate::bail;
 use crate::runtime::{Executable, Runtime, NUM_FIELDS, PAD_PHASES, TIME_GRID};
-use anyhow::{bail, Result};
+use crate::util::error::Result;
 
 /// The estimator artifact, loaded and compiled once.
 pub struct PjrtEstimator {

@@ -11,12 +11,14 @@
 //! iteration steps on a 64x64 operator), so congestion, waiting and phase
 //! barriers are all real.
 
+use crate::bail;
 use crate::cluster::{ContainerState, Transition};
 use crate::config::SchedConfig;
 use crate::jobs::{JobId, JobSpec};
 use crate::metrics::JobMetrics;
 use crate::runtime::{Runtime, TaskWork};
 use crate::sched::{ClusterView, JobView, Scheduler};
+use crate::util::error::Result;
 use crate::util::Time;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -116,7 +118,7 @@ pub fn run_live(
     specs: Vec<JobSpec>,
     mut sched: Box<dyn Scheduler>,
     taskwork_path: &str,
-) -> anyhow::Result<LiveReport> {
+) -> Result<LiveReport> {
     let _ = sched_cfg;
     // Sanity-check the artifact on the main thread before spawning workers.
     {
@@ -199,7 +201,7 @@ pub fn run_live(
     loop {
         let wall = epoch.elapsed();
         if wall > cfg.max_wall {
-            anyhow::bail!("live run exceeded {:?}", cfg.max_wall);
+            bail!("live run exceeded {:?}", cfg.max_wall);
         }
         let now = wall.as_millis() as Time;
 
@@ -257,7 +259,7 @@ pub fn run_live(
             now,
             free: total.saturating_sub(occupied_total),
             total,
-            jobs: view_jobs,
+            jobs: &view_jobs,
             transitions: &transitions,
         };
         let allocs = sched.schedule(&view);

@@ -72,6 +72,8 @@ mod tests {
             trace,
             delta_history: vec![(0, 0.1), (1_000, 0.15)],
             failures: 0,
+            events: 0,
+            sched_ticks: 0,
         }
     }
 

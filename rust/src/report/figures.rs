@@ -97,6 +97,8 @@ mod tests {
             trace: TraceRecorder::new(),
             delta_history: vec![],
             failures: 0,
+            events: 0,
+            sched_ticks: 0,
         }
     }
 

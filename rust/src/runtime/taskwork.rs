@@ -2,8 +2,8 @@
 //! a PageRank-style power iteration AOT-lowered from JAX (`taskwork.hlo.txt`).
 
 use super::{Executable, Runtime, TASKWORK_DIM};
+use crate::util::error::Result;
 use crate::util::rng::Rng;
-use anyhow::Result;
 
 /// A loaded task-work executable plus input synthesis.
 pub struct TaskWork {

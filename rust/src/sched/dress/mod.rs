@@ -23,6 +23,7 @@ use crate::config::SchedConfig;
 use crate::estimator::{EstimatorBank, EstimatorParams};
 use crate::jobs::JobId;
 use crate::util::Time;
+use std::collections::HashSet;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DressStats {
@@ -89,18 +90,6 @@ impl DressScheduler {
     fn quotas(&self) -> (u32, u32) {
         let sd = ((self.delta * self.total as f64).round() as u32).clamp(1, self.total - 1);
         (sd, self.total - sd)
-    }
-
-    /// Occupied containers per category.
-    fn occupancy(&self, view: &ClusterView) -> (u32, u32) {
-        let mut occ = (0u32, 0u32);
-        for j in view.jobs.iter().filter(|j| !j.finished) {
-            match self.category(j.id) {
-                Category::Sd => occ.0 += j.occupied,
-                Category::Ld => occ.1 += j.occupied,
-            }
-        }
-        occ
     }
 
     /// FCFS-with-ascending-fallback admission inside one category.
@@ -171,7 +160,7 @@ impl Scheduler for DressScheduler {
 
     fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation> {
         // (1) classify new arrivals against observed A_c.
-        for j in &view.jobs {
+        for j in view.jobs {
             if self.classifier.get(j.id).is_none() {
                 let cat = self.classifier.classify(j.id, j.demand, view.free, view.total);
                 self.estimator.register(j.id, cat.index());
@@ -182,6 +171,31 @@ impl Scheduler for DressScheduler {
         self.estimator.ingest(view.transitions);
         self.estimator.tick(view.now);
 
+        // One fused pass over the view (perf iter 4): per-category
+        // occupancy plus the running / waiting partitions, all in
+        // submission order.  The seed re-derived each of these with its own
+        // full scan (and computed occupancy twice); the view is a snapshot,
+        // so one pass yields identical values.
+        let (mut occ_sd, mut occ_ld) = (0u32, 0u32);
+        let mut running: Vec<&JobView> = Vec::new();
+        let mut sd_wait: Vec<&JobView> = Vec::new();
+        let mut ld_wait: Vec<&JobView> = Vec::new();
+        for j in view.jobs.iter().filter(|j| !j.finished) {
+            let cat = self.category(j.id);
+            match cat {
+                Category::Sd => occ_sd += j.occupied,
+                Category::Ld => occ_ld += j.occupied,
+            }
+            if j.started {
+                running.push(j);
+            } else {
+                match cat {
+                    Category::Sd => sd_wait.push(j),
+                    Category::Ld => ld_wait.push(j),
+                }
+            }
+        }
+
         // (3) Algorithm 3: adjust δ with F(t+1) over the next heartbeat.
         let horizon = view.now + self.hb_ms;
         let (f1, f2) = if self.disable_estimator {
@@ -190,21 +204,14 @@ impl Scheduler for DressScheduler {
             self.estimator.predicted_release_pair(view.now, horizon)
         };
         let (sd_quota, ld_quota) = self.quotas();
-        let (occ_sd, occ_ld) = self.occupancy(view);
         // Free containers attributable per pool: quota minus occupancy,
         // bounded by what is globally free.
         let ac1 = sd_quota.saturating_sub(occ_sd).min(view.free) as f64;
         let ac2 = ld_quota
             .saturating_sub(occ_ld)
             .min(view.free.saturating_sub(ac1 as u32)) as f64;
-        let mut sd_demands: Vec<u32> = Vec::new();
-        let mut ld_demands: Vec<u32> = Vec::new();
-        for j in view.jobs.iter().filter(|j| !j.started && !j.finished) {
-            match self.category(j.id) {
-                Category::Sd => sd_demands.push(j.demand),
-                Category::Ld => ld_demands.push(j.demand),
-            }
-        }
+        let mut sd_demands: Vec<u32> = sd_wait.iter().map(|j| j.demand).collect();
+        let mut ld_demands: Vec<u32> = ld_wait.iter().map(|j| j.demand).collect();
         sd_demands.sort_unstable();
         ld_demands.sort_unstable();
         if !self.freeze_delta {
@@ -223,16 +230,17 @@ impl Scheduler for DressScheduler {
         }
         self.delta_history.push((view.now, self.delta));
 
-        // (4) allocation against the adjusted quotas.
+        // (4) allocation against the adjusted quotas.  Occupancy is
+        // unchanged since the fused pass (the view is immutable), so the
+        // counters are reused instead of rescanned.
         let (sd_quota, ld_quota) = self.quotas();
-        let (occ_sd, occ_ld) = self.occupancy(view);
         let mut sd_free = sd_quota.saturating_sub(occ_sd);
         let mut ld_free = ld_quota.saturating_sub(occ_ld);
         let mut free = view.free;
         let mut allocs: Vec<Allocation> = Vec::new();
 
         // 4a. refill running jobs from their own pools.
-        for j in view.jobs.iter().filter(|j| j.started && !j.finished) {
+        for j in &running {
             if free == 0 {
                 break;
             }
@@ -253,16 +261,6 @@ impl Scheduler for DressScheduler {
         }
 
         // 4b. admit waiting jobs per category.
-        let sd_wait: Vec<&JobView> = view
-            .jobs
-            .iter()
-            .filter(|j| !j.started && !j.finished && self.category(j.id) == Category::Sd)
-            .collect();
-        let ld_wait: Vec<&JobView> = view
-            .jobs
-            .iter()
-            .filter(|j| !j.started && !j.finished && self.category(j.id) == Category::Ld)
-            .collect();
         let mut no_borrow = 0u32;
         self.admit_category(&sd_wait, &mut sd_free, &mut no_borrow, &mut free, &mut allocs);
         // LD may borrow the idle SD reserve when no SD job is waiting for it.
@@ -273,8 +271,12 @@ impl Scheduler for DressScheduler {
         }
 
         // 4c. LD leftovers flow to SD jobs (ascending demand), lines 21-24.
+        // Membership is an O(1) hash probe (the seed's `Vec::contains` made
+        // this pass quadratic in waiting jobs under congestion); each job
+        // appears in `rest` at most once, so no inserts are needed inside
+        // the loop.
         if free > 0 && ld_free > 0 {
-            let mut granted: Vec<JobId> = allocs.iter().map(|a| a.job).collect();
+            let granted: HashSet<JobId> = allocs.iter().map(|a| a.job).collect();
             let mut rest: Vec<&JobView> = sd_wait
                 .iter()
                 .filter(|j| !granted.contains(&j.id))
@@ -292,7 +294,6 @@ impl Scheduler for DressScheduler {
                 sd_free -= from_sd;
                 ld_free -= want - from_sd;
                 free -= want;
-                granted.push(j.id);
                 // δ grows with each migrated reservation (line 23).
                 if !self.freeze_delta {
                     self.delta = (self.delta + want as f64 / self.total as f64)
@@ -350,7 +351,7 @@ mod tests {
                 now: t * 1_000,
                 free: 40,
                 total: 40,
-                jobs: vec![],
+                jobs: &[],
                 transitions: &[],
             };
             s.schedule(&v);

@@ -106,7 +106,7 @@ impl Scheduler for MultiDress {
 
     fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation> {
         let n = self.buckets();
-        for j in &view.jobs {
+        for j in view.jobs {
             self.classify(j.id, j.demand);
         }
 

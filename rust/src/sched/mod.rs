@@ -39,6 +39,11 @@ pub struct JobView {
 }
 
 /// Observable cluster state at a heartbeat.
+///
+/// `jobs` is borrowed from the engine's incrementally-maintained active-job
+/// list (perf iter 4): the engine retires finished jobs on completion and
+/// hands schedulers a slice instead of rebuilding a vector every tick, so
+/// per-tick view cost is O(1) and per-event maintenance is O(1).
 #[derive(Debug, Clone)]
 pub struct ClusterView<'a> {
     pub now: Time,
@@ -46,8 +51,13 @@ pub struct ClusterView<'a> {
     pub free: u32,
     /// Total containers (the paper's `Tot_R`).
     pub total: u32,
-    /// All submitted jobs in submission order (finished ones included).
-    pub jobs: Vec<JobView>,
+    /// Submitted jobs in submission order.  May include already-finished
+    /// entries with `finished = true` — the engine tombstones completed
+    /// jobs until its next compaction, and live mode plus the engine's
+    /// naive reference path expose finished jobs indefinitely — so every
+    /// scheduler MUST keep filtering on `!finished` (see
+    /// tests/golden_determinism.rs for the equivalence contract).
+    pub jobs: &'a [JobView],
     /// Container transitions observed since the previous heartbeat.
     pub transitions: &'a [Transition],
 }
@@ -113,9 +123,16 @@ pub(crate) fn refill_started(view: &ClusterView, mut free: u32) -> (Vec<Allocati
 pub(crate) mod testutil {
     use super::*;
 
-    /// Build a ClusterView for scheduler unit tests.
+    /// Build a ClusterView for scheduler unit tests.  The job list is
+    /// leaked to get a `'static` borrow — fine for test-sized inputs.
     pub fn view(free: u32, total: u32, jobs: Vec<JobView>) -> ClusterView<'static> {
-        ClusterView { now: 0, free, total, jobs, transitions: &[] }
+        ClusterView {
+            now: 0,
+            free,
+            total,
+            jobs: Box::leak(jobs.into_boxed_slice()),
+            transitions: &[],
+        }
     }
 
     pub fn jv(id: JobId, demand: u32, pending: u32) -> JobView {

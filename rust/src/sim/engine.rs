@@ -1,6 +1,26 @@
 //! The discrete-event simulation engine: drives jobs, containers, and the
 //! scheduler through heartbeat rounds, enforcing feasibility and recording
 //! metrics + traces.
+//!
+//! Hot-path design (perf iter 4 — the indexed engine): the seed engine paid
+//! an O(jobs) scan on every event (`job_index`), a second O(jobs) scan after
+//! every event (`all_finished`), and rebuilt the scheduler's `ClusterView`
+//! from scratch every heartbeat, so congested runs degraded quadratically
+//! with job count.  This engine is O(1) per event in the job count:
+//!
+//! * `JobId -> slot` lookups go through a dense index ([`JobIndex`]);
+//! * completion is a counter (`finished_jobs`), not a scan;
+//! * the active-job view (`view_jobs`) is maintained incrementally at the
+//!   event sites that change it (submit / grant / run / finish / fail) and
+//!   handed to the scheduler as a borrowed slice; finished jobs are
+//!   tombstoned on completion and compacted away once they outnumber live
+//!   entries (O(1) amortized).
+//!
+//! `EngineOptions::naive_hot_path` keeps the seed's rebuild-every-tick
+//! reference path alive for equivalence tests (tests/golden_determinism.rs)
+//! and for the speedup measurement in benches/perf_throughput.rs.  Debug
+//! builds additionally cross-check the incremental view against ground
+//! truth every tick.
 
 use super::event::{Event, EventQueue};
 use super::trace::{TaskTrace, TraceRecorder};
@@ -23,6 +43,78 @@ pub struct RunResult {
     pub delta_history: Vec<(Time, f64)>,
     /// Injected container failures survived (task re-attempts).
     pub failures: u32,
+    /// Total simulation events processed (throughput accounting).
+    pub events: u64,
+    /// Scheduler heartbeat rounds executed.
+    pub sched_ticks: u64,
+}
+
+/// Engine knobs beyond the experiment config.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Record per-task traces into `RunResult::trace`.  Throughput benches
+    /// turn this off so 10k-job runs measure scheduling, not trace-vector
+    /// growth.
+    pub record_trace: bool,
+    /// Rebuild the scheduler view from scratch every tick (the seed
+    /// engine's behavior).  Reference path for equivalence tests and
+    /// speedup baselines; simulation results are identical either way.
+    pub naive_hot_path: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions { record_trace: true, naive_hot_path: false }
+    }
+}
+
+/// O(1) `JobId -> slot` lookup.  Job ids in this system are small
+/// sequential integers, so a dense table is the common case; a sorted
+/// pair list covers pathologically sparse id spaces without blowing up
+/// memory.
+#[derive(Debug)]
+enum JobIndex {
+    Dense(Vec<u32>),
+    Sorted(Vec<(u32, u32)>),
+}
+
+impl JobIndex {
+    fn build(specs: &[JobSpec]) -> Self {
+        let max_id = specs.iter().map(|s| s.id).max().unwrap_or(0) as usize;
+        if max_id <= 8 * specs.len() + 1024 {
+            let mut dense = vec![u32::MAX; max_id + 1];
+            for (slot, s) in specs.iter().enumerate() {
+                assert_eq!(dense[s.id as usize], u32::MAX, "duplicate job id {}", s.id);
+                dense[s.id as usize] = slot as u32;
+            }
+            JobIndex::Dense(dense)
+        } else {
+            let mut pairs: Vec<(u32, u32)> = specs
+                .iter()
+                .enumerate()
+                .map(|(slot, s)| (s.id, slot as u32))
+                .collect();
+            pairs.sort_unstable();
+            for w in pairs.windows(2) {
+                assert_ne!(w[0].0, w[1].0, "duplicate job id {}", w[0].0);
+            }
+            JobIndex::Sorted(pairs)
+        }
+    }
+
+    fn lookup(&self, id: u32) -> usize {
+        let slot = match self {
+            JobIndex::Dense(v) => v.get(id as usize).copied().unwrap_or(u32::MAX),
+            JobIndex::Sorted(v) => v
+                .binary_search_by_key(&id, |&(i, _)| i)
+                .map(|i| v[i].1)
+                .unwrap_or(u32::MAX),
+        };
+        if slot == u32::MAX {
+            panic!("unknown job {id}");
+        }
+        slot as usize
+    }
 }
 
 /// The engine. Owns everything for one run.
@@ -43,10 +135,41 @@ pub struct Engine {
     failures: u32,
     /// Safety valve against pathological schedules.
     max_ms: Time,
+    opts: EngineOptions,
+    /// JobId -> slot in `jobs` (replaces the seed's linear scan).
+    index: JobIndex,
+    /// Jobs with `finish` set (replaces the seed's all-jobs scan).
+    finished_jobs: usize,
+    /// Not-yet-Done tasks per slot; 0 == job complete (O(1) per event,
+    /// replaces per-finish `all_done` scans).
+    remaining_tasks: Vec<u32>,
+    /// Incrementally-maintained scheduler view: submitted jobs in
+    /// submission order.  Completion tombstones the entry (`finished =
+    /// true`, exactly what the seed exposed; schedulers filter) and the
+    /// vector is compacted once tombstones outnumber live entries, so
+    /// retirement is O(1) amortized instead of an O(active) `Vec::remove`.
+    view_jobs: Vec<JobView>,
+    /// Slot of each `view_jobs` entry (parallel vector).
+    view_slots: Vec<usize>,
+    /// slot -> position in `view_jobs` (usize::MAX when absent/retired).
+    view_pos: Vec<usize>,
+    /// Tombstoned (finished but not yet compacted) entries in `view_jobs`.
+    view_tombstones: usize,
+    events: u64,
+    ticks: u64,
 }
 
 impl Engine {
     pub fn new(cfg: ExperimentConfig, specs: Vec<JobSpec>, sched: Box<dyn Scheduler>) -> Self {
+        Engine::with_options(cfg, specs, sched, EngineOptions::default())
+    }
+
+    pub fn with_options(
+        cfg: ExperimentConfig,
+        specs: Vec<JobSpec>,
+        sched: Box<dyn Scheduler>,
+        opts: EngineOptions,
+    ) -> Self {
         for s in &specs {
             s.validate().unwrap_or_else(|e| panic!("invalid job spec: {e}"));
         }
@@ -57,6 +180,9 @@ impl Engine {
             queue.push(s.submit_ms, Event::JobSubmit(s.id));
         }
         queue.push(0, Event::SchedTick);
+        let index = JobIndex::build(&specs);
+        let remaining_tasks: Vec<u32> = specs.iter().map(|s| s.total_tasks()).collect();
+        let n = specs.len();
         Engine {
             cfg,
             cluster,
@@ -71,27 +197,112 @@ impl Engine {
             delta_trace: Vec::new(),
             failures: 0,
             max_ms: 40 * 3_600 * 1_000, // 40 simulated hours
+            opts,
+            index,
+            finished_jobs: 0,
+            remaining_tasks,
+            view_jobs: Vec::new(),
+            view_slots: Vec::new(),
+            view_pos: vec![usize::MAX; n],
+            view_tombstones: 0,
+            events: 0,
+            ticks: 0,
         }
     }
 
     fn job_index(&self, id: u32) -> usize {
-        self.jobs
-            .iter()
-            .position(|j| j.id() == id)
-            .unwrap_or_else(|| panic!("unknown job {id}"))
+        self.index.lookup(id)
     }
 
     fn all_finished(&self) -> bool {
-        self.jobs.iter().all(|j| j.finished())
+        self.finished_jobs == self.jobs.len()
     }
 
-    fn build_view<'a>(&self, transitions: &'a [Transition]) -> ClusterView<'a> {
+    // --- incremental view maintenance -----------------------------------
+
+    /// Admit `slot` into the scheduler view at its submission-order
+    /// position.  Submissions arrive in event-time order, which for every
+    /// workload in this repo is also slot order, so the common case is an
+    /// O(1) push; an out-of-order submit time falls back to a sorted
+    /// insert.
+    fn view_insert(&mut self, slot: usize) {
         // A demand above cluster capacity can never gang-start; YARN callers
         // are granted at most the cluster, so the view clamps (prevents
         // head-of-line livelock for oversized requests).
         let total = self.cluster.total();
-        let jobs = self
-            .jobs
+        let j = &self.jobs[slot];
+        let jv = JobView {
+            id: j.id(),
+            demand: j.spec.demand.min(total),
+            submit_ms: j.spec.submit_ms,
+            started: j.started(),
+            finished: false,
+            pending_tasks: j.pending_tasks(),
+            occupied: j.occupied,
+        };
+        if self.view_slots.last().is_none_or(|&s| s < slot) {
+            self.view_pos[slot] = self.view_jobs.len();
+            self.view_jobs.push(jv);
+            self.view_slots.push(slot);
+            return;
+        }
+        let pos = self.view_slots.partition_point(|&s| s < slot);
+        self.view_jobs.insert(pos, jv);
+        self.view_slots.insert(pos, slot);
+        for &s in &self.view_slots[pos + 1..] {
+            if self.view_pos[s] != usize::MAX {
+                self.view_pos[s] += 1;
+            }
+        }
+        self.view_pos[slot] = pos;
+    }
+
+    /// Retire a completed job from the view: tombstone the entry
+    /// (`finished = true` — the seed exposed exactly this and every
+    /// scheduler filters it) and compact once tombstones outnumber live
+    /// entries, so retirement is O(1) amortized.
+    fn view_retire(&mut self, slot: usize) {
+        let pos = self.view_pos[slot];
+        debug_assert_ne!(pos, usize::MAX, "retire of job not in view");
+        self.view_jobs[pos].finished = true;
+        self.view_pos[slot] = usize::MAX;
+        self.view_tombstones += 1;
+        if self.view_tombstones * 2 > self.view_jobs.len() {
+            self.view_compact();
+        }
+    }
+
+    /// Drop tombstoned entries, preserving order (O(len), amortized O(1)
+    /// per retirement by the doubling rule in [`Self::view_retire`]).
+    fn view_compact(&mut self) {
+        let mut w = 0;
+        for r in 0..self.view_jobs.len() {
+            if !self.view_jobs[r].finished {
+                let slot = self.view_slots[r];
+                self.view_jobs[w] = self.view_jobs[r];
+                self.view_slots[w] = slot;
+                self.view_pos[slot] = w;
+                w += 1;
+            }
+        }
+        self.view_jobs.truncate(w);
+        self.view_slots.truncate(w);
+        self.view_tombstones = 0;
+    }
+
+    /// The view entry of an active job (O(1)).
+    fn view_entry(&mut self, slot: usize) -> &mut JobView {
+        let pos = self.view_pos[slot];
+        debug_assert_ne!(pos, usize::MAX, "view entry of inactive job");
+        &mut self.view_jobs[pos]
+    }
+
+    /// Seed-identical per-tick view rebuild: every submitted job, finished
+    /// ones included with `finished = true` (schedulers filter them).
+    /// Reference path for `EngineOptions::naive_hot_path`.
+    fn naive_view_jobs(&self) -> Vec<JobView> {
+        let total = self.cluster.total();
+        self.jobs
             .iter()
             .filter(|j| j.submitted)
             .map(|j| JobView {
@@ -103,15 +314,38 @@ impl Engine {
                 pending_tasks: j.pending_tasks(),
                 occupied: j.occupied,
             })
-            .collect();
-        ClusterView {
-            now: self.now,
-            free: self.cluster.free(),
-            total: self.cluster.total(),
-            jobs,
-            transitions,
-        }
+            .collect()
     }
+
+    /// Debug-build cross-check: the incremental view must equal ground
+    /// truth derived from the job records (runs on every tick under
+    /// `cargo test`, so the whole suite exercises the equivalence).
+    #[cfg(debug_assertions)]
+    fn assert_view_consistent(&self) {
+        let mut live = 0;
+        for (slot, j) in self.jobs.iter().enumerate() {
+            if j.submitted && !j.finished() {
+                let pos = self.view_pos[slot];
+                assert_ne!(pos, usize::MAX, "active job {} missing from view", j.id());
+                let v = &self.view_jobs[pos];
+                assert_eq!(v.id, j.id());
+                assert!(!v.finished, "J{} live entry tombstoned", j.id());
+                assert_eq!(v.started, j.started(), "J{} started drift", j.id());
+                assert_eq!(v.pending_tasks, j.pending_tasks(), "J{} pending drift", j.id());
+                assert_eq!(v.occupied, j.occupied, "J{} occupied drift", j.id());
+                live += 1;
+            } else {
+                assert_eq!(self.view_pos[slot], usize::MAX, "inactive job indexed in view");
+            }
+        }
+        assert_eq!(self.view_jobs.iter().filter(|v| !v.finished).count(), live);
+        assert_eq!(
+            self.view_jobs.iter().filter(|v| v.finished).count(),
+            self.view_tombstones
+        );
+    }
+
+    // --- event handlers --------------------------------------------------
 
     /// Apply one feasible allocation: create containers in the YARN state
     /// machine for up to `n` pending tasks of the job.
@@ -130,6 +364,9 @@ impl Engine {
                 .expect("free checked above");
             self.jobs[ji].tasks[phase][task].state = TaskState::Launching(cid);
             self.jobs[ji].occupied += 1;
+            let v = self.view_entry(ji);
+            v.occupied += 1;
+            v.pending_tasks -= 1;
             self.record_transition(cid, ContainerState::New);
             self.schedule_advance(cid);
         }
@@ -175,6 +412,7 @@ impl Engine {
             if self.jobs[ji].first_start.is_none() {
                 self.jobs[ji].first_start = Some(self.now);
             }
+            self.view_entry(ji).started = true;
             let dur = self.jobs[ji].tasks[phase][task].duration_ms;
             // Failure injection: the container may die mid-task; the task
             // is then re-attempted in a fresh container (YARN AM behavior).
@@ -194,11 +432,10 @@ impl Engine {
         let new_state = self.cluster.container_mut(cid).advance(self.now);
         debug_assert_eq!(new_state, ContainerState::Completed);
         self.record_transition(cid, ContainerState::Completed);
-        let (job, phase, task, granted, run_start) = {
+        let (job, phase, task, run_start) = {
             let c = self.cluster.container(cid);
-            (c.job, c.phase, c.task, c.state_since, c.run_start)
+            (c.job, c.phase, c.task, c.run_start)
         };
-        let _ = granted;
         self.cluster.release(cid);
 
         let ji = self.job_index(job);
@@ -209,17 +446,31 @@ impl Engine {
         debug_assert_eq!(start, run_start);
         self.jobs[ji].tasks[phase][task].state = TaskState::Done { start, finish: self.now };
         self.jobs[ji].occupied -= 1;
-        self.trace.record(TaskTrace {
-            job,
-            phase,
-            task,
-            granted: run_start, // grant time folded into startup elsewhere
-            start,
-            finish: self.now,
-        });
+        self.view_entry(ji).occupied -= 1;
+        if self.opts.record_trace {
+            self.trace.record(TaskTrace {
+                job,
+                phase,
+                task,
+                granted: run_start, // grant time folded into startup elsewhere
+                start,
+                finish: self.now,
+            });
+        }
+        self.remaining_tasks[ji] -= 1;
+        let phase_before = self.jobs[ji].cur_phase;
         self.jobs[ji].advance_phase();
-        if self.jobs[ji].all_done() && self.jobs[ji].finish.is_none() {
-            self.jobs[ji].finish = Some(self.now);
+        if self.remaining_tasks[ji] == 0 {
+            debug_assert!(self.jobs[ji].all_done());
+            if self.jobs[ji].finish.is_none() {
+                self.jobs[ji].finish = Some(self.now);
+                self.finished_jobs += 1;
+                self.view_retire(ji);
+            }
+        } else if self.jobs[ji].cur_phase != phase_before {
+            // Barrier crossed: the newly-runnable phase is all-Pending.
+            let pending = self.jobs[ji].pending_tasks();
+            self.view_entry(ji).pending_tasks = pending;
         }
     }
 
@@ -241,12 +492,33 @@ impl Engine {
         ));
         self.jobs[ji].tasks[phase][task].state = TaskState::Pending;
         self.jobs[ji].occupied -= 1;
+        let v = self.view_entry(ji);
+        v.occupied -= 1;
+        v.pending_tasks += 1;
         self.failures += 1;
     }
 
     fn on_sched_tick(&mut self) {
+        self.ticks += 1;
         let transitions = self.heartbeats.drain();
-        let view = self.build_view(&transitions);
+        #[cfg(debug_assertions)]
+        self.assert_view_consistent();
+        // Indexed path: borrow the maintained active-job slice — O(1).
+        // Naive path: rebuild from scratch like the seed engine did.
+        let scratch: Vec<JobView>;
+        let view_jobs: &[JobView] = if self.opts.naive_hot_path {
+            scratch = self.naive_view_jobs();
+            &scratch
+        } else {
+            &self.view_jobs
+        };
+        let view = ClusterView {
+            now: self.now,
+            free: self.cluster.free(),
+            total: self.cluster.total(),
+            jobs: view_jobs,
+            transitions: &transitions,
+        };
         let allocs = self.sched.schedule(&view);
         // Feasibility enforcement: total grants bounded by free capacity.
         let mut free = self.cluster.free();
@@ -279,10 +551,12 @@ impl Engine {
             if self.now > self.max_ms {
                 panic!("simulation exceeded {} ms — livelocked schedule?", self.max_ms);
             }
+            self.events += 1;
             match ev {
                 Event::JobSubmit(id) => {
                     let ji = self.job_index(id);
                     self.jobs[ji].submitted = true;
+                    self.view_insert(ji);
                 }
                 Event::SchedTick => self.on_sched_tick(),
                 Event::ContainerAdvance(cid) => self.on_container_advance(cid),
@@ -304,6 +578,8 @@ impl Engine {
             trace: self.trace,
             delta_history: self.delta_trace,
             failures: self.failures,
+            events: self.events,
+            sched_ticks: self.ticks,
         }
     }
 }
@@ -314,11 +590,23 @@ pub fn run_experiment(cfg: &ExperimentConfig, specs: Vec<JobSpec>) -> RunResult 
     Engine::new(cfg.clone(), specs, sched).run()
 }
 
+/// `run_experiment` with explicit [`EngineOptions`] (benches use this for
+/// trace opt-out and for the naive-path speedup baseline).
+pub fn run_experiment_with(
+    cfg: &ExperimentConfig,
+    specs: Vec<JobSpec>,
+    opts: EngineOptions,
+) -> RunResult {
+    let sched = crate::sched::build(&cfg.sched, cfg.cluster.total_containers());
+    Engine::with_options(cfg.clone(), specs, sched, opts).run()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::SchedKind;
     use crate::jobs::{PhaseKind, PhaseSpec, Platform};
+    use crate::sched::dress::reserve::{DELTA_MAX, DELTA_MIN};
 
     fn tiny_job(id: u32, submit: Time, demand: u32, durs: &[Time]) -> JobSpec {
         JobSpec {
@@ -347,6 +635,7 @@ mod tests {
         assert!(j.waiting_ms > 0, "startup delays imply nonzero waiting");
         assert!(j.completion_ms >= 5_000);
         assert_eq!(res.trace.tasks.len(), 2);
+        assert!(res.events > 0 && res.sched_ticks > 0, "throughput counters populated");
     }
 
     #[test]
@@ -369,7 +658,12 @@ mod tests {
     fn dress_records_delta_history() {
         let res = run_experiment(&cfg(SchedKind::Dress), vec![tiny_job(1, 0, 2, &[2_000, 2_000])]);
         assert!(!res.delta_history.is_empty());
-        assert!(res.delta_history.iter().all(|&(_, d)| (0.0..=1.0).contains(&d)));
+        // δ is clamped into the documented reserve band (Algorithm 3);
+        // asserted with the same inclusive range everywhere.
+        assert!(res
+            .delta_history
+            .iter()
+            .all(|&(_, d)| (DELTA_MIN..=DELTA_MAX).contains(&d)));
         let fifo = run_experiment(&cfg(SchedKind::Fifo), vec![tiny_job(1, 0, 2, &[2_000, 2_000])]);
         assert!(fifo.delta_history.is_empty());
     }
@@ -447,7 +741,11 @@ mod tests {
         let expected: usize = specs.iter().map(|s| s.total_tasks() as usize).sum();
         let res = run_experiment(&c, specs);
         assert_eq!(res.trace.tasks.len(), expected);
-        assert!(res.delta_history.iter().all(|&(_, d)| (0.0..1.0).contains(&d)));
+        // Same clamp band as dress_records_delta_history (inclusive).
+        assert!(res
+            .delta_history
+            .iter()
+            .all(|&(_, d)| (DELTA_MIN..=DELTA_MAX).contains(&d)));
     }
 
     #[test]
@@ -457,5 +755,69 @@ mod tests {
         let b = run_experiment(&cfg(SchedKind::Capacity), specs);
         assert_eq!(a.system.makespan_ms, b.system.makespan_ms);
         assert_eq!(a.jobs[0].waiting_ms, b.jobs[0].waiting_ms);
+    }
+
+    #[test]
+    fn trace_opt_out_skips_recording_without_changing_results() {
+        let c = cfg(SchedKind::Capacity);
+        let specs = vec![
+            tiny_job(1, 0, 2, &[3_000, 3_000]),
+            tiny_job(2, 1_000, 2, &[2_000, 2_000]),
+        ];
+        let on = run_experiment(&c, specs.clone());
+        let off = run_experiment_with(
+            &c,
+            specs,
+            EngineOptions { record_trace: false, ..Default::default() },
+        );
+        assert_eq!(on.trace.tasks.len(), 4);
+        assert!(off.trace.tasks.is_empty(), "trace opt-out must not record");
+        assert_eq!(on.system.makespan_ms, off.system.makespan_ms);
+        assert_eq!(on.events, off.events, "recording must not alter the simulation");
+    }
+
+    #[test]
+    fn naive_reference_path_matches_indexed_engine() {
+        // Quick in-module check; the full 4-scheduler matrix (plus failure
+        // injection) lives in tests/golden_determinism.rs.
+        let c = cfg(SchedKind::Dress);
+        let specs = crate::workload::generate(
+            6,
+            crate::workload::WorkloadMix::Mixed,
+            0.4,
+            1_500,
+            5,
+        );
+        let fast = run_experiment(&c, specs.clone());
+        let naive = run_experiment_with(
+            &c,
+            specs,
+            EngineOptions { naive_hot_path: true, ..Default::default() },
+        );
+        assert_eq!(fast.system.makespan_ms, naive.system.makespan_ms);
+        assert_eq!(fast.trace.tasks.len(), naive.trace.tasks.len());
+        assert_eq!(fast.delta_history, naive.delta_history);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate job id")]
+    fn duplicate_job_ids_rejected() {
+        let specs = vec![tiny_job(1, 0, 1, &[1_000]), tiny_job(1, 500, 1, &[1_000])];
+        let c = cfg(SchedKind::Fifo);
+        let sched = crate::sched::build(&c.sched, c.cluster.total_containers());
+        Engine::new(c, specs, sched);
+    }
+
+    #[test]
+    fn sparse_job_ids_still_resolve() {
+        // Ids far apart force the sorted fallback index.
+        let specs = vec![
+            tiny_job(7, 0, 1, &[1_000]),
+            tiny_job(1_000_000, 500, 1, &[1_000]),
+            tiny_job(900_000_000, 900, 1, &[1_000]),
+        ];
+        let res = run_experiment(&cfg(SchedKind::Capacity), specs);
+        assert_eq!(res.jobs.len(), 3);
+        assert_eq!(res.trace.tasks.len(), 3);
     }
 }

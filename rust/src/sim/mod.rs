@@ -4,6 +4,6 @@ pub mod engine;
 pub mod event;
 pub mod trace;
 
-pub use engine::{Engine, RunResult};
+pub use engine::{run_experiment, run_experiment_with, Engine, EngineOptions, RunResult};
 pub use event::{Event, EventQueue};
 pub use trace::{TaskTrace, TraceRecorder};

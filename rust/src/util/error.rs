@@ -1,0 +1,128 @@
+//! Minimal error plumbing (offline stand-in for `anyhow`; see DESIGN.md §2
+//! for the no-external-deps rule).  Provides the small surface the runtime
+//! and live layers need: a string-backed [`Error`], a [`Result`] alias, the
+//! [`Context`] extension trait, and `bail!` / `format_err!` macros.
+
+use std::fmt;
+
+/// A string-backed error with an optional context chain.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (rendered `context: cause`).
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error { msg: s.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias (mirror of `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context attachment for `Result` and `Option` (mirror of
+/// `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (mirror of `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Build an [`Error`] from format args (mirror of `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke at {}", 7)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "broke at 7");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e: Result<()> = Err(Error::msg("inner"));
+        let e = e.context("outer");
+        assert_eq!(e.unwrap_err().to_string(), "outer: inner");
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+        let o: Option<u32> = Some(3);
+        assert_eq!(o.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/path")?)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Dense id-indexed map: O(1) lookup for the small sequential u32 ids this
+//! system uses everywhere (job ids, container ids).  Replaces the
+//! `BTreeMap<JobId, _>` on the estimator hot path — iteration stays in
+//! ascending-id order, so float accumulation order (and therefore results)
+//! is bit-identical to the tree it replaced.
+
+/// A map from `u32` ids to `V`, backed by a dense `Vec<Option<V>>`.
+#[derive(Debug, Clone)]
+pub struct IdMap<V> {
+    slots: Vec<Option<V>>,
+    len: usize,
+}
+
+// Manual impl: the derived one would demand `V: Default` it never needs.
+impl<V> Default for IdMap<V> {
+    fn default() -> Self {
+        IdMap::new()
+    }
+}
+
+impl<V> IdMap<V> {
+    pub fn new() -> Self {
+        IdMap { slots: Vec::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.get(id).is_some()
+    }
+
+    pub fn get(&self, id: u32) -> Option<&V> {
+        self.slots.get(id as usize).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, id: u32) -> Option<&mut V> {
+        self.slots.get_mut(id as usize).and_then(|s| s.as_mut())
+    }
+
+    /// Insert, returning the previous value if any.
+    pub fn insert(&mut self, id: u32, v: V) -> Option<V> {
+        let idx = id as usize;
+        if idx >= self.slots.len() {
+            self.slots.resize_with(idx + 1, || None);
+        }
+        let prev = self.slots[idx].replace(v);
+        if prev.is_none() {
+            self.len += 1;
+        }
+        prev
+    }
+
+    /// Get the value for `id`, inserting `make()` first if absent.
+    pub fn get_or_insert_with(&mut self, id: u32, make: impl FnOnce() -> V) -> &mut V {
+        let idx = id as usize;
+        if idx >= self.slots.len() {
+            self.slots.resize_with(idx + 1, || None);
+        }
+        if self.slots[idx].is_none() {
+            self.slots[idx] = Some(make());
+            self.len += 1;
+        }
+        self.slots[idx].as_mut().expect("just filled")
+    }
+
+    /// Values in ascending-id order.
+    pub fn values(&self) -> impl Iterator<Item = &V> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    /// Mutable values in ascending-id order.
+    pub fn values_mut(&mut self) -> impl Iterator<Item = &mut V> {
+        self.slots.iter_mut().filter_map(|s| s.as_mut())
+    }
+
+    /// (id, value) pairs in ascending-id order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &V)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|v| (i as u32, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_len() {
+        let mut m: IdMap<&str> = IdMap::new();
+        assert!(m.is_empty());
+        assert_eq!(m.insert(5, "five"), None);
+        assert_eq!(m.insert(1, "one"), None);
+        assert_eq!(m.insert(5, "FIVE"), Some("five"));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get(5), Some(&"FIVE"));
+        assert_eq!(m.get(2), None);
+        assert!(m.contains(1) && !m.contains(0));
+    }
+
+    #[test]
+    fn iteration_ascending_by_id() {
+        let mut m: IdMap<u32> = IdMap::new();
+        for id in [9u32, 3, 7, 1] {
+            m.insert(id, id * 10);
+        }
+        let ids: Vec<u32> = m.iter().map(|(i, _)| i).collect();
+        assert_eq!(ids, vec![1, 3, 7, 9]);
+        let vals: Vec<u32> = m.values().copied().collect();
+        assert_eq!(vals, vec![10, 30, 70, 90]);
+    }
+
+    #[test]
+    fn get_or_insert_with_inserts_once() {
+        let mut m: IdMap<Vec<u32>> = IdMap::new();
+        m.get_or_insert_with(3, Vec::new).push(1);
+        m.get_or_insert_with(3, || panic!("must not rebuild")).push(2);
+        assert_eq!(m.get(3), Some(&vec![1, 2]));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn values_mut_updates() {
+        let mut m: IdMap<u32> = IdMap::new();
+        m.insert(2, 1);
+        m.insert(4, 2);
+        for v in m.values_mut() {
+            *v += 10;
+        }
+        assert_eq!(m.get(2), Some(&11));
+        assert_eq!(m.get(4), Some(&12));
+    }
+}

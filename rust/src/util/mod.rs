@@ -3,6 +3,8 @@
 //! ASCII plotting for figure reproduction, and a tiny property-test runner.
 
 pub mod ascii_plot;
+pub mod error;
+pub mod idmap;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;

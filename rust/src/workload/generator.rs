@@ -81,6 +81,14 @@ pub fn generate(
         .collect()
 }
 
+/// One heavy-tailed phase for [`congested_burst`].
+fn burst_phase(rng: &mut Rng, kind: PhaseKind, w: u32) -> PhaseSpec {
+    let durs: Vec<Time> = (0..w)
+        .map(|_| (rng.lognormal(2_000.0, 0.8) as Time).max(200))
+        .collect();
+    PhaseSpec::new(kind, &durs)
+}
+
 fn pick_benchmark(rng: &mut Rng, platform: Platform, small: bool) -> Benchmark {
     let pool: Vec<Benchmark> = Benchmark::ALL
         .iter()
@@ -89,6 +97,48 @@ fn pick_benchmark(rng: &mut Rng, platform: Platform, small: bool) -> Benchmark {
         .filter(|b| !small || b.naturally_small() || matches!(b, Benchmark::WordCount | Benchmark::Scan | Benchmark::Join | Benchmark::KMeans | Benchmark::LogisticRegression))
         .collect();
     pool[rng.index(pool.len())]
+}
+
+/// At-scale congestion scenario for throughput benches: `n` jobs (10k+
+/// supported) arriving in a tight burst with heavy-tailed demands and
+/// durations.
+///
+/// * **Demands** are Zipf-distributed over `1..=DEMAND_CAP` (exponent 1.1):
+///   most jobs ask for a handful of containers, a heavy tail asks for a
+///   large cluster fraction — the regime where head-of-line blocking and
+///   the DRESS reserve actually matter (cf. Psychas & Ghaderi, random
+///   resource requirements at deep queues).
+/// * **Durations** are log-normal (median `2 s`, σ = 0.8), long-tailed like
+///   real YARN task runtimes.
+/// * **Arrivals** are exponential with mean `arrival_mean_ms` (Poisson
+///   burst), so queue depth grows far beyond cluster capacity.
+///
+/// Jobs are single-phase (tasks == demand) with a 25% chance of a second,
+/// half-width phase — enough structure to exercise barriers without
+/// inflating event counts. Deterministic per seed.
+pub fn congested_burst(n: u32, arrival_mean_ms: Time, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed ^ 0xB0B5_7000);
+    let mut submit: Time = 0;
+    (0..n)
+        .map(|i| {
+            let demand = rng.zipf(DEMAND_CAP as usize, 1.1) as u32;
+            let width = demand.max(1);
+            let mut phases = vec![burst_phase(&mut rng, PhaseKind::Map, width)];
+            if rng.chance(0.25) {
+                phases.push(burst_phase(&mut rng, PhaseKind::Reduce, (width / 2).max(1)));
+            }
+            let gap = (-rng.next_f64().max(1e-12).ln() * arrival_mean_ms as f64) as Time;
+            submit += gap;
+            JobSpec {
+                id: i + 1,
+                name: format!("burst-{}", i + 1),
+                platform: if i % 2 == 0 { Platform::MapReduce } else { Platform::Spark },
+                submit_ms: submit,
+                demand,
+                phases,
+            }
+        })
+        .collect()
 }
 
 /// The paper's Fig. 1 motivating workload: 6-container cluster, 4 jobs
@@ -160,6 +210,26 @@ mod tests {
         assert_eq!(jobs[0].critical_path_ms(), 10_000);
         assert_eq!(jobs[1].critical_path_ms(), 20_000);
         assert_eq!(jobs[3].submit_ms, 3_000);
+    }
+
+    #[test]
+    fn congested_burst_is_heavy_tailed_and_deterministic() {
+        let jobs = congested_burst(500, 100, 42);
+        assert_eq!(jobs.len(), 500);
+        for j in &jobs {
+            j.validate().unwrap();
+            assert!((1..=DEMAND_CAP).contains(&j.demand));
+        }
+        // Arrivals are a non-decreasing burst.
+        assert!(jobs.windows(2).all(|w| w[0].submit_ms <= w[1].submit_ms));
+        // Zipf head (many small demands) and tail (some near-cap demands).
+        let small = jobs.iter().filter(|j| j.demand <= 3).count();
+        let large = jobs.iter().filter(|j| j.demand >= 15).count();
+        assert!(small * 5 > jobs.len() * 2, "zipf head too thin: {small}/500");
+        assert!(large > 0, "zipf tail missing");
+        // Deterministic per seed, distinct across seeds.
+        assert_eq!(congested_burst(500, 100, 42), jobs);
+        assert_ne!(congested_burst(500, 100, 43), jobs);
     }
 
     #[test]

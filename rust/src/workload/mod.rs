@@ -15,7 +15,7 @@ pub mod skew;
 pub mod tracefile;
 
 pub use dataset::Dataset;
-pub use generator::{generate, motivating_example, WorkloadMix};
+pub use generator::{congested_burst, generate, motivating_example, WorkloadMix};
 pub use hibench::{benchmark_names, build_job, Benchmark};
 pub use skew::zipf_partition_weights;
 pub use tracefile::{from_trace, to_trace};
