@@ -4,22 +4,25 @@
 use dress::bench_harness::{bench, bench_quick, black_box};
 use dress::config::{ExperimentConfig, SchedKind};
 use dress::sim::engine::run_experiment;
-use dress::sim::{run_experiment_with, EngineOptions, Event, EventQueue};
+use dress::sim::{run_experiment_with, EngineOptions, Event, EventQueue, QueueKind};
 use dress::workload::{congested_burst, generate, WorkloadMix};
 
 fn main() {
     println!("=== perf: DES engine ===");
 
-    // Raw event-queue throughput (push+pop of 10k events per iteration).
-    bench("engine/event-queue/10k-push-pop", |i| {
-        let mut q = EventQueue::new();
-        for k in 0..10_000u64 {
-            q.push((i as u64 * 7 + k * 13) % 100_000, Event::SchedTick);
-        }
-        while let Some(e) = q.pop() {
-            black_box(e);
-        }
-    });
+    // Raw event-queue throughput (push+pop of 10k events per iteration),
+    // calendar queue vs the binary-heap reference.
+    for kind in [QueueKind::Calendar, QueueKind::Heap] {
+        bench(&format!("engine/event-queue/10k-push-pop/{kind:?}"), |i| {
+            let mut q = EventQueue::with_kind(kind);
+            for k in 0..10_000u64 {
+                q.push((i as u64 * 7 + k * 13) % 100_000, Event::SchedTick);
+            }
+            while let Some(e) = q.pop() {
+                black_box(e);
+            }
+        });
+    }
 
     // Full 20-job experiments per scheduler.
     for kind in [SchedKind::Capacity, SchedKind::Dress] {
@@ -39,9 +42,9 @@ fn main() {
         black_box(run_experiment(&cfg, specs));
     });
 
-    // Scale: 1k-job heavy-tailed burst, trace recording off (the indexed
-    // hot path; see benches/perf_throughput.rs for 5k/10k + events/sec).
-    let opts = EngineOptions { record_trace: false, ..Default::default() };
+    // Scale: 1k-job heavy-tailed burst, counting sinks (the indexed hot
+    // path; see benches/perf_throughput.rs for 5k/10k + events/sec).
+    let opts = EngineOptions::throughput();
     bench_quick("engine/1kjob-burst/dress", |i| {
         let specs = congested_burst(1_000, 50, i as u64 + 1);
         black_box(run_experiment_with(&cfg, specs, opts));

@@ -1,0 +1,113 @@
+//! Perf: parallel sweep scaling — runs/sec for a fixed seed × scheduler ×
+//! congested-burst grid as the worker count grows from 1 to all cores.
+//!
+//! Each cell is an independent deterministic simulation, so the sweep
+//! should scale ~linearly until memory bandwidth saturates; the bench
+//! asserts the parallel results stay bit-identical to the serial pass
+//! while it measures.  Updates the `sweep` section of `BENCH_engine.json`
+//! (the rest of the file is owned by `perf_throughput`):
+//!
+//!     cargo bench --bench perf_sweep
+
+use dress::bench_harness::update_bench_json;
+use dress::config::{ExperimentConfig, SchedKind};
+use dress::expt::sweep::{run_sweep, SweepGrid, SweepWorkload};
+use dress::sim::EngineOptions;
+use dress::util::json::Json;
+use std::time::Instant;
+
+const JOBS_PER_RUN: u32 = 500;
+const N_SEEDS: u64 = 8;
+
+/// The checked-in trajectory file at the repo root — anchored via the
+/// manifest dir because `cargo bench` runs with cwd = package root
+/// (`rust/`), not the workspace root.
+const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+
+fn main() {
+    println!("=== perf: parallel sweep scaling (seed x scheduler grid) ===");
+    let grid = SweepGrid {
+        base: ExperimentConfig::default(),
+        seeds: (0..N_SEEDS).map(|i| 0xD8E5 + i).collect(),
+        scheds: vec![SchedKind::Capacity, SchedKind::Dress],
+        workloads: vec![SweepWorkload::CongestedBurst {
+            n: JOBS_PER_RUN,
+            arrival_mean_ms: 50,
+        }],
+        opts: EngineOptions::throughput(),
+    };
+    let total = grid.len();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // Serial reference pass: both the jobs=1 scaling point and the
+    // fingerprint the parallel passes must reproduce bit-identically.
+    let t0 = Instant::now();
+    let reference = run_sweep(&grid, 1);
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    let mut worker_counts = vec![1usize];
+    let mut w = 2;
+    while w < cores {
+        worker_counts.push(w);
+        w *= 2;
+    }
+    if cores > 1 {
+        worker_counts.push(cores);
+    }
+
+    let mut rows = Vec::new();
+    for &workers in &worker_counts {
+        let (wall_s, results) = if workers == 1 {
+            (serial_s, None)
+        } else {
+            let t0 = Instant::now();
+            let r = run_sweep(&grid, workers);
+            (t0.elapsed().as_secs_f64(), Some(r))
+        };
+        if let Some(results) = results {
+            for (a, b) in reference.iter().zip(&results) {
+                assert_eq!(a.system.makespan_ms, b.system.makespan_ms, "parallel sweep diverged");
+                assert_eq!(a.events, b.events, "parallel sweep diverged");
+                assert_eq!(a.delta_history, b.delta_history, "parallel sweep diverged");
+                assert_eq!(a.transitions_recorded, b.transitions_recorded, "parallel sweep diverged");
+                let (wa, wb): (u64, u64) = (
+                    a.jobs.iter().map(|j| j.waiting_ms).sum(),
+                    b.jobs.iter().map(|j| j.waiting_ms).sum(),
+                );
+                assert_eq!(wa, wb, "parallel sweep diverged");
+            }
+        }
+        let rps = total as f64 / wall_s;
+        println!(
+            "bench sweep-scaling/workers{:<3} {:>7.2} runs/s  ({} runs, {:.2} s wall, {:.2}x vs serial)",
+            workers,
+            rps,
+            total,
+            wall_s,
+            serial_s / wall_s
+        );
+        let mut row = Json::obj();
+        row.set("workers", Json::Num(workers as f64));
+        row.set("runs", Json::Num(total as f64));
+        row.set("wall_ms", Json::Num((wall_s * 100_000.0).round() / 100.0));
+        row.set("runs_per_sec", Json::Num((rps * 100.0).round() / 100.0));
+        row.set("speedup_vs_serial", Json::Num(((serial_s / wall_s) * 100.0).round() / 100.0));
+        rows.push(row);
+    }
+
+    let mut sweep = Json::obj();
+    sweep.set("bench", Json::Str("perf_sweep".into()));
+    sweep.set(
+        "grid",
+        Json::Str(format!(
+            "{N_SEEDS} seeds x [capacity, dress] x congested_burst({JOBS_PER_RUN}, 50)"
+        )),
+    );
+    sweep.set("cores", Json::Num(cores as f64));
+    sweep.set("trace_sink", Json::Str("counting".into()));
+    sweep.set("runs", Json::Arr(rows));
+    match update_bench_json(BENCH_JSON, "sweep", sweep) {
+        Ok(()) => println!("updated {BENCH_JSON} [sweep]"),
+        Err(e) => eprintln!("could not update {BENCH_JSON}: {e}"),
+    }
+}

@@ -1,22 +1,29 @@
 //! Perf: engine throughput at scale — events/sec and sched-ticks/sec on
-//! heavy-tailed congested bursts of 1k / 5k / 10k jobs (trace recording
-//! off, so the numbers measure scheduling, not trace-vector growth), plus
-//! the indexed-vs-naive hot-path speedup against the seed engine's
-//! rebuild-every-tick reference path.
+//! heavy-tailed congested bursts of 1k / 5k / 10k jobs (counting trace
+//! sinks, so the numbers measure scheduling, not trace-vector growth —
+//! and memory stays O(active jobs)), plus the indexed-vs-naive hot-path
+//! speedup against the seed engine's rebuild-every-tick reference path.
 //!
-//! Emits `BENCH_engine.json` in the working directory for trajectory
-//! tracking (schema documented in docs/PERFORMANCE.md):
+//! Updates `BENCH_engine.json` in the working directory for trajectory
+//! tracking (schema documented in docs/PERFORMANCE.md), preserving the
+//! `sweep` section owned by `perf_sweep`:
 //!
 //!     cargo bench --bench perf_throughput
 
 use dress::bench_harness::black_box;
 use dress::config::{ExperimentConfig, SchedKind};
 use dress::sim::{run_experiment_with, EngineOptions, RunResult};
+use dress::util::json::Json;
 use dress::workload::congested_burst;
 use std::time::Instant;
 
 const ARRIVAL_MEAN_MS: u64 = 50;
 const SEED: u64 = 0xD8E5;
+
+/// The checked-in trajectory file at the repo root — anchored via the
+/// manifest dir because `cargo bench` runs with cwd = package root
+/// (`rust/`), not the workspace root.
+const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
 
 fn timed(cfg: &ExperimentConfig, n: u32, opts: EngineOptions) -> (RunResult, f64) {
     let specs = congested_burst(n, ARRIVAL_MEAN_MS, SEED);
@@ -27,8 +34,8 @@ fn timed(cfg: &ExperimentConfig, n: u32, opts: EngineOptions) -> (RunResult, f64
 
 fn main() {
     println!("=== perf: engine throughput at scale (congested_burst) ===");
-    let opts = EngineOptions { record_trace: false, ..Default::default() };
-    let mut runs_json: Vec<String> = Vec::new();
+    let opts = EngineOptions::throughput();
+    let mut runs = Vec::new();
 
     for n in [1_000u32, 5_000, 10_000] {
         for kind in [SchedKind::Capacity, SchedKind::Dress] {
@@ -49,18 +56,20 @@ fn main() {
                 wall_s,
                 res.system.makespan_ms as f64 / 1000.0
             );
-            runs_json.push(format!(
-                "    {{\"jobs\": {n}, \"scheduler\": \"{}\", \"events\": {}, \
-                 \"sched_ticks\": {}, \"wall_ms\": {:.3}, \"events_per_sec\": {:.1}, \
-                 \"ticks_per_sec\": {:.1}, \"makespan_ms\": {}}}",
-                kind.name(),
-                res.events,
-                res.sched_ticks,
-                wall_s * 1000.0,
-                eps,
-                tps,
-                res.system.makespan_ms
-            ));
+            let mut row = Json::obj();
+            row.set("jobs", Json::Num(n as f64));
+            row.set("scheduler", Json::Str(kind.name().to_string()));
+            row.set("events", Json::Num(res.events as f64));
+            row.set("sched_ticks", Json::Num(res.sched_ticks as f64));
+            row.set("wall_ms", Json::Num((wall_s * 100_000.0).round() / 100.0));
+            row.set("events_per_sec", Json::Num(eps.round()));
+            row.set("ticks_per_sec", Json::Num(tps.round()));
+            row.set("makespan_ms", Json::Num(res.system.makespan_ms as f64));
+            row.set(
+                "retained_transitions",
+                Json::Num(res.retained_transitions as f64),
+            );
+            runs.push(row);
             black_box(res);
         }
     }
@@ -72,7 +81,7 @@ fn main() {
     cfg.sched.kind = SchedKind::Dress;
     let (fast, fast_s) = timed(&cfg, 1_000, opts);
     let (naive, naive_s) =
-        timed(&cfg, 1_000, EngineOptions { record_trace: false, naive_hot_path: true });
+        timed(&cfg, 1_000, EngineOptions { naive_hot_path: true, ..EngineOptions::throughput() });
     assert_eq!(
         fast.system.makespan_ms, naive.system.makespan_ms,
         "hot paths must simulate identically"
@@ -83,14 +92,29 @@ fn main() {
          (indexed {fast_s:.2} s vs naive {naive_s:.2} s, identical makespan)"
     );
 
-    let json = format!(
-        "{{\n  \"bench\": \"perf_throughput\",\n  \"workload\": \"congested_burst(n, \
-         {ARRIVAL_MEAN_MS}, {SEED:#x})\",\n  \"trace_recording\": false,\n  \
-         \"speedup_indexed_vs_naive_1k\": {speedup:.2},\n  \"runs\": [\n{}\n  ]\n}}\n",
-        runs_json.join(",\n")
+    // Read-modify-write in place: set our own keys on the parsed root so
+    // every foreign section (`sweep` today, anything a future bench adds)
+    // survives, then drop the placeholder `status` marker — this file now
+    // carries measured numbers.
+    let mut root = std::fs::read_to_string(BENCH_JSON)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .filter(|v| matches!(v, Json::Obj(_)))
+        .unwrap_or_else(Json::obj);
+    root.remove("status");
+    root.set("bench", Json::Str("perf_throughput".into()));
+    root.set(
+        "workload",
+        Json::Str(format!("congested_burst(n, {ARRIVAL_MEAN_MS}, {SEED:#x})")),
     );
-    match std::fs::write("BENCH_engine.json", &json) {
-        Ok(()) => println!("wrote BENCH_engine.json"),
-        Err(e) => eprintln!("could not write BENCH_engine.json: {e}"),
+    root.set("trace_sink", Json::Str("counting".into()));
+    root.set(
+        "speedup_indexed_vs_naive_1k",
+        Json::Num((speedup * 100.0).round() / 100.0),
+    );
+    root.set("runs", Json::Arr(runs));
+    match std::fs::write(BENCH_JSON, root.render()) {
+        Ok(()) => println!("wrote {BENCH_JSON}"),
+        Err(e) => eprintln!("could not write {BENCH_JSON}: {e}"),
     }
 }

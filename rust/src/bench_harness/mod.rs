@@ -89,6 +89,28 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Read-modify-write one section of a bench trajectory JSON file
+/// (`BENCH_engine.json`): parse the existing file if present, replace
+/// `section` with `value`, keep every other key (so `perf_throughput` and
+/// `perf_sweep` can own different sections of the same file), and write it
+/// back.  A missing or unparseable file starts from an empty object.
+pub fn update_bench_json(
+    path: &str,
+    section: &str,
+    value: crate::util::json::Json,
+) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .unwrap_or_else(Json::obj);
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::obj();
+    }
+    root.set(section, value);
+    std::fs::write(path, root.render())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

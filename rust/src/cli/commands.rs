@@ -22,7 +22,16 @@ USAGE:
               [--seed S]
   dress trace <wordcount|pagerank-mr|pagerank-spark> [--seed S]
   dress live  [--jobs N] [--workers W] [--sched dress|capacity] [--seed S]
+  dress sweep [--seeds K] [--seed S] [--jobs W | --workers W] [--njobs N]
+              [--platform mapreduce|spark|mixed|burst] [--small-frac F]
+              [--paper]
   dress bench
+
+`sweep` fans a K-seed x 4-scheduler grid across W worker threads
+(--jobs 0 = all cores; results are bit-identical to --jobs 1) with
+counting trace sinks (O(active) memory).  --paper instead sweeps the
+DRESS-vs-Capacity pairs behind Figs 7/9 + Table II and reports each
+claim as a mean over seeds.
 ";
 
 /// Entry point used by `main.rs`; returns a process exit code.
@@ -44,6 +53,7 @@ fn dispatch(args: &Args) -> Result<(), String> {
         Some("repro") => cmd_repro(args),
         Some("trace") => cmd_trace(args),
         Some("live") => cmd_live(args),
+        Some("sweep") => cmd_sweep(args),
         Some("bench") => cmd_bench(),
         Some("help") | None => {
             println!("{USAGE}");
@@ -370,6 +380,124 @@ fn cmd_live(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Parallel seed × scheduler sweep (`expt::sweep`): the many-fast-runs
+/// entry point.  `--jobs` here is *worker threads* (0 = all cores);
+/// `--njobs` sizes the workload of each run.
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    use crate::expt::sweep::{self, SweepGrid, SweepWorkload};
+    use crate::sim::EngineOptions;
+
+    let n_seeds = args.flag_u64("seeds", 3)? as usize;
+    if n_seeds == 0 {
+        return Err("--seeds must be >= 1".into());
+    }
+    let base_seed = args.flag_u64("seed", 42)?;
+    // `--jobs` is worker threads here (per the sweep contract); `--workers`
+    // is accepted as an unambiguous alias since `run`/`compare` use
+    // `--jobs` for workload size.
+    let workers = args.flag_u64("workers", args.flag_u64("jobs", 0)?)? as usize;
+    let njobs = args.flag_u64("njobs", 20)? as u32;
+    let small_frac = args.flag_f64("small-frac", 0.3)?;
+    let platform = args.flag_str("platform", "mixed");
+    let seeds: Vec<u64> = (0..n_seeds as u64).map(|i| base_seed + i).collect();
+
+    if args.switch("paper") {
+        // Multi-seed claim check: Figs 7/9 + Table II pairs, mean over seeds.
+        let workloads = vec![
+            SweepWorkload::Generate {
+                n: 20,
+                mix: WorkloadMix::Spark,
+                small_frac: 0.30,
+                arrival_ms: 5_000,
+            },
+            SweepWorkload::Generate {
+                n: 20,
+                mix: WorkloadMix::MapReduce,
+                small_frac: 0.30,
+                arrival_ms: 5_000,
+            },
+        ];
+        let t0 = std::time::Instant::now();
+        let pairs = crate::expt::sweep::run_pair_sweep(
+            &ExperimentConfig::default(),
+            workloads,
+            seeds.clone(),
+            SchedKind::Capacity,
+            workers,
+        );
+        let wall = t0.elapsed();
+        let (spark, mr) = pairs.split_at(n_seeds);
+        let mean = |v: Vec<f64>| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        let measured = [
+            mean(spark.iter().map(|p| p.comparison.small_completion_change_pct).collect()),
+            mean(mr.iter().map(|p| p.comparison.small_completion_change_pct).collect()),
+            mean(spark.iter().map(|p| p.comparison.makespan_change_pct).collect()),
+        ];
+        println!(
+            "paper-claim sweep: {} seeds x 2 workloads x 2 schedulers, {} runs in {:.2?} \
+             ({} workers)\nmean over seeds {:?}:",
+            n_seeds,
+            4 * n_seeds,
+            wall,
+            sweep::effective_jobs(workers),
+            seeds
+        );
+        let mut all_ok = true;
+        for (claim, m) in crate::expt::sweep_claims().iter().zip(measured) {
+            let (row, ok) = comparison_row(claim, m);
+            println!("{row}");
+            all_ok &= ok;
+        }
+        println!(
+            "sweep shape: {}",
+            if all_ok { "ALL CLAIMS HOLD" } else { "SOME CLAIMS MISSED" }
+        );
+        return Ok(());
+    }
+
+    let mix = WorkloadMix::parse(platform);
+    let workload = match (platform, mix) {
+        ("burst", _) => SweepWorkload::CongestedBurst { n: njobs, arrival_mean_ms: 100 },
+        (_, Ok(mix)) => SweepWorkload::Generate { n: njobs, mix, small_frac, arrival_ms: 5_000 },
+        (_, Err(e)) => return Err(e),
+    };
+    let grid = SweepGrid {
+        base: ExperimentConfig::default(),
+        seeds,
+        scheds: vec![SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress],
+        workloads: vec![workload],
+        // Counting sinks: a sweep is a throughput tool, keep memory flat.
+        opts: EngineOptions::throughput(),
+    };
+    let total = grid.len();
+    let t0 = std::time::Instant::now();
+    let results = sweep::run_sweep(&grid, workers);
+    let wall = t0.elapsed();
+    let header = ["Seed", "Scheduler", "Makespan (s)", "Avg wait (s)", "Events"];
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let p = grid.point(i);
+            vec![
+                grid.seeds[p.seed].to_string(),
+                r.scheduler.clone(),
+                format!("{:.1}", r.system.makespan_ms as f64 / 1000.0),
+                format!("{:.1}", r.system.avg_waiting_ms / 1000.0),
+                r.events.to_string(),
+            ]
+        })
+        .collect();
+    println!("{}", report::render_table(&header, &rows));
+    println!(
+        "{total} runs in {:.2?} ({} workers): {:.1} runs/s",
+        wall,
+        sweep::effective_jobs(workers),
+        total as f64 / wall.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}
+
 fn cmd_bench() -> Result<(), String> {
     println!("use `cargo bench` for the full harness; quick in-process sample:");
     let cfg = ExperimentConfig::default();
@@ -414,6 +542,17 @@ mod tests {
     #[test]
     fn compare_runs_all_schedulers() {
         assert_eq!(run_cli(&args("compare --jobs 4 --seed 3")), 0);
+    }
+
+    #[test]
+    fn sweep_runs_parallel_grid() {
+        // Tiny grid, 2 workers; cells must land in grid order regardless.
+        assert_eq!(run_cli(&args("sweep --seeds 2 --njobs 3 --jobs 2 --seed 5")), 0);
+    }
+
+    #[test]
+    fn sweep_rejects_zero_seeds() {
+        assert_eq!(run_cli(&args("sweep --seeds 0")), 1);
     }
 
     #[test]

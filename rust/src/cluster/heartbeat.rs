@@ -5,9 +5,17 @@
 //! message" (paper §V.A.1) carries starting delays too.  Schedulers and the
 //! estimator may observe the cluster ONLY through these records — never by
 //! peeking at simulator ground truth.
+//!
+//! The per-tick batch buffer (`buf`) is always kept — schedulers consume
+//! it — but the *history* retention is pluggable ([`SinkKind`]): the seed
+//! unconditionally double-pushed every transition into a full-run history
+//! vector, which dominated memory on 100k-job runs even when the engine's
+//! trace opt-out was set.  Counting retention keeps a count only; ring
+//! retention keeps the last `cap` transitions.
 
 use super::container::{ContainerId, ContainerState};
 use crate::jobs::JobId;
+use crate::sim::SinkKind;
 use crate::util::Time;
 
 /// One observed container state transition.
@@ -21,24 +29,62 @@ pub struct Transition {
     pub to: ContainerState,
 }
 
+/// History retention state, mirroring [`SinkKind`].
+#[derive(Debug, Clone)]
+enum History {
+    Full(Vec<Transition>),
+    Counting,
+    Ring { cap: usize, buf: Vec<Transition>, head: usize },
+}
+
 /// Accumulates transitions between scheduler ticks and hands them out as
 /// heartbeat batches.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct HeartbeatLog {
     buf: Vec<Transition>,
-    /// Complete history (for trace export / figures).
-    history: Vec<Transition>,
+    history: History,
+    /// Total transitions observed (independent of retention).
+    recorded: u64,
+}
+
+impl Default for HeartbeatLog {
+    fn default() -> Self {
+        HeartbeatLog::new()
+    }
 }
 
 impl HeartbeatLog {
+    /// Full-history log (figures / validation — the seed behavior).
     pub fn new() -> Self {
-        Self::default()
+        HeartbeatLog::with_retention(SinkKind::Full)
+    }
+
+    /// Log with an explicit history retention policy.
+    pub fn with_retention(kind: SinkKind) -> Self {
+        let history = match kind {
+            SinkKind::Full => History::Full(Vec::new()),
+            SinkKind::Counting | SinkKind::Ring(0) => History::Counting,
+            SinkKind::Ring(cap) => History::Ring { cap, buf: Vec::with_capacity(cap), head: 0 },
+        };
+        HeartbeatLog { buf: Vec::new(), history, recorded: 0 }
     }
 
     /// Record a transition (called by the engine when containers move).
     pub fn record(&mut self, t: Transition) {
         self.buf.push(t);
-        self.history.push(t);
+        self.recorded += 1;
+        match &mut self.history {
+            History::Full(h) => h.push(t),
+            History::Counting => {}
+            History::Ring { cap, buf, head } => {
+                if buf.len() < *cap {
+                    buf.push(t);
+                } else {
+                    buf[*head] = t;
+                    *head = (*head + 1) % *cap;
+                }
+            }
+        }
     }
 
     /// Drain everything observed since the previous heartbeat.
@@ -46,9 +92,25 @@ impl HeartbeatLog {
         std::mem::take(&mut self.buf)
     }
 
-    /// Full history (figures / validation only).
+    /// Retained history (figures / validation only).  Complete and
+    /// chronological under full retention; empty under counting; the last
+    /// `cap` transitions (in rotation order) under ring retention.
     pub fn history(&self) -> &[Transition] {
-        &self.history
+        match &self.history {
+            History::Full(h) => h,
+            History::Counting => &[],
+            History::Ring { buf, .. } => buf,
+        }
+    }
+
+    /// Transitions currently retained in memory.
+    pub fn history_len(&self) -> usize {
+        self.history().len()
+    }
+
+    /// Total transitions observed over the run, independent of retention.
+    pub fn recorded(&self) -> u64 {
+        self.recorded
     }
 
     /// Pending (not yet drained) count.
@@ -78,5 +140,34 @@ mod tests {
         log.record(tr(30, 2, ContainerState::Running));
         assert_eq!(log.drain().len(), 1);
         assert_eq!(log.history().len(), 3);
+        assert_eq!(log.recorded(), 3);
+    }
+
+    #[test]
+    fn counting_retention_drops_history_but_counts() {
+        let mut log = HeartbeatLog::with_retention(SinkKind::Counting);
+        for i in 0..100 {
+            log.record(tr(i, i as u32, ContainerState::Running));
+        }
+        // Batches still flow to the scheduler...
+        assert_eq!(log.pending(), 100);
+        assert_eq!(log.drain().len(), 100);
+        // ...but nothing is retained beyond the count.
+        assert_eq!(log.history_len(), 0);
+        assert_eq!(log.recorded(), 100);
+    }
+
+    #[test]
+    fn ring_retention_bounds_history() {
+        let mut log = HeartbeatLog::with_retention(SinkKind::Ring(8));
+        for i in 0..50 {
+            log.record(tr(i, i as u32, ContainerState::Running));
+        }
+        assert_eq!(log.history_len(), 8);
+        assert_eq!(log.recorded(), 50);
+        // The ring holds exactly the last 8 transitions (any rotation).
+        let mut times: Vec<Time> = log.history().iter().map(|t| t.time).collect();
+        times.sort_unstable();
+        assert_eq!(times, (42..50).collect::<Vec<_>>());
     }
 }

@@ -4,9 +4,11 @@
 
 pub mod experiments;
 pub mod paper;
+pub mod sweep;
 
 pub use experiments::{
     ablation, fig1, mixed_setting, mr20, run_pair, spark20, trace_benchmark, DressVariant,
     ExperimentPair, Fig1Result,
 };
-pub use paper::paper_claims;
+pub use paper::{paper_claims, sweep_claims};
+pub use sweep::{run_pair_sweep, run_sweep, SweepGrid, SweepPoint, SweepWorkload};

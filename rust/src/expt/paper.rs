@@ -33,6 +33,21 @@ pub fn paper_claims() -> Vec<PaperClaim> {
     ]
 }
 
+/// The claims a multi-seed sweep evaluates as mean-over-seeds: the
+/// small-job completion headlines (Figs 7/9) and the makespan-stability
+/// row of Table II.  `expt::sweep::run_pair_sweep` produces one
+/// [`crate::expt::ExperimentPair`] per seed; the CLI `sweep --paper`
+/// path averages each claim's measured value across seeds and prints
+/// paper-vs-measured rows — single-seed repro numbers are noisy, and the
+/// paper itself reports means over repeated runs.
+pub fn sweep_claims() -> Vec<PaperClaim> {
+    vec![
+        claim("FIG7.small-completion-change-pct"),
+        claim("FIG9.small-completion-change-pct"),
+        claim("TAB2.makespan-change-pct"),
+    ]
+}
+
 /// Look up one claim by id.
 pub fn claim(id: &str) -> PaperClaim {
     paper_claims()
@@ -56,6 +71,16 @@ mod tests {
     #[test]
     fn claim_lookup() {
         assert_eq!(claim("FIG1.fcfs-makespan-s").paper, 40.0);
+    }
+
+    #[test]
+    fn sweep_claims_are_known_claims() {
+        let ids: Vec<String> = paper_claims().iter().map(|c| c.id.clone()).collect();
+        let sc = sweep_claims();
+        assert_eq!(sc.len(), 3);
+        for c in sc {
+            assert!(ids.contains(&c.id), "sweep claim {} not in registry", c.id);
+        }
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Parallel sweep executor: fan independent `run_experiment` invocations —
+//! a seed × scheduler × workload grid — across all cores.
+//!
+//! DRESS's headline numbers come from sweeping seeds, schedulers and
+//! workload mixes over congested clusters; each cell is an independent,
+//! deterministic simulation, so the sweep is embarrassingly parallel.
+//! The executor is zero-dependency: `std::thread::scope` workers steal
+//! cells from a shared atomic cursor, and results land **by grid index,
+//! not completion order**, so `run_sweep(grid, n)` is bit-identical to
+//! `run_sweep(grid, 1)` for every `n` (enforced by
+//! `tests/golden_determinism.rs`).
+//!
+//! Grid index layout (workload-major, seed-minor):
+//!
+//! ```text
+//! idx = (workload_i * scheds.len() + sched_i) * seeds.len() + seed_i
+//! ```
+
+use crate::config::{ExperimentConfig, SchedKind};
+use crate::jobs::JobSpec;
+use crate::metrics::compare_small_large;
+use crate::sim::{run_experiment_with, EngineOptions, RunResult};
+use crate::util::Time;
+use crate::workload::{congested_burst, generate, WorkloadMix};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::experiments::{ExperimentPair, SMALL_DEMAND};
+
+/// One workload axis point; `build(seed)` materializes the spec list.
+#[derive(Debug, Clone)]
+pub enum SweepWorkload {
+    /// `workload::generate` — the paper's HiBench mixes.
+    Generate { n: u32, mix: WorkloadMix, small_frac: f64, arrival_ms: Time },
+    /// `workload::congested_burst` — heavy-tailed demands, Poisson burst.
+    CongestedBurst { n: u32, arrival_mean_ms: u64 },
+}
+
+impl SweepWorkload {
+    pub fn build(&self, seed: u64) -> Vec<JobSpec> {
+        match *self {
+            SweepWorkload::Generate { n, mix, small_frac, arrival_ms } => {
+                generate(n, mix, small_frac, arrival_ms, seed)
+            }
+            SweepWorkload::CongestedBurst { n, arrival_mean_ms } => {
+                congested_burst(n, arrival_mean_ms, seed)
+            }
+        }
+    }
+}
+
+/// The full sweep specification: every (workload, sched, seed) cell runs
+/// `base` with that scheduler and that seed.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub base: ExperimentConfig,
+    pub seeds: Vec<u64>,
+    pub scheds: Vec<SchedKind>,
+    pub workloads: Vec<SweepWorkload>,
+    pub opts: EngineOptions,
+}
+
+/// Decomposed grid coordinates of one cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SweepPoint {
+    pub workload: usize,
+    pub sched: usize,
+    pub seed: usize,
+}
+
+impl SweepGrid {
+    /// Total number of cells.
+    pub fn len(&self) -> usize {
+        self.workloads.len() * self.scheds.len() * self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Coordinates of cell `idx` (workload-major, seed-minor).
+    pub fn point(&self, idx: usize) -> SweepPoint {
+        assert!(idx < self.len(), "cell {idx} out of range {}", self.len());
+        let per_workload = self.scheds.len() * self.seeds.len();
+        SweepPoint {
+            workload: idx / per_workload,
+            sched: (idx % per_workload) / self.seeds.len(),
+            seed: idx % self.seeds.len(),
+        }
+    }
+
+    /// Inverse of [`Self::point`].
+    pub fn index(&self, p: SweepPoint) -> usize {
+        (p.workload * self.scheds.len() + p.sched) * self.seeds.len() + p.seed
+    }
+
+    /// Materialize the config + specs for one cell.
+    pub fn cell(&self, idx: usize) -> (ExperimentConfig, Vec<JobSpec>) {
+        let p = self.point(idx);
+        let seed = self.seeds[p.seed];
+        let mut cfg = self.base.clone();
+        cfg.sched.kind = self.scheds[p.sched];
+        cfg.workload.seed = seed;
+        (cfg, self.workloads[p.workload].build(seed))
+    }
+
+    fn run_cell(&self, idx: usize) -> RunResult {
+        let (cfg, specs) = self.cell(idx);
+        run_experiment_with(&cfg, specs, self.opts)
+    }
+}
+
+/// Resolve a `--jobs` value: 0 means "all cores".
+pub fn effective_jobs(jobs: usize) -> usize {
+    if jobs > 0 {
+        jobs
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Run every cell of `grid` on up to `jobs` worker threads (0 = all
+/// cores).  Returns one `RunResult` per cell **in grid-index order** —
+/// identical output for any `jobs`, since cells are independent and each
+/// run is deterministic.
+pub fn run_sweep(grid: &SweepGrid, jobs: usize) -> Vec<RunResult> {
+    let total = grid.len();
+    let jobs = effective_jobs(jobs).min(total.max(1));
+    if jobs <= 1 {
+        return (0..total).map(|i| grid.run_cell(i)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, RunResult)>> = Mutex::new(Vec::with_capacity(total));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                // Work stealing over the shared cursor: threads that draw
+                // short cells immediately pull the next index, so the
+                // sweep load-balances without a scheduler.
+                let mut local: Vec<(usize, RunResult)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    local.push((i, grid.run_cell(i)));
+                }
+                done.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut tagged = done.into_inner().unwrap();
+    // Deterministic ordering: land results by grid index, not completion
+    // order.  Indices are unique, so the sort is a total order.
+    tagged.sort_by_key(|&(i, _)| i);
+    assert_eq!(tagged.len(), total, "sweep lost cells");
+    tagged.into_iter().map(|(_, r)| r).collect()
+}
+
+/// DRESS-vs-baseline pair sweep: for each seed × workload, run DRESS and
+/// `baseline` on the identical spec list (two grid cells) and fold the
+/// results into [`ExperimentPair`]s, in (workload-major, seed-minor)
+/// order.  This is the multi-seed version of `expt::run_pair`, fanned
+/// across cores.
+pub fn run_pair_sweep(
+    base: &ExperimentConfig,
+    workloads: Vec<SweepWorkload>,
+    seeds: Vec<u64>,
+    baseline: SchedKind,
+    jobs: usize,
+) -> Vec<ExperimentPair> {
+    let grid = SweepGrid {
+        base: base.clone(),
+        seeds,
+        scheds: vec![SchedKind::Dress, baseline],
+        workloads,
+        opts: EngineOptions::default(),
+    };
+    let results = run_sweep(&grid, jobs);
+    let mut pairs = Vec::with_capacity(grid.workloads.len() * grid.seeds.len());
+    // Option slots let each cell be moved out by grid index exactly once.
+    let mut slots: Vec<Option<RunResult>> = results.into_iter().map(Some).collect();
+    for w in 0..grid.workloads.len() {
+        for s in 0..grid.seeds.len() {
+            let di = grid.index(SweepPoint { workload: w, sched: 0, seed: s });
+            let bi = grid.index(SweepPoint { workload: w, sched: 1, seed: s });
+            let dress = slots[di].take().expect("dress cell");
+            let baseline = slots[bi].take().expect("baseline cell");
+            let comparison = compare_small_large(
+                &dress.jobs,
+                &baseline.jobs,
+                dress.system.makespan_ms,
+                baseline.system.makespan_ms,
+                SMALL_DEMAND,
+            );
+            pairs.push(ExperimentPair { dress, baseline, comparison });
+        }
+    }
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_grid(seeds: Vec<u64>) -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.cluster.nodes = 2;
+        base.cluster.slots_per_node = 4;
+        SweepGrid {
+            base,
+            seeds,
+            scheds: vec![SchedKind::Fifo, SchedKind::Dress],
+            workloads: vec![SweepWorkload::Generate {
+                n: 4,
+                mix: WorkloadMix::Mixed,
+                small_frac: 0.3,
+                arrival_ms: 2_000,
+            }],
+            opts: EngineOptions::default(),
+        }
+    }
+
+    #[test]
+    fn point_index_roundtrip() {
+        let g = tiny_grid(vec![1, 2, 3]);
+        assert_eq!(g.len(), 6);
+        for i in 0..g.len() {
+            assert_eq!(g.index(g.point(i)), i);
+        }
+        // Layout: seed-minor within scheduler.
+        assert_eq!(g.point(0), SweepPoint { workload: 0, sched: 0, seed: 0 });
+        assert_eq!(g.point(2), SweepPoint { workload: 0, sched: 0, seed: 2 });
+        assert_eq!(g.point(3), SweepPoint { workload: 0, sched: 1, seed: 0 });
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        let g = tiny_grid(vec![5, 6]);
+        let serial = run_sweep(&g, 1);
+        let parallel = run_sweep(&g, 4);
+        assert_eq!(serial.len(), 4);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.scheduler, b.scheduler);
+            assert_eq!(a.system.makespan_ms, b.system.makespan_ms);
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.trace.tasks, b.trace.tasks);
+            assert_eq!(a.delta_history, b.delta_history);
+        }
+    }
+
+    #[test]
+    fn sweep_cells_see_their_own_seed_and_scheduler() {
+        let g = tiny_grid(vec![11, 12]);
+        let res = run_sweep(&g, 2);
+        assert_eq!(res[0].scheduler, "fifo");
+        assert_eq!(res[2].scheduler, "dress");
+        // Different seeds produce different runs within a scheduler row.
+        assert_ne!(
+            (res[2].system.makespan_ms, res[2].events),
+            (res[3].system.makespan_ms, res[3].events),
+            "seed axis inert"
+        );
+    }
+
+    #[test]
+    fn pair_sweep_builds_comparisons_per_seed() {
+        let base = ExperimentConfig::default();
+        let pairs = run_pair_sweep(
+            &base,
+            vec![SweepWorkload::Generate {
+                n: 6,
+                mix: WorkloadMix::Mixed,
+                small_frac: 0.3,
+                arrival_ms: 2_000,
+            }],
+            vec![3, 4],
+            SchedKind::Capacity,
+            0,
+        );
+        assert_eq!(pairs.len(), 2);
+        for p in &pairs {
+            assert_eq!(p.dress.scheduler, "dress");
+            assert_eq!(p.baseline.scheduler, "capacity");
+            assert_eq!(p.dress.jobs.len(), p.baseline.jobs.len());
+        }
+    }
+
+    #[test]
+    fn effective_jobs_resolves_zero_to_cores() {
+        assert!(effective_jobs(0) >= 1);
+        assert_eq!(effective_jobs(3), 3);
+    }
+}

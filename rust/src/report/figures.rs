@@ -99,6 +99,9 @@ mod tests {
             failures: 0,
             events: 0,
             sched_ticks: 0,
+            tasks_recorded: 0,
+            transitions_recorded: 0,
+            retained_transitions: 0,
         }
     }
 

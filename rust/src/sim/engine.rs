@@ -22,7 +22,8 @@
 //! builds additionally cross-check the incremental view against ground
 //! truth every tick.
 
-use super::event::{Event, EventQueue};
+use super::event::{Event, EventQueue, QueueKind};
+use super::sink::{SinkKind, TraceSink};
 use super::trace::{TaskTrace, TraceRecorder};
 use crate::cluster::{Cluster, ContainerState, HeartbeatLog, Transition};
 use crate::config::ExperimentConfig;
@@ -47,15 +48,27 @@ pub struct RunResult {
     pub events: u64,
     /// Scheduler heartbeat rounds executed.
     pub sched_ticks: u64,
+    /// Task traces observed, independent of sink retention (`trace.tasks`
+    /// holds only what the sink kept).
+    pub tasks_recorded: u64,
+    /// Heartbeat transitions observed over the run.
+    pub transitions_recorded: u64,
+    /// Heartbeat transitions still held in memory at run end — bounded by
+    /// the sink policy (0 for counting, `cap` for ring, all for full).
+    pub retained_transitions: usize,
 }
 
 /// Engine knobs beyond the experiment config.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineOptions {
-    /// Record per-task traces into `RunResult::trace`.  Throughput benches
-    /// turn this off so 10k-job runs measure scheduling, not trace-vector
-    /// growth.
-    pub record_trace: bool,
+    /// Retention policy for task traces *and* heartbeat history (see
+    /// [`SinkKind`]).  Full for figures/tests; counting for throughput
+    /// runs so 100k-job sweeps hold O(active) memory instead of
+    /// O(total transitions); ring to keep just the tail of a big run.
+    pub trace: SinkKind,
+    /// Event-queue implementation ([`QueueKind`]).  Calendar by default;
+    /// the binary-heap reference kind exists for equivalence tests.
+    pub queue: QueueKind,
     /// Rebuild the scheduler view from scratch every tick (the seed
     /// engine's behavior).  Reference path for equivalence tests and
     /// speedup baselines; simulation results are identical either way.
@@ -64,7 +77,19 @@ pub struct EngineOptions {
 
 impl Default for EngineOptions {
     fn default() -> Self {
-        EngineOptions { record_trace: true, naive_hot_path: false }
+        EngineOptions {
+            trace: SinkKind::Full,
+            queue: QueueKind::Calendar,
+            naive_hot_path: false,
+        }
+    }
+}
+
+impl EngineOptions {
+    /// The configuration throughput benches and big parallel sweeps use:
+    /// counting sinks (O(active) memory), default queue and hot path.
+    pub fn throughput() -> Self {
+        EngineOptions { trace: SinkKind::Counting, ..Default::default() }
     }
 }
 
@@ -127,7 +152,7 @@ pub struct Engine {
     sched: Box<dyn Scheduler>,
     rng: Rng,
     now: Time,
-    trace: TraceRecorder,
+    sink: TraceSink,
     /// Utilization samples (time, used containers) at each tick.
     pub util: Vec<(Time, u32)>,
     /// δ samples per tick (schedulers without a reserve ratio yield none).
@@ -175,7 +200,7 @@ impl Engine {
         }
         let cluster = Cluster::new(cfg.cluster.nodes, cfg.cluster.slots_per_node);
         let seed = cfg.workload.seed ^ 0xD8E5_5000;
-        let mut queue = EventQueue::new();
+        let mut queue = EventQueue::with_kind(opts.queue);
         for s in &specs {
             queue.push(s.submit_ms, Event::JobSubmit(s.id));
         }
@@ -188,11 +213,11 @@ impl Engine {
             cluster,
             jobs: specs.into_iter().map(JobRt::new).collect(),
             queue,
-            heartbeats: HeartbeatLog::new(),
+            heartbeats: HeartbeatLog::with_retention(opts.trace),
             sched,
             rng: Rng::new(seed),
             now: 0,
-            trace: TraceRecorder::new(),
+            sink: TraceSink::new(opts.trace),
             util: Vec::new(),
             delta_trace: Vec::new(),
             failures: 0,
@@ -447,16 +472,14 @@ impl Engine {
         self.jobs[ji].tasks[phase][task].state = TaskState::Done { start, finish: self.now };
         self.jobs[ji].occupied -= 1;
         self.view_entry(ji).occupied -= 1;
-        if self.opts.record_trace {
-            self.trace.record(TaskTrace {
-                job,
-                phase,
-                task,
-                granted: run_start, // grant time folded into startup elsewhere
-                start,
-                finish: self.now,
-            });
-        }
+        self.sink.record(TaskTrace {
+            job,
+            phase,
+            task,
+            granted: run_start, // grant time folded into startup elsewhere
+            start,
+            finish: self.now,
+        });
         self.remaining_tasks[ji] -= 1;
         let phase_before = self.jobs[ji].cur_phase;
         self.jobs[ji].advance_phase();
@@ -571,15 +594,19 @@ impl Engine {
 
         let jobs: Vec<JobMetrics> = self.jobs.iter().map(JobMetrics::of).collect();
         let system = SystemMetrics::of(&jobs, &self.util, self.cluster.total());
+        let (trace, tasks_recorded) = self.sink.finish();
         RunResult {
             scheduler: self.sched.name().to_string(),
             jobs,
             system,
-            trace: self.trace,
+            trace,
             delta_history: self.delta_trace,
             failures: self.failures,
             events: self.events,
             sched_ticks: self.ticks,
+            tasks_recorded,
+            transitions_recorded: self.heartbeats.recorded(),
+            retained_transitions: self.heartbeats.history_len(),
         }
     }
 }
@@ -758,7 +785,7 @@ mod tests {
     }
 
     #[test]
-    fn trace_opt_out_skips_recording_without_changing_results() {
+    fn counting_sink_skips_retention_without_changing_results() {
         let c = cfg(SchedKind::Capacity);
         let specs = vec![
             tiny_job(1, 0, 2, &[3_000, 3_000]),
@@ -768,12 +795,79 @@ mod tests {
         let off = run_experiment_with(
             &c,
             specs,
-            EngineOptions { record_trace: false, ..Default::default() },
+            EngineOptions { trace: SinkKind::Counting, ..Default::default() },
         );
         assert_eq!(on.trace.tasks.len(), 4);
-        assert!(off.trace.tasks.is_empty(), "trace opt-out must not record");
+        assert!(off.trace.tasks.is_empty(), "counting sink must not retain traces");
+        assert_eq!(off.tasks_recorded, 4, "counting sink still counts every task");
         assert_eq!(on.system.makespan_ms, off.system.makespan_ms);
         assert_eq!(on.events, off.events, "recording must not alter the simulation");
+    }
+
+    #[test]
+    fn counting_sink_bounds_heartbeat_and_trace_memory() {
+        // The at-scale memory guarantee, shrunk to test size: a congested
+        // burst under the counting sink retains NO history while observing
+        // exactly what the full sink observes.
+        let mut c = ExperimentConfig::default();
+        c.sched.kind = SchedKind::Dress;
+        let specs = crate::workload::congested_burst(150, 100, 0xBEEF);
+        let full = run_experiment_with(&c, specs.clone(), EngineOptions::default());
+        let lean = run_experiment_with(&c, specs, EngineOptions::throughput());
+        // Identical simulation...
+        assert_eq!(full.system.makespan_ms, lean.system.makespan_ms);
+        assert_eq!(full.events, lean.events);
+        // ...identical observation counts...
+        assert_eq!(full.tasks_recorded, lean.tasks_recorded);
+        assert_eq!(full.transitions_recorded, lean.transitions_recorded);
+        assert!(lean.transitions_recorded > 0);
+        // ...but O(1) retention instead of O(total transitions).
+        assert_eq!(lean.retained_transitions, 0, "counting sink retained history");
+        assert!(lean.trace.tasks.is_empty());
+        assert_eq!(full.retained_transitions as u64, full.transitions_recorded);
+    }
+
+    #[test]
+    fn ring_sink_retains_bounded_tail() {
+        let mut c = ExperimentConfig::default();
+        c.sched.kind = SchedKind::Capacity;
+        let specs = crate::workload::congested_burst(60, 100, 0xCAFE);
+        let cap = 16;
+        let res = run_experiment_with(
+            &c,
+            specs,
+            EngineOptions { trace: SinkKind::Ring(cap), ..Default::default() },
+        );
+        assert!(res.tasks_recorded as usize > cap, "workload too small to exercise ring");
+        assert_eq!(res.trace.tasks.len(), cap);
+        assert!(res.retained_transitions <= cap);
+        // The ring keeps the *latest* records: the last retained trace is
+        // the final task completion of the whole run.
+        let max_finish = res.trace.tasks.iter().map(|t| t.finish).max().unwrap();
+        let first_submit = res.jobs.iter().map(|j| j.submit_ms).min().unwrap();
+        assert_eq!(max_finish, first_submit + res.system.makespan_ms);
+    }
+
+    #[test]
+    fn heap_queue_kind_matches_calendar_default() {
+        let c = cfg(SchedKind::Dress);
+        let specs = crate::workload::generate(
+            6,
+            crate::workload::WorkloadMix::Mixed,
+            0.4,
+            1_500,
+            9,
+        );
+        let cal = run_experiment(&c, specs.clone());
+        let heap = run_experiment_with(
+            &c,
+            specs,
+            EngineOptions { queue: QueueKind::Heap, ..Default::default() },
+        );
+        assert_eq!(cal.system.makespan_ms, heap.system.makespan_ms);
+        assert_eq!(cal.events, heap.events);
+        assert_eq!(cal.delta_history, heap.delta_history);
+        assert_eq!(cal.trace.tasks, heap.trace.tasks);
     }
 
     #[test]

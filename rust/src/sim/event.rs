@@ -1,4 +1,21 @@
 //! Event types and the time-ordered event queue.
+//!
+//! Two interchangeable queue implementations sit behind the same
+//! [`EventQueue`] API, both honoring the exact (time, insertion-sequence)
+//! total order that keeps runs deterministic:
+//!
+//! * [`QueueKind::Calendar`] (default) — a calendar queue (bucketed timing
+//!   wheel, Brown 1988): events hash into `time / width mod nbuckets`
+//!   buckets; pop scans the current "day" window, so in the steady state
+//!   push and pop are O(1) amortized instead of the binary heap's
+//!   O(log n).  The bucket count doubles/halves with occupancy and the
+//!   bucket width re-derives from the live event-time span on every
+//!   resize (see docs/PERFORMANCE.md for sizing notes).
+//! * [`QueueKind::Heap`] — the seed's `BinaryHeap` ordered by
+//!   `(time, seq)`.  Kept as the reference model: the golden-determinism
+//!   suite runs whole experiments on both kinds and requires bit-identical
+//!   results, and `tests/properties.rs` drives random interleaved
+//!   push/pop sequences against it.
 
 use crate::cluster::ContainerId;
 use crate::jobs::JobId;
@@ -22,12 +39,14 @@ pub enum Event {
     TaskFail(ContainerId),
 }
 
-/// Min-heap event queue ordered by (time, insertion sequence) — FIFO among
-/// simultaneous events, which keeps runs deterministic.
-#[derive(Debug, Default)]
-pub struct EventQueue {
-    heap: BinaryHeap<Reverse<(Time, u64, EventEntry)>>,
-    seq: u64,
+/// Which queue implementation an [`EventQueue`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueKind {
+    /// Bucketed calendar queue — O(1) amortized push/pop.
+    #[default]
+    Calendar,
+    /// `BinaryHeap` reference implementation — O(log n) per op.
+    Heap,
 }
 
 /// Wrapper to give Event a total order for the heap (by discriminant; the
@@ -57,32 +76,217 @@ impl EventEntry {
     }
 }
 
+/// Calendar queue: `nbuckets` (a power of two) buckets of `width` ms each.
+/// An event at time `t` lives in bucket `(t / width) % nbuckets`; buckets
+/// are kept sorted descending by `(time, seq)` so the bucket minimum is a
+/// O(1) `Vec::pop` from the tail.  Pop walks day windows from the current
+/// bucket; a full empty year falls back to a direct min search (rare — it
+/// only happens when the queue is sparse relative to its span).
+#[derive(Debug)]
+struct CalendarQueue {
+    /// Each bucket sorted descending by (time, seq): last element = min.
+    buckets: Vec<Vec<(Time, u64, EventEntry)>>,
+    /// `buckets.len() - 1`; bucket count is always a power of two.
+    mask: usize,
+    /// Bucket width in ms (>= 1).
+    width: Time,
+    /// Current bucket index.
+    cur: usize,
+    /// Exclusive upper bound of the current bucket's day window.
+    cur_top: Time,
+    len: usize,
+}
+
+const INIT_BUCKETS: usize = 16;
+const INIT_WIDTH: Time = 1024;
+const MAX_BUCKETS: usize = 1 << 20;
+
+impl CalendarQueue {
+    fn new() -> Self {
+        CalendarQueue {
+            buckets: (0..INIT_BUCKETS).map(|_| Vec::new()).collect(),
+            mask: INIT_BUCKETS - 1,
+            width: INIT_WIDTH,
+            cur: 0,
+            cur_top: INIT_WIDTH,
+            len: 0,
+        }
+    }
+
+    /// Point the scan cursor at the day containing `time`.
+    fn seek(&mut self, time: Time) {
+        let day = time / self.width;
+        self.cur = (day as usize) & self.mask;
+        self.cur_top = (day + 1) * self.width;
+    }
+
+    fn push(&mut self, time: Time, seq: u64, entry: EventEntry) {
+        // The scan invariant is "no event earlier than the current day".
+        // An empty queue re-anchors for free; a push into the past (legal
+        // for generic callers, never done by the engine) rewinds the
+        // cursor so the new event cannot be skipped.
+        if self.len == 0 || time < self.cur_top.saturating_sub(self.width) {
+            self.seek(time);
+        }
+        let idx = ((time / self.width) as usize) & self.mask;
+        let bucket = &mut self.buckets[idx];
+        // Descending order; seq is unique so there are no equal keys.
+        let pos = bucket.partition_point(|&(t, s, _)| (t, s) > (time, seq));
+        bucket.insert(pos, (time, seq, entry));
+        self.len += 1;
+        if self.len > 4 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS {
+            self.resize(self.buckets.len() * 2);
+        }
+    }
+
+    fn pop(&mut self) -> Option<(Time, u64, EventEntry)> {
+        if self.len == 0 {
+            return None;
+        }
+        // Scan at most one full year of day windows from the cursor.
+        for _ in 0..=self.mask {
+            let bucket = &mut self.buckets[self.cur];
+            if let Some(&(t, _, _)) = bucket.last() {
+                if t < self.cur_top {
+                    let item = bucket.pop().unwrap();
+                    self.len -= 1;
+                    self.maybe_shrink();
+                    return Some(item);
+                }
+            }
+            self.cur = (self.cur + 1) & self.mask;
+            self.cur_top += self.width;
+        }
+        // Sparse queue: nothing within a year of the cursor.  Jump straight
+        // to the globally minimal event (each bucket's min is its tail).
+        let (t, _, _) = self.min_entry().expect("len > 0");
+        self.seek(t);
+        let item = self.buckets[self.cur].pop().unwrap();
+        self.len -= 1;
+        self.maybe_shrink();
+        Some(item)
+    }
+
+    /// Globally minimal (time, seq) entry, by scanning bucket tails.
+    fn min_entry(&self) -> Option<(Time, u64, EventEntry)> {
+        self.buckets
+            .iter()
+            .filter_map(|b| b.last().copied())
+            .min_by_key(|&(t, s, _)| (t, s))
+    }
+
+    fn maybe_shrink(&mut self) {
+        if self.buckets.len() > INIT_BUCKETS && self.len < self.buckets.len() / 4 {
+            self.resize(self.buckets.len() / 2);
+        }
+    }
+
+    /// Rebuild with `nbuckets` buckets and a width re-derived from the live
+    /// event span (≈3 events per bucket on average — Brown's rule of thumb
+    /// applied to the span/len mean gap instead of a sampled gap).
+    fn resize(&mut self, nbuckets: usize) {
+        let all: Vec<(Time, u64, EventEntry)> =
+            self.buckets.iter_mut().flat_map(std::mem::take).collect();
+        debug_assert_eq!(all.len(), self.len);
+        if let (Some(min_t), Some(max_t)) = (
+            all.iter().map(|&(t, _, _)| t).min(),
+            all.iter().map(|&(t, _, _)| t).max(),
+        ) {
+            let span = max_t - min_t;
+            self.width = (span * 3 / all.len().max(1) as u64).max(1);
+        }
+        self.buckets = (0..nbuckets).map(|_| Vec::new()).collect();
+        self.mask = nbuckets - 1;
+        for &(t, s, e) in &all {
+            let idx = ((t / self.width) as usize) & self.mask;
+            self.buckets[idx].push((t, s, e));
+        }
+        for bucket in self.buckets.iter_mut() {
+            bucket.sort_unstable_by(|x, y| (y.0, y.1).cmp(&(x.0, x.1)));
+        }
+        // Re-anchor the cursor at the earliest live event.
+        if let Some((t, _, _)) = self.min_entry() {
+            self.seek(t);
+        }
+    }
+}
+
+/// Min-queue of events ordered by (time, insertion sequence) — FIFO among
+/// simultaneous events, which keeps runs deterministic.  Backed by a
+/// calendar queue by default; see [`QueueKind`].
+#[derive(Debug)]
+pub struct EventQueue {
+    imp: Imp,
+    seq: u64,
+}
+
+#[derive(Debug)]
+enum Imp {
+    Calendar(CalendarQueue),
+    Heap(BinaryHeap<Reverse<(Time, u64, EventEntry)>>),
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue::with_kind(QueueKind::default())
+    }
+}
+
 impl EventQueue {
     pub fn new() -> Self {
         Self::default()
     }
 
+    pub fn with_kind(kind: QueueKind) -> Self {
+        let imp = match kind {
+            QueueKind::Calendar => Imp::Calendar(CalendarQueue::new()),
+            QueueKind::Heap => Imp::Heap(BinaryHeap::new()),
+        };
+        EventQueue { imp, seq: 0 }
+    }
+
+    pub fn kind(&self) -> QueueKind {
+        match self.imp {
+            Imp::Calendar(_) => QueueKind::Calendar,
+            Imp::Heap(_) => QueueKind::Heap,
+        }
+    }
+
     pub fn push(&mut self, time: Time, event: Event) {
-        self.heap.push(Reverse((time, self.seq, EventEntry::pack(event))));
+        let entry = EventEntry::pack(event);
+        match &mut self.imp {
+            Imp::Calendar(c) => c.push(time, self.seq, entry),
+            Imp::Heap(h) => h.push(Reverse((time, self.seq, entry))),
+        }
         self.seq += 1;
     }
 
     pub fn pop(&mut self) -> Option<(Time, Event)> {
-        self.heap
-            .pop()
-            .map(|Reverse((t, _, e))| (t, e.unpack()))
+        match &mut self.imp {
+            Imp::Calendar(c) => c.pop().map(|(t, _, e)| (t, e.unpack())),
+            Imp::Heap(h) => h.pop().map(|Reverse((t, _, e))| (t, e.unpack())),
+        }
     }
 
+    /// Time of the next event.  O(1) on the heap kind; O(nbuckets) on the
+    /// calendar kind (a full bucket-tail scan) — fine for occasional
+    /// inspection, but don't call it per event on hot paths.
     pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|Reverse((t, _, _))| *t)
+        match &self.imp {
+            Imp::Calendar(c) => c.min_entry().map(|(t, _, _)| t),
+            Imp::Heap(h) => h.peek().map(|Reverse((t, _, _))| *t),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.imp {
+            Imp::Calendar(c) => c.len,
+            Imp::Heap(h) => h.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 }
 
@@ -90,27 +294,33 @@ impl EventQueue {
 mod tests {
     use super::*;
 
+    const BOTH: [QueueKind; 2] = [QueueKind::Calendar, QueueKind::Heap];
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(30, Event::SchedTick);
-        q.push(10, Event::JobSubmit(1));
-        q.push(20, Event::TaskFinish(5));
-        assert_eq!(q.pop(), Some((10, Event::JobSubmit(1))));
-        assert_eq!(q.pop(), Some((20, Event::TaskFinish(5))));
-        assert_eq!(q.pop(), Some((30, Event::SchedTick)));
-        assert_eq!(q.pop(), None);
+        for kind in BOTH {
+            let mut q = EventQueue::with_kind(kind);
+            q.push(30, Event::SchedTick);
+            q.push(10, Event::JobSubmit(1));
+            q.push(20, Event::TaskFinish(5));
+            assert_eq!(q.pop(), Some((10, Event::JobSubmit(1))), "{kind:?}");
+            assert_eq!(q.pop(), Some((20, Event::TaskFinish(5))), "{kind:?}");
+            assert_eq!(q.pop(), Some((30, Event::SchedTick)), "{kind:?}");
+            assert_eq!(q.pop(), None, "{kind:?}");
+        }
     }
 
     #[test]
     fn fifo_among_simultaneous() {
-        let mut q = EventQueue::new();
-        q.push(5, Event::JobSubmit(1));
-        q.push(5, Event::JobSubmit(2));
-        q.push(5, Event::SchedTick);
-        assert_eq!(q.pop(), Some((5, Event::JobSubmit(1))));
-        assert_eq!(q.pop(), Some((5, Event::JobSubmit(2))));
-        assert_eq!(q.pop(), Some((5, Event::SchedTick)));
+        for kind in BOTH {
+            let mut q = EventQueue::with_kind(kind);
+            q.push(5, Event::JobSubmit(1));
+            q.push(5, Event::JobSubmit(2));
+            q.push(5, Event::SchedTick);
+            assert_eq!(q.pop(), Some((5, Event::JobSubmit(1))), "{kind:?}");
+            assert_eq!(q.pop(), Some((5, Event::JobSubmit(2))), "{kind:?}");
+            assert_eq!(q.pop(), Some((5, Event::SchedTick)), "{kind:?}");
+        }
     }
 
     #[test]
@@ -122,23 +332,84 @@ mod tests {
             Event::TaskFinish(11),
             Event::TaskFail(13),
         ];
-        let mut q = EventQueue::new();
-        for (i, e) in events.iter().enumerate() {
-            q.push(i as Time, *e);
-        }
-        for e in events {
-            assert_eq!(q.pop().unwrap().1, e);
+        for kind in BOTH {
+            let mut q = EventQueue::with_kind(kind);
+            for (i, e) in events.iter().enumerate() {
+                q.push(i as Time, *e);
+            }
+            for e in events {
+                assert_eq!(q.pop().unwrap().1, e, "{kind:?}");
+            }
         }
     }
 
     #[test]
     fn peek_time_matches_next_pop() {
-        let mut q = EventQueue::new();
-        assert_eq!(q.peek_time(), None);
-        q.push(42, Event::SchedTick);
-        q.push(7, Event::SchedTick);
-        assert_eq!(q.peek_time(), Some(7));
-        q.pop();
-        assert_eq!(q.peek_time(), Some(42));
+        for kind in BOTH {
+            let mut q = EventQueue::with_kind(kind);
+            assert_eq!(q.peek_time(), None, "{kind:?}");
+            q.push(42, Event::SchedTick);
+            q.push(7, Event::SchedTick);
+            assert_eq!(q.peek_time(), Some(7), "{kind:?}");
+            q.pop();
+            assert_eq!(q.peek_time(), Some(42), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn calendar_survives_resize_and_sparse_times() {
+        // Push enough events to force several grow cycles, over a time
+        // span wide enough to wrap the wheel many times, then drain and
+        // check total (time, push-order) sorting.
+        let mut q = EventQueue::with_kind(QueueKind::Calendar);
+        let mut expect: Vec<(Time, u64)> = Vec::new();
+        let mut x = 0x1234_5678_9abc_def0u64;
+        for i in 0..5_000u64 {
+            // xorshift: deterministic scatter across ~10^8 ms.
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let t = x % 100_000_000;
+            q.push(t, Event::ContainerAdvance((i % 1000) as u32));
+            expect.push((t, i));
+        }
+        expect.sort_unstable();
+        let mut got = Vec::new();
+        while let Some((t, _)) = q.pop() {
+            got.push(t);
+        }
+        assert_eq!(got.len(), expect.len());
+        for (g, (e, _)) in got.iter().zip(&expect) {
+            assert_eq!(g, e);
+        }
+    }
+
+    #[test]
+    fn calendar_handles_push_into_the_past() {
+        // Generic callers may push a time below the last popped one; the
+        // cursor must rewind rather than skip the event.
+        let mut q = EventQueue::with_kind(QueueKind::Calendar);
+        q.push(1_000_000, Event::SchedTick);
+        assert_eq!(q.pop(), Some((1_000_000, Event::SchedTick)));
+        q.push(3, Event::JobSubmit(1));
+        q.push(2_000_000, Event::SchedTick);
+        assert_eq!(q.pop(), Some((3, Event::JobSubmit(1))));
+        assert_eq!(q.pop(), Some((2_000_000, Event::SchedTick)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_time_reinsertion_keeps_fifo_order() {
+        for kind in BOTH {
+            let mut q = EventQueue::with_kind(kind);
+            q.push(9, Event::JobSubmit(1));
+            assert_eq!(q.pop(), Some((9, Event::JobSubmit(1))), "{kind:?}");
+            // Re-insert at the already-popped timestamp: still delivered,
+            // and after it a later same-time pair keeps push order.
+            q.push(9, Event::JobSubmit(2));
+            q.push(9, Event::JobSubmit(3));
+            assert_eq!(q.pop(), Some((9, Event::JobSubmit(2))), "{kind:?}");
+            assert_eq!(q.pop(), Some((9, Event::JobSubmit(3))), "{kind:?}");
+        }
     }
 }

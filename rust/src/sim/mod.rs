@@ -1,9 +1,12 @@
-//! Discrete-event simulation core: event queue, engine, trace recording.
+//! Discrete-event simulation core: event queue (calendar or heap), engine,
+//! pluggable trace sinks, trace recording.
 
 pub mod engine;
 pub mod event;
+pub mod sink;
 pub mod trace;
 
 pub use engine::{run_experiment, run_experiment_with, Engine, EngineOptions, RunResult};
-pub use event::{Event, EventQueue};
+pub use event::{Event, EventQueue, QueueKind};
+pub use sink::{SinkKind, TraceSink};
 pub use trace::{TaskTrace, TraceRecorder};

@@ -1,0 +1,179 @@
+//! Pluggable trace sinks — bounded-memory observability for at-scale runs.
+//!
+//! The seed engine retained every task trace and every heartbeat
+//! transition for the whole run, so a 100k-job congested run held
+//! O(total transitions) memory — the dominant RSS term at that scale.
+//! [`SinkKind`] picks the retention policy for *both* streams (task traces
+//! in the engine, transition history in
+//! [`HeartbeatLog`](crate::cluster::HeartbeatLog)):
+//!
+//! | kind | retains | use for |
+//! |---|---|---|
+//! | `Full` | everything | figures, paper repro, validation |
+//! | `Counting` | counts only | throughput benches, 100k-job sweeps |
+//! | `Ring(cap)` | last `cap` records + counts | debugging tails of big runs |
+//!
+//! Counting and ring sinks never change simulation results — only what is
+//! kept in memory (asserted by the engine's sink tests).
+
+use super::trace::{TaskTrace, TraceRecorder};
+
+/// Retention policy for task traces and heartbeat history.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SinkKind {
+    /// Keep the complete history (the seed behavior).
+    #[default]
+    Full,
+    /// Keep nothing; count records as they pass through.
+    Counting,
+    /// Keep the most recent `cap` records plus a total count.
+    Ring(usize),
+}
+
+/// A task-trace sink with [`SinkKind`] retention.
+#[derive(Debug, Clone)]
+pub enum TraceSink {
+    Full(TraceRecorder),
+    Counting { recorded: u64 },
+    Ring { cap: usize, buf: Vec<TaskTrace>, head: usize, recorded: u64 },
+}
+
+impl TraceSink {
+    pub fn new(kind: SinkKind) -> Self {
+        match kind {
+            SinkKind::Full => TraceSink::Full(TraceRecorder::new()),
+            SinkKind::Counting | SinkKind::Ring(0) => TraceSink::Counting { recorded: 0 },
+            SinkKind::Ring(cap) => {
+                TraceSink::Ring { cap, buf: Vec::with_capacity(cap), head: 0, recorded: 0 }
+            }
+        }
+    }
+
+    pub fn record(&mut self, t: TaskTrace) {
+        match self {
+            TraceSink::Full(rec) => rec.record(t),
+            TraceSink::Counting { recorded } => *recorded += 1,
+            TraceSink::Ring { cap, buf, head, recorded } => {
+                if buf.len() < *cap {
+                    buf.push(t);
+                } else {
+                    buf[*head] = t;
+                    *head = (*head + 1) % *cap;
+                }
+                *recorded += 1;
+            }
+        }
+    }
+
+    /// Total records seen, independent of retention.
+    pub fn recorded(&self) -> u64 {
+        match self {
+            TraceSink::Full(rec) => rec.tasks.len() as u64,
+            TraceSink::Counting { recorded } => *recorded,
+            TraceSink::Ring { recorded, .. } => *recorded,
+        }
+    }
+
+    /// Records currently held in memory.
+    pub fn retained(&self) -> usize {
+        match self {
+            TraceSink::Full(rec) => rec.tasks.len(),
+            TraceSink::Counting { .. } => 0,
+            TraceSink::Ring { buf, .. } => buf.len(),
+        }
+    }
+
+    /// Consume into `(retained traces in record order, total recorded)`.
+    pub fn finish(self) -> (TraceRecorder, u64) {
+        match self {
+            TraceSink::Full(rec) => {
+                let n = rec.tasks.len() as u64;
+                (rec, n)
+            }
+            TraceSink::Counting { recorded } => (TraceRecorder::new(), recorded),
+            TraceSink::Ring { buf, head, recorded, .. } => {
+                let mut tasks = Vec::with_capacity(buf.len());
+                tasks.extend_from_slice(&buf[head..]);
+                tasks.extend_from_slice(&buf[..head]);
+                (TraceRecorder { tasks }, recorded)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tt(i: usize) -> TaskTrace {
+        TaskTrace {
+            job: 1,
+            phase: 0,
+            task: i,
+            granted: i as u64 * 10,
+            start: i as u64 * 10 + 5,
+            finish: i as u64 * 10 + 9,
+        }
+    }
+
+    #[test]
+    fn full_sink_keeps_everything() {
+        let mut s = TraceSink::new(SinkKind::Full);
+        for i in 0..5 {
+            s.record(tt(i));
+        }
+        assert_eq!(s.recorded(), 5);
+        assert_eq!(s.retained(), 5);
+        let (rec, n) = s.finish();
+        assert_eq!(n, 5);
+        assert_eq!(rec.tasks.len(), 5);
+        assert_eq!(rec.tasks[2].task, 2);
+    }
+
+    #[test]
+    fn counting_sink_counts_without_retaining() {
+        let mut s = TraceSink::new(SinkKind::Counting);
+        for i in 0..1000 {
+            s.record(tt(i));
+        }
+        assert_eq!(s.recorded(), 1000);
+        assert_eq!(s.retained(), 0);
+        let (rec, n) = s.finish();
+        assert!(rec.tasks.is_empty());
+        assert_eq!(n, 1000);
+    }
+
+    #[test]
+    fn ring_sink_keeps_last_cap_in_order() {
+        let mut s = TraceSink::new(SinkKind::Ring(3));
+        for i in 0..8 {
+            s.record(tt(i));
+        }
+        assert_eq!(s.recorded(), 8);
+        assert_eq!(s.retained(), 3);
+        let (rec, n) = s.finish();
+        assert_eq!(n, 8);
+        let kept: Vec<usize> = rec.tasks.iter().map(|t| t.task).collect();
+        assert_eq!(kept, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn ring_zero_degenerates_to_counting() {
+        let mut s = TraceSink::new(SinkKind::Ring(0));
+        s.record(tt(0));
+        assert_eq!(s.recorded(), 1);
+        assert_eq!(s.retained(), 0);
+    }
+
+    #[test]
+    fn ring_below_capacity_keeps_all() {
+        let mut s = TraceSink::new(SinkKind::Ring(10));
+        for i in 0..4 {
+            s.record(tt(i));
+        }
+        let (rec, n) = s.finish();
+        assert_eq!(n, 4);
+        let kept: Vec<usize> = rec.tasks.iter().map(|t| t.task).collect();
+        assert_eq!(kept, vec![0, 1, 2, 3]);
+    }
+}

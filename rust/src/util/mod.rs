@@ -5,6 +5,7 @@
 pub mod ascii_plot;
 pub mod error;
 pub mod idmap;
+pub mod json;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;

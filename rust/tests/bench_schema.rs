@@ -1,0 +1,72 @@
+//! Schema check for the checked-in bench trajectory file.
+//!
+//! `BENCH_engine.json` is written by two producers (`perf_throughput`
+//! owns the top level, `perf_sweep` owns the `sweep` section) and read by
+//! humans comparing PRs.  This test pins the contract: the checked-in
+//! file must parse with the in-tree JSON parser and carry both sections —
+//! whether it holds measured numbers or `status: pending` placeholders
+//! (the growth container has no Rust toolchain, so regeneration happens
+//! wherever `cargo` is available).
+
+use dress::util::json::Json;
+
+fn bench_file() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+#[test]
+fn bench_engine_json_parses_and_has_required_sections() {
+    let root = Json::parse(&bench_file()).expect("BENCH_engine.json must be valid JSON");
+    assert_eq!(
+        root.get("bench").and_then(|v| v.as_str()),
+        Some("perf_throughput"),
+        "top-level `bench` tag"
+    );
+    assert!(root.get("workload").is_some(), "missing `workload`");
+    assert!(
+        root.get("speedup_indexed_vs_naive_1k").is_some(),
+        "missing `speedup_indexed_vs_naive_1k`"
+    );
+    let runs = root
+        .get("runs")
+        .and_then(|v| v.as_arr())
+        .expect("`runs` must be an array");
+    assert!(!runs.is_empty(), "`runs` must not be empty");
+    for row in runs {
+        for key in ["jobs", "scheduler", "events", "wall_ms", "events_per_sec"] {
+            assert!(row.get(key).is_some(), "run row missing `{key}`: {row:?}");
+        }
+    }
+
+    // The sweep section added with the parallel executor.
+    let sweep = root.get("sweep").expect("missing `sweep` section");
+    assert_eq!(
+        sweep.get("bench").and_then(|v| v.as_str()),
+        Some("perf_sweep"),
+        "`sweep.bench` tag"
+    );
+    assert!(sweep.get("grid").is_some(), "missing `sweep.grid`");
+    let sweep_runs = sweep
+        .get("runs")
+        .and_then(|v| v.as_arr())
+        .expect("`sweep.runs` must be an array");
+    for row in sweep_runs {
+        for key in ["workers", "runs", "runs_per_sec"] {
+            assert!(row.get(key).is_some(), "sweep row missing `{key}`: {row:?}");
+        }
+    }
+
+    // Placeholder files must say so; measured files must not.
+    let pending = root.get("status").map(|s| {
+        s.as_str().map(|t| t.contains("pending")).unwrap_or(false)
+    });
+    if pending != Some(true) {
+        for row in runs {
+            assert!(
+                !row.get("events").unwrap().is_null(),
+                "measured file with null events: {row:?}"
+            );
+        }
+    }
+}

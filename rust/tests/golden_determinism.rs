@@ -17,7 +17,8 @@
 //! golden reference, derived from the same spec the seed implemented.
 
 use dress::config::{ExperimentConfig, SchedKind};
-use dress::sim::{run_experiment_with, EngineOptions, RunResult};
+use dress::expt::sweep::{run_sweep, SweepGrid, SweepWorkload};
+use dress::sim::{run_experiment_with, EngineOptions, QueueKind, RunResult};
 use dress::workload::{congested_burst, generate, WorkloadMix};
 
 const KINDS: [SchedKind; 4] =
@@ -52,15 +53,19 @@ impl Golden {
 }
 
 fn run(kind: SchedKind, specs: Vec<dress::jobs::JobSpec>, naive: bool, failures: f64) -> Golden {
+    run_opts(kind, specs, EngineOptions { naive_hot_path: naive, ..Default::default() }, failures)
+}
+
+fn run_opts(
+    kind: SchedKind,
+    specs: Vec<dress::jobs::JobSpec>,
+    opts: EngineOptions,
+    failures: f64,
+) -> Golden {
     let mut cfg = ExperimentConfig::default();
     cfg.sched.kind = kind;
     cfg.cluster.task_failure_prob = failures;
-    let res = run_experiment_with(
-        &cfg,
-        specs,
-        EngineOptions { naive_hot_path: naive, ..Default::default() },
-    );
-    Golden::of(&res)
+    Golden::of(&run_experiment_with(&cfg, specs, opts))
 }
 
 #[test]
@@ -106,6 +111,76 @@ fn equivalence_holds_on_congested_burst() {
         let fast = run(kind, specs.clone(), false, 0.0);
         let naive = run(kind, specs.clone(), true, 0.0);
         assert_eq!(fast, naive, "{kind:?}: burst divergence");
+    }
+}
+
+#[test]
+fn calendar_queue_reproduces_heap_reference_all_schedulers() {
+    // The calendar-queue event core must preserve the exact (time, seq)
+    // total order the BinaryHeap implemented — whole experiments on both
+    // queue kinds yield bit-identical goldens, with and without failure
+    // injection (extra RNG draws shuffle the event pattern).
+    let specs = generate(24, WorkloadMix::Mixed, 0.3, 2_000, 42);
+    let heap = EngineOptions { queue: QueueKind::Heap, ..Default::default() };
+    for kind in KINDS {
+        let cal = run_opts(kind, specs.clone(), EngineOptions::default(), 0.0);
+        let href = run_opts(kind, specs.clone(), heap, 0.0);
+        assert_eq!(cal, href, "{kind:?}: calendar queue diverged from heap order");
+    }
+    let specs = generate(12, WorkloadMix::Mixed, 0.4, 1_500, 7);
+    for kind in [SchedKind::Capacity, SchedKind::Dress] {
+        let cal = run_opts(kind, specs.clone(), EngineOptions::default(), 0.2);
+        let href = run_opts(kind, specs.clone(), heap, 0.2);
+        assert_eq!(cal, href, "{kind:?}: queue divergence under failures");
+    }
+}
+
+#[test]
+fn calendar_queue_handles_congested_burst() {
+    let specs = congested_burst(200, 100, 0xFEED);
+    let heap = EngineOptions { queue: QueueKind::Heap, ..Default::default() };
+    for kind in KINDS {
+        let cal = run_opts(kind, specs.clone(), EngineOptions::default(), 0.0);
+        let href = run_opts(kind, specs.clone(), heap, 0.0);
+        assert_eq!(cal, href, "{kind:?}: burst queue divergence");
+    }
+}
+
+/// The whole-run fingerprint of one sweep cell, extended with the raw
+/// trace + job metrics so "byte-identical" means the full RunResult.
+fn sweep_fingerprint(r: &RunResult) -> (Golden, Vec<dress::sim::TaskTrace>, String) {
+    (Golden::of(r), r.trace.tasks.clone(), format!("{:?}", r.jobs))
+}
+
+#[test]
+fn sweep_parallel_output_identical_to_serial() {
+    // run_sweep(jobs=1) and run_sweep(jobs=N) must produce byte-identical
+    // RunResult vectors for a 3-seed x 4-scheduler grid: results land by
+    // grid index, not completion order, and every cell is deterministic.
+    let grid = SweepGrid {
+        base: ExperimentConfig::default(),
+        seeds: vec![42, 43, 44],
+        scheds: KINDS.to_vec(),
+        workloads: vec![SweepWorkload::Generate {
+            n: 8,
+            mix: WorkloadMix::Mixed,
+            small_frac: 0.3,
+            arrival_ms: 2_000,
+        }],
+        opts: EngineOptions::default(),
+    };
+    let serial = run_sweep(&grid, 1);
+    assert_eq!(serial.len(), 12);
+    for workers in [2, 5] {
+        let parallel = run_sweep(&grid, workers);
+        assert_eq!(parallel.len(), serial.len());
+        for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            assert_eq!(
+                sweep_fingerprint(a),
+                sweep_fingerprint(b),
+                "cell {i}: parallel sweep (workers={workers}) diverged from serial"
+            );
+        }
     }
 }
 
