@@ -4,46 +4,49 @@
 //! Each cell is an independent deterministic simulation, so the sweep
 //! should scale ~linearly until memory bandwidth saturates; the bench
 //! asserts the parallel results stay bit-identical to the serial pass
-//! while it measures.  Updates the `sweep` section of `BENCH_engine.json`
-//! (the rest of the file is owned by `perf_throughput`):
+//! while it measures.  Every worker count is timed over `PASSES` repeats
+//! and recorded as `wall_ms_mean` ± Student-t 95% CI, so cross-PR
+//! comparisons of `BENCH_engine.json` see dispersion, not one sample.
+//! The grid definition lives in the library (`expt::sweep::bench_grid`)
+//! and its fingerprint is written next to the numbers —
+//! `tests/bench_schema.rs` recomputes it and rejects a checked-in file
+//! whose numbers were measured on a stale grid.  Updates the `sweep`
+//! section of `BENCH_engine.json` (the rest of the file is owned by
+//! `perf_throughput`):
 //!
 //!     cargo bench --bench perf_sweep
 
 use dress::bench_harness::update_bench_json;
-use dress::config::{ExperimentConfig, SchedKind};
-use dress::expt::sweep::{run_sweep, SweepGrid, SweepWorkload};
-use dress::sim::EngineOptions;
+use dress::expt::shard::grid_fingerprint;
+use dress::expt::sweep::{bench_grid, run_sweep};
 use dress::util::json::Json;
+use dress::util::stats::Ci95;
 use std::time::Instant;
 
-const JOBS_PER_RUN: u32 = 500;
-const N_SEEDS: u64 = 8;
+/// Timed repeats per worker count (dispersion for the CI columns).
+const PASSES: usize = 3;
 
 /// The checked-in trajectory file at the repo root — anchored via the
 /// manifest dir because `cargo bench` runs with cwd = package root
 /// (`rust/`), not the workspace root.
 const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
 
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
+
 fn main() {
     println!("=== perf: parallel sweep scaling (seed x scheduler grid) ===");
-    let grid = SweepGrid {
-        base: ExperimentConfig::default(),
-        seeds: (0..N_SEEDS).map(|i| 0xD8E5 + i).collect(),
-        scheds: vec![SchedKind::Capacity, SchedKind::Dress],
-        workloads: vec![SweepWorkload::CongestedBurst {
-            n: JOBS_PER_RUN,
-            arrival_mean_ms: 50,
-        }],
-        opts: EngineOptions::throughput(),
-    };
+    let grid = bench_grid();
+    let fingerprint = grid_fingerprint(&grid);
     let total = grid.len();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
-    // Serial reference pass: both the jobs=1 scaling point and the
-    // fingerprint the parallel passes must reproduce bit-identically.
+    // Serial reference pass: the fingerprint every parallel pass must
+    // reproduce bit-identically (timed as pass 1 of workers=1).
     let t0 = Instant::now();
     let reference = run_sweep(&grid, 1);
-    let serial_s = t0.elapsed().as_secs_f64();
+    let serial_first_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let mut worker_counts = vec![1usize];
     let mut w = 2;
@@ -55,21 +58,26 @@ fn main() {
         worker_counts.push(cores);
     }
 
+    let mut serial_mean_ms = serial_first_ms;
     let mut rows = Vec::new();
     for &workers in &worker_counts {
-        let (wall_s, results) = if workers == 1 {
-            (serial_s, None)
-        } else {
+        let mut walls_ms = Vec::with_capacity(PASSES);
+        for pass in 0..PASSES {
+            if workers == 1 && pass == 0 {
+                walls_ms.push(serial_first_ms);
+                continue;
+            }
             let t0 = Instant::now();
-            let r = run_sweep(&grid, workers);
-            (t0.elapsed().as_secs_f64(), Some(r))
-        };
-        if let Some(results) = results {
+            let results = run_sweep(&grid, workers);
+            walls_ms.push(t0.elapsed().as_secs_f64() * 1e3);
             for (a, b) in reference.iter().zip(&results) {
                 assert_eq!(a.system.makespan_ms, b.system.makespan_ms, "parallel sweep diverged");
                 assert_eq!(a.events, b.events, "parallel sweep diverged");
                 assert_eq!(a.delta_history, b.delta_history, "parallel sweep diverged");
-                assert_eq!(a.transitions_recorded, b.transitions_recorded, "parallel sweep diverged");
+                assert_eq!(
+                    a.transitions_recorded, b.transitions_recorded,
+                    "parallel sweep diverged"
+                );
                 let (wa, wb): (u64, u64) = (
                     a.jobs.iter().map(|j| j.waiting_ms).sum(),
                     b.jobs.iter().map(|j| j.waiting_ms).sum(),
@@ -77,37 +85,42 @@ fn main() {
                 assert_eq!(wa, wb, "parallel sweep diverged");
             }
         }
-        let rps = total as f64 / wall_s;
+        let ci = Ci95::of(&walls_ms);
+        if workers == 1 {
+            serial_mean_ms = ci.mean;
+        }
+        let rps = total as f64 / (ci.mean / 1e3);
         println!(
-            "bench sweep-scaling/workers{:<3} {:>7.2} runs/s  ({} runs, {:.2} s wall, {:.2}x vs serial)",
+            "bench sweep-scaling/workers{:<3} {:>7.2} runs/s  ({} runs, {:.1} ± {:.1} ms wall \
+             over {PASSES} passes, {:.2}x vs serial)",
             workers,
             rps,
             total,
-            wall_s,
-            serial_s / wall_s
+            ci.mean,
+            ci.half,
+            serial_mean_ms / ci.mean
         );
         let mut row = Json::obj();
         row.set("workers", Json::Num(workers as f64));
         row.set("runs", Json::Num(total as f64));
-        row.set("wall_ms", Json::Num((wall_s * 100_000.0).round() / 100.0));
-        row.set("runs_per_sec", Json::Num((rps * 100.0).round() / 100.0));
-        row.set("speedup_vs_serial", Json::Num(((serial_s / wall_s) * 100.0).round() / 100.0));
+        row.set("passes", Json::Num(PASSES as f64));
+        row.set("wall_ms_mean", Json::Num(round2(ci.mean)));
+        row.set("wall_ms_ci_lo", Json::Num(round2(ci.lo())));
+        row.set("wall_ms_ci_hi", Json::Num(round2(ci.hi())));
+        row.set("runs_per_sec", Json::Num(round2(rps)));
+        row.set("speedup_vs_serial", Json::Num(round2(serial_mean_ms / ci.mean)));
         rows.push(row);
     }
 
     let mut sweep = Json::obj();
     sweep.set("bench", Json::Str("perf_sweep".into()));
-    sweep.set(
-        "grid",
-        Json::Str(format!(
-            "{N_SEEDS} seeds x [capacity, dress] x congested_burst({JOBS_PER_RUN}, 50)"
-        )),
-    );
+    sweep.set("grid", Json::Str("8 seeds x [capacity, dress] x congested_burst(500, 50)".into()));
+    sweep.set("grid_fingerprint", Json::Str(fingerprint.clone()));
     sweep.set("cores", Json::Num(cores as f64));
     sweep.set("trace_sink", Json::Str("counting".into()));
     sweep.set("runs", Json::Arr(rows));
     match update_bench_json(BENCH_JSON, "sweep", sweep) {
-        Ok(()) => println!("updated {BENCH_JSON} [sweep]"),
+        Ok(()) => println!("updated {BENCH_JSON} [sweep] (grid fingerprint {fingerprint})"),
         Err(e) => eprintln!("could not update {BENCH_JSON}: {e}"),
     }
 }

@@ -24,14 +24,21 @@ USAGE:
   dress live  [--jobs N] [--workers W] [--sched dress|capacity] [--seed S]
   dress sweep [--seeds K] [--seed S] [--jobs W | --workers W] [--njobs N]
               [--platform mapreduce|spark|mixed|burst] [--small-frac F]
-              [--paper]
+              [--paper] [--shard i/N] [--out shard.json]
+              [--report report.txt] [--csv out-prefix]
+  dress sweep-merge <shard.json...> [--report report.txt] [--csv out-prefix]
   dress bench
 
 `sweep` fans a K-seed x 4-scheduler grid across W worker threads
 (--jobs 0 = all cores; results are bit-identical to --jobs 1) with
 counting trace sinks (O(active) memory).  --paper instead sweeps the
 DRESS-vs-Capacity pairs behind Figs 7/9 + Table II and reports each
-claim as a mean over seeds.
+claim as mean ± 95% CI over seeds, judged on the CI bound.
+--shard i/N runs only grid cells with index % N == i and writes them to
+a JSON shard file (distribute N shards across machines); `sweep-merge`
+validates the shards' grid fingerprints, reassembles the full grid and
+emits the identical report a single-process sweep would print
+(--report writes the deterministic part to a file for byte comparison).
 ";
 
 /// Entry point used by `main.rs`; returns a process exit code.
@@ -54,6 +61,7 @@ fn dispatch(args: &Args) -> Result<(), String> {
         Some("trace") => cmd_trace(args),
         Some("live") => cmd_live(args),
         Some("sweep") => cmd_sweep(args),
+        Some("sweep-merge") => cmd_sweep_merge(args),
         Some("bench") => cmd_bench(),
         Some("help") | None => {
             println!("{USAGE}");
@@ -382,8 +390,11 @@ fn cmd_live(args: &Args) -> Result<(), String> {
 
 /// Parallel seed × scheduler sweep (`expt::sweep`): the many-fast-runs
 /// entry point.  `--jobs` here is *worker threads* (0 = all cores);
-/// `--njobs` sizes the workload of each run.
+/// `--njobs` sizes the workload of each run.  `--shard i/N` runs one
+/// shard of the grid and writes a mergeable JSON partial instead of the
+/// report (see [`cmd_sweep_merge`]).
 fn cmd_sweep(args: &Args) -> Result<(), String> {
+    use crate::expt::shard::{self, ShardSpec, SweepMeta, SweepMode};
     use crate::expt::sweep::{self, SweepGrid, SweepWorkload};
     use crate::sim::EngineOptions;
 
@@ -401,100 +412,129 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let platform = args.flag_str("platform", "mixed");
     let seeds: Vec<u64> = (0..n_seeds as u64).map(|i| base_seed + i).collect();
 
-    if args.switch("paper") {
-        // Multi-seed claim check: Figs 7/9 + Table II pairs, mean over seeds.
-        let workloads = vec![
-            SweepWorkload::Generate {
-                n: 20,
-                mix: WorkloadMix::Spark,
-                small_frac: 0.30,
-                arrival_ms: 5_000,
-            },
-            SweepWorkload::Generate {
-                n: 20,
-                mix: WorkloadMix::MapReduce,
-                small_frac: 0.30,
-                arrival_ms: 5_000,
-            },
-        ];
+    let (grid, mode) = if args.switch("paper") {
+        // Multi-seed claim verification: the Figs 7/9 + Table II pair grid.
+        (sweep::paper_grid(&seeds), SweepMode::Paper)
+    } else {
+        let mix = WorkloadMix::parse(platform);
+        let workload = match (platform, mix) {
+            ("burst", _) => SweepWorkload::CongestedBurst { n: njobs, arrival_mean_ms: 100 },
+            (_, Ok(mix)) => {
+                SweepWorkload::Generate { n: njobs, mix, small_frac, arrival_ms: 5_000 }
+            }
+            (_, Err(e)) => return Err(e),
+        };
+        let grid = SweepGrid {
+            base: ExperimentConfig::default(),
+            seeds,
+            scheds: vec![
+                SchedKind::Fifo,
+                SchedKind::Fair,
+                SchedKind::Capacity,
+                SchedKind::Dress,
+            ],
+            workloads: vec![workload],
+            // Counting sinks: a sweep is a throughput tool, keep memory flat.
+            opts: EngineOptions::throughput(),
+        };
+        (grid, SweepMode::Grid)
+    };
+    let meta = SweepMeta::of(&grid, mode);
+
+    if let Some(spec) = args.flag("shard") {
+        let spec = ShardSpec::parse(spec)?;
         let t0 = std::time::Instant::now();
-        let pairs = crate::expt::sweep::run_pair_sweep(
-            &ExperimentConfig::default(),
-            workloads,
-            seeds.clone(),
-            SchedKind::Capacity,
-            workers,
-        );
+        let cells = shard::run_shard(&grid, spec, workers);
         let wall = t0.elapsed();
-        let (spark, mr) = pairs.split_at(n_seeds);
-        let mean = |v: Vec<f64>| v.iter().sum::<f64>() / v.len().max(1) as f64;
-        let measured = [
-            mean(spark.iter().map(|p| p.comparison.small_completion_change_pct).collect()),
-            mean(mr.iter().map(|p| p.comparison.small_completion_change_pct).collect()),
-            mean(spark.iter().map(|p| p.comparison.makespan_change_pct).collect()),
-        ];
+        let path = args
+            .flag("out")
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("dress-sweep-shard-{}-of-{}.json", spec.index, spec.count));
+        let text = shard::shard_to_json(&meta, spec, &cells).render();
+        std::fs::write(&path, text).map_err(|e| format!("write {path}: {e}"))?;
         println!(
-            "paper-claim sweep: {} seeds x 2 workloads x 2 schedulers, {} runs in {:.2?} \
-             ({} workers)\nmean over seeds {:?}:",
-            n_seeds,
-            4 * n_seeds,
+            "shard {}/{}: {} of {} cells in {:.2?} ({} workers, fingerprint {}) -> {path}",
+            spec.index,
+            spec.count,
+            cells.len(),
+            grid.len(),
             wall,
             sweep::effective_jobs(workers),
-            seeds
-        );
-        let mut all_ok = true;
-        for (claim, m) in crate::expt::sweep_claims().iter().zip(measured) {
-            let (row, ok) = comparison_row(claim, m);
-            println!("{row}");
-            all_ok &= ok;
-        }
-        println!(
-            "sweep shape: {}",
-            if all_ok { "ALL CLAIMS HOLD" } else { "SOME CLAIMS MISSED" }
+            meta.fingerprint
         );
         return Ok(());
     }
 
-    let mix = WorkloadMix::parse(platform);
-    let workload = match (platform, mix) {
-        ("burst", _) => SweepWorkload::CongestedBurst { n: njobs, arrival_mean_ms: 100 },
-        (_, Ok(mix)) => SweepWorkload::Generate { n: njobs, mix, small_frac, arrival_ms: 5_000 },
-        (_, Err(e)) => return Err(e),
-    };
-    let grid = SweepGrid {
-        base: ExperimentConfig::default(),
-        seeds,
-        scheds: vec![SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress],
-        workloads: vec![workload],
-        // Counting sinks: a sweep is a throughput tool, keep memory flat.
-        opts: EngineOptions::throughput(),
-    };
-    let total = grid.len();
     let t0 = std::time::Instant::now();
-    let results = sweep::run_sweep(&grid, workers);
+    let cells = shard::run_shard(&grid, ShardSpec::full(), workers);
     let wall = t0.elapsed();
-    let header = ["Seed", "Scheduler", "Makespan (s)", "Avg wait (s)", "Events"];
-    let rows: Vec<Vec<String>> = results
-        .iter()
-        .enumerate()
-        .map(|(i, r)| {
-            let p = grid.point(i);
-            vec![
-                grid.seeds[p.seed].to_string(),
-                r.scheduler.clone(),
-                format!("{:.1}", r.system.makespan_ms as f64 / 1000.0),
-                format!("{:.1}", r.system.avg_waiting_ms / 1000.0),
-                r.events.to_string(),
-            ]
-        })
-        .collect();
-    println!("{}", report::render_table(&header, &rows));
+    emit_sweep_report(args, &meta, &cells)?;
     println!(
-        "{total} runs in {:.2?} ({} workers): {:.1} runs/s",
+        "{} runs in {:.2?} ({} workers): {:.1} runs/s",
+        cells.len(),
         wall,
         sweep::effective_jobs(workers),
-        total as f64 / wall.as_secs_f64().max(1e-9)
+        cells.len() as f64 / wall.as_secs_f64().max(1e-9)
     );
+    Ok(())
+}
+
+/// Merge shard files written by `dress sweep --shard` and emit the final
+/// report — byte-identical to a single-process `dress sweep` of the same
+/// grid (fingerprints are validated, so mismatched grids are rejected).
+fn cmd_sweep_merge(args: &Args) -> Result<(), String> {
+    use crate::expt::shard;
+    use crate::util::json::Json;
+
+    if args.positional.is_empty() {
+        return Err("sweep-merge requires at least one shard file".into());
+    }
+    let mut files = Vec::with_capacity(args.positional.len());
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        files.push(shard::shard_from_json(&json).map_err(|e| format!("{path}: {e}"))?);
+    }
+    let n_files = files.len();
+    let (meta, cells) = shard::merge_shards(files)?;
+    emit_sweep_report(args, &meta, &cells)?;
+    println!(
+        "merged {n_files} shard file(s) -> {} cells (fingerprint {})",
+        cells.len(),
+        meta.fingerprint
+    );
+    Ok(())
+}
+
+/// Print the deterministic sweep report and honor `--report` (write the
+/// exact bytes to a file — what the CI sweep matrix `cmp`s) and `--csv`
+/// (seed-aggregate statistics, plus claim CIs in paper mode).
+fn emit_sweep_report(
+    args: &Args,
+    meta: &crate::expt::shard::SweepMeta,
+    cells: &[crate::expt::shard::CellSummary],
+) -> Result<(), String> {
+    use crate::expt::shard::{self, SweepMode};
+
+    let rendered = shard::render_sweep_report(meta, cells);
+    print!("{rendered}");
+    if let Some(path) = args.flag("report") {
+        std::fs::write(path, &rendered).map_err(|e| format!("write {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    if let Some(base) = args.flag("csv") {
+        let path = format!("{base}.sweep_stats.csv");
+        let csv = report::sweep_stats_csv(&shard::sweep_stat_rows(meta, cells));
+        std::fs::write(&path, csv).map_err(|e| format!("write {path}: {e}"))?;
+        println!("wrote {path}");
+        if meta.mode == SweepMode::Paper {
+            let checks = shard::sweep_claim_checks(meta, cells);
+            let rows: Vec<_> = checks.iter().map(|c| (&c.claim, c.ci, c.holds)).collect();
+            let path = format!("{base}.claims.csv");
+            std::fs::write(&path, report::claims_csv(&rows)).map_err(|e| format!("write {path}: {e}"))?;
+            println!("wrote {path}");
+        }
+    }
     Ok(())
 }
 
@@ -553,6 +593,49 @@ mod tests {
     #[test]
     fn sweep_rejects_zero_seeds() {
         assert_eq!(run_cli(&args("sweep --seeds 0")), 1);
+    }
+
+    #[test]
+    fn sweep_rejects_bad_shard_spec() {
+        assert_eq!(run_cli(&args("sweep --seeds 2 --njobs 3 --shard 3/3")), 1);
+        assert_eq!(run_cli(&args("sweep --seeds 2 --njobs 3 --shard nope")), 1);
+    }
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir()
+            .join(format!("dress-cli-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn sweep_shard_merge_report_is_byte_identical_to_full_run() {
+        // Two shards + merge must reproduce the single-process report
+        // byte-for-byte (the property the CI sweep matrix asserts).
+        let (s0, s1) = (tmp("shard0.json"), tmp("shard1.json"));
+        let (merged, full) = (tmp("merged.txt"), tmp("full.txt"));
+        let base = "sweep --seeds 2 --njobs 3 --seed 5 --jobs 2";
+        assert_eq!(run_cli(&args(&format!("{base} --shard 0/2 --out {s0}"))), 0);
+        assert_eq!(run_cli(&args(&format!("{base} --shard 1/2 --out {s1}"))), 0);
+        assert_eq!(run_cli(&args(&format!("sweep-merge {s0} {s1} --report {merged}"))), 0);
+        assert_eq!(run_cli(&args(&format!("{base} --report {full}"))), 0);
+        let merged_text = std::fs::read_to_string(&merged).unwrap();
+        let full_text = std::fs::read_to_string(&full).unwrap();
+        assert!(!merged_text.is_empty());
+        assert_eq!(merged_text, full_text, "merged report diverged from full run");
+    }
+
+    #[test]
+    fn sweep_merge_rejects_mismatched_grids() {
+        // Shards from different grid definitions (different --njobs) must
+        // not merge: the fingerprints differ.
+        let (a, b) = (tmp("mismatch-a.json"), tmp("mismatch-b.json"));
+        assert_eq!(run_cli(&args(&format!("sweep --seeds 2 --njobs 3 --shard 0/2 --out {a}"))), 0);
+        assert_eq!(run_cli(&args(&format!("sweep --seeds 2 --njobs 4 --shard 1/2 --out {b}"))), 0);
+        assert_eq!(run_cli(&args(&format!("sweep-merge {a} {b}"))), 1);
+        // Incomplete partitions are rejected too.
+        assert_eq!(run_cli(&args(&format!("sweep-merge {a}"))), 1);
+        assert_eq!(run_cli(&args("sweep-merge")), 1);
     }
 
     #[test]

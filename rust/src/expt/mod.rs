@@ -4,11 +4,20 @@
 
 pub mod experiments;
 pub mod paper;
+pub mod shard;
 pub mod sweep;
 
 pub use experiments::{
     ablation, fig1, mixed_setting, mr20, run_pair, spark20, trace_benchmark, DressVariant,
     ExperimentPair, Fig1Result,
 };
-pub use paper::{paper_claims, sweep_claims};
-pub use sweep::{run_pair_sweep, run_sweep, SweepGrid, SweepPoint, SweepWorkload};
+pub use paper::{evaluate_sweep_claims, paper_claims, sweep_claims, SweepClaimCheck};
+pub use shard::{
+    grid_fingerprint, merge_shards, render_sweep_report, run_shard, shard_from_json,
+    shard_to_json, sweep_claim_checks, sweep_stat_rows, CellSummary, ShardFile, ShardSpec,
+    SweepMeta, SweepMode,
+};
+pub use sweep::{
+    bench_grid, paper_grid, run_cells, run_pair_sweep, run_sweep, SweepGrid, SweepPoint,
+    SweepWorkload,
+};

@@ -1,7 +1,9 @@
 //! The paper's published numbers, encoded as [`PaperClaim`]s so every run
 //! prints paper-vs-measured rows (EXPERIMENTS.md records them).
 
-use crate::report::PaperClaim;
+use crate::metrics::SmallLargeComparison;
+use crate::report::{ci_holds, PaperClaim};
+use crate::util::stats::Ci95;
 
 fn c(id: &str, description: &str, paper: f64, direction: i8) -> PaperClaim {
     PaperClaim { id: id.into(), description: description.into(), paper, direction }
@@ -33,19 +35,61 @@ pub fn paper_claims() -> Vec<PaperClaim> {
     ]
 }
 
-/// The claims a multi-seed sweep evaluates as mean-over-seeds: the
-/// small-job completion headlines (Figs 7/9) and the makespan-stability
-/// row of Table II.  `expt::sweep::run_pair_sweep` produces one
-/// [`crate::expt::ExperimentPair`] per seed; the CLI `sweep --paper`
-/// path averages each claim's measured value across seeds and prints
-/// paper-vs-measured rows — single-seed repro numbers are noisy, and the
-/// paper itself reports means over repeated runs.
+/// The claims a multi-seed sweep evaluates across seeds: the small-job
+/// completion headlines (Figs 7/9) and the makespan-stability row of
+/// Table II.  Single-seed repro numbers are noisy — the paper itself
+/// reports means over repeated runs — so the `sweep --paper` path runs
+/// one DRESS-vs-Capacity pair per seed and judges each claim on its
+/// `mean ± 95% CI` via [`evaluate_sweep_claims`], not the point mean.
 pub fn sweep_claims() -> Vec<PaperClaim> {
     vec![
         claim("FIG7.small-completion-change-pct"),
         claim("FIG9.small-completion-change-pct"),
         claim("TAB2.makespan-change-pct"),
     ]
+}
+
+/// One sweep claim judged on its confidence bound: the per-seed measured
+/// values, their Student-t 95% CI, and whether the claim's shape holds
+/// over the whole interval ([`crate::report::ci_holds`]).
+#[derive(Debug, Clone)]
+pub struct SweepClaimCheck {
+    pub claim: PaperClaim,
+    pub per_seed: Vec<f64>,
+    pub ci: Ci95,
+    pub holds: bool,
+}
+
+/// Evaluate every [`sweep_claims`] entry from per-seed DRESS-vs-baseline
+/// comparisons (`spark` = the Fig 7 / Table II workload, `mr` = Fig 9),
+/// one comparison per seed in seed order.  A claim passes only if its
+/// entire 95% interval satisfies the paper's shape — one lucky seed can
+/// no longer carry the headline number.
+pub fn evaluate_sweep_claims(
+    spark: &[SmallLargeComparison],
+    mr: &[SmallLargeComparison],
+) -> Vec<SweepClaimCheck> {
+    assert_eq!(spark.len(), mr.len(), "one comparison per seed for both workloads");
+    sweep_claims()
+        .into_iter()
+        .map(|claim| {
+            let per_seed: Vec<f64> = match claim.id.as_str() {
+                "FIG7.small-completion-change-pct" => {
+                    spark.iter().map(|c| c.small_completion_change_pct).collect()
+                }
+                "FIG9.small-completion-change-pct" => {
+                    mr.iter().map(|c| c.small_completion_change_pct).collect()
+                }
+                "TAB2.makespan-change-pct" => {
+                    spark.iter().map(|c| c.makespan_change_pct).collect()
+                }
+                other => panic!("no sweep aggregation defined for claim {other}"),
+            };
+            let ci = Ci95::of(&per_seed);
+            let holds = ci_holds(&claim, &ci);
+            SweepClaimCheck { claim, per_seed, ci, holds }
+        })
+        .collect()
 }
 
 /// Look up one claim by id.
@@ -87,5 +131,49 @@ mod tests {
     #[should_panic(expected = "unknown paper claim")]
     fn unknown_claim_panics() {
         claim("FIG99.nope");
+    }
+
+    fn cmp(small_completion: f64, makespan: f64) -> SmallLargeComparison {
+        SmallLargeComparison {
+            small_ids: vec![1],
+            small_completion_change_pct: small_completion,
+            large_completion_change_pct: 0.0,
+            large_penalized_mean_pct: 0.0,
+            small_waiting_change_pct: 0.0,
+            best_small_reduction_pct: small_completion,
+            makespan_change_pct: makespan,
+        }
+    }
+
+    #[test]
+    fn evaluate_judges_on_the_ci_bound() {
+        // Spark seeds consistently negative and tight: FIG7 + TAB2 hold.
+        let spark = [cmp(-30.0, 1.0), cmp(-28.0, -1.0), cmp(-26.0, 0.5)];
+        // MR seeds straddle zero with huge spread: FIG9's CI crosses zero
+        // even though its *mean* is negative — the point check would pass,
+        // the CI-bound check must not.
+        let mr = [cmp(-40.0, 0.0), cmp(35.0, 0.0), cmp(-10.0, 0.0)];
+        let checks = evaluate_sweep_claims(&spark, &mr);
+        assert_eq!(checks.len(), 3);
+        let by_id = |id: &str| checks.iter().find(|c| c.claim.id == id).unwrap();
+
+        let fig7 = by_id("FIG7.small-completion-change-pct");
+        assert_eq!(fig7.per_seed, vec![-30.0, -28.0, -26.0]);
+        assert_eq!(fig7.ci.n, 3);
+        assert!(fig7.holds, "tight all-negative interval must hold: {:?}", fig7.ci);
+
+        let fig9 = by_id("FIG9.small-completion-change-pct");
+        assert!(fig9.ci.mean < 0.0, "point mean is negative");
+        assert!(!fig9.holds, "zero-crossing interval must miss: {:?}", fig9.ci);
+
+        let tab2 = by_id("TAB2.makespan-change-pct");
+        assert!(tab2.holds, "makespan stays in the stability band: {:?}", tab2.ci);
+    }
+
+    #[test]
+    fn evaluate_single_seed_degrades_to_point_check() {
+        let checks = evaluate_sweep_claims(&[cmp(-20.0, 2.0)], &[cmp(-15.0, 0.0)]);
+        assert!(checks.iter().all(|c| c.ci.n == 1 && c.ci.half == 0.0));
+        assert!(checks.iter().all(|c| c.holds));
     }
 }

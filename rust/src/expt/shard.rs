@@ -1,0 +1,734 @@
+//! Distributed sweeps: shard a [`SweepGrid`] across processes/machines,
+//! serialize partial results, and merge them back — bit-identical to an
+//! unsharded run.
+//!
+//! Cells are independent deterministic simulations, so distribution is a
+//! partition of grid indices: shard `i/N` owns every cell with
+//! `index % N == i`.  Each shard writes a JSON file (via `util::json`)
+//! carrying a **grid fingerprint** — a hash of the full grid definition
+//! (base config, seeds, schedulers, workloads, engine options) — plus one
+//! integer-only [`CellSummary`] per cell.  `merge_shards` refuses to
+//! combine files whose fingerprints differ (two machines silently running
+//! different grids is the classic distributed-sweep failure), checks that
+//! every shard of the partition is present exactly once, and reassembles
+//! the full grid by index.  Because summaries are integers and every
+//! derived statistic is recomputed from them by the same code, the merged
+//! report is byte-identical to a single-process run — proven by
+//! `tests/golden_determinism.rs` for N ∈ {2, 3} over all four schedulers.
+
+use crate::expt::experiments::SMALL_DEMAND;
+use crate::expt::paper::{self, SweepClaimCheck};
+use crate::expt::sweep::{run_cells, SweepGrid};
+use crate::metrics::{compare_small_large, JobMetrics, SmallLargeComparison};
+use crate::report::{self, StatsRow};
+use crate::sim::RunResult;
+use crate::util::json::Json;
+use crate::util::stats::Ci95;
+
+/// Tag every shard file carries; guards against feeding arbitrary JSON in.
+pub const SHARD_FORMAT: &str = "dress-sweep-shard";
+/// Bumped whenever the shard schema changes incompatibly.
+pub const SHARD_VERSION: u64 = 1;
+
+// ------------------------------------------------------------ fingerprint
+
+/// FNV-1a 64-bit hash (zero-dependency, stable across platforms).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of the *entire* grid definition.  Two shard files combine
+/// only if they hashed the same base config, seeds, schedulers, workloads
+/// and engine options — any drift (a config default change, a different
+/// seed list, a new sink policy) changes the fingerprint and the merge
+/// rejects the stale file instead of silently mixing grids.
+pub fn grid_fingerprint(grid: &SweepGrid) -> String {
+    let canon = format!(
+        "base={:?};seeds={:?};scheds={:?};workloads={:?};opts={:?}",
+        grid.base, grid.seeds, grid.scheds, grid.workloads, grid.opts
+    );
+    format!("{:016x}", fnv1a64(canon.as_bytes()))
+}
+
+// ------------------------------------------------------------- shard spec
+
+/// One shard of an `N`-way partition: owns cells with
+/// `index % count == self.index`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// The trivial partition — one shard owning every cell.
+    pub fn full() -> ShardSpec {
+        ShardSpec { index: 0, count: 1 }
+    }
+
+    /// Parse the CLI form `i/N` (e.g. `0/3`).
+    pub fn parse(s: &str) -> Result<ShardSpec, String> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| format!("--shard takes `i/N` (e.g. 0/3), got `{s}`"))?;
+        let index: usize =
+            i.trim().parse().map_err(|e| format!("--shard index `{i}`: {e}"))?;
+        let count: usize =
+            n.trim().parse().map_err(|e| format!("--shard count `{n}`: {e}"))?;
+        if count == 0 {
+            return Err("--shard count must be >= 1".into());
+        }
+        if index >= count {
+            return Err(format!("--shard index {index} out of range for {count} shards"));
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Does this shard own grid cell `idx`?
+    pub fn owns(&self, idx: usize) -> bool {
+        idx % self.count == self.index
+    }
+
+    /// The grid indices this shard owns, ascending.
+    pub fn indices(&self, grid_len: usize) -> Vec<usize> {
+        (0..grid_len).filter(|&i| self.owns(i)).collect()
+    }
+}
+
+// -------------------------------------------------------------- grid meta
+
+/// What kind of report the grid feeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepMode {
+    /// Generic seed × scheduler table + per-scheduler aggregates.
+    Grid,
+    /// The paper-claim pair grid (`expt::sweep::paper_grid`): adds the
+    /// FIG7/FIG9/TAB2 `mean ± CI` claim verification section.
+    Paper,
+}
+
+impl SweepMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SweepMode::Grid => "grid",
+            SweepMode::Paper => "paper",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SweepMode, String> {
+        match s {
+            "grid" => Ok(SweepMode::Grid),
+            "paper" => Ok(SweepMode::Paper),
+            other => Err(format!("unknown sweep mode `{other}`")),
+        }
+    }
+}
+
+/// The grid description a shard file carries: enough to lay cells back
+/// out by index and render the final report, without rebuilding the
+/// workloads.  Equality (including the fingerprint) is the merge
+/// compatibility check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepMeta {
+    pub mode: SweepMode,
+    pub fingerprint: String,
+    pub seeds: Vec<u64>,
+    /// Scheduler names in grid order (e.g. `["dress", "capacity"]`).
+    pub scheds: Vec<String>,
+    /// One human-readable label per workload axis point.
+    pub workloads: Vec<String>,
+}
+
+impl SweepMeta {
+    pub fn of(grid: &SweepGrid, mode: SweepMode) -> SweepMeta {
+        SweepMeta {
+            mode,
+            fingerprint: grid_fingerprint(grid),
+            seeds: grid.seeds.clone(),
+            scheds: grid.scheds.iter().map(|k| k.name().to_string()).collect(),
+            workloads: grid.workloads.iter().map(|w| format!("{w:?}")).collect(),
+        }
+    }
+
+    /// Total number of grid cells.
+    pub fn cells(&self) -> usize {
+        self.workloads.len() * self.scheds.len() * self.seeds.len()
+    }
+
+    /// Grid index of (workload, sched, seed) — same layout as
+    /// [`SweepGrid::index`] (workload-major, seed-minor).
+    pub fn index(&self, workload: usize, sched: usize, seed: usize) -> usize {
+        (workload * self.scheds.len() + sched) * self.seeds.len() + seed
+    }
+
+    /// Inverse of [`Self::index`].
+    pub fn point(&self, idx: usize) -> (usize, usize, usize) {
+        let per_workload = self.scheds.len() * self.seeds.len();
+        (
+            idx / per_workload,
+            (idx % per_workload) / self.seeds.len(),
+            idx % self.seeds.len(),
+        )
+    }
+}
+
+// ----------------------------------------------------------- cell summary
+
+/// The serialized result of one grid cell.  Deliberately integer-only
+/// (per-job metrics + whole-run counters): floats never cross the wire,
+/// so a JSON round-trip is exact and every derived statistic (averages,
+/// CIs, claim checks) is recomputed from identical inputs by identical
+/// code — the foundation of the byte-identical merge guarantee.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellSummary {
+    pub index: usize,
+    pub seed: u64,
+    pub scheduler: String,
+    pub makespan_ms: u64,
+    pub events: u64,
+    pub sched_ticks: u64,
+    pub failures: u32,
+    pub tasks_recorded: u64,
+    pub jobs: Vec<JobMetrics>,
+}
+
+impl CellSummary {
+    pub fn of(grid: &SweepGrid, index: usize, r: &RunResult) -> CellSummary {
+        let p = grid.point(index);
+        CellSummary {
+            index,
+            seed: grid.seeds[p.seed],
+            scheduler: r.scheduler.clone(),
+            makespan_ms: r.system.makespan_ms,
+            events: r.events,
+            sched_ticks: r.sched_ticks,
+            failures: r.failures,
+            tasks_recorded: r.tasks_recorded,
+            jobs: r.jobs.clone(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("index", Json::Num(self.index as f64));
+        o.set("seed", Json::Num(self.seed as f64));
+        o.set("scheduler", Json::Str(self.scheduler.clone()));
+        o.set("makespan_ms", Json::Num(self.makespan_ms as f64));
+        o.set("events", Json::Num(self.events as f64));
+        o.set("sched_ticks", Json::Num(self.sched_ticks as f64));
+        o.set("failures", Json::Num(self.failures as f64));
+        o.set("tasks_recorded", Json::Num(self.tasks_recorded as f64));
+        let jobs: Vec<Json> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                let mut jo = Json::obj();
+                jo.set("id", Json::Num(j.id as f64));
+                jo.set("demand", Json::Num(j.demand as f64));
+                jo.set("submit_ms", Json::Num(j.submit_ms as f64));
+                jo.set("waiting_ms", Json::Num(j.waiting_ms as f64));
+                jo.set("completion_ms", Json::Num(j.completion_ms as f64));
+                jo.set("execution_ms", Json::Num(j.execution_ms as f64));
+                jo
+            })
+            .collect();
+        o.set("jobs", Json::Arr(jobs));
+        o
+    }
+
+    fn from_json(v: &Json) -> Result<CellSummary, String> {
+        let jobs = arr_field(v, "jobs")?
+            .iter()
+            .enumerate()
+            .map(|(k, jv)| {
+                let waiting_ms = u64_field(jv, "waiting_ms")?;
+                let completion_ms = u64_field(jv, "completion_ms")?;
+                let execution_ms = u64_field(jv, "execution_ms")?;
+                if completion_ms.checked_sub(waiting_ms) != Some(execution_ms) {
+                    return Err(format!(
+                        "job {k}: execution_ms {execution_ms} != completion {completion_ms} - waiting {waiting_ms}"
+                    ));
+                }
+                Ok(JobMetrics {
+                    id: u64_field(jv, "id")? as u32,
+                    demand: u64_field(jv, "demand")? as u32,
+                    submit_ms: u64_field(jv, "submit_ms")?,
+                    waiting_ms,
+                    completion_ms,
+                    execution_ms,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(CellSummary {
+            index: u64_field(v, "index")? as usize,
+            seed: u64_field(v, "seed")?,
+            scheduler: str_field(v, "scheduler")?.to_string(),
+            makespan_ms: u64_field(v, "makespan_ms")?,
+            events: u64_field(v, "events")?,
+            sched_ticks: u64_field(v, "sched_ticks")?,
+            failures: u64_field(v, "failures")? as u32,
+            tasks_recorded: u64_field(v, "tasks_recorded")?,
+            jobs,
+        })
+    }
+}
+
+// ------------------------------------------------------------ shard files
+
+/// One parsed shard file: grid meta + the cells this shard owns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardFile {
+    pub meta: SweepMeta,
+    pub shard: ShardSpec,
+    pub cells: Vec<CellSummary>,
+}
+
+/// Run the cells shard `spec` owns on `workers` threads and summarize.
+pub fn run_shard(grid: &SweepGrid, spec: ShardSpec, workers: usize) -> Vec<CellSummary> {
+    let indices = spec.indices(grid.len());
+    run_cells(grid, &indices, workers)
+        .into_iter()
+        .map(|(i, r)| CellSummary::of(grid, i, &r))
+        .collect()
+}
+
+/// Serialize one shard's results (`dress sweep --shard i/N --out f.json`).
+pub fn shard_to_json(meta: &SweepMeta, spec: ShardSpec, cells: &[CellSummary]) -> Json {
+    let mut o = Json::obj();
+    o.set("format", Json::Str(SHARD_FORMAT.into()));
+    o.set("version", Json::Num(SHARD_VERSION as f64));
+    o.set("mode", Json::Str(meta.mode.as_str().into()));
+    o.set("fingerprint", Json::Str(meta.fingerprint.clone()));
+    o.set("seeds", Json::Arr(meta.seeds.iter().map(|&s| Json::Num(s as f64)).collect()));
+    o.set("scheds", Json::Arr(meta.scheds.iter().map(|s| Json::Str(s.clone())).collect()));
+    o.set(
+        "workloads",
+        Json::Arr(meta.workloads.iter().map(|w| Json::Str(w.clone())).collect()),
+    );
+    o.set("shard_index", Json::Num(spec.index as f64));
+    o.set("shard_count", Json::Num(spec.count as f64));
+    o.set("cells", Json::Arr(cells.iter().map(CellSummary::to_json).collect()));
+    o
+}
+
+/// Parse + validate one shard file: format/version tags, internally
+/// consistent meta, and cells that are exactly the owned index set with
+/// the scheduler/seed the grid layout assigns to each index.
+pub fn shard_from_json(v: &Json) -> Result<ShardFile, String> {
+    let format = str_field(v, "format")?;
+    if format != SHARD_FORMAT {
+        return Err(format!("not a sweep shard file (format `{format}`)"));
+    }
+    let version = u64_field(v, "version")?;
+    if version != SHARD_VERSION {
+        return Err(format!("unsupported shard version {version} (expected {SHARD_VERSION})"));
+    }
+    let meta = SweepMeta {
+        mode: SweepMode::parse(str_field(v, "mode")?)?,
+        fingerprint: str_field(v, "fingerprint")?.to_string(),
+        seeds: arr_field(v, "seeds")?
+            .iter()
+            .map(|s| s.as_f64().map(|n| n as u64).ok_or_else(|| "non-numeric seed".to_string()))
+            .collect::<Result<Vec<_>, _>>()?,
+        scheds: str_arr_field(v, "scheds")?,
+        workloads: str_arr_field(v, "workloads")?,
+    };
+    if meta.seeds.is_empty() || meta.scheds.is_empty() || meta.workloads.is_empty() {
+        return Err("empty grid axis in shard meta".into());
+    }
+    let shard = ShardSpec {
+        index: u64_field(v, "shard_index")? as usize,
+        count: u64_field(v, "shard_count")? as usize,
+    };
+    if shard.count == 0 || shard.index >= shard.count {
+        return Err(format!("bad shard spec {}/{}", shard.index, shard.count));
+    }
+    let cells = arr_field(v, "cells")?
+        .iter()
+        .map(CellSummary::from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    let expected = shard.indices(meta.cells());
+    let got: Vec<usize> = cells.iter().map(|c| c.index).collect();
+    if got != expected {
+        return Err(format!(
+            "shard {}/{} cells {:?} != owned indices {:?}",
+            shard.index, shard.count, got, expected
+        ));
+    }
+    for c in &cells {
+        let (_, k, s) = meta.point(c.index);
+        if c.scheduler != meta.scheds[k] {
+            return Err(format!(
+                "cell {}: scheduler `{}` but grid layout says `{}`",
+                c.index, c.scheduler, meta.scheds[k]
+            ));
+        }
+        if c.seed != meta.seeds[s] {
+            return Err(format!(
+                "cell {}: seed {} but grid layout says {}",
+                c.index, c.seed, meta.seeds[s]
+            ));
+        }
+    }
+    Ok(ShardFile { meta, shard, cells })
+}
+
+/// Merge a complete set of shard files back into the full grid.
+///
+/// Validates that every file describes the *same* grid (meta equality,
+/// which includes the fingerprint), that all files agree on the partition
+/// width, and that shards `0..count` are each present exactly once; then
+/// reassembles cells by grid index.  The result is indistinguishable from
+/// summarizing an unsharded `run_sweep`.
+pub fn merge_shards(files: Vec<ShardFile>) -> Result<(SweepMeta, Vec<CellSummary>), String> {
+    let first = files.first().ok_or("no shard files to merge")?;
+    let meta = first.meta.clone();
+    let count = first.shard.count;
+    for f in &files {
+        if f.meta != meta {
+            return Err(format!(
+                "shard grid mismatch: fingerprint {} vs {} — these files came from different \
+                 sweep definitions and cannot be merged",
+                f.meta.fingerprint, meta.fingerprint
+            ));
+        }
+        if f.shard.count != count {
+            return Err(format!(
+                "partition width mismatch: shard {}/{} vs expected /{count}",
+                f.shard.index, f.shard.count
+            ));
+        }
+    }
+    let mut seen = vec![false; count];
+    for f in &files {
+        if f.shard.index >= count {
+            return Err(format!("shard index {} out of range for /{count}", f.shard.index));
+        }
+        if seen[f.shard.index] {
+            return Err(format!("duplicate shard {}/{count}", f.shard.index));
+        }
+        seen[f.shard.index] = true;
+    }
+    let missing: Vec<usize> =
+        seen.iter().enumerate().filter(|(_, &s)| !s).map(|(i, _)| i).collect();
+    if !missing.is_empty() {
+        return Err(format!("incomplete merge: missing shards {missing:?} of /{count}"));
+    }
+    let mut cells: Vec<CellSummary> = files.into_iter().flat_map(|f| f.cells).collect();
+    cells.sort_by_key(|c| c.index);
+    assert_eq!(cells.len(), meta.cells(), "validated shards cannot under-cover the grid");
+    Ok((meta, cells))
+}
+
+// ---------------------------------------------------------------- reports
+
+/// DRESS-vs-baseline comparisons for one workload, one per seed, rebuilt
+/// from cell summaries (requires a 2-scheduler grid containing `dress`).
+pub fn pair_comparisons(
+    meta: &SweepMeta,
+    cells: &[CellSummary],
+    workload: usize,
+) -> Vec<SmallLargeComparison> {
+    assert_eq!(meta.scheds.len(), 2, "pair comparisons need a 2-scheduler grid");
+    let di = meta
+        .scheds
+        .iter()
+        .position(|s| s == "dress")
+        .expect("pair comparisons need a dress row");
+    let bi = 1 - di;
+    (0..meta.seeds.len())
+        .map(|s| {
+            let d = &cells[meta.index(workload, di, s)];
+            let b = &cells[meta.index(workload, bi, s)];
+            compare_small_large(&d.jobs, &b.jobs, d.makespan_ms, b.makespan_ms, SMALL_DEMAND)
+        })
+        .collect()
+}
+
+/// Seed aggregates per (workload, scheduler): makespan and average
+/// waiting as 95% CIs across the seed axis.
+pub fn sweep_stat_rows(meta: &SweepMeta, cells: &[CellSummary]) -> Vec<StatsRow> {
+    let mut rows = Vec::new();
+    for (w, _) in meta.workloads.iter().enumerate() {
+        for (k, sched) in meta.scheds.iter().enumerate() {
+            let mut makespans = Vec::with_capacity(meta.seeds.len());
+            let mut waits = Vec::with_capacity(meta.seeds.len());
+            for s in 0..meta.seeds.len() {
+                let c = &cells[meta.index(w, k, s)];
+                makespans.push(c.makespan_ms as f64 / 1000.0);
+                waits.push(avg_wait_s(c));
+            }
+            let group = format!("w{w}/{sched}");
+            rows.push(StatsRow {
+                group: group.clone(),
+                metric: "makespan_s".into(),
+                ci: Ci95::of(&makespans),
+            });
+            rows.push(StatsRow { group, metric: "avg_wait_s".into(), ci: Ci95::of(&waits) });
+        }
+    }
+    rows
+}
+
+/// The FIG7/FIG9/TAB2 claim checks for a paper-mode grid.
+pub fn sweep_claim_checks(meta: &SweepMeta, cells: &[CellSummary]) -> Vec<SweepClaimCheck> {
+    assert_eq!(meta.mode, SweepMode::Paper, "claim checks need a paper-mode sweep");
+    assert_eq!(meta.workloads.len(), 2, "paper grid is [spark, mapreduce]");
+    let spark = pair_comparisons(meta, cells, 0);
+    let mr = pair_comparisons(meta, cells, 1);
+    paper::evaluate_sweep_claims(&spark, &mr)
+}
+
+fn avg_wait_s(c: &CellSummary) -> f64 {
+    let w: Vec<f64> = c.jobs.iter().map(|j| j.waiting_ms as f64).collect();
+    crate::util::stats::mean(&w) / 1000.0
+}
+
+/// Render the canonical sweep report: grid header, per-cell table, seed
+/// aggregates (`mean/ci_lo/ci_hi/n_seeds`), and — in paper mode — the
+/// claim-verification section judged on the CI bound.
+///
+/// Everything here is a pure function of `(meta, cells)`, so a merged
+/// multi-machine run prints byte-for-byte what a single process prints —
+/// the property the CI sweep matrix asserts with `cmp`.
+pub fn render_sweep_report(meta: &SweepMeta, cells: &[CellSummary]) -> String {
+    assert_eq!(cells.len(), meta.cells(), "report needs the complete grid");
+    let mut out = format!(
+        "sweep report: {} seeds x {} schedulers x {} workloads = {} cells ({})\n",
+        meta.seeds.len(),
+        meta.scheds.len(),
+        meta.workloads.len(),
+        meta.cells(),
+        meta.mode.as_str(),
+    );
+    out.push_str(&format!("grid fingerprint: {}\n", meta.fingerprint));
+    for (w, label) in meta.workloads.iter().enumerate() {
+        out.push_str(&format!("workload {w}: {label}\n"));
+    }
+    out.push('\n');
+
+    let header = ["Cell", "Wkld", "Seed", "Scheduler", "Makespan (s)", "Avg wait (s)", "Events"];
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            let (w, _, _) = meta.point(c.index);
+            vec![
+                c.index.to_string(),
+                format!("w{w}"),
+                c.seed.to_string(),
+                c.scheduler.clone(),
+                format!("{:.1}", c.makespan_ms as f64 / 1000.0),
+                format!("{:.1}", avg_wait_s(c)),
+                c.events.to_string(),
+            ]
+        })
+        .collect();
+    out.push_str(&report::render_table(&header, &rows));
+    out.push('\n');
+
+    out.push_str("seed aggregates (Student-t 95% CI):\n");
+    out.push_str(&report::stats_table(&sweep_stat_rows(meta, cells)));
+
+    if meta.mode == SweepMode::Paper {
+        let checks = sweep_claim_checks(meta, cells);
+        out.push('\n');
+        out.push_str("paper claims (pass/fail on the 95% CI bound):\n");
+        let mut all_ok = true;
+        for c in &checks {
+            let (row, ok) = report::comparison_row_ci(&c.claim, &c.ci);
+            out.push_str(&row);
+            out.push('\n');
+            all_ok &= ok;
+        }
+        let lanes: Vec<(String, Ci95)> =
+            checks.iter().map(|c| (c.claim.id.clone(), c.ci)).collect();
+        out.push_str(&report::fig_ci_bars("claim CIs (change vs baseline, %)", &lanes, 44));
+        out.push_str(&format!(
+            "sweep shape: {}\n",
+            if all_ok { "ALL CLAIMS HOLD" } else { "SOME CLAIMS MISSED" }
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------ json access
+
+fn u64_field(v: &Json, key: &str) -> Result<u64, String> {
+    let n = v
+        .get(key)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| format!("missing numeric field `{key}`"))?;
+    if n < 0.0 || n.fract() != 0.0 {
+        return Err(format!("field `{key}` = {n} is not a non-negative integer"));
+    }
+    Ok(n as u64)
+}
+
+fn str_field<'v>(v: &'v Json, key: &str) -> Result<&'v str, String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| format!("missing string field `{key}`"))
+}
+
+fn arr_field<'v>(v: &'v Json, key: &str) -> Result<&'v [Json], String> {
+    v.get(key)
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| format!("missing array field `{key}`"))
+}
+
+fn str_arr_field(v: &Json, key: &str) -> Result<Vec<String>, String> {
+    arr_field(v, key)?
+        .iter()
+        .map(|x| {
+            x.as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("non-string entry in `{key}`"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, SchedKind};
+    use crate::expt::sweep::SweepWorkload;
+    use crate::sim::EngineOptions;
+    use crate::workload::WorkloadMix;
+
+    fn tiny_grid(seeds: Vec<u64>) -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.cluster.nodes = 2;
+        base.cluster.slots_per_node = 4;
+        SweepGrid {
+            base,
+            seeds,
+            scheds: vec![SchedKind::Fifo, SchedKind::Dress],
+            workloads: vec![SweepWorkload::Generate {
+                n: 4,
+                mix: WorkloadMix::Mixed,
+                small_frac: 0.3,
+                arrival_ms: 2_000,
+            }],
+            opts: EngineOptions::default(),
+        }
+    }
+
+    #[test]
+    fn shard_spec_parse_and_ownership() {
+        let s = ShardSpec::parse("1/3").unwrap();
+        assert_eq!(s, ShardSpec { index: 1, count: 3 });
+        assert!(s.owns(1) && s.owns(4) && !s.owns(0) && !s.owns(2));
+        assert_eq!(s.indices(7), vec![1, 4]);
+        assert_eq!(ShardSpec::full().indices(3), vec![0, 1, 2]);
+        for bad in ["3", "a/3", "1/0", "3/3", "4/3"] {
+            assert!(ShardSpec::parse(bad).is_err(), "{bad} accepted");
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let g = tiny_grid(vec![1, 2]);
+        let fp = grid_fingerprint(&g);
+        assert_eq!(fp.len(), 16);
+        assert_eq!(fp, grid_fingerprint(&g.clone()), "fingerprint not deterministic");
+        let mut other = tiny_grid(vec![1, 2]);
+        other.seeds = vec![1, 3];
+        assert_ne!(fp, grid_fingerprint(&other), "seed change must change fingerprint");
+        let mut opts = tiny_grid(vec![1, 2]);
+        opts.opts = EngineOptions::throughput();
+        assert_ne!(fp, grid_fingerprint(&opts), "sink change must change fingerprint");
+    }
+
+    #[test]
+    fn meta_index_point_roundtrip() {
+        let meta = SweepMeta::of(&tiny_grid(vec![1, 2, 3]), SweepMode::Grid);
+        assert_eq!(meta.cells(), 6);
+        for idx in 0..meta.cells() {
+            let (w, k, s) = meta.point(idx);
+            assert_eq!(meta.index(w, k, s), idx);
+        }
+        assert_eq!(meta.scheds, vec!["fifo", "dress"]);
+    }
+
+    #[test]
+    fn shard_file_roundtrips_through_json() {
+        let g = tiny_grid(vec![5, 6]);
+        let meta = SweepMeta::of(&g, SweepMode::Grid);
+        let spec = ShardSpec { index: 0, count: 2 };
+        let cells = run_shard(&g, spec, 1);
+        assert_eq!(cells.len(), 2, "shard 0/2 owns cells 0 and 2");
+        let text = shard_to_json(&meta, spec, &cells).render();
+        let back = shard_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.meta, meta);
+        assert_eq!(back.shard, spec);
+        assert_eq!(back.cells, cells, "JSON round-trip must be lossless");
+    }
+
+    #[test]
+    fn shard_from_json_rejects_malformed_files() {
+        let g = tiny_grid(vec![5, 6]);
+        let meta = SweepMeta::of(&g, SweepMode::Grid);
+        let spec = ShardSpec { index: 0, count: 2 };
+        let cells = run_shard(&g, spec, 1);
+
+        assert!(shard_from_json(&Json::parse("{\"format\": \"nope\"}").unwrap())
+            .unwrap_err()
+            .contains("not a sweep shard"));
+
+        let mut wrong_version = shard_to_json(&meta, spec, &cells);
+        wrong_version.set("version", Json::Num(99.0));
+        assert!(shard_from_json(&wrong_version).unwrap_err().contains("version"));
+
+        // A cell that the shard does not own.
+        let other = run_shard(&g, ShardSpec { index: 1, count: 2 }, 1);
+        let stolen = shard_to_json(&meta, spec, &other);
+        assert!(shard_from_json(&stolen).unwrap_err().contains("owned indices"));
+    }
+
+    #[test]
+    fn merge_validates_partition_and_fingerprints() {
+        let g = tiny_grid(vec![5, 6]);
+        let meta = SweepMeta::of(&g, SweepMode::Grid);
+        let mk = |i: usize, n: usize| {
+            let spec = ShardSpec { index: i, count: n };
+            ShardFile { meta: meta.clone(), shard: spec, cells: run_shard(&g, spec, 1) }
+        };
+
+        assert!(merge_shards(vec![]).unwrap_err().contains("no shard files"));
+        assert!(merge_shards(vec![mk(0, 2)]).unwrap_err().contains("missing shards [1]"));
+        assert!(merge_shards(vec![mk(0, 2), mk(0, 2)]).unwrap_err().contains("duplicate"));
+        assert!(merge_shards(vec![mk(0, 2), mk(1, 3)])
+            .unwrap_err()
+            .contains("partition width"));
+
+        let mut alien = mk(1, 2);
+        alien.meta.fingerprint = "0000000000000000".into();
+        assert!(merge_shards(vec![mk(0, 2), alien]).unwrap_err().contains("mismatch"));
+
+        // Order independence: shards merge regardless of argument order.
+        let (m, cells) = merge_shards(vec![mk(1, 2), mk(0, 2)]).unwrap();
+        assert_eq!(m, meta);
+        let indices: Vec<usize> = cells.iter().map(|c| c.index).collect();
+        assert_eq!(indices, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn report_renders_tables_and_aggregates() {
+        let g = tiny_grid(vec![5, 6, 7]);
+        let meta = SweepMeta::of(&g, SweepMode::Grid);
+        let cells = run_shard(&g, ShardSpec::full(), 2);
+        let report = render_sweep_report(&meta, &cells);
+        assert!(report.contains("grid fingerprint"));
+        assert!(report.contains("n_seeds") && report.contains("ci_lo"));
+        assert!(report.contains("w0/fifo") && report.contains("w0/dress"));
+        assert!(!report.contains("paper claims"), "grid mode has no claim section");
+        let rows = sweep_stat_rows(&meta, &cells);
+        assert_eq!(rows.len(), 4, "2 scheds x 2 metrics");
+        assert!(rows.iter().all(|r| r.ci.n == 3));
+    }
+}

@@ -119,15 +119,17 @@ pub fn effective_jobs(jobs: usize) -> usize {
     }
 }
 
-/// Run every cell of `grid` on up to `jobs` worker threads (0 = all
-/// cores).  Returns one `RunResult` per cell **in grid-index order** —
-/// identical output for any `jobs`, since cells are independent and each
-/// run is deterministic.
-pub fn run_sweep(grid: &SweepGrid, jobs: usize) -> Vec<RunResult> {
-    let total = grid.len();
+/// Run an explicit set of grid cells on up to `jobs` worker threads
+/// (0 = all cores).  Returns `(grid_index, RunResult)` pairs **in the
+/// order of `indices`** — identical output for any `jobs`, since cells
+/// are independent and each run is deterministic.  This is the primitive
+/// both [`run_sweep`] (all cells) and the shard runner
+/// (`expt::shard::run_shard`, every Nth cell) fan out through.
+pub fn run_cells(grid: &SweepGrid, indices: &[usize], jobs: usize) -> Vec<(usize, RunResult)> {
+    let total = indices.len();
     let jobs = effective_jobs(jobs).min(total.max(1));
     if jobs <= 1 {
-        return (0..total).map(|i| grid.run_cell(i)).collect();
+        return indices.iter().map(|&i| (i, grid.run_cell(i))).collect();
     }
     let cursor = AtomicUsize::new(0);
     let done: Mutex<Vec<(usize, RunResult)>> = Mutex::new(Vec::with_capacity(total));
@@ -139,22 +141,73 @@ pub fn run_sweep(grid: &SweepGrid, jobs: usize) -> Vec<RunResult> {
                 // sweep load-balances without a scheduler.
                 let mut local: Vec<(usize, RunResult)> = Vec::new();
                 loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= total {
+                    let k = cursor.fetch_add(1, Ordering::Relaxed);
+                    if k >= total {
                         break;
                     }
-                    local.push((i, grid.run_cell(i)));
+                    local.push((k, grid.run_cell(indices[k])));
                 }
                 done.lock().unwrap().extend(local);
             });
         }
     });
     let mut tagged = done.into_inner().unwrap();
-    // Deterministic ordering: land results by grid index, not completion
-    // order.  Indices are unique, so the sort is a total order.
-    tagged.sort_by_key(|&(i, _)| i);
+    // Deterministic ordering: land results by position in `indices`, not
+    // completion order.  Positions are unique, so the sort is total.
+    tagged.sort_by_key(|&(k, _)| k);
     assert_eq!(tagged.len(), total, "sweep lost cells");
-    tagged.into_iter().map(|(_, r)| r).collect()
+    tagged.into_iter().map(|(k, r)| (indices[k], r)).collect()
+}
+
+/// Run every cell of `grid` on up to `jobs` worker threads (0 = all
+/// cores).  Returns one `RunResult` per cell **in grid-index order** —
+/// identical output for any `jobs`, since cells are independent and each
+/// run is deterministic.
+pub fn run_sweep(grid: &SweepGrid, jobs: usize) -> Vec<RunResult> {
+    let indices: Vec<usize> = (0..grid.len()).collect();
+    run_cells(grid, &indices, jobs).into_iter().map(|(_, r)| r).collect()
+}
+
+/// The DRESS-vs-Capacity pair grid behind the multi-seed paper-claim
+/// sweep (Figs 7/9 + Table II): workload 0 is the 20-job Spark mix,
+/// workload 1 the 20-job MapReduce mix, schedulers `[dress, capacity]`.
+/// Shared by `dress sweep --paper`, the shard runner, and the CI sweep
+/// matrix so every path fingerprints the identical grid.
+pub fn paper_grid(seeds: &[u64]) -> SweepGrid {
+    SweepGrid {
+        base: ExperimentConfig::default(),
+        seeds: seeds.to_vec(),
+        scheds: vec![SchedKind::Dress, SchedKind::Capacity],
+        workloads: vec![
+            SweepWorkload::Generate {
+                n: 20,
+                mix: WorkloadMix::Spark,
+                small_frac: 0.30,
+                arrival_ms: 5_000,
+            },
+            SweepWorkload::Generate {
+                n: 20,
+                mix: WorkloadMix::MapReduce,
+                small_frac: 0.30,
+                arrival_ms: 5_000,
+            },
+        ],
+        opts: EngineOptions::default(),
+    }
+}
+
+/// The fixed grid `benches/perf_sweep.rs` measures.  Lives in the library
+/// so `tests/bench_schema.rs` can recompute its fingerprint and reject a
+/// checked-in `BENCH_engine.json` that silently drifted from the current
+/// grid definition.
+pub fn bench_grid() -> SweepGrid {
+    SweepGrid {
+        base: ExperimentConfig::default(),
+        seeds: (0..8).map(|i| 0xD8E5 + i).collect(),
+        scheds: vec![SchedKind::Capacity, SchedKind::Dress],
+        workloads: vec![SweepWorkload::CongestedBurst { n: 500, arrival_mean_ms: 50 }],
+        opts: EngineOptions::throughput(),
+    }
 }
 
 /// DRESS-vs-baseline pair sweep: for each seed × workload, run DRESS and
@@ -290,5 +343,51 @@ mod tests {
     fn effective_jobs_resolves_zero_to_cores() {
         assert!(effective_jobs(0) >= 1);
         assert_eq!(effective_jobs(3), 3);
+    }
+
+    #[test]
+    fn run_cells_subset_matches_full_sweep() {
+        let g = tiny_grid(vec![5, 6]);
+        let full = run_sweep(&g, 1);
+        // Every-other-cell subset, run in parallel: each pair must carry
+        // its grid index and reproduce the full run's cell bit-for-bit.
+        let indices: Vec<usize> = (0..g.len()).filter(|i| i % 2 == 1).collect();
+        let subset = run_cells(&g, &indices, 3);
+        assert_eq!(subset.len(), 2);
+        for (idx, r) in &subset {
+            assert!(indices.contains(idx));
+            assert_eq!(r.system.makespan_ms, full[*idx].system.makespan_ms);
+            assert_eq!(r.events, full[*idx].events);
+            assert_eq!(r.trace.tasks, full[*idx].trace.tasks);
+        }
+        assert!(run_cells(&g, &[], 4).is_empty());
+    }
+
+    #[test]
+    fn paper_grid_shape() {
+        let g = paper_grid(&[42, 43, 44]);
+        assert_eq!(g.len(), 12);
+        assert_eq!(g.scheds, vec![SchedKind::Dress, SchedKind::Capacity]);
+        assert_eq!(g.workloads.len(), 2);
+        assert!(matches!(
+            g.workloads[0],
+            SweepWorkload::Generate { mix: WorkloadMix::Spark, .. }
+        ));
+        assert!(matches!(
+            g.workloads[1],
+            SweepWorkload::Generate { mix: WorkloadMix::MapReduce, .. }
+        ));
+    }
+
+    #[test]
+    fn bench_grid_matches_perf_sweep_documentation() {
+        let g = bench_grid();
+        assert_eq!(g.seeds.len(), 8);
+        assert_eq!(g.seeds[0], 0xD8E5);
+        assert_eq!(g.scheds, vec![SchedKind::Capacity, SchedKind::Dress]);
+        assert!(matches!(
+            g.workloads[0],
+            SweepWorkload::CongestedBurst { n: 500, arrival_mean_ms: 50 }
+        ));
     }
 }

@@ -1,6 +1,13 @@
 //! Paper-vs-measured comparison rows: each experiment declares the paper's
 //! claim (a qualitative *shape*: who wins, by roughly what factor) and the
 //! harness prints both side by side for EXPERIMENTS.md.
+//!
+//! Single-run checks use [`comparison_row`] (point estimate); multi-seed
+//! sweeps use [`comparison_row_ci`], which judges the claim on the 95%
+//! confidence bound — the *whole interval* must satisfy the shape, so one
+//! lucky seed can no longer carry a claim.
+
+use crate::util::stats::Ci95;
 
 /// One claim from the paper, checked against a measured value.
 #[derive(Debug, Clone)]
@@ -35,6 +42,46 @@ pub fn comparison_row(claim: &PaperClaim, measured: f64) -> (String, bool) {
         format!(
             "[{marker}] {:<44} paper {:>9.1}  measured {:>9.1}",
             claim.id, claim.paper, measured
+        ),
+        holds,
+    )
+}
+
+/// Does the claim's shape hold over the *entire* confidence interval?
+///
+/// Each direction is judged on its adverse CI bound: a reduction claim
+/// must keep even `ci.hi()` below zero, a stability claim must bound the
+/// worst |endpoint|, and so on.  A zero-width interval (n < 2 seeds)
+/// degrades to exactly the point-estimate rule of [`comparison_row`].
+pub fn ci_holds(claim: &PaperClaim, ci: &Ci95) -> bool {
+    match claim.direction {
+        -1 => ci.hi() < 0.0,
+        1 => ci.lo() > 0.0,
+        2 => ci.hi() <= claim.paper * 1.05,
+        3 => ci.lo().abs().max(ci.hi().abs()) <= 10.0,
+        _ => {
+            let denom = claim.paper.abs().max(1e-9);
+            let worst = (ci.lo() - claim.paper).abs().max((ci.hi() - claim.paper).abs());
+            worst / denom < 0.35
+        }
+    }
+}
+
+/// Render one multi-seed comparison row (`mean ± CI [lo, hi] n=K`) and
+/// evaluate the claim on the CI bound via [`ci_holds`].
+pub fn comparison_row_ci(claim: &PaperClaim, ci: &Ci95) -> (String, bool) {
+    let holds = ci_holds(claim, ci);
+    let marker = if holds { "OK " } else { "MISS" };
+    (
+        format!(
+            "[{marker}] {:<44} paper {:>8.1}  measured {:>8.1} ± {:>6.1}  [{:>8.1}, {:>8.1}]  n={}",
+            claim.id,
+            claim.paper,
+            ci.mean,
+            ci.half,
+            ci.lo(),
+            ci.hi(),
+            ci.n
         ),
         holds,
     )
@@ -75,5 +122,44 @@ mod tests {
         assert!(ok);
         let (_, bad) = comparison_row(&claim(1, 10.0), -0.5);
         assert!(!bad);
+    }
+
+    #[test]
+    fn ci_bound_rejects_what_the_point_estimate_passes() {
+        // Mean is negative (point check would pass) but the interval
+        // crosses zero — the CI-bound reduction check must reject it.
+        let c = claim(-1, -27.6);
+        let crossing = Ci95 { n: 3, mean: -5.0, half: 8.0 };
+        assert!(!ci_holds(&c, &crossing));
+        let (row, ok) = comparison_row_ci(&c, &crossing);
+        assert!(!ok && row.contains("MISS") && row.contains("n=3"));
+        let solid = Ci95 { n: 5, mean: -20.0, half: 6.0 };
+        assert!(ci_holds(&c, &solid));
+        let (row, ok) = comparison_row_ci(&c, &solid);
+        assert!(ok && row.contains("OK"));
+    }
+
+    #[test]
+    fn ci_stability_uses_worst_endpoint() {
+        let c = claim(3, 0.64);
+        assert!(ci_holds(&c, &Ci95 { n: 4, mean: 1.0, half: 5.0 }));
+        assert!(!ci_holds(&c, &Ci95 { n: 4, mean: 1.0, half: 12.0 }));
+        assert!(!ci_holds(&c, &Ci95 { n: 4, mean: -8.0, half: 3.0 }));
+    }
+
+    #[test]
+    fn zero_width_ci_degrades_to_point_check() {
+        // n=1 (or zero-variance) intervals must agree with comparison_row.
+        for (dir, paper, measured) in
+            [(-1, -27.6, -3.0), (-1, -27.6, 3.0), (1, 16.1, 2.0), (3, 0.64, 9.0), (0, 100.0, 110.0)]
+        {
+            let c = claim(dir, paper);
+            let point = Ci95 { n: 1, mean: measured, half: 0.0 };
+            assert_eq!(
+                ci_holds(&c, &point),
+                comparison_row(&c, measured).1,
+                "direction {dir} measured {measured}"
+            );
+        }
     }
 }

@@ -1,7 +1,10 @@
 //! CSV export of run results — for plotting the figures outside the
 //! terminal (gnuplot/matplotlib), and for EXPERIMENTS.md appendices.
 
+use super::compare::PaperClaim;
+use super::table::StatsRow;
 use crate::sim::RunResult;
+use crate::util::stats::Ci95;
 
 /// Per-job metrics CSV (header + one row per job).
 pub fn jobs_csv(run: &RunResult) -> String {
@@ -43,6 +46,43 @@ pub fn delta_csv(run: &RunResult) -> String {
     let mut out = String::from("time_s,delta\n");
     for &(t, d) in &run.delta_history {
         out.push_str(&format!("{:.3},{:.6}\n", t as f64 / 1000.0, d));
+    }
+    out
+}
+
+/// Seed-aggregate statistics CSV: one row per (group, metric) with the
+/// sweep layer's canonical columns.
+pub fn sweep_stats_csv(rows: &[StatsRow]) -> String {
+    let mut out = String::from("group,metric,n_seeds,mean,ci_lo,ci_hi\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{:.6},{:.6},{:.6}\n",
+            r.group,
+            r.metric,
+            r.ci.n,
+            r.ci.mean,
+            r.ci.lo(),
+            r.ci.hi(),
+        ));
+    }
+    out
+}
+
+/// Multi-seed claim-verification CSV: paper target vs measured `mean ± CI`
+/// and the CI-bound verdict.
+pub fn claims_csv(rows: &[(&PaperClaim, Ci95, bool)]) -> String {
+    let mut out = String::from("claim_id,paper,n_seeds,mean,ci_lo,ci_hi,holds\n");
+    for (claim, ci, holds) in rows {
+        out.push_str(&format!(
+            "{},{:.3},{},{:.6},{:.6},{:.6},{}\n",
+            claim.id,
+            claim.paper,
+            ci.n,
+            ci.mean,
+            ci.lo(),
+            ci.hi(),
+            holds,
+        ));
     }
     out
 }
@@ -100,5 +140,31 @@ mod tests {
         let csv = delta_csv(&run());
         assert!(csv.contains("0.000,0.100000"));
         assert!(csv.contains("1.000,0.150000"));
+    }
+
+    #[test]
+    fn sweep_stats_csv_shape() {
+        let rows = vec![StatsRow {
+            group: "w0/dress".into(),
+            metric: "avg_wait_s".into(),
+            ci: Ci95 { n: 3, mean: 2.5, half: 0.5 },
+        }];
+        let csv = sweep_stats_csv(&rows);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "group,metric,n_seeds,mean,ci_lo,ci_hi");
+        assert_eq!(lines[1], "w0/dress,avg_wait_s,3,2.500000,2.000000,3.000000");
+    }
+
+    #[test]
+    fn claims_csv_shape() {
+        let claim = PaperClaim {
+            id: "FIG7.small-completion-change-pct".into(),
+            description: "test".into(),
+            paper: -27.6,
+            direction: -1,
+        };
+        let csv = claims_csv(&[(&claim, Ci95 { n: 4, mean: -20.0, half: 5.0 }, true)]);
+        assert!(csv.starts_with("claim_id,paper,n_seeds,mean,ci_lo,ci_hi,holds\n"));
+        assert!(csv.contains("FIG7.small-completion-change-pct,-27.600,4,-20.000000,-25.000000,-15.000000,true"));
     }
 }

@@ -1,8 +1,10 @@
-//! Per-figure renderers: turn [`RunResult`]s into the paper's plots.
+//! Per-figure renderers: turn [`RunResult`]s into the paper's plots, plus
+//! the sweep layer's confidence-interval whisker chart.
 
 use crate::metrics::JobMetrics;
 use crate::sim::{RunResult, TaskTrace};
 use crate::util::ascii_plot;
+use crate::util::stats::Ci95;
 
 fn job_labels(jobs: &[JobMetrics]) -> Vec<String> {
     jobs.iter().map(|j| format!("J{}", j.id)).collect()
@@ -50,6 +52,45 @@ pub fn fig_stacked_bars(title: &str, dress: &RunResult, baseline: &RunResult) ->
                 j.waiting_ms as f64 / 1000.0,
             ));
         }
+    }
+    out
+}
+
+/// Sweep aggregates: one whisker lane per labeled statistic — the 95% CI
+/// span (`─`), the mean (`*`), and the zero axis (`|`, `+` when inside
+/// the span).  All lanes share one scale that always includes zero, so
+/// "does the interval cross zero" is readable at a glance.
+pub fn fig_ci_bars(title: &str, rows: &[(String, Ci95)], width: usize) -> String {
+    let mut out = format!("── {title}\n");
+    if rows.is_empty() {
+        return out;
+    }
+    let mut lo = 0.0_f64;
+    let mut hi = 0.0_f64;
+    for (_, ci) in rows {
+        lo = lo.min(ci.lo());
+        hi = hi.max(ci.hi());
+    }
+    if hi - lo < 1e-9 {
+        hi = lo + 1.0;
+    }
+    let w = width.max(10);
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let col = |x: f64| (((x - lo) / (hi - lo)) * (w - 1) as f64).round() as usize;
+    for (label, ci) in rows {
+        let mut lane = vec![' '; w];
+        let (a, b) = (col(ci.lo()).min(w - 1), col(ci.hi()).min(w - 1));
+        for c in lane.iter_mut().take(b + 1).skip(a) {
+            *c = '─';
+        }
+        let zero = col(0.0).min(w - 1);
+        lane[zero] = if lane[zero] == '─' { '+' } else { '|' };
+        lane[col(ci.mean).min(w - 1)] = '*';
+        let lane: String = lane.into_iter().collect();
+        out.push_str(&format!(
+            "{label:<label_w$} {lane}  {:.1} ± {:.1} (n={})\n",
+            ci.mean, ci.half, ci.n
+        ));
     }
     out
 }
@@ -120,6 +161,24 @@ mod tests {
         let c = run(&[2_000], &[6_000]);
         let s = fig_stacked_bars("Fig 10", &d, &c);
         assert!(s.contains("J1  D") && s.contains("J1  C"));
+    }
+
+    #[test]
+    fn ci_bars_render_span_mean_and_zero_axis() {
+        let rows = vec![
+            ("FIG7".to_string(), Ci95 { n: 4, mean: -20.0, half: 5.0 }),
+            ("TAB2".to_string(), Ci95 { n: 4, mean: 1.0, half: 3.0 }),
+        ];
+        let s = fig_ci_bars("claim CIs", &rows, 40);
+        assert!(s.contains("FIG7") && s.contains("TAB2"));
+        assert!(s.contains('*') && s.contains('─'));
+        // TAB2's interval crosses zero, so its lane marks the axis inside
+        // the span; FIG7's lane keeps the bare axis marker.
+        assert!(s.contains('+') && s.contains('|'), "zero axis rendered:\n{s}");
+        assert!(s.contains("-20.0 ± 5.0 (n=4)"));
+        // Degenerate interval still renders (single-point span).
+        let s = fig_ci_bars("flat", &[("x".into(), Ci95 { n: 1, mean: 0.0, half: 0.0 })], 40);
+        assert!(s.contains('*'));
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! ASCII table rendering + the paper's Table II.
+//! ASCII table rendering + the paper's Table II + seed-aggregate
+//! statistics tables (`mean / ci_lo / ci_hi / n_seeds`).
 
 use crate::metrics::SchedulerSummary;
+use crate::util::stats::Ci95;
 
 /// Render rows as an aligned ASCII table. `header` defines column count.
 pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
@@ -44,6 +46,35 @@ pub fn table2(rows: &[SchedulerSummary]) -> String {
                 format!("{:.1}", s.median_waiting_s),
                 format!("{:.1}", s.avg_completion_s),
                 format!("{:.1}", s.median_completion_s),
+            ]
+        })
+        .collect();
+    render_table(&header, &body)
+}
+
+/// One row of a seed-aggregate statistics table: a metric for a group
+/// (e.g. scheduler × workload) summarized across seeds as a 95% CI.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsRow {
+    pub group: String,
+    pub metric: String,
+    pub ci: Ci95,
+}
+
+/// Render seed aggregates as an aligned table with the sweep layer's
+/// canonical statistics columns (`n_seeds`, `mean`, `ci_lo`, `ci_hi`).
+pub fn stats_table(rows: &[StatsRow]) -> String {
+    let header = ["Group", "Metric", "n_seeds", "mean", "ci_lo", "ci_hi"];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.group.clone(),
+                r.metric.clone(),
+                r.ci.n.to_string(),
+                format!("{:.3}", r.ci.mean),
+                format!("{:.3}", r.ci.lo()),
+                format!("{:.3}", r.ci.hi()),
             ]
         })
         .collect();
@@ -95,5 +126,25 @@ mod tests {
         let t = table2(&rows);
         assert!(t.contains("capacity") && t.contains("dress"));
         assert!(t.contains("1028.6") && t.contains("325.1"));
+    }
+
+    #[test]
+    fn stats_table_carries_ci_columns() {
+        let rows = vec![
+            StatsRow {
+                group: "spark/dress".into(),
+                metric: "makespan_s".into(),
+                ci: Ci95 { n: 5, mean: 120.5, half: 3.25 },
+            },
+            StatsRow {
+                group: "spark/capacity".into(),
+                metric: "makespan_s".into(),
+                ci: Ci95 { n: 5, mean: 119.75, half: 2.0 },
+            },
+        ];
+        let t = stats_table(&rows);
+        assert!(t.contains("n_seeds") && t.contains("ci_lo") && t.contains("ci_hi"));
+        assert!(t.contains("117.250") && t.contains("123.750"), "lo/hi rendered:\n{t}");
+        assert!(t.contains("spark/dress") && t.contains("| 5 "));
     }
 }

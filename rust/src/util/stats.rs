@@ -1,4 +1,7 @@
-//! Descriptive statistics for metrics summaries and the bench harness.
+//! Descriptive statistics for metrics summaries, the bench harness, and
+//! the sweep layer's claim verification: sample dispersion, Student-t 95%
+//! confidence intervals (table-interpolated critical values, zero deps),
+//! and paired per-seed deltas.
 
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -55,6 +58,105 @@ pub fn max(xs: &[f64]) -> f64 {
     } else {
         xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
+}
+
+/// Sample (n-1 denominator) standard deviation; 0.0 for fewer than two
+/// samples.  This is the dispersion estimate confidence intervals need —
+/// [`stddev`] above is the population form used by the bench summaries.
+pub fn sample_stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Standard error of the mean (sample stddev / sqrt(n)); 0.0 for n < 2.
+pub fn stderr(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    sample_stddev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Two-sided 95% Student-t critical value for `df` degrees of freedom.
+///
+/// Exact table for df 1..=30; linear interpolation in 1/df between the
+/// standard anchors (30, 40, 60, 120, ∞) above that — max error vs the
+/// true inverse CDF is 3e-4 over df 31..500, far below the precision any
+/// claim check needs.  Panics on df == 0 (a CI over one sample has no
+/// dispersion estimate; [`Ci95::of`] short-circuits that case).
+pub fn t_critical_95(df: usize) -> f64 {
+    assert!(df >= 1, "t_critical_95: df must be >= 1");
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if df <= TABLE.len() {
+        return TABLE[df - 1];
+    }
+    const ANCHORS: [(f64, f64); 5] =
+        [(30.0, 2.042), (40.0, 2.021), (60.0, 2.000), (120.0, 1.980), (f64::INFINITY, 1.960)];
+    let x = 1.0 / df as f64;
+    for w in ANCHORS.windows(2) {
+        let (d0, t0) = w[0];
+        let (d1, t1) = w[1];
+        let x0 = 1.0 / d0;
+        let x1 = if d1.is_finite() { 1.0 / d1 } else { 0.0 };
+        if (x1..=x0).contains(&x) {
+            return t1 + (x - x1) / (x0 - x1) * (t0 - t1);
+        }
+    }
+    1.960
+}
+
+/// Two-sided 95% Student-t confidence interval for a sample mean.
+///
+/// Degenerate inputs degrade to a zero-width interval at the point
+/// estimate: n < 2 has no dispersion estimate, and zero variance yields
+/// zero half-width naturally.  A zero-width interval makes CI-bound claim
+/// checks equivalent to point-estimate checks, which is the honest
+/// fallback for a single seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ci95 {
+    pub n: usize,
+    pub mean: f64,
+    /// Half-width `t_{0.975, n-1} * stderr`; 0.0 when n < 2.
+    pub half: f64,
+}
+
+impl Ci95 {
+    pub fn of(xs: &[f64]) -> Ci95 {
+        let n = xs.len();
+        let half = if n < 2 { 0.0 } else { t_critical_95(n - 1) * stderr(xs) };
+        Ci95 { n, mean: mean(xs), half }
+    }
+
+    pub fn lo(&self) -> f64 {
+        self.mean - self.half
+    }
+
+    pub fn hi(&self) -> f64 {
+        self.mean + self.half
+    }
+
+    pub fn contains(&self, x: f64) -> bool {
+        self.lo() <= x && x <= self.hi()
+    }
+}
+
+/// Per-seed paired deltas `a[i] - b[i]` (e.g. DRESS minus baseline on the
+/// identical seed).  Panics on length mismatch — pairing is positional.
+pub fn paired_deltas(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len(), "paired_deltas: length mismatch {} vs {}", a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// 95% CI of the mean paired delta `a[i] - b[i]` — the statistic behind
+/// "DRESS improves metric M by mean ± CI over seeds".
+pub fn paired_ci95(a: &[f64], b: &[f64]) -> Ci95 {
+    Ci95::of(&paired_deltas(a, b))
 }
 
 /// Relative change (b - a) / a as a percentage; 0 when a == 0.
@@ -149,5 +251,104 @@ mod tests {
         assert_eq!(s.mean, 2.0);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn sample_stddev_uses_n_minus_1() {
+        // Sum of squared deviations for [2,4,4,4,5,5,7,9] is 32; population
+        // variance 4 (tested above), sample variance 32/7.
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((sample_stddev(&xs) - (32.0_f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert_eq!(sample_stddev(&[5.0]), 0.0);
+        assert_eq!(sample_stddev(&[]), 0.0);
+        assert!((stderr(&xs) - (32.0_f64 / 7.0).sqrt() / 8.0_f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_table_exact_rows() {
+        assert_eq!(t_critical_95(1), 12.706);
+        assert_eq!(t_critical_95(2), 4.303);
+        assert_eq!(t_critical_95(10), 2.228);
+        assert_eq!(t_critical_95(29), 2.045);
+        assert_eq!(t_critical_95(30), 2.042);
+    }
+
+    #[test]
+    fn t_interpolation_is_monotone_and_bounded() {
+        let mut prev = t_critical_95(30);
+        for df in 31..500 {
+            let t = t_critical_95(df);
+            assert!(t <= prev + 1e-12, "df {df}: t {t} > prev {prev}");
+            assert!((1.960..=2.042).contains(&t), "df {df}: t {t} out of band");
+            prev = t;
+        }
+        // Standard-table anchors are reproduced exactly.
+        assert!((t_critical_95(40) - 2.021).abs() < 1e-12);
+        assert!((t_critical_95(60) - 2.000).abs() < 1e-12);
+        assert!((t_critical_95(120) - 1.980).abs() < 1e-12);
+        assert!((t_critical_95(1_000_000) - 1.960).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ci_width_matches_closed_form_for_consecutive_integers() {
+        // For xs = [0, 1, .., n-1] the sample variance is n(n+1)/12, so
+        // half = t(n-1) * sqrt((n+1)/12).  Checked for every n in 2..=30.
+        for n in 2..=30usize {
+            let xs: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let ci = Ci95::of(&xs);
+            let expect = t_critical_95(n - 1) * ((n as f64 + 1.0) / 12.0).sqrt();
+            assert!(
+                (ci.half - expect).abs() < 1e-9,
+                "n={n}: half {} != closed form {expect}",
+                ci.half
+            );
+            assert_eq!(ci.n, n);
+            assert!((ci.mean - (n as f64 - 1.0) / 2.0).abs() < 1e-12);
+            assert!(ci.contains(ci.mean));
+        }
+    }
+
+    #[test]
+    fn ci_known_value_n2() {
+        // xs = [0, 2]: mean 1, sample stddev sqrt(2), stderr 1 => half = t(1).
+        let ci = Ci95::of(&[0.0, 2.0]);
+        assert!((ci.half - 12.706).abs() < 1e-9);
+        assert_eq!(ci.mean, 1.0);
+        assert!((ci.lo() - (1.0 - 12.706)).abs() < 1e-9);
+        assert!((ci.hi() - (1.0 + 12.706)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ci_degenerate_inputs_collapse_to_point() {
+        // n = 1: no dispersion estimate — zero-width interval at the point.
+        let one = Ci95::of(&[7.5]);
+        assert_eq!((one.n, one.mean, one.half), (1, 7.5, 0.0));
+        assert_eq!(one.lo(), one.hi());
+        // Zero variance: zero-width regardless of n.
+        let flat = Ci95::of(&[3.0; 12]);
+        assert_eq!((flat.mean, flat.half), (3.0, 0.0));
+        // Empty: zero everything (matches the other empty-input conventions).
+        let empty = Ci95::of(&[]);
+        assert_eq!((empty.n, empty.mean, empty.half), (0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn paired_deltas_and_ci() {
+        let dress = [10.0, 12.0, 11.0];
+        let base = [14.0, 15.0, 16.0];
+        let d = paired_deltas(&dress, &base);
+        assert_eq!(d, vec![-4.0, -3.0, -5.0]);
+        let ci = paired_ci95(&dress, &base);
+        assert_eq!(ci.n, 3);
+        assert!((ci.mean + 4.0).abs() < 1e-12);
+        // sample stddev of [-4,-3,-5] is 1, stderr 1/sqrt(3), t(2)=4.303.
+        assert!((ci.half - 4.303 / 3.0_f64.sqrt()).abs() < 1e-9);
+        assert!(ci.hi() < 0.0, "all-negative deltas with small spread stay negative");
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn paired_deltas_reject_mismatch() {
+        paired_deltas(&[1.0], &[1.0, 2.0]);
     }
 }

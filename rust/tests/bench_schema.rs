@@ -39,7 +39,11 @@ fn bench_engine_json_parses_and_has_required_sections() {
         }
     }
 
-    // The sweep section added with the parallel executor.
+    // The sweep section added with the parallel executor, extended by the
+    // shard/statistics layer: every worker row carries the wall-time
+    // statistics columns (mean ± 95% CI over `passes` repeats), and the
+    // section pins the fingerprint of the grid the numbers were measured
+    // on.
     let sweep = root.get("sweep").expect("missing `sweep` section");
     assert_eq!(
         sweep.get("bench").and_then(|v| v.as_str()),
@@ -47,26 +51,62 @@ fn bench_engine_json_parses_and_has_required_sections() {
         "`sweep.bench` tag"
     );
     assert!(sweep.get("grid").is_some(), "missing `sweep.grid`");
+    assert!(
+        sweep.get("grid_fingerprint").is_some(),
+        "missing `sweep.grid_fingerprint` (regenerate with `cargo bench --bench perf_sweep`)"
+    );
     let sweep_runs = sweep
         .get("runs")
         .and_then(|v| v.as_arr())
         .expect("`sweep.runs` must be an array");
+    assert!(!sweep_runs.is_empty(), "`sweep.runs` must not be empty");
     for row in sweep_runs {
-        for key in ["workers", "runs", "runs_per_sec"] {
+        for key in [
+            "workers",
+            "runs",
+            "passes",
+            "wall_ms_mean",
+            "wall_ms_ci_lo",
+            "wall_ms_ci_hi",
+            "runs_per_sec",
+            "speedup_vs_serial",
+        ] {
             assert!(row.get(key).is_some(), "sweep row missing `{key}`: {row:?}");
         }
     }
 
-    // Placeholder files must say so; measured files must not.
-    let pending = root.get("status").map(|s| {
-        s.as_str().map(|t| t.contains("pending")).unwrap_or(false)
-    });
-    if pending != Some(true) {
+    let is_pending = |section: &dress::util::json::Json| {
+        section
+            .get("status")
+            .map(|s| s.as_str().map(|t| t.contains("pending")).unwrap_or(false))
+            .unwrap_or(false)
+    };
+
+    // Placeholder sections must say so; measured sections must hold real
+    // numbers AND a fingerprint matching the *current* grid definition —
+    // numbers measured on a since-edited grid are silent drift and must
+    // fail here until the bench is re-run.
+    if !is_pending(&root) {
         for row in runs {
             assert!(
                 !row.get("events").unwrap().is_null(),
                 "measured file with null events: {row:?}"
             );
         }
+    }
+    if !is_pending(sweep) {
+        for row in sweep_runs {
+            assert!(
+                !row.get("wall_ms_mean").unwrap().is_null(),
+                "measured sweep section with null wall_ms_mean: {row:?}"
+            );
+        }
+        let current = dress::expt::shard::grid_fingerprint(&dress::expt::sweep::bench_grid());
+        assert_eq!(
+            sweep.get("grid_fingerprint").and_then(|v| v.as_str()),
+            Some(current.as_str()),
+            "sweep numbers were measured on a different SweepGrid definition than the current \
+             `expt::sweep::bench_grid()` — regenerate with `cargo bench --bench perf_sweep`"
+        );
     }
 }

@@ -17,8 +17,13 @@
 //! golden reference, derived from the same spec the seed implemented.
 
 use dress::config::{ExperimentConfig, SchedKind};
-use dress::expt::sweep::{run_sweep, SweepGrid, SweepWorkload};
+use dress::expt::shard::{
+    merge_shards, render_sweep_report, run_shard, shard_from_json, shard_to_json, CellSummary,
+    ShardSpec, SweepMeta, SweepMode,
+};
+use dress::expt::sweep::{paper_grid, run_sweep, SweepGrid, SweepWorkload};
 use dress::sim::{run_experiment_with, EngineOptions, QueueKind, RunResult};
+use dress::util::json::Json;
 use dress::workload::{congested_burst, generate, WorkloadMix};
 
 const KINDS: [SchedKind; 4] =
@@ -181,6 +186,87 @@ fn sweep_parallel_output_identical_to_serial() {
                 "cell {i}: parallel sweep (workers={workers}) diverged from serial"
             );
         }
+    }
+}
+
+/// Shard every cell of `grid` into `n` partitions (each run on 2 worker
+/// threads), round-trip every shard through its JSON serialization, and
+/// merge — returning what a downstream consumer actually sees.
+fn shard_roundtrip_merge(grid: &SweepGrid, meta: &SweepMeta, n: usize) -> Vec<CellSummary> {
+    let mut files = Vec::new();
+    for i in 0..n {
+        let spec = ShardSpec { index: i, count: n };
+        let cells = run_shard(grid, spec, 2);
+        // Serialize + reparse: the merge must survive the actual wire
+        // format, not just in-memory structs.
+        let text = shard_to_json(meta, spec, &cells).render();
+        files.push(shard_from_json(&Json::parse(&text).unwrap()).unwrap());
+    }
+    let (merged_meta, merged_cells) = merge_shards(files).expect("complete shard set merges");
+    assert_eq!(&merged_meta, meta, "merge must preserve grid meta");
+    merged_cells
+}
+
+#[test]
+fn shard_merge_bit_identical_to_unsharded_sweep_all_schedulers() {
+    // shard(N) + JSON round-trip + merge must equal the unsharded
+    // run_sweep cell-for-cell — per-job metrics included — for N in
+    // {2, 3}, on a grid covering all four schedulers; and the rendered
+    // report (tables + seed aggregates) must be byte-identical.
+    let grid = SweepGrid {
+        base: ExperimentConfig::default(),
+        seeds: vec![42, 43, 44],
+        scheds: KINDS.to_vec(),
+        workloads: vec![SweepWorkload::Generate {
+            n: 6,
+            mix: WorkloadMix::Mixed,
+            small_frac: 0.3,
+            arrival_ms: 2_000,
+        }],
+        opts: EngineOptions::default(),
+    };
+    let meta = SweepMeta::of(&grid, SweepMode::Grid);
+    let unsharded: Vec<CellSummary> = run_sweep(&grid, 1)
+        .iter()
+        .enumerate()
+        .map(|(i, r)| CellSummary::of(&grid, i, r))
+        .collect();
+    assert_eq!(unsharded.len(), 12);
+    let reference_report = render_sweep_report(&meta, &unsharded);
+    for n in [2, 3] {
+        let merged = shard_roundtrip_merge(&grid, &meta, n);
+        assert_eq!(merged, unsharded, "shard({n})+merge diverged from unsharded sweep");
+        assert_eq!(
+            render_sweep_report(&meta, &merged),
+            reference_report,
+            "shard({n})+merge report not byte-identical"
+        );
+    }
+}
+
+#[test]
+fn shard_merge_paper_claim_report_bit_identical() {
+    // The paper-claim grid (Figs 7/9 + Table II pairs): sharded execution
+    // must reproduce the claim-verification report — mean ± 95% CI rows,
+    // CI whisker chart, verdict line — byte-for-byte.
+    let grid = paper_grid(&[42, 43]);
+    let meta = SweepMeta::of(&grid, SweepMode::Paper);
+    let unsharded: Vec<CellSummary> = run_sweep(&grid, 1)
+        .iter()
+        .enumerate()
+        .map(|(i, r)| CellSummary::of(&grid, i, r))
+        .collect();
+    let reference_report = render_sweep_report(&meta, &unsharded);
+    assert!(reference_report.contains("paper claims (pass/fail on the 95% CI bound)"));
+    assert!(reference_report.contains("n=2"), "CI rows carry the seed count");
+    for n in [2, 3] {
+        let merged = shard_roundtrip_merge(&grid, &meta, n);
+        assert_eq!(merged, unsharded, "paper shard({n})+merge diverged");
+        assert_eq!(
+            render_sweep_report(&meta, &merged),
+            reference_report,
+            "paper shard({n})+merge claim report not byte-identical"
+        );
     }
 }
 

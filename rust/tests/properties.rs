@@ -306,3 +306,51 @@ fn release_curves_nonnegative_and_bounded() {
         },
     );
 }
+
+#[test]
+fn paired_delta_ci_sign_consistent_with_per_seed_deltas() {
+    use dress::util::stats;
+
+    forall(
+        "paired-delta CI sign-consistent with per-seed deltas",
+        300,
+        |rng| {
+            let n = 2 + rng.index(11); // 2..=12 seeds
+            let a: Vec<f64> = (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let deltas = stats::paired_deltas(a, b);
+            let ci = stats::paired_ci95(a, b);
+            let mean = stats::mean(&deltas);
+            let dmin = deltas.iter().copied().fold(f64::INFINITY, f64::min);
+            let dmax = deltas.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            if (ci.mean - mean).abs() > 1e-9 {
+                return Err(format!("CI mean {} != delta mean {mean}", ci.mean));
+            }
+            if !(ci.lo() <= ci.mean && ci.mean <= ci.hi()) {
+                return Err(format!("mean outside its own CI [{}, {}]", ci.lo(), ci.hi()));
+            }
+            if ci.mean < dmin - 1e-9 || ci.mean > dmax + 1e-9 {
+                return Err(format!("mean {} outside delta range [{dmin}, {dmax}]", ci.mean));
+            }
+            // Sign consistency: a CI strictly on one side of zero needs at
+            // least one per-seed delta on that side, and an all-one-sign
+            // delta set can never yield a CI concluding the opposite sign.
+            if ci.lo() > 0.0 && dmax <= 0.0 {
+                return Err("CI strictly positive but no positive delta".into());
+            }
+            if ci.hi() < 0.0 && dmin >= 0.0 {
+                return Err("CI strictly negative but no negative delta".into());
+            }
+            if deltas.iter().all(|d| *d > 0.0) && ci.hi() <= 0.0 {
+                return Err("all-positive deltas but CI upper bound <= 0".into());
+            }
+            if deltas.iter().all(|d| *d < 0.0) && ci.lo() >= 0.0 {
+                return Err("all-negative deltas but CI lower bound >= 0".into());
+            }
+            Ok(())
+        },
+    );
+}
