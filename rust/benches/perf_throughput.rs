@@ -69,6 +69,21 @@ fn main() {
                 "retained_transitions",
                 Json::Num(res.retained_transitions as f64),
             );
+            // Metric-sink retention: must be 0 under the counting preset
+            // (the bounded-memory guarantee this bench runs under), while
+            // the exact time-weighted utilization integers still report.
+            assert_eq!(res.util_history.len(), 0, "counting metric sink retained samples");
+            row.set(
+                "retained_util_samples",
+                Json::Num(res.util_history.len() as f64),
+            );
+            row.set("util_samples", Json::Num(res.util_recorded as f64));
+            row.set("util_area_ms", Json::Num(res.util.area_ms as f64));
+            row.set("util_span_ms", Json::Num(res.util.span_ms as f64));
+            row.set(
+                "mean_utilization_pct",
+                Json::Num((res.system.mean_utilization * 1000.0).round() / 10.0),
+            );
             runs.push(row);
             black_box(res);
         }
@@ -108,6 +123,7 @@ fn main() {
         Json::Str(format!("congested_burst(n, {ARRIVAL_MEAN_MS}, {SEED:#x})")),
     );
     root.set("trace_sink", Json::Str("counting".into()));
+    root.set("metric_sink", Json::Str("counting".into()));
     root.set(
         "speedup_indexed_vs_naive_1k",
         Json::Num((speedup * 100.0).round() / 100.0),

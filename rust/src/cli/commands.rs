@@ -16,6 +16,7 @@ USAGE:
   dress run   [--config file.toml] [--sched fifo|fair|capacity|dress]
               [--jobs N] [--platform mapreduce|spark|mixed]
               [--small-frac F] [--seed S] [--csv out-prefix]
+              [--metric-sink full|counting|ring:N|decimate:K]
               [--trace in.trace] [--export-trace out.trace]
   dress compare [--jobs N] [--platform mapreduce|spark|mixed] [--seed S]
   dress repro <fig1|fig2|fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table2|all>
@@ -24,6 +25,7 @@ USAGE:
   dress live  [--jobs N] [--workers W] [--sched dress|capacity] [--seed S]
   dress sweep [--seeds K] [--seed S] [--jobs W | --workers W] [--njobs N]
               [--platform mapreduce|spark|mixed|burst] [--small-frac F]
+              [--metric-sink full|counting|ring:N|decimate:K]
               [--paper] [--shard i/N] [--out shard.json]
               [--report report.txt] [--csv out-prefix]
   dress sweep-merge <shard.json...> [--report report.txt] [--csv out-prefix]
@@ -34,6 +36,9 @@ USAGE:
 counting trace sinks (O(active) memory).  --paper instead sweeps the
 DRESS-vs-Capacity pairs behind Figs 7/9 + Table II and reports each
 claim as mean ± 95% CI over seeds, judged on the CI bound.
+--metric-sink bounds what the per-tick utilization/δ streams retain
+(summary statistics are exact under every policy; the flag is part of
+the grid fingerprint, so all shards of a partition must agree on it).
 --shard i/N runs only grid cells with index % N == i and writes them to
 a JSON shard file (distribute N shards across machines); `sweep-merge`
 validates the shards' grid fingerprints, reassembles the full grid and
@@ -121,7 +126,11 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         cfg.cluster.slots_per_node,
         cfg.workload.seed
     );
-    let res = run_experiment(&cfg, specs);
+    let mut opts = crate::sim::EngineOptions::default();
+    if let Some(sink) = args.flag("metric-sink") {
+        opts.metrics = crate::sim::MetricSinkKind::parse(sink)?;
+    }
+    let res = crate::sim::run_experiment_with(&cfg, specs, opts);
     let header = ["Job", "Demand", "Waiting (s)", "Completion (s)"];
     let rows: Vec<Vec<String>> = res
         .jobs
@@ -148,13 +157,27 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         large.n,
         large.avg_completion_s
     );
-    if !res.delta_history.is_empty() {
-        let ds: Vec<f64> = res.delta_history.iter().map(|&(_, d)| d).collect();
+    print!("{}", report::fig_utilization("cluster utilization", &res.util_history, &res.util));
+    if res.delta_recorded > 0 {
+        // min/max/mean always come from the exact online accumulator —
+        // under ring/decimating retention the retained subset would
+        // understate the trajectory; the sparkline (when samples were
+        // kept) shows whatever the sink retained.
+        let spark = if res.delta_history.is_empty() {
+            String::new()
+        } else {
+            let ds: Vec<f64> = res.delta_history.iter().map(|&(_, d)| d).collect();
+            format!("{}  ", crate::util::ascii_plot::sparkline(&ds))
+        };
         println!(
-            "δ trajectory: {}  (min {:.2}, max {:.2})",
-            crate::util::ascii_plot::sparkline(&ds),
-            ds.iter().copied().fold(f64::INFINITY, f64::min),
-            ds.iter().copied().fold(0.0, f64::max)
+            "δ trajectory: {spark}{} samples (retained {})  min {:.2}, max {:.2}, \
+             time-weighted mean {:.2}, final {:.2}",
+            res.delta_recorded,
+            res.delta_history.len(),
+            res.delta.min,
+            res.delta.max,
+            res.delta.mean(),
+            res.delta.last
         );
     }
     if let Some(base) = args.flag("csv") {
@@ -162,6 +185,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             ("jobs", report::jobs_csv(&res)),
             ("trace", report::trace_csv(&res)),
             ("delta", report::delta_csv(&res)),
+            ("util", report::util_csv(&res)),
         ] {
             let path = format!("{base}.{suffix}.csv");
             std::fs::write(&path, text).map_err(|e| format!("write {path}: {e}"))?;
@@ -412,7 +436,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     let platform = args.flag_str("platform", "mixed");
     let seeds: Vec<u64> = (0..n_seeds as u64).map(|i| base_seed + i).collect();
 
-    let (grid, mode) = if args.switch("paper") {
+    let (mut grid, mode) = if args.switch("paper") {
         // Multi-seed claim verification: the Figs 7/9 + Table II pair grid.
         (sweep::paper_grid(&seeds), SweepMode::Paper)
     } else {
@@ -439,6 +463,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         };
         (grid, SweepMode::Grid)
     };
+    // Per-tick metric retention is part of the grid definition (and so of
+    // the fingerprint): shards of one partition must agree on it.
+    if let Some(sink) = args.flag("metric-sink") {
+        grid.opts.metrics = crate::sim::MetricSinkKind::parse(sink)?;
+    }
     let meta = SweepMeta::of(&grid, mode);
 
     if let Some(spec) = args.flag("shard") {
@@ -593,6 +622,30 @@ mod tests {
     #[test]
     fn sweep_rejects_zero_seeds() {
         assert_eq!(run_cli(&args("sweep --seeds 0")), 1);
+    }
+
+    #[test]
+    fn run_accepts_metric_sink_flag() {
+        assert_eq!(run_cli(&args("run --jobs 4 --sched dress --seed 3 --metric-sink counting")), 0);
+        assert_eq!(run_cli(&args("run --jobs 4 --sched dress --seed 3 --metric-sink ring:32")), 0);
+        assert_eq!(run_cli(&args("run --jobs 4 --metric-sink bogus")), 1);
+    }
+
+    #[test]
+    fn sweep_metric_sink_is_part_of_the_fingerprint() {
+        // Shards run with different metric retention describe different
+        // grid definitions and must refuse to merge.
+        let (a, b) = (tmp("msink-a.json"), tmp("msink-b.json"));
+        let base = "sweep --seeds 2 --njobs 3";
+        assert_eq!(
+            run_cli(&args(&format!("{base} --shard 0/2 --out {a} --metric-sink counting"))),
+            0
+        );
+        assert_eq!(
+            run_cli(&args(&format!("{base} --shard 1/2 --out {b} --metric-sink full"))),
+            0
+        );
+        assert_eq!(run_cli(&args(&format!("sweep-merge {a} {b}"))), 1);
     }
 
     #[test]

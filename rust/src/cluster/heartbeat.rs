@@ -92,20 +92,33 @@ impl HeartbeatLog {
         std::mem::take(&mut self.buf)
     }
 
-    /// Retained history (figures / validation only).  Complete and
-    /// chronological under full retention; empty under counting; the last
-    /// `cap` transitions (in rotation order) under ring retention.
-    pub fn history(&self) -> &[Transition] {
+    /// Retained history (figures / validation only), always in
+    /// chronological order: complete under full retention; empty under
+    /// counting; the last `cap` transitions under ring retention —
+    /// unrotated here, exactly like `TraceSink::finish`, so consumers
+    /// never see the ring's internal rotation.  Borrowed (no copy) except
+    /// in the ring arm, the only retention that needs materialization.
+    pub fn history(&self) -> std::borrow::Cow<'_, [Transition]> {
+        use std::borrow::Cow;
         match &self.history {
-            History::Full(h) => h,
-            History::Counting => &[],
-            History::Ring { buf, .. } => buf,
+            History::Full(h) => Cow::Borrowed(h.as_slice()),
+            History::Counting => Cow::Borrowed(&[]),
+            History::Ring { buf, head, .. } => {
+                let mut out = Vec::with_capacity(buf.len());
+                out.extend_from_slice(&buf[*head..]);
+                out.extend_from_slice(&buf[..*head]);
+                Cow::Owned(out)
+            }
         }
     }
 
-    /// Transitions currently retained in memory.
+    /// Transitions currently retained in memory (no copy).
     pub fn history_len(&self) -> usize {
-        self.history().len()
+        match &self.history {
+            History::Full(h) => h.len(),
+            History::Counting => 0,
+            History::Ring { buf, .. } => buf.len(),
+        }
     }
 
     /// Total transitions observed over the run, independent of retention.
@@ -165,9 +178,20 @@ mod tests {
         }
         assert_eq!(log.history_len(), 8);
         assert_eq!(log.recorded(), 50);
-        // The ring holds exactly the last 8 transitions (any rotation).
-        let mut times: Vec<Time> = log.history().iter().map(|t| t.time).collect();
-        times.sort_unstable();
+        // The ring holds exactly the last 8 transitions, already in
+        // chronological order — no sort: the rotation-order bug this
+        // guards against returned [48, 49, 42, 43, ...].
+        let times: Vec<Time> = log.history().iter().map(|t| t.time).collect();
         assert_eq!(times, (42..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ring_below_capacity_is_chronological_too() {
+        let mut log = HeartbeatLog::with_retention(SinkKind::Ring(8));
+        for i in 0..5 {
+            log.record(tr(i * 10, i as u32, ContainerState::Running));
+        }
+        let times: Vec<Time> = log.history().iter().map(|t| t.time).collect();
+        assert_eq!(times, vec![0, 10, 20, 30, 40]);
     }
 }

@@ -184,6 +184,11 @@ impl SweepMeta {
 /// so a JSON round-trip is exact and every derived statistic (averages,
 /// CIs, claim checks) is recomputed from identical inputs by identical
 /// code — the foundation of the byte-identical merge guarantee.
+///
+/// Utilization crosses the wire the same way: the exact integer terms of
+/// the time-weighted integral (`util_area_ms / util_span_ms / total`), not
+/// the derived fraction, so a merged report divides the identical integers
+/// a single-process run divides.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellSummary {
     pub index: usize,
@@ -194,6 +199,18 @@ pub struct CellSummary {
     pub sched_ticks: u64,
     pub failures: u32,
     pub tasks_recorded: u64,
+    /// Cluster capacity the utilization integers are relative to.
+    pub total_containers: u32,
+    /// Per-tick samples observed (sink-independent).
+    pub util_samples: u64,
+    /// `t_last − t_first` of the utilization sample stream.
+    pub util_span_ms: u64,
+    /// `Σ used·Δt` — container-milliseconds of occupancy.
+    pub util_area_ms: u64,
+    /// `Σ used` (unweighted fallback term).
+    pub util_sum_used: u64,
+    /// Max containers simultaneously busy.
+    pub util_peak: u32,
     pub jobs: Vec<JobMetrics>,
 }
 
@@ -209,8 +226,26 @@ impl CellSummary {
             sched_ticks: r.sched_ticks,
             failures: r.failures,
             tasks_recorded: r.tasks_recorded,
+            total_containers: r.util.total,
+            util_samples: r.util.samples,
+            util_span_ms: r.util.span_ms,
+            util_area_ms: r.util.area_ms,
+            util_sum_used: r.util.sum_used,
+            util_peak: r.util.peak_used,
             jobs: r.jobs.clone(),
         }
+    }
+
+    /// The exact utilization summary reassembled from the wire integers.
+    pub fn util(&self) -> crate::metrics::UtilSummary {
+        crate::metrics::UtilSummary::from_parts(
+            self.total_containers,
+            self.util_samples,
+            self.util_span_ms,
+            self.util_area_ms,
+            self.util_sum_used,
+            self.util_peak,
+        )
     }
 
     fn to_json(&self) -> Json {
@@ -223,6 +258,12 @@ impl CellSummary {
         o.set("sched_ticks", Json::Num(self.sched_ticks as f64));
         o.set("failures", Json::Num(self.failures as f64));
         o.set("tasks_recorded", Json::Num(self.tasks_recorded as f64));
+        o.set("total_containers", Json::Num(self.total_containers as f64));
+        o.set("util_samples", Json::Num(self.util_samples as f64));
+        o.set("util_span_ms", Json::Num(self.util_span_ms as f64));
+        o.set("util_area_ms", Json::Num(self.util_area_ms as f64));
+        o.set("util_sum_used", Json::Num(self.util_sum_used as f64));
+        o.set("util_peak", Json::Num(self.util_peak as f64));
         let jobs: Vec<Json> = self
             .jobs
             .iter()
@@ -264,6 +305,23 @@ impl CellSummary {
                 })
             })
             .collect::<Result<Vec<_>, String>>()?;
+        let total_containers = u64_field(v, "total_containers")? as u32;
+        let util_span_ms = u64_field(v, "util_span_ms")?;
+        let util_area_ms = u64_field(v, "util_area_ms")?;
+        let util_peak = u64_field(v, "util_peak")? as u32;
+        // The integral cannot exceed full occupancy over the whole span
+        // (u128: span·total overflows u64 for pathological inputs).
+        if util_peak > total_containers {
+            return Err(format!(
+                "util_peak {util_peak} exceeds total_containers {total_containers}"
+            ));
+        }
+        if util_area_ms as u128 > util_span_ms as u128 * total_containers as u128 {
+            return Err(format!(
+                "util_area_ms {util_area_ms} exceeds {util_span_ms}·{total_containers} \
+                 (occupancy above capacity)"
+            ));
+        }
         Ok(CellSummary {
             index: u64_field(v, "index")? as usize,
             seed: u64_field(v, "seed")?,
@@ -273,6 +331,12 @@ impl CellSummary {
             sched_ticks: u64_field(v, "sched_ticks")?,
             failures: u64_field(v, "failures")? as u32,
             tasks_recorded: u64_field(v, "tasks_recorded")?,
+            total_containers,
+            util_samples: u64_field(v, "util_samples")?,
+            util_span_ms,
+            util_area_ms,
+            util_sum_used: u64_field(v, "util_sum_used")?,
+            util_peak,
             jobs,
         })
     }
@@ -450,18 +514,20 @@ pub fn pair_comparisons(
         .collect()
 }
 
-/// Seed aggregates per (workload, scheduler): makespan and average
-/// waiting as 95% CIs across the seed axis.
+/// Seed aggregates per (workload, scheduler): makespan, average waiting
+/// and time-weighted utilization as 95% CIs across the seed axis.
 pub fn sweep_stat_rows(meta: &SweepMeta, cells: &[CellSummary]) -> Vec<StatsRow> {
     let mut rows = Vec::new();
     for (w, _) in meta.workloads.iter().enumerate() {
         for (k, sched) in meta.scheds.iter().enumerate() {
             let mut makespans = Vec::with_capacity(meta.seeds.len());
             let mut waits = Vec::with_capacity(meta.seeds.len());
+            let mut utils = Vec::with_capacity(meta.seeds.len());
             for s in 0..meta.seeds.len() {
                 let c = &cells[meta.index(w, k, s)];
                 makespans.push(c.makespan_ms as f64 / 1000.0);
                 waits.push(avg_wait_s(c));
+                utils.push(100.0 * c.util().mean_utilization());
             }
             let group = format!("w{w}/{sched}");
             rows.push(StatsRow {
@@ -469,7 +535,12 @@ pub fn sweep_stat_rows(meta: &SweepMeta, cells: &[CellSummary]) -> Vec<StatsRow>
                 metric: "makespan_s".into(),
                 ci: Ci95::of(&makespans),
             });
-            rows.push(StatsRow { group, metric: "avg_wait_s".into(), ci: Ci95::of(&waits) });
+            rows.push(StatsRow {
+                group: group.clone(),
+                metric: "avg_wait_s".into(),
+                ci: Ci95::of(&waits),
+            });
+            rows.push(StatsRow { group, metric: "util_pct".into(), ci: Ci95::of(&utils) });
         }
     }
     rows
@@ -512,7 +583,9 @@ pub fn render_sweep_report(meta: &SweepMeta, cells: &[CellSummary]) -> String {
     }
     out.push('\n');
 
-    let header = ["Cell", "Wkld", "Seed", "Scheduler", "Makespan (s)", "Avg wait (s)", "Events"];
+    let header = [
+        "Cell", "Wkld", "Seed", "Scheduler", "Makespan (s)", "Avg wait (s)", "Util (%)", "Events",
+    ];
     let rows: Vec<Vec<String>> = cells
         .iter()
         .map(|c| {
@@ -524,6 +597,7 @@ pub fn render_sweep_report(meta: &SweepMeta, cells: &[CellSummary]) -> String {
                 c.scheduler.clone(),
                 format!("{:.1}", c.makespan_ms as f64 / 1000.0),
                 format!("{:.1}", avg_wait_s(c)),
+                format!("{:.1}", 100.0 * c.util().mean_utilization()),
                 c.events.to_string(),
             ]
         })
@@ -726,9 +800,40 @@ mod tests {
         assert!(report.contains("grid fingerprint"));
         assert!(report.contains("n_seeds") && report.contains("ci_lo"));
         assert!(report.contains("w0/fifo") && report.contains("w0/dress"));
+        assert!(report.contains("Util (%)") && report.contains("util_pct"));
         assert!(!report.contains("paper claims"), "grid mode has no claim section");
         let rows = sweep_stat_rows(&meta, &cells);
-        assert_eq!(rows.len(), 4, "2 scheds x 2 metrics");
+        assert_eq!(rows.len(), 6, "2 scheds x 3 metrics");
         assert!(rows.iter().all(|r| r.ci.n == 3));
+    }
+
+    #[test]
+    fn cell_summary_carries_exact_utilization_integers() {
+        // The wire format carries the integral's integer terms, not the
+        // derived fraction — a reassembled summary divides the same
+        // integers the originating run divided (exact, no tolerance).
+        let g = tiny_grid(vec![5]);
+        let (cfg, specs) = g.cell(1); // dress cell
+        let r = crate::sim::run_experiment_with(&cfg, specs, g.opts);
+        let cell = CellSummary::of(&g, 1, &r);
+        assert_eq!(cell.total_containers, 8);
+        assert!(cell.util_samples > 0 && cell.util_span_ms > 0);
+        assert!(cell.util_peak <= cell.total_containers);
+        assert_eq!(cell.util(), crate::metrics::UtilSummary::from_parts(
+            r.util.total, r.util.samples, r.util.span_ms, r.util.area_ms,
+            r.util.sum_used, r.util.peak_used,
+        ));
+        assert_eq!(
+            cell.util().mean_utilization().to_bits(),
+            r.system.mean_utilization.to_bits(),
+            "wire roundtrip must preserve the utilization bit-for-bit"
+        );
+        // Validation rejects impossible occupancy integers.
+        let mut bad = cell.to_json();
+        bad.set("util_peak", Json::Num((cell.total_containers + 1) as f64));
+        assert!(CellSummary::from_json(&bad).unwrap_err().contains("util_peak"));
+        let mut bad = cell.to_json();
+        bad.set("util_area_ms", Json::Num(1e15));
+        assert!(CellSummary::from_json(&bad).unwrap_err().contains("capacity"));
     }
 }

@@ -299,6 +299,11 @@ mod tests {
             assert_eq!(a.events, b.events);
             assert_eq!(a.trace.tasks, b.trace.tasks);
             assert_eq!(a.delta_history, b.delta_history);
+            assert_eq!(a.util, b.util, "utilization integers must be thread-invariant");
+            assert_eq!(
+                a.system.mean_utilization.to_bits(),
+                b.system.mean_utilization.to_bits()
+            );
         }
     }
 

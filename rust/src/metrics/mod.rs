@@ -40,6 +40,161 @@ impl JobMetrics {
     }
 }
 
+/// Exact integer summary of the per-tick utilization stream, accumulated
+/// online so the engine never has to retain the `(time, used)` samples.
+///
+/// `mean_utilization` is **time-weighted integration** over sample
+/// intervals: `Σ usedᵢ·(tᵢ₊₁ − tᵢ) / (total · (t_last − t_first))` — each
+/// sample's occupancy held until the next sample, the step-function
+/// integral of what the cluster actually did.  The seed computed an
+/// unweighted mean over tick samples instead, which over-weights whatever
+/// regime happens to be sampled densely (uneven tick spacing arises
+/// whenever the final tick lands early).  All terms are integers; the
+/// single final division is the only float op, so Full and Counting
+/// retention produce bit-identical results by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct UtilSummary {
+    /// Cluster capacity the fractions are relative to.
+    pub total: u32,
+    /// Samples observed (independent of sink retention).
+    pub samples: u64,
+    /// `t_last − t_first` over the sample stream.
+    pub span_ms: u64,
+    /// `Σ usedᵢ · (tᵢ₊₁ − tᵢ)` — container-milliseconds of occupancy.
+    pub area_ms: u64,
+    /// `Σ usedᵢ` — for the unweighted fallback when `span_ms == 0`.
+    pub sum_used: u64,
+    /// Max `usedᵢ` observed.
+    pub peak_used: u32,
+    /// Accumulation state: (first sample time, last sample value).
+    first_last: (Time, u64),
+}
+
+impl UtilSummary {
+    /// Start an empty accumulator for a cluster of `total` containers.
+    pub fn new(total: u32) -> UtilSummary {
+        UtilSummary { total, ..Default::default() }
+    }
+
+    /// Rebuild a summary from its serialized integer fields (the shard
+    /// wire format).  The accumulation state is not carried — a rebuilt
+    /// summary answers [`Self::mean_utilization`] but cannot be pushed to.
+    pub fn from_parts(
+        total: u32,
+        samples: u64,
+        span_ms: u64,
+        area_ms: u64,
+        sum_used: u64,
+        peak_used: u32,
+    ) -> UtilSummary {
+        UtilSummary { total, samples, span_ms, area_ms, sum_used, peak_used, first_last: (0, 0) }
+    }
+
+    /// Feed one per-tick sample.  Times must be non-decreasing — enforced
+    /// with a hard assert: in release builds an out-of-order push would
+    /// otherwise wrap `t − t_last` and silently corrupt the exact
+    /// integral this type exists to guarantee.
+    pub fn push(&mut self, t: Time, used: u32) {
+        if self.samples > 0 {
+            let t0 = self.first_ms();
+            assert!(t >= t0 + self.span_ms, "utilization samples out of order");
+            let dt = t - (t0 + self.span_ms);
+            self.area_ms += self.last_used() as u64 * dt;
+            self.span_ms = t - t0;
+        } else {
+            self.first_last = (t, 0);
+        }
+        self.first_last.1 = used as u64;
+        self.samples += 1;
+        self.sum_used += used as u64;
+        self.peak_used = self.peak_used.max(used);
+    }
+
+    /// Summarize a retained sample slice in one pass (tests, reports).
+    pub fn from_samples(samples: &[(Time, u32)], total: u32) -> UtilSummary {
+        let mut acc = UtilSummary::new(total);
+        for &(t, used) in samples {
+            acc.push(t, used);
+        }
+        acc
+    }
+
+    /// Time of the first sample (0 when empty).
+    pub fn first_ms(&self) -> Time {
+        self.first_last.0
+    }
+
+    /// Most recent sample value (0 when empty).
+    pub fn last_used(&self) -> u32 {
+        self.first_last.1 as u32
+    }
+
+    /// Time-weighted mean busy fraction in [0, 1].  A single sample (or a
+    /// zero-length span) has no interval to weight, so it degrades to the
+    /// unweighted mean; an empty stream is 0.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.samples == 0 || self.total == 0 {
+            return 0.0;
+        }
+        if self.span_ms == 0 {
+            return self.sum_used as f64 / (self.samples as f64 * self.total as f64);
+        }
+        self.area_ms as f64 / (self.span_ms as f64 * self.total as f64)
+    }
+}
+
+/// Exact online summary of the DRESS δ stream: min/max/last plus a
+/// time-weighted mean, accumulated the same way as [`UtilSummary`] so the
+/// CLI and reports can describe the δ trajectory without any retained
+/// samples.  δ is a float, but the accumulation order is identical under
+/// every sink, so Full and Counting runs report bit-identical values.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DeltaSummary {
+    pub samples: u64,
+    pub span_ms: u64,
+    /// `Σ δᵢ · (tᵢ₊₁ − tᵢ)`.
+    area: f64,
+    /// `Σ δᵢ` (unweighted fallback).
+    sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub last: f64,
+    first_ms: Time,
+}
+
+impl DeltaSummary {
+    /// Feed one per-tick δ sample.  Times must be non-decreasing (hard
+    /// assert — see [`UtilSummary::push`]).
+    pub fn push(&mut self, t: Time, delta: f64) {
+        if self.samples > 0 {
+            assert!(t >= self.first_ms + self.span_ms, "delta samples out of order");
+            let dt = t - (self.first_ms + self.span_ms);
+            self.area += self.last * dt as f64;
+            self.span_ms = t - self.first_ms;
+            self.min = self.min.min(delta);
+            self.max = self.max.max(delta);
+        } else {
+            self.first_ms = t;
+            self.min = delta;
+            self.max = delta;
+        }
+        self.last = delta;
+        self.samples += 1;
+        self.sum += delta;
+    }
+
+    /// Time-weighted mean δ (unweighted for a zero-length span; 0 empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples == 0 {
+            return 0.0;
+        }
+        if self.span_ms == 0 {
+            return self.sum / self.samples as f64;
+        }
+        self.area / self.span_ms as f64
+    }
+}
+
 /// System-level metrics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemMetrics {
@@ -50,12 +205,13 @@ pub struct SystemMetrics {
     pub median_waiting_ms: f64,
     pub avg_completion_ms: f64,
     pub median_completion_ms: f64,
-    /// Mean fraction of containers busy across tick samples.
+    /// Time-weighted fraction of containers busy over the tick-sample
+    /// span (see [`UtilSummary::mean_utilization`]).
     pub mean_utilization: f64,
 }
 
 impl SystemMetrics {
-    pub fn of(jobs: &[JobMetrics], util: &[(Time, u32)], total_containers: u32) -> SystemMetrics {
+    pub fn of(jobs: &[JobMetrics], util: &UtilSummary) -> SystemMetrics {
         let first_submit = jobs.iter().map(|j| j.submit_ms).min().unwrap_or(0);
         let last_finish = jobs
             .iter()
@@ -64,17 +220,13 @@ impl SystemMetrics {
             .unwrap_or(0);
         let w: Vec<f64> = jobs.iter().map(|j| j.waiting_ms as f64).collect();
         let c: Vec<f64> = jobs.iter().map(|j| j.completion_ms as f64).collect();
-        let u: Vec<f64> = util
-            .iter()
-            .map(|&(_, used)| used as f64 / total_containers.max(1) as f64)
-            .collect();
         SystemMetrics {
             makespan_ms: last_finish - first_submit,
             avg_waiting_ms: stats::mean(&w),
             median_waiting_ms: stats::median(&w),
             avg_completion_ms: stats::mean(&c),
             median_completion_ms: stats::median(&c),
-            mean_utilization: stats::mean(&u),
+            mean_utilization: util.mean_utilization(),
         }
     }
 }
@@ -97,23 +249,85 @@ mod tests {
     #[test]
     fn makespan_spans_first_submit_to_last_finish() {
         let jobs = [jm(1, 0, 1_000, 10_000), jm(2, 5_000, 2_000, 20_000)];
-        let m = SystemMetrics::of(&jobs, &[], 10);
+        let m = SystemMetrics::of(&jobs, &UtilSummary::from_samples(&[], 10));
         assert_eq!(m.makespan_ms, 25_000);
         assert_eq!(m.avg_waiting_ms, 1_500.0);
         assert_eq!(m.avg_completion_ms, 15_000.0);
     }
 
     #[test]
-    fn utilization_mean() {
+    fn utilization_is_time_weighted() {
+        // Even 1 s intervals: 5 busy for [0, 1s), 10 busy for [1s, 2s) —
+        // the step-function integral is (5·1000 + 10·1000) / (10·2000).
         let jobs = [jm(1, 0, 0, 1_000)];
-        let util = [(0, 5), (1_000, 10), (2_000, 0)];
-        let m = SystemMetrics::of(&jobs, &util, 10);
-        assert!((m.mean_utilization - 0.5).abs() < 1e-12);
+        let util = UtilSummary::from_samples(&[(0, 5), (1_000, 10), (2_000, 0)], 10);
+        assert_eq!(util.area_ms, 15_000);
+        assert_eq!(util.span_ms, 2_000);
+        assert_eq!(util.peak_used, 10);
+        let m = SystemMetrics::of(&jobs, &util);
+        assert!((m.mean_utilization - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uneven_intervals_diverge_from_unweighted_mean() {
+        // The satellite-bug witness: 10 busy for a short 100 ms burst,
+        // idle for the following 900 ms.  The unweighted per-sample mean
+        // said (1.0 + 0.0 + 0.0) / 3 ≈ 0.333 — counting the idle tail
+        // once despite it lasting 9× the busy head.  The time-weighted
+        // integral is 10·100 / (10·1000) = 0.1.
+        let samples = [(0, 10), (100, 0), (1_000, 0)];
+        let util = UtilSummary::from_samples(&samples, 10);
+        assert_eq!(util.area_ms, 1_000);
+        assert_eq!(util.span_ms, 1_000);
+        assert!((util.mean_utilization() - 0.1).abs() < 1e-12);
+        let unweighted: f64 = samples.iter().map(|&(_, u)| u as f64 / 10.0).sum::<f64>() / 3.0;
+        assert!((unweighted - 1.0 / 3.0).abs() < 1e-12);
+        assert!((util.mean_utilization() - unweighted).abs() > 0.2, "fix is observable");
+    }
+
+    #[test]
+    fn util_summary_incremental_equals_batch_and_degenerates() {
+        let samples = [(500, 3), (1_500, 7), (1_700, 2), (9_000, 0)];
+        let mut inc = UtilSummary::new(8);
+        for &(t, u) in &samples {
+            inc.push(t, u);
+        }
+        assert_eq!(inc, UtilSummary::from_samples(&samples, 8));
+        assert_eq!(inc.samples, 4);
+        assert_eq!(inc.sum_used, 12);
+        assert_eq!(inc.last_used(), 0);
+        assert_eq!(inc.first_ms(), 500);
+        // Single sample: no interval to weight — unweighted fallback.
+        let one = UtilSummary::from_samples(&[(42, 4)], 8);
+        assert_eq!(one.span_ms, 0);
+        assert!((one.mean_utilization() - 0.5).abs() < 1e-12);
+        // Empty stream.
+        assert_eq!(UtilSummary::from_samples(&[], 8).mean_utilization(), 0.0);
+        // Wire-format roundtrip answers the same mean.
+        let wire = UtilSummary::from_parts(
+            inc.total, inc.samples, inc.span_ms, inc.area_ms, inc.sum_used, inc.peak_used,
+        );
+        assert_eq!(wire.mean_utilization(), inc.mean_utilization());
+    }
+
+    #[test]
+    fn delta_summary_tracks_stream_shape() {
+        let mut d = DeltaSummary::default();
+        assert_eq!(d.mean(), 0.0);
+        d.push(0, 0.10);
+        d.push(1_000, 0.30);
+        d.push(3_000, 0.20);
+        assert_eq!(d.samples, 3);
+        assert_eq!(d.span_ms, 3_000);
+        assert!((d.min - 0.10).abs() < 1e-12 && (d.max - 0.30).abs() < 1e-12);
+        assert!((d.last - 0.20).abs() < 1e-12);
+        // Time-weighted: 0.10 for 1 s, 0.30 for 2 s over a 3 s span.
+        assert!((d.mean() - (0.10 * 1_000.0 + 0.30 * 2_000.0) / 3_000.0).abs() < 1e-12);
     }
 
     #[test]
     fn empty_jobs_zero_metrics() {
-        let m = SystemMetrics::of(&[], &[], 10);
+        let m = SystemMetrics::of(&[], &UtilSummary::from_samples(&[], 10));
         assert_eq!(m.makespan_ms, 0);
         assert_eq!(m.avg_waiting_ms, 0.0);
     }

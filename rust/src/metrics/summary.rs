@@ -125,7 +125,7 @@ mod tests {
     #[test]
     fn summary_converts_to_seconds() {
         let jobs = [jm(1, 2, 1_000, 3_000)];
-        let sys = SystemMetrics::of(&jobs, &[], 10);
+        let sys = SystemMetrics::of(&jobs, &crate::metrics::UtilSummary::from_samples(&[], 10));
         let s = SchedulerSummary::of("dress", &sys);
         assert_eq!(s.avg_waiting_s, 1.0);
         assert_eq!(s.avg_completion_s, 3.0);

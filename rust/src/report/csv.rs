@@ -41,11 +41,31 @@ pub fn trace_csv(run: &RunResult) -> String {
     out
 }
 
-/// δ trajectory CSV (DRESS only; empty body for baselines).
+/// δ trajectory CSV (DRESS only; empty body for baselines).  Rows cover
+/// the *retained* samples — downsampled under ring/decimating metric
+/// sinks, complete under full.
 pub fn delta_csv(run: &RunResult) -> String {
     let mut out = String::from("time_s,delta\n");
     for &(t, d) in &run.delta_history {
         out.push_str(&format!("{:.3},{:.6}\n", t as f64 / 1000.0, d));
+    }
+    out
+}
+
+/// Per-tick utilization CSV over the retained samples (downsampled under
+/// ring/decimating metric sinks; empty body under counting — use the
+/// exact `RunResult::util` summary instead).
+pub fn util_csv(run: &RunResult) -> String {
+    let total = run.util.total.max(1);
+    let mut out = String::from("time_s,used,total,busy_frac\n");
+    for &(t, used) in &run.util_history {
+        out.push_str(&format!(
+            "{:.3},{},{},{:.6}\n",
+            t as f64 / 1000.0,
+            used,
+            total,
+            used as f64 / total as f64,
+        ));
     }
     out
 }
@@ -90,7 +110,7 @@ pub fn claims_csv(rows: &[(&PaperClaim, Ci95, bool)]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::metrics::{JobMetrics, SystemMetrics};
+    use crate::metrics::{JobMetrics, SystemMetrics, UtilSummary};
     use crate::sim::{TaskTrace, TraceRecorder};
 
     fn run() -> RunResult {
@@ -102,7 +122,9 @@ mod tests {
             completion_ms: 2_500,
             execution_ms: 2_000,
         }];
-        let system = SystemMetrics::of(&jobs, &[], 10);
+        let util_history = vec![(0u64, 5u32), (1_000, 10)];
+        let util = UtilSummary::from_samples(&util_history, 10);
+        let system = SystemMetrics::of(&jobs, &util);
         let mut trace = TraceRecorder::new();
         trace.record(TaskTrace { job: 1, phase: 0, task: 0, granted: 900, start: 1_500, finish: 3_500 });
         RunResult {
@@ -111,6 +133,11 @@ mod tests {
             system,
             trace,
             delta_history: vec![(0, 0.1), (1_000, 0.15)],
+            util_history,
+            util,
+            delta: Default::default(),
+            util_recorded: 2,
+            delta_recorded: 2,
             failures: 0,
             events: 0,
             sched_ticks: 0,
@@ -140,6 +167,15 @@ mod tests {
         let csv = delta_csv(&run());
         assert!(csv.contains("0.000,0.100000"));
         assert!(csv.contains("1.000,0.150000"));
+    }
+
+    #[test]
+    fn util_csv_shape() {
+        let csv = util_csv(&run());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "time_s,used,total,busy_frac");
+        assert_eq!(lines[1], "0.000,5,10,0.500000");
+        assert_eq!(lines[2], "1.000,10,10,1.000000");
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! Per-figure renderers: turn [`RunResult`]s into the paper's plots, plus
 //! the sweep layer's confidence-interval whisker chart.
 
-use crate::metrics::JobMetrics;
+use crate::metrics::{JobMetrics, UtilSummary};
 use crate::sim::{RunResult, TaskTrace};
 use crate::util::ascii_plot;
 use crate::util::stats::Ci95;
+use crate::util::Time;
 
 fn job_labels(jobs: &[JobMetrics]) -> Vec<String> {
     jobs.iter().map(|j| format!("J{}", j.id)).collect()
@@ -95,6 +96,37 @@ pub fn fig_ci_bars(title: &str, rows: &[(String, Ci95)], width: usize) -> String
     out
 }
 
+/// Cluster utilization over time: sparkline of the retained per-tick
+/// samples plus the exact summary line.  Under `Ring`/`Decimate` metric
+/// retention the sparkline shows the downsampled stream while the summary
+/// numbers stay exact (they come from the online accumulator); under
+/// `Full` both views describe the complete stream; under `Counting` only
+/// the summary line renders.
+pub fn fig_utilization(title: &str, samples: &[(Time, u32)], util: &UtilSummary) -> String {
+    let mut out = format!("── {title}\n");
+    if !samples.is_empty() {
+        let fracs: Vec<f64> = samples
+            .iter()
+            .map(|&(_, used)| used as f64 / util.total.max(1) as f64)
+            .collect();
+        out.push_str(&format!(
+            "    {}  ({} of {} samples retained)\n",
+            ascii_plot::sparkline(&fracs),
+            samples.len(),
+            util.samples,
+        ));
+    }
+    out.push_str(&format!(
+        "    time-weighted mean {:.1}% | peak {}/{} containers | span {:.1}s ({} ticks)\n",
+        100.0 * util.mean_utilization(),
+        util.peak_used,
+        util.total,
+        util.span_ms as f64 / 1000.0,
+        util.samples,
+    ));
+    out
+}
+
 /// Figs 2-4: per-task trace of one job.
 pub fn fig_trace(title: &str, tasks: &[TaskTrace]) -> String {
     let rows: Vec<(String, f64, f64)> = tasks
@@ -130,13 +162,18 @@ mod tests {
                 execution_ms: c - w,
             })
             .collect();
-        let system = SystemMetrics::of(&jobs, &[], 10);
+        let system = SystemMetrics::of(&jobs, &UtilSummary::from_samples(&[], 10));
         RunResult {
             scheduler: "x".into(),
             jobs,
             system,
             trace: TraceRecorder::new(),
             delta_history: vec![],
+            util_history: vec![],
+            util: UtilSummary::from_samples(&[], 10),
+            delta: Default::default(),
+            util_recorded: 0,
+            delta_recorded: 0,
             failures: 0,
             events: 0,
             sched_ticks: 0,
@@ -179,6 +216,20 @@ mod tests {
         // Degenerate interval still renders (single-point span).
         let s = fig_ci_bars("flat", &[("x".into(), Ci95 { n: 1, mean: 0.0, half: 0.0 })], 40);
         assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn utilization_figure_renders_sparkline_and_exact_summary() {
+        let samples = [(0u64, 2u32), (1_000, 8), (2_000, 10), (3_000, 4)];
+        let util = UtilSummary::from_samples(&samples, 10);
+        let s = fig_utilization("utilization", &samples, &util);
+        assert!(s.contains("4 of 4 samples retained"));
+        assert!(s.contains("peak 10/10"));
+        // area = 2·1000 + 8·1000 + 10·1000 = 20000; span 3000 → 66.7%.
+        assert!(s.contains("66.7%"), "summary line:\n{s}");
+        // Counting retention: no retained samples — summary line only.
+        let empty = fig_utilization("utilization", &[], &util);
+        assert!(!empty.contains("retained") && empty.contains("66.7%"));
     }
 
     #[test]

@@ -7,8 +7,9 @@ pub mod figures;
 pub mod table;
 
 pub use compare::{ci_holds, comparison_row, comparison_row_ci, PaperClaim};
-pub use csv::{claims_csv, delta_csv, jobs_csv, sweep_stats_csv, trace_csv};
+pub use csv::{claims_csv, delta_csv, jobs_csv, sweep_stats_csv, trace_csv, util_csv};
 pub use figures::{
-    fig_ci_bars, fig_completion_bars, fig_stacked_bars, fig_trace, fig_waiting_bars,
+    fig_ci_bars, fig_completion_bars, fig_stacked_bars, fig_trace, fig_utilization,
+    fig_waiting_bars,
 };
 pub use table::{render_table, stats_table, table2, StatsRow};

@@ -43,8 +43,6 @@ pub struct DressScheduler {
     pub freeze_delta: bool,
     /// Ablation: ignore the release estimator (F₁ = F₂ = 0 in Algorithm 3).
     pub disable_estimator: bool,
-    /// δ history for figures/ablation (time, δ).
-    pub delta_history: Vec<(Time, f64)>,
 }
 
 impl DressScheduler {
@@ -62,7 +60,6 @@ impl DressScheduler {
             gang: cfg.gang,
             freeze_delta: false,
             disable_estimator: false,
-            delta_history: Vec::new(),
         }
     }
 
@@ -228,7 +225,10 @@ impl Scheduler for DressScheduler {
                 },
             );
         }
-        self.delta_history.push((view.now, self.delta));
+        // δ is exposed per tick via `reserve_ratio()`; the engine's
+        // metric sink owns its history (the scheduler used to keep a
+        // duplicate unbounded Vec here — an O(ticks) memory term the
+        // bounded-metric runs could never turn off).
 
         // (4) allocation against the adjusted quotas.  Occupancy is
         // unchanged since the fused pass (the view is immutable), so the
@@ -344,7 +344,9 @@ mod tests {
     }
 
     #[test]
-    fn delta_recorded_every_tick() {
+    fn delta_exposed_every_tick_via_reserve_ratio() {
+        // The engine samples δ through `reserve_ratio()` on every tick;
+        // the scheduler itself retains no history (bounded memory).
         let mut s = dress(40);
         for t in 0..5u64 {
             let v = ClusterView {
@@ -355,9 +357,8 @@ mod tests {
                 transitions: &[],
             };
             s.schedule(&v);
+            assert_eq!(s.reserve_ratio(), Some(s.delta()));
         }
-        assert_eq!(s.delta_history.len(), 5);
-        assert!(s.reserve_ratio().is_some());
     }
 
     #[test]

@@ -23,12 +23,13 @@
 //! truth every tick.
 
 use super::event::{Event, EventQueue, QueueKind};
+use super::metric::{MetricSink, MetricSinkKind};
 use super::sink::{SinkKind, TraceSink};
 use super::trace::{TaskTrace, TraceRecorder};
 use crate::cluster::{Cluster, ContainerState, HeartbeatLog, Transition};
 use crate::config::ExperimentConfig;
 use crate::jobs::{JobRt, JobSpec, TaskState};
-use crate::metrics::{JobMetrics, SystemMetrics};
+use crate::metrics::{DeltaSummary, JobMetrics, SystemMetrics, UtilSummary};
 use crate::sched::{Allocation, ClusterView, JobView, Scheduler};
 use crate::util::rng::Rng;
 use crate::util::Time;
@@ -40,8 +41,25 @@ pub struct RunResult {
     pub jobs: Vec<JobMetrics>,
     pub system: SystemMetrics,
     pub trace: TraceRecorder,
-    /// DRESS δ history, empty for baselines.
+    /// Retained DRESS δ samples — empty for baselines, and bounded /
+    /// downsampled by [`EngineOptions::metrics`] (use [`Self::delta`] for
+    /// exact summary statistics under any retention).
     pub delta_history: Vec<(Time, f64)>,
+    /// Retained per-tick `(time, used containers)` samples, bounded /
+    /// downsampled by [`EngineOptions::metrics`] (use [`Self::util`] for
+    /// exact summary statistics under any retention).
+    pub util_history: Vec<(Time, u32)>,
+    /// Exact time-weighted utilization summary, accumulated online —
+    /// identical under every metric sink.
+    pub util: UtilSummary,
+    /// Exact δ-stream summary (min/max/last/time-weighted mean),
+    /// accumulated online — identical under every metric sink.
+    pub delta: DeltaSummary,
+    /// Utilization samples observed, independent of retention
+    /// (`util_history.len()` holds only what the sink kept).
+    pub util_recorded: u64,
+    /// δ samples observed, independent of retention.
+    pub delta_recorded: u64,
     /// Injected container failures survived (task re-attempts).
     pub failures: u32,
     /// Total simulation events processed (throughput accounting).
@@ -66,6 +84,12 @@ pub struct EngineOptions {
     /// runs so 100k-job sweeps hold O(active) memory instead of
     /// O(total transitions); ring to keep just the tail of a big run.
     pub trace: SinkKind,
+    /// Retention policy for the per-tick metric streams (utilization, δ —
+    /// see [`MetricSinkKind`]).  Summary statistics (`RunResult::util`,
+    /// `RunResult::delta`, `SystemMetrics::mean_utilization`) come from
+    /// exact online accumulators and are identical under every policy;
+    /// this only bounds what is retained for per-sample rendering.
+    pub metrics: MetricSinkKind,
     /// Event-queue implementation ([`QueueKind`]).  Calendar by default;
     /// the binary-heap reference kind exists for equivalence tests.
     pub queue: QueueKind,
@@ -79,6 +103,7 @@ impl Default for EngineOptions {
     fn default() -> Self {
         EngineOptions {
             trace: SinkKind::Full,
+            metrics: MetricSinkKind::Full,
             queue: QueueKind::Calendar,
             naive_hot_path: false,
         }
@@ -87,9 +112,14 @@ impl Default for EngineOptions {
 
 impl EngineOptions {
     /// The configuration throughput benches and big parallel sweeps use:
-    /// counting sinks (O(active) memory), default queue and hot path.
+    /// counting sinks for events *and* per-tick metrics, so memory is
+    /// O(active jobs) at any horizon; default queue and hot path.
     pub fn throughput() -> Self {
-        EngineOptions { trace: SinkKind::Counting, ..Default::default() }
+        EngineOptions {
+            trace: SinkKind::Counting,
+            metrics: MetricSinkKind::Counting,
+            ..Default::default()
+        }
     }
 }
 
@@ -153,10 +183,16 @@ pub struct Engine {
     rng: Rng,
     now: Time,
     sink: TraceSink,
-    /// Utilization samples (time, used containers) at each tick.
-    pub util: Vec<(Time, u32)>,
-    /// δ samples per tick (schedulers without a reserve ratio yield none).
-    delta_trace: Vec<(Time, f64)>,
+    /// Per-tick utilization retention (policy: `opts.metrics`).
+    util_sink: MetricSink<u32>,
+    /// Per-tick δ retention (schedulers without a reserve ratio yield no
+    /// samples).
+    delta_sink: MetricSink<f64>,
+    /// Exact online utilization accumulator — fed on every tick
+    /// regardless of sink policy.
+    util_accum: UtilSummary,
+    /// Exact online δ accumulator.
+    delta_accum: DeltaSummary,
     failures: u32,
     /// Safety valve against pathological schedules.
     max_ms: Time,
@@ -208,6 +244,7 @@ impl Engine {
         let index = JobIndex::build(&specs);
         let remaining_tasks: Vec<u32> = specs.iter().map(|s| s.total_tasks()).collect();
         let n = specs.len();
+        let total = cluster.total();
         Engine {
             cfg,
             cluster,
@@ -218,8 +255,10 @@ impl Engine {
             rng: Rng::new(seed),
             now: 0,
             sink: TraceSink::new(opts.trace),
-            util: Vec::new(),
-            delta_trace: Vec::new(),
+            util_sink: MetricSink::new(opts.metrics),
+            delta_sink: MetricSink::new(opts.metrics),
+            util_accum: UtilSummary::new(total),
+            delta_accum: DeltaSummary::default(),
             failures: 0,
             max_ms: 40 * 3_600 * 1_000, // 40 simulated hours
             opts,
@@ -555,9 +594,12 @@ impl Engine {
             free -= n;
             self.apply_allocation(Allocation { job: a.job, n });
         }
-        self.util.push((self.now, self.cluster.used()));
+        let used = self.cluster.used();
+        self.util_sink.record(self.now, used);
+        self.util_accum.push(self.now, used);
         if let Some(delta) = self.sched.reserve_ratio() {
-            self.delta_trace.push((self.now, delta));
+            self.delta_sink.record(self.now, delta);
+            self.delta_accum.push(self.now, delta);
         }
         debug_assert!(self.cluster.conservation_holds());
         if !self.all_finished() {
@@ -593,14 +635,23 @@ impl Engine {
         assert!(self.all_finished(), "run ended with unfinished jobs (starvation)");
 
         let jobs: Vec<JobMetrics> = self.jobs.iter().map(JobMetrics::of).collect();
-        let system = SystemMetrics::of(&jobs, &self.util, self.cluster.total());
+        // Utilization comes from the online accumulator, never from the
+        // retained samples — exact under every metric-sink policy.
+        let system = SystemMetrics::of(&jobs, &self.util_accum);
         let (trace, tasks_recorded) = self.sink.finish();
+        let (util_history, util_recorded) = self.util_sink.finish();
+        let (delta_history, delta_recorded) = self.delta_sink.finish();
         RunResult {
             scheduler: self.sched.name().to_string(),
             jobs,
             system,
             trace,
-            delta_history: self.delta_trace,
+            delta_history,
+            util_history,
+            util: self.util_accum,
+            delta: self.delta_accum,
+            util_recorded,
+            delta_recorded,
             failures: self.failures,
             events: self.events,
             sched_ticks: self.ticks,
@@ -825,6 +876,59 @@ mod tests {
         assert_eq!(lean.retained_transitions, 0, "counting sink retained history");
         assert!(lean.trace.tasks.is_empty());
         assert_eq!(full.retained_transitions as u64, full.transitions_recorded);
+        // Per-tick metric streams are bounded the same way: zero retained
+        // samples, yet the exact accumulators agree bit-for-bit.
+        assert!(lean.util_history.is_empty() && lean.delta_history.is_empty());
+        assert_eq!(lean.util_recorded, full.util_recorded);
+        assert_eq!(lean.delta_recorded, full.delta_recorded);
+        assert!(lean.util_recorded > 0 && lean.delta_recorded > 0, "dress streams populated");
+        assert_eq!(lean.util, full.util, "utilization summary must not depend on retention");
+        assert_eq!(lean.delta, full.delta);
+        assert_eq!(
+            lean.system.mean_utilization.to_bits(),
+            full.system.mean_utilization.to_bits(),
+            "time-weighted utilization must be exact under counting retention"
+        );
+        assert_eq!(full.util_history.len() as u64, full.util_recorded);
+        assert_eq!(full.delta_history.len() as u64, full.delta_recorded);
+    }
+
+    #[test]
+    fn metric_ring_and_decimate_bound_per_tick_retention() {
+        let mut c = ExperimentConfig::default();
+        c.sched.kind = SchedKind::Dress;
+        let specs = crate::workload::congested_burst(80, 100, 0xD1CE);
+        let full = run_experiment_with(&c, specs.clone(), EngineOptions::default());
+        assert!(full.util_recorded > 32, "workload too small to exercise metric ring");
+
+        let ring = run_experiment_with(
+            &c,
+            specs.clone(),
+            EngineOptions { metrics: MetricSinkKind::Ring(16), ..Default::default() },
+        );
+        assert_eq!(ring.util_history.len(), 16);
+        assert!(ring.delta_history.len() <= 16);
+        // Chronological tail: the retained samples are the last 16 ticks.
+        assert!(ring.util_history.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert_eq!(
+            ring.util_history,
+            full.util_history[full.util_history.len() - 16..].to_vec()
+        );
+        assert_eq!(ring.util, full.util, "ring retention must not perturb the summary");
+
+        let deci = run_experiment_with(
+            &c,
+            specs,
+            EngineOptions { metrics: MetricSinkKind::Decimate(8), ..Default::default() },
+        );
+        let kept: Vec<(Time, u32)> =
+            full.util_history.iter().copied().step_by(8).collect();
+        assert_eq!(deci.util_history, kept, "decimation must keep every 8th sample");
+        assert_eq!(deci.util, full.util);
+        assert_eq!(
+            deci.system.mean_utilization.to_bits(),
+            full.system.mean_utilization.to_bits()
+        );
     }
 
     #[test]

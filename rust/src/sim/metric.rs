@@ -1,0 +1,254 @@
+//! Per-tick metric sinks — the metric-stream counterpart of the event
+//! [`TraceSink`](super::sink::TraceSink).
+//!
+//! The engine samples two per-tick streams: cluster utilization
+//! `(time, used containers)` and the DRESS reserve ratio `(time, δ)`.
+//! The seed retained both as unbounded `Vec`s — the last O(ticks) memory
+//! term after PR 2 bounded the event streams, and the one that dominates
+//! multi-day simulated horizons (a 40-hour run at a 1 s heartbeat is
+//! 144k samples per stream *per cell* of a sweep).
+//!
+//! [`MetricSinkKind`] picks the retention policy; summary statistics are
+//! *never* computed from the retained samples — the engine feeds exact
+//! online accumulators ([`UtilSummary`](crate::metrics::UtilSummary),
+//! [`DeltaSummary`](crate::metrics::DeltaSummary)) alongside every sink,
+//! so `mean_utilization` is identical under every policy:
+//!
+//! | kind | retains | use for |
+//! |---|---|---|
+//! | `Full` | every sample | figures, paper repro, CSV export |
+//! | `Counting` | nothing (count only) | throughput benches, 100k-job sweeps |
+//! | `Ring(cap)` | last `cap` samples | tail inspection of big runs |
+//! | `Decimate(k)` | every k-th sample | figures over long horizons (O(ticks/k)) |
+//!
+//! Sinks never change simulation results, and — because summaries come
+//! from the accumulators — never change reported statistics either; only
+//! what is available for per-sample rendering.
+
+use crate::util::Time;
+
+/// Retention policy for per-tick metric streams (utilization, δ).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricSinkKind {
+    /// Keep every sample (the seed behavior).
+    #[default]
+    Full,
+    /// Keep nothing; count samples as they pass through.
+    Counting,
+    /// Keep the most recent `cap` samples plus a total count.
+    Ring(usize),
+    /// Keep every `k`-th sample (stride downsampling): bounded-density
+    /// retention for figures over horizons where `Full` is too big and
+    /// `Ring` forgets the head.  `Decimate(1)` degenerates to `Full`.
+    Decimate(usize),
+}
+
+impl MetricSinkKind {
+    /// Parse the CLI form: `full`, `counting`, `ring:N`, `decimate:K`.
+    pub fn parse(s: &str) -> Result<MetricSinkKind, String> {
+        match s {
+            "full" => return Ok(MetricSinkKind::Full),
+            "counting" => return Ok(MetricSinkKind::Counting),
+            _ => {}
+        }
+        if let Some(n) = s.strip_prefix("ring:") {
+            let cap: usize = n
+                .parse()
+                .map_err(|e| format!("metric sink `ring:{n}`: {e}"))?;
+            if cap == 0 {
+                // Ring(0) would behave as Counting but fingerprint as a
+                // different grid — reject the degenerate spelling so two
+                // behaviorally identical shards can't refuse to merge.
+                return Err("metric sink `ring:0` (use `counting`)".into());
+            }
+            return Ok(MetricSinkKind::Ring(cap));
+        }
+        if let Some(k) = s.strip_prefix("decimate:") {
+            let stride: usize = k
+                .parse()
+                .map_err(|e| format!("metric sink `decimate:{k}`: {e}"))?;
+            if stride == 0 {
+                return Err("metric sink `decimate:0` (stride must be >= 2)".into());
+            }
+            if stride == 1 {
+                // Decimate(1) would behave as Full but fingerprint as a
+                // different grid (same hole as `ring:0` vs `counting`).
+                return Err("metric sink `decimate:1` (use `full`)".into());
+            }
+            return Ok(MetricSinkKind::Decimate(stride));
+        }
+        Err(format!(
+            "unknown metric sink `{s}` (expected full | counting | ring:N | decimate:K)"
+        ))
+    }
+}
+
+/// A per-tick metric sink with [`MetricSinkKind`] retention.  Generic over
+/// the sample value (`u32` for utilization, `f64` for δ).
+#[derive(Debug, Clone)]
+pub enum MetricSink<V> {
+    Full(Vec<(Time, V)>),
+    Counting { recorded: u64 },
+    Ring { cap: usize, buf: Vec<(Time, V)>, head: usize, recorded: u64 },
+    Decimate { stride: u64, buf: Vec<(Time, V)>, recorded: u64 },
+}
+
+impl<V: Copy> MetricSink<V> {
+    pub fn new(kind: MetricSinkKind) -> Self {
+        match kind {
+            MetricSinkKind::Full | MetricSinkKind::Decimate(1) => MetricSink::Full(Vec::new()),
+            MetricSinkKind::Counting | MetricSinkKind::Ring(0) => {
+                MetricSink::Counting { recorded: 0 }
+            }
+            MetricSinkKind::Ring(cap) => {
+                MetricSink::Ring { cap, buf: Vec::with_capacity(cap), head: 0, recorded: 0 }
+            }
+            // Degenerate stride 0 keeps the first sample only — treat it
+            // like 1 (Full) instead; parse() already rejects it at the CLI.
+            MetricSinkKind::Decimate(0) => MetricSink::Full(Vec::new()),
+            MetricSinkKind::Decimate(stride) => {
+                MetricSink::Decimate { stride: stride as u64, buf: Vec::new(), recorded: 0 }
+            }
+        }
+    }
+
+    pub fn record(&mut self, t: Time, v: V) {
+        match self {
+            MetricSink::Full(samples) => samples.push((t, v)),
+            MetricSink::Counting { recorded } => *recorded += 1,
+            MetricSink::Ring { cap, buf, head, recorded } => {
+                if buf.len() < *cap {
+                    buf.push((t, v));
+                } else {
+                    buf[*head] = (t, v);
+                    *head = (*head + 1) % *cap;
+                }
+                *recorded += 1;
+            }
+            MetricSink::Decimate { stride, buf, recorded } => {
+                if *recorded % *stride == 0 {
+                    buf.push((t, v));
+                }
+                *recorded += 1;
+            }
+        }
+    }
+
+    /// Total samples seen, independent of retention.
+    pub fn recorded(&self) -> u64 {
+        match self {
+            MetricSink::Full(samples) => samples.len() as u64,
+            MetricSink::Counting { recorded }
+            | MetricSink::Ring { recorded, .. }
+            | MetricSink::Decimate { recorded, .. } => *recorded,
+        }
+    }
+
+    /// Samples currently held in memory.
+    pub fn retained(&self) -> usize {
+        match self {
+            MetricSink::Full(samples) => samples.len(),
+            MetricSink::Counting { .. } => 0,
+            MetricSink::Ring { buf, .. } | MetricSink::Decimate { buf, .. } => buf.len(),
+        }
+    }
+
+    /// Consume into `(retained samples in chronological order, total recorded)`.
+    pub fn finish(self) -> (Vec<(Time, V)>, u64) {
+        match self {
+            MetricSink::Full(samples) => {
+                let n = samples.len() as u64;
+                (samples, n)
+            }
+            MetricSink::Counting { recorded } => (Vec::new(), recorded),
+            MetricSink::Ring { buf, head, recorded, .. } => {
+                let mut samples = Vec::with_capacity(buf.len());
+                samples.extend_from_slice(&buf[head..]);
+                samples.extend_from_slice(&buf[..head]);
+                (samples, recorded)
+            }
+            MetricSink::Decimate { buf, recorded, .. } => (buf, recorded),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(kind: MetricSinkKind, n: u64) -> MetricSink<u32> {
+        let mut s = MetricSink::new(kind);
+        for i in 0..n {
+            s.record(i * 1_000, i as u32);
+        }
+        s
+    }
+
+    #[test]
+    fn full_sink_keeps_everything() {
+        let s = fill(MetricSinkKind::Full, 5);
+        assert_eq!(s.recorded(), 5);
+        assert_eq!(s.retained(), 5);
+        let (samples, n) = s.finish();
+        assert_eq!(n, 5);
+        assert_eq!(samples, vec![(0, 0), (1_000, 1), (2_000, 2), (3_000, 3), (4_000, 4)]);
+    }
+
+    #[test]
+    fn counting_sink_counts_without_retaining() {
+        let s = fill(MetricSinkKind::Counting, 1_000);
+        assert_eq!(s.recorded(), 1_000);
+        assert_eq!(s.retained(), 0);
+        let (samples, n) = s.finish();
+        assert!(samples.is_empty());
+        assert_eq!(n, 1_000);
+    }
+
+    #[test]
+    fn ring_sink_keeps_last_cap_chronologically() {
+        let s = fill(MetricSinkKind::Ring(3), 8);
+        assert_eq!(s.recorded(), 8);
+        assert_eq!(s.retained(), 3);
+        let (samples, n) = s.finish();
+        assert_eq!(n, 8);
+        assert_eq!(samples, vec![(5_000, 5), (6_000, 6), (7_000, 7)]);
+    }
+
+    #[test]
+    fn ring_zero_degenerates_to_counting() {
+        let s = fill(MetricSinkKind::Ring(0), 4);
+        assert_eq!(s.recorded(), 4);
+        assert_eq!(s.retained(), 0);
+    }
+
+    #[test]
+    fn decimate_keeps_every_kth_sample() {
+        let s = fill(MetricSinkKind::Decimate(3), 10);
+        assert_eq!(s.recorded(), 10);
+        let (samples, n) = s.finish();
+        assert_eq!(n, 10);
+        // First sample always kept, then every third.
+        assert_eq!(samples, vec![(0, 0), (3_000, 3), (6_000, 6), (9_000, 9)]);
+    }
+
+    #[test]
+    fn decimate_one_is_full() {
+        let s = fill(MetricSinkKind::Decimate(1), 6);
+        assert_eq!(s.retained(), 6);
+        let (samples, _) = s.finish();
+        assert_eq!(samples.len(), 6);
+    }
+
+    #[test]
+    fn parse_cli_forms() {
+        assert_eq!(MetricSinkKind::parse("full").unwrap(), MetricSinkKind::Full);
+        assert_eq!(MetricSinkKind::parse("counting").unwrap(), MetricSinkKind::Counting);
+        assert_eq!(MetricSinkKind::parse("ring:64").unwrap(), MetricSinkKind::Ring(64));
+        assert_eq!(MetricSinkKind::parse("decimate:10").unwrap(), MetricSinkKind::Decimate(10));
+        for bad in
+            ["ringo", "ring:", "ring:x", "ring:0", "decimate:0", "decimate:1", "decimate:y", ""]
+        {
+            assert!(MetricSinkKind::parse(bad).is_err(), "`{bad}` accepted");
+        }
+    }
+}

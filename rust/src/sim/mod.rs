@@ -1,12 +1,14 @@
 //! Discrete-event simulation core: event queue (calendar or heap), engine,
-//! pluggable trace sinks, trace recording.
+//! pluggable trace + per-tick metric sinks, trace recording.
 
 pub mod engine;
 pub mod event;
+pub mod metric;
 pub mod sink;
 pub mod trace;
 
 pub use engine::{run_experiment, run_experiment_with, Engine, EngineOptions, RunResult};
 pub use event::{Event, EventQueue, QueueKind};
+pub use metric::{MetricSink, MetricSinkKind};
 pub use sink::{SinkKind, TraceSink};
 pub use trace::{TaskTrace, TraceRecorder};

@@ -38,10 +38,32 @@ impl Rng {
     }
 
     /// Uniform integer in [lo, hi] (inclusive). Panics if lo > hi.
+    ///
+    /// Debiased modulo (OpenBSD `arc4random_uniform` style): a plain
+    /// `next_u64() % span` over-weights the first `2^64 mod span` residues
+    /// — invisible for small spans, but a span of `3·2^62` maps half of
+    /// all draws onto the bottom third of the range.  Rejecting the draws
+    /// below `2^64 mod span` leaves exactly `floor(2^64 / span)` raw
+    /// values per residue.  Rejection-modulo is deliberately used instead
+    /// of Lemire multiply-shift: for every accepted draw the returned
+    /// value equals the old `lo + x % span`, so existing seeded workload
+    /// streams are unchanged except with probability `< span / 2^64` per
+    /// draw (≈ 0 for the small spans the generators use).
     pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
         assert!(lo <= hi, "range_u64: lo {lo} > hi {hi}");
-        let span = hi - lo + 1;
-        lo + self.next_u64() % span
+        let span = hi.wrapping_sub(lo).wrapping_add(1);
+        if span == 0 {
+            // Full 2^64 range: every raw value is already uniform.
+            return self.next_u64();
+        }
+        // span.wrapping_neg() == 2^64 - span ≡ 2^64 (mod span).
+        let reject_below = span.wrapping_neg() % span;
+        loop {
+            let x = self.next_u64();
+            if x >= reject_below {
+                return lo + x % span;
+            }
+        }
     }
 
     /// Uniform f64 in [lo, hi).
@@ -50,9 +72,10 @@ impl Rng {
     }
 
     /// Uniform choice of an index < n. Panics if n == 0.
+    /// Debiased the same way as [`Self::range_u64`].
     pub fn index(&mut self, n: usize) -> usize {
         assert!(n > 0, "index: empty domain");
-        (self.next_u64() % n as u64) as usize
+        self.range_u64(0, n as u64 - 1) as usize
     }
 
     /// Bernoulli trial.
@@ -74,19 +97,12 @@ impl Rng {
         median * (sigma * self.normal()).exp()
     }
 
-    /// Zipf-distributed rank in [1, n] with exponent `s` (inverse-CDF via
-    /// linear scan over precomputable weights; n is small in our use).
+    /// Zipf-distributed rank in [1, n] with exponent `s`.  One-shot
+    /// convenience around [`ZipfSampler`]; callers drawing many ranks from
+    /// the same `(n, s)` (workload generators, partition skew) should hoist
+    /// a sampler instead of paying the O(n) weight-table build per draw.
     pub fn zipf(&mut self, n: usize, s: f64) -> usize {
-        assert!(n > 0);
-        let norm: f64 = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).sum();
-        let mut u = self.next_f64() * norm;
-        for k in 1..=n {
-            u -= 1.0 / (k as f64).powf(s);
-            if u <= 0.0 {
-                return k;
-            }
-        }
-        n
+        ZipfSampler::new(n, s).draw(self)
     }
 
     /// Fisher-Yates shuffle.
@@ -95,6 +111,53 @@ impl Rng {
             let j = self.index(i + 1);
             xs.swap(i, j);
         }
+    }
+}
+
+/// Zipf inverse-CDF sampler with the per-rank weight table and its
+/// normalization precomputed once.  The seed implementation recomputed the
+/// O(n) `Σ 1/k^s` normalization (n `powf` calls) on *every* draw; building
+/// the table up front makes a draw O(expected rank) with no `powf` at all.
+///
+/// The draw performs the exact float operations of the original inline
+/// scan (`u = next_f64()·norm`, then sequential subtraction of the same
+/// `1/k^s` values), so for a fixed seed the rank stream is bit-identical
+/// to the pre-sampler code — asserted by `zipf_sampler_stream_matches_reference`.
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    /// `weights[k-1] = 1 / k^s` for ranks 1..=n.
+    weights: Vec<f64>,
+    /// `Σ weights`, summed in rank order (same order as the seed code).
+    norm: f64,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "zipf: empty domain");
+        let weights: Vec<f64> = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).collect();
+        let norm = weights.iter().sum();
+        ZipfSampler { weights, norm }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // new() rejects n == 0
+    }
+
+    /// Draw a rank in [1, n]; consumes exactly one `next_f64`.
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        let mut u = rng.next_f64() * self.norm;
+        for (i, w) in self.weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i + 1;
+            }
+        }
+        self.weights.len()
     }
 }
 
@@ -136,6 +199,52 @@ mod tests {
     }
 
     #[test]
+    fn range_u64_large_span_is_unbiased() {
+        // Bias-sensitive test: span = 3·2^62.  The old `next_u64() % span`
+        // mapped every raw value in [0, 2^62) twice, so P(v < 2^62) was
+        // 1/2 instead of the uniform 1/3 — a 50% relative error that no
+        // tolerance could excuse.  30k draws put the sample σ at ~0.0027,
+        // so the 0.02 band is a >7σ test of the fix while still being
+        // deterministic for the fixed seed.
+        let span = 3u64 << 62;
+        let mut r = Rng::new(0xB1A5);
+        let n = 30_000;
+        let below = (0..n)
+            .filter(|_| r.range_u64(0, span - 1) < (1u64 << 62))
+            .count();
+        let frac = below as f64 / n as f64;
+        assert!(
+            (frac - 1.0 / 3.0).abs() < 0.02,
+            "biased large-span draw: frac {frac} (modulo bias gives 0.5)"
+        );
+    }
+
+    #[test]
+    fn range_u64_full_domain_does_not_panic() {
+        // lo = 0, hi = u64::MAX wraps span to 0; the old code computed
+        // `% 0` here.  The full domain needs no debiasing at all.
+        let mut r = Rng::new(17);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..64 {
+            distinct.insert(r.range_u64(0, u64::MAX));
+        }
+        assert!(distinct.len() > 60, "full-domain draws suspiciously collided");
+    }
+
+    #[test]
+    fn small_span_stream_unchanged_by_debiasing() {
+        // For spans ≪ 2^64 the rejection zone is never hit in practice, so
+        // the debiased draw must return exactly `lo + next_u64() % span` —
+        // the property that keeps every seeded workload bit-stable.
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        for _ in 0..2_000 {
+            let raw = b.next_u64();
+            assert_eq!(a.range_u64(5, 35), 5 + raw % 31);
+        }
+    }
+
+    #[test]
     fn normal_moments() {
         let mut r = Rng::new(11);
         let n = 50_000;
@@ -156,6 +265,40 @@ mod tests {
             counts[k - 1] += 1;
         }
         assert!(counts[0] > counts[4] && counts[4] > counts[9]);
+    }
+
+    /// The pre-sampler inline implementation, kept verbatim as the
+    /// reference: normalization recomputed per draw, subtraction scan over
+    /// freshly computed `1/k^s` terms.
+    fn zipf_reference(rng: &mut Rng, n: usize, s: f64) -> usize {
+        let norm: f64 = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).sum();
+        let mut u = rng.next_f64() * norm;
+        for k in 1..=n {
+            u -= 1.0 / (k as f64).powf(s);
+            if u <= 0.0 {
+                return k;
+            }
+        }
+        n
+    }
+
+    #[test]
+    fn zipf_sampler_stream_matches_reference() {
+        // The precomputed-table sampler must reproduce the seed
+        // implementation's rank stream bit-for-bit — same float values
+        // subtracted in the same order — so fixed-seed workloads
+        // (congested_burst demands, partition skew) are unchanged.
+        for (n, s, seed) in [(30, 1.1, 42u64), (10, 1.2, 5), (64, 1.6, 0xFEED), (1, 0.7, 9)] {
+            let sampler = ZipfSampler::new(n, s);
+            assert_eq!(sampler.len(), n);
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            for i in 0..2_000 {
+                let fast = sampler.draw(&mut a);
+                let refr = zipf_reference(&mut b, n, s);
+                assert_eq!(fast, refr, "draw {i} diverged for n={n} s={s} seed={seed}");
+            }
+        }
     }
 
     #[test]

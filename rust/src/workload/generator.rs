@@ -4,7 +4,7 @@
 
 use super::hibench::{build_job, Benchmark};
 use crate::jobs::{JobSpec, PhaseKind, PhaseSpec, Platform};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, ZipfSampler};
 use crate::util::Time;
 
 /// Which platform mix to generate (paper §V.A.2's three combinations).
@@ -118,10 +118,13 @@ fn pick_benchmark(rng: &mut Rng, platform: Platform, small: bool) -> Benchmark {
 /// inflating event counts. Deterministic per seed.
 pub fn congested_burst(n: u32, arrival_mean_ms: Time, seed: u64) -> Vec<JobSpec> {
     let mut rng = Rng::new(seed ^ 0xB0B5_7000);
+    // One weight table for all n demand draws (bit-identical stream to the
+    // per-draw `Rng::zipf`, minus its O(DEMAND_CAP) rebuild every job).
+    let zipf = ZipfSampler::new(DEMAND_CAP as usize, 1.1);
     let mut submit: Time = 0;
     (0..n)
         .map(|i| {
-            let demand = rng.zipf(DEMAND_CAP as usize, 1.1) as u32;
+            let demand = zipf.draw(&mut rng) as u32;
             let width = demand.max(1);
             let mut phases = vec![burst_phase(&mut rng, PhaseKind::Map, width)];
             if rng.chance(0.25) {

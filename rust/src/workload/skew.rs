@@ -3,7 +3,7 @@
 //! few tasks process far more data and run correspondingly longer (the
 //! paper's Fig. 4 trailing task runs +38% over the second longest).
 
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, ZipfSampler};
 
 /// Partition weight multipliers for `n` tasks: mean ~1.0, with a heavy
 /// right tail controlled by `skew` (0 = uniform; paper-like behavior at
@@ -15,10 +15,12 @@ pub fn zipf_partition_weights(rng: &mut Rng, n: usize, skew: f64) -> Vec<f64> {
     if skew <= 0.0 {
         return vec![1.0; n];
     }
-    // Draw ranks from a zipf law, then normalize to mean 1.0.
+    // Draw ranks from a zipf law, then normalize to mean 1.0.  The weight
+    // table is built once for all n draws (it was rebuilt per draw).
+    let zipf = ZipfSampler::new(n.max(2), 1.0 + skew);
     let raw: Vec<f64> = (0..n)
         .map(|_| {
-            let rank = rng.zipf(n.max(2), 1.0 + skew) as f64;
+            let rank = zipf.draw(rng) as f64;
             // weight inversely related to rank: rank 1 = heaviest partition
             1.0 / rank.powf(0.5)
         })

@@ -25,6 +25,10 @@ fn bench_engine_json_parses_and_has_required_sections() {
     );
     assert!(root.get("workload").is_some(), "missing `workload`");
     assert!(
+        root.get("metric_sink").is_some(),
+        "missing `metric_sink` (the per-tick retention policy the numbers were measured under)"
+    );
+    assert!(
         root.get("speedup_indexed_vs_naive_1k").is_some(),
         "missing `speedup_indexed_vs_naive_1k`"
     );
@@ -34,9 +38,32 @@ fn bench_engine_json_parses_and_has_required_sections() {
         .expect("`runs` must be an array");
     assert!(!runs.is_empty(), "`runs` must not be empty");
     for row in runs {
-        for key in ["jobs", "scheduler", "events", "wall_ms", "events_per_sec"] {
+        for key in [
+            "jobs",
+            "scheduler",
+            "events",
+            "wall_ms",
+            "events_per_sec",
+            "retained_transitions",
+            // Metric-sink retention fields (bounded-memory trajectory):
+            // retained must stay 0 under the counting preset; the exact
+            // utilization integers travel alongside for PR comparison.
+            "retained_util_samples",
+            "util_samples",
+            "util_area_ms",
+            "util_span_ms",
+            "mean_utilization_pct",
+        ] {
             assert!(row.get(key).is_some(), "run row missing `{key}`: {row:?}");
         }
+        // Whether pending or measured, the bounded-memory invariant is a
+        // constant of the counting preset, so the checked-in value can be
+        // pinned unconditionally.
+        assert_eq!(
+            row.get("retained_util_samples").and_then(|v| v.as_f64()),
+            Some(0.0),
+            "counting-preset bench must retain zero per-tick samples: {row:?}"
+        );
     }
 
     // The sweep section added with the parallel executor, extended by the

@@ -38,9 +38,13 @@ struct Golden {
     trace_len: usize,
     failures: u32,
     delta_history: Vec<(u64, f64)>,
-    /// Mean utilization is a float over every per-tick sample, so it is a
-    /// sensitive whole-run fingerprint on its own.
+    /// Time-weighted mean utilization folds every per-tick sample into
+    /// one float, so it is a sensitive whole-run fingerprint on its own.
     mean_utilization: f64,
+    /// The exact integer terms behind it (area / span / samples).
+    util_area_ms: u64,
+    util_span_ms: u64,
+    util_samples: u64,
 }
 
 impl Golden {
@@ -53,6 +57,9 @@ impl Golden {
             failures: r.failures,
             delta_history: r.delta_history.clone(),
             mean_utilization: r.system.mean_utilization,
+            util_area_ms: r.util.area_ms,
+            util_span_ms: r.util.span_ms,
+            util_samples: r.util.samples,
         }
     }
 }
@@ -267,6 +274,98 @@ fn shard_merge_paper_claim_report_bit_identical() {
             reference_report,
             "paper shard({n})+merge claim report not byte-identical"
         );
+    }
+}
+
+#[test]
+fn metric_sink_retention_never_changes_reported_statistics() {
+    // Full vs Counting metric retention on the same congested burst, all
+    // four schedulers: the simulation, the exact utilization integers and
+    // the final float must be identical — the Counting run just retains
+    // zero per-tick samples.  This is the engine-level face of the
+    // "reports are byte-identical under Full, exact under Counting"
+    // acceptance bar (the report-bytes half lives in the shard tests,
+    // whose summaries carry these same integers over the wire).
+    let specs = congested_burst(150, 100, 0xFACE);
+    for kind in KINDS {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sched.kind = kind;
+        let full = run_experiment_with(&cfg, specs.clone(), EngineOptions::default());
+        let lean = run_experiment_with(
+            &cfg,
+            specs.clone(),
+            EngineOptions {
+                metrics: dress::sim::MetricSinkKind::Counting,
+                ..Default::default()
+            },
+        );
+        // Retained δ samples are what the counting sink intentionally
+        // drops; every other fingerprint component must match exactly.
+        let reference = Golden::of(&full);
+        let lean_golden = Golden::of(&lean);
+        assert!(lean_golden.delta_history.is_empty(), "{kind:?}: δ samples retained");
+        assert_eq!(
+            Golden { delta_history: Vec::new(), ..reference },
+            lean_golden,
+            "{kind:?}: statistics drifted"
+        );
+        assert_eq!(full.delta, lean.delta, "{kind:?}: δ summary must survive counting");
+        assert_eq!(
+            full.system.mean_utilization.to_bits(),
+            lean.system.mean_utilization.to_bits(),
+            "{kind:?}: utilization not exact under counting retention"
+        );
+        assert!(full.util_history.len() as u64 == full.util_recorded && full.util_recorded > 0);
+        assert!(lean.util_history.is_empty(), "{kind:?}: counting sink retained samples");
+        // Trace retention untouched by the metric flag: Full either way.
+        assert_eq!(full.trace.tasks, lean.trace.tasks, "{kind:?}");
+    }
+}
+
+#[test]
+fn full_metric_retention_report_bytes_stable_across_sharding() {
+    // Under Full-equivalent metric retention the whole report pipeline —
+    // cell summaries, utilization column, seed aggregates — must render
+    // byte-identically whether cells come from one process or a shard
+    // round-trip (the wire carries the utilization integers, never the
+    // derived float).
+    let grid = SweepGrid {
+        base: ExperimentConfig::default(),
+        seeds: vec![42, 43],
+        scheds: KINDS.to_vec(),
+        workloads: vec![SweepWorkload::Generate {
+            n: 6,
+            mix: WorkloadMix::Mixed,
+            small_frac: 0.3,
+            arrival_ms: 2_000,
+        }],
+        opts: EngineOptions::default(),
+    };
+    let meta = SweepMeta::of(&grid, SweepMode::Grid);
+    let unsharded: Vec<CellSummary> = run_sweep(&grid, 1)
+        .iter()
+        .enumerate()
+        .map(|(i, r)| CellSummary::of(&grid, i, r))
+        .collect();
+    let reference = render_sweep_report(&meta, &unsharded);
+    assert!(reference.contains("Util (%)") && reference.contains("util_pct"));
+    let merged = shard_roundtrip_merge(&grid, &meta, 2);
+    assert_eq!(
+        render_sweep_report(&meta, &merged),
+        reference,
+        "utilization column not byte-stable across shard+merge"
+    );
+    // And a Counting-metric grid reports the same utilization numbers:
+    // the summary integers are sink-independent.
+    let mut counting_grid = grid.clone();
+    counting_grid.opts.metrics = dress::sim::MetricSinkKind::Counting;
+    let counting: Vec<CellSummary> = run_sweep(&counting_grid, 1)
+        .iter()
+        .enumerate()
+        .map(|(i, r)| CellSummary::of(&counting_grid, i, r))
+        .collect();
+    for (a, b) in unsharded.iter().zip(&counting) {
+        assert_eq!(a, b, "cell summaries must be identical under counting metrics");
     }
 }
 
