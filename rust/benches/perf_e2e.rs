@@ -41,6 +41,7 @@ fn main() {
         hb: std::time::Duration::from_millis(20),
         units_per_sec: 0.5,
         max_wall: std::time::Duration::from_secs(60),
+        ..Default::default()
     };
     let sched_cfg = SchedConfig { kind: SchedKind::Dress, ..Default::default() };
     let t0 = std::time::Instant::now();

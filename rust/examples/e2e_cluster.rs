@@ -48,6 +48,7 @@ fn main() -> dress::util::error::Result<()> {
         hb: std::time::Duration::from_millis(50),
         units_per_sec: 3_000.0,
         max_wall: std::time::Duration::from_secs(240),
+        ..Default::default()
     };
 
     let mut results = Vec::new();

@@ -17,18 +17,20 @@ USAGE:
               [--jobs N] [--platform mapreduce|spark|mixed]
               [--small-frac F] [--seed S] [--csv out-prefix]
               [--metric-sink full|counting|ring:N|decimate:K]
-              [--trace in.trace] [--export-trace out.trace]
+              [--fault-plan SPEC] [--trace in.trace] [--export-trace out.trace]
   dress compare [--jobs N] [--platform mapreduce|spark|mixed] [--seed S]
   dress repro <fig1|fig2|fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table2|all>
               [--seed S]
   dress trace <wordcount|pagerank-mr|pagerank-spark> [--seed S]
   dress live  [--jobs N] [--workers W] [--sched dress|capacity] [--seed S]
+              [--simulate-deaths K]
   dress sweep [--seeds K] [--seed S] [--jobs W | --workers W] [--njobs N]
               [--platform mapreduce|spark|mixed|burst] [--small-frac F]
               [--metric-sink full|counting|ring:N|decimate:K]
-              [--paper] [--shard i/N] [--out shard.json]
+              [--fault-plan SPEC] [--paper] [--shard i/N] [--out shard.json]
               [--report report.txt] [--csv out-prefix]
-  dress sweep-merge <shard.json...> [--report report.txt] [--csv out-prefix]
+  dress sweep-merge <shard.json...> [--partial] [--report report.txt]
+              [--csv out-prefix]
   dress bench
 
 `sweep` fans a K-seed x 4-scheduler grid across W worker threads
@@ -44,6 +46,16 @@ a JSON shard file (distribute N shards across machines); `sweep-merge`
 validates the shards' grid fingerprints, reassembles the full grid and
 emits the identical report a single-process sweep would print
 (--report writes the deterministic part to a file for byte comparison).
+`sweep-merge --partial` accepts an incomplete shard set: it prints a
+per-shard coverage report (which grid cells are present/missing) and
+renders the report over the surviving cells only.
+
+--fault-plan injects deterministic node crashes (see docs/ROBUSTNESS.md):
+segments joined by `;` — `T:N:D` crashes node N at T ms for D ms,
+`T:N1+N2:D` is a correlated multi-node outage, and
+`mtbf=U,mttr=R,until=H` adds a seeded stochastic crash/recovery process
+(isolated RNG stream: `none`/empty leaves every run bit-identical).
+The plan is part of the sweep-grid fingerprint.
 ";
 
 /// Entry point used by `main.rs`; returns a process exit code.
@@ -89,6 +101,9 @@ fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.workload.small_frac = args.flag_f64("small-frac", cfg.workload.small_frac)?;
     if let Some(p) = args.flag("platform") {
         cfg.workload.platform = p.to_string();
+    }
+    if let Some(s) = args.flag("fault-plan") {
+        cfg.faults = crate::sim::FaultPlan::parse(s)?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -179,6 +194,31 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             res.delta.mean(),
             res.delta.last
         );
+    }
+    if !res.outages.is_empty() {
+        println!(
+            "faults: {} outage(s) | {} attempt(s) killed | {:.1}s work lost to crashes \
+             ({:.1}s wasted overall) | goodput {:.3}",
+            res.outages.len(),
+            res.lost_attempts,
+            res.lost_work_ms as f64 / 1000.0,
+            res.wasted_work_ms as f64 / 1000.0,
+            res.goodput()
+        );
+        for o in &res.outages {
+            let ttr = match o.time_to_recover_ms() {
+                Some(ms) => format!("time-to-recover {:.1}s", ms as f64 / 1000.0),
+                None => "unrecovered at run end".into(),
+            };
+            println!(
+                "  node {} down at {:.1}s for {:.1}s: killed {} attempt(s), lost {:.1}s, {ttr}",
+                o.node,
+                o.at_ms as f64 / 1000.0,
+                o.down_ms as f64 / 1000.0,
+                o.killed,
+                o.lost_work_ms as f64 / 1000.0,
+            );
+        }
     }
     if let Some(base) = args.flag("csv") {
         for (suffix, text) in [
@@ -388,7 +428,12 @@ fn cmd_live(args: &Args) -> Result<(), String> {
         s.demand = s.demand.min(4);
     }
 
-    let cfg = crate::live::LiveConfig { workers, ..Default::default() };
+    let deaths = args.flag_u64("simulate-deaths", 0)? as u32;
+    let cfg = crate::live::LiveConfig {
+        workers,
+        simulate_worker_deaths: deaths,
+        ..Default::default()
+    };
     let sched_cfg = crate::config::SchedConfig { kind, ..Default::default() };
     let sched = crate::sched::build(&sched_cfg, workers as u32);
     let report = crate::live::run_live(&cfg, &sched_cfg, specs, sched, taskwork.to_str().unwrap())
@@ -400,6 +445,12 @@ fn cmd_live(args: &Args) -> Result<(), String> {
         report.makespan,
         report.checksum
     );
+    if report.requeues > 0 || !report.unfinished.is_empty() {
+        println!(
+            "resilience: {} requeued attempt(s), {} unfinished job(s) {:?}",
+            report.requeues, report.unfinished.len(), report.unfinished
+        );
+    }
     for j in &report.jobs {
         println!(
             "  J{:<3} demand {:<3} waiting {:>7.2}s completion {:>7.2}s",
@@ -468,6 +519,12 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     if let Some(sink) = args.flag("metric-sink") {
         grid.opts.metrics = crate::sim::MetricSinkKind::parse(sink)?;
     }
+    // So is the fault plan: every cell of the grid runs under it, and
+    // shards swept with different plans must refuse to merge.
+    if let Some(spec) = args.flag("fault-plan") {
+        grid.base.faults = crate::sim::FaultPlan::parse(spec)?;
+        grid.base.validate()?;
+    }
     let meta = SweepMeta::of(&grid, mode);
 
     if let Some(spec) = args.flag("shard") {
@@ -525,6 +582,30 @@ fn cmd_sweep_merge(args: &Args) -> Result<(), String> {
         files.push(shard::shard_from_json(&json).map_err(|e| format!("{path}: {e}"))?);
     }
     let n_files = files.len();
+    if args.switch("partial") {
+        let (meta, cells, cov) = shard::merge_shards_partial(files)?;
+        let rendered = shard::render_partial_sweep_report(&meta, &cells, &cov);
+        print!("{rendered}");
+        if let Some(path) = args.flag("report") {
+            std::fs::write(path, &rendered).map_err(|e| format!("write {path}: {e}"))?;
+            println!("wrote {path}");
+        }
+        if let Some(base) = args.flag("csv") {
+            let path = format!("{base}.sweep_stats.csv");
+            let csv = report::sweep_stats_csv(&shard::sweep_stat_rows(&meta, &cells));
+            std::fs::write(&path, csv).map_err(|e| format!("write {path}: {e}"))?;
+            println!("wrote {path}");
+        }
+        println!(
+            "partial merge: {n_files} shard file(s), {}/{} shards, {}/{} cells (fingerprint {})",
+            cov.shards_present.len(),
+            cov.shard_count,
+            cov.present_cells(),
+            cov.total_cells,
+            meta.fingerprint
+        );
+        return Ok(());
+    }
     let (meta, cells) = shard::merge_shards(files)?;
     emit_sweep_report(args, &meta, &cells)?;
     println!(
@@ -649,6 +730,32 @@ mod tests {
     }
 
     #[test]
+    fn run_accepts_fault_plan() {
+        assert_eq!(
+            run_cli(&args("run --jobs 4 --sched dress --seed 3 --fault-plan 5000:0:20000")),
+            0
+        );
+        assert_eq!(run_cli(&args("run --jobs 4 --sched capacity --fault-plan none")), 0);
+        assert_eq!(run_cli(&args("run --jobs 4 --fault-plan garbage")), 1);
+        // Node index beyond the default 5-node cluster: rejected by validate.
+        assert_eq!(run_cli(&args("run --jobs 4 --fault-plan 5000:99:20000")), 1);
+    }
+
+    #[test]
+    fn sweep_fault_plan_is_part_of_the_fingerprint() {
+        // Shards swept under different fault plans describe different
+        // experiments and must refuse to merge.
+        let (a, b) = (tmp("fault-a.json"), tmp("fault-b.json"));
+        let base = "sweep --seeds 2 --njobs 3";
+        assert_eq!(
+            run_cli(&args(&format!("{base} --shard 0/2 --out {a} --fault-plan 5000:0:20000"))),
+            0
+        );
+        assert_eq!(run_cli(&args(&format!("{base} --shard 1/2 --out {b}"))), 0);
+        assert_eq!(run_cli(&args(&format!("sweep-merge {a} {b}"))), 1);
+    }
+
+    #[test]
     fn sweep_rejects_bad_shard_spec() {
         assert_eq!(run_cli(&args("sweep --seeds 2 --njobs 3 --shard 3/3")), 1);
         assert_eq!(run_cli(&args("sweep --seeds 2 --njobs 3 --shard nope")), 1);
@@ -676,6 +783,34 @@ mod tests {
         let full_text = std::fs::read_to_string(&full).unwrap();
         assert!(!merged_text.is_empty());
         assert_eq!(merged_text, full_text, "merged report diverged from full run");
+    }
+
+    #[test]
+    fn sweep_merge_partial_accepts_incomplete_shard_sets() {
+        // 2-of-3 shards: plain merge rejects, --partial degrades gracefully
+        // with a coverage report whose bytes are argument-order independent.
+        let (s0, s2) = (tmp("p-shard0.json"), tmp("p-shard2.json"));
+        let (r1, r2) = (tmp("p-merged1.txt"), tmp("p-merged2.txt"));
+        let base = "sweep --seeds 2 --njobs 3 --seed 5";
+        assert_eq!(run_cli(&args(&format!("{base} --shard 0/3 --out {s0}"))), 0);
+        assert_eq!(run_cli(&args(&format!("{base} --shard 2/3 --out {s2}"))), 0);
+        assert_eq!(run_cli(&args(&format!("sweep-merge {s0} {s2}"))), 1);
+        assert_eq!(
+            run_cli(&args(&format!("sweep-merge {s0} {s2} --partial --report {r1}"))),
+            0
+        );
+        assert_eq!(
+            run_cli(&args(&format!("sweep-merge {s2} {s0} --partial --report {r2}"))),
+            0
+        );
+        let t1 = std::fs::read_to_string(&r1).unwrap();
+        assert!(t1.contains("coverage: 2/3 shards present"), "{t1}");
+        assert!(t1.contains("shards missing: [1]"), "{t1}");
+        assert_eq!(
+            t1,
+            std::fs::read_to_string(&r2).unwrap(),
+            "partial report must not depend on shard argument order"
+        );
     }
 
     #[test]

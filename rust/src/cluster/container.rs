@@ -78,6 +78,10 @@ pub struct Container {
     pub state_since: Time,
     /// When the container entered Running (0 until then).
     pub run_start: Time,
+    /// Set when the container was killed by a node crash. Dead containers
+    /// are parked in Completed; any events still queued for them must be
+    /// ignored (the queue cannot remove entries).
+    pub dead: bool,
 }
 
 impl Container {
@@ -91,7 +95,18 @@ impl Container {
             state: ContainerState::New,
             state_since: now,
             run_start: 0,
+            dead: false,
         }
+    }
+
+    /// Kill the container at time `now` (node crash): park it in
+    /// Completed so the lifecycle never advances again, and flag it dead
+    /// so stale queued events can be recognized and dropped.
+    pub fn kill(&mut self, now: Time) {
+        debug_assert!(!self.dead, "double kill of container {}", self.id);
+        self.dead = true;
+        self.state = ContainerState::Completed;
+        self.state_since = now;
     }
 
     /// Advance to the next state at time `now`; returns the new state.

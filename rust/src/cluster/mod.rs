@@ -31,8 +31,16 @@ impl Cluster {
         }
     }
 
-    /// Total container capacity (the paper's `Tot_R`).
+    /// Live container capacity (the paper's `Tot_R`).  Crashed nodes
+    /// contribute nothing, so this is time-varying under a fault plan.
     pub fn total(&self) -> u32 {
+        self.nodes.iter().filter(|n| n.up).map(|n| n.capacity).sum()
+    }
+
+    /// Capacity as provisioned, ignoring crashes — the fixed `Tot_R` the
+    /// cluster was built with.  Demand clamping uses this so a job's
+    /// request is not permanently truncated by a transient outage.
+    pub fn nominal_total(&self) -> u32 {
         self.nodes.iter().map(|n| n.capacity).sum()
     }
 
@@ -43,7 +51,7 @@ impl Cluster {
 
     /// Currently occupied slots.
     pub fn used(&self) -> u32 {
-        self.nodes.iter().map(|n| n.in_use).sum()
+        self.nodes.iter().filter(|n| n.up).map(|n| n.in_use).sum()
     }
 
     /// Allocate a new container for (job, phase, task) on the least-loaded
@@ -58,7 +66,7 @@ impl Cluster {
         let node = self
             .nodes
             .iter_mut()
-            .filter(|n| n.free() > 0)
+            .filter(|n| n.up && n.free() > 0)
             .min_by_key(|n| n.in_use)?;
         node.in_use += 1;
         let id = self.containers.len() as ContainerId;
@@ -73,6 +81,33 @@ impl Cluster {
         let node = &mut self.nodes[c.node as usize];
         debug_assert!(node.in_use > 0);
         node.in_use -= 1;
+    }
+
+    /// Crash `node` at time `now`: take it out of capacity and kill every
+    /// live container on it.  Returns the killed container ids so the
+    /// engine can requeue their tasks.  The node's slot accounting is
+    /// zeroed here; the killed containers must NOT also be `release`d.
+    pub fn fail_node(&mut self, node: NodeId, now: Time) -> Vec<ContainerId> {
+        let n = &mut self.nodes[node as usize];
+        debug_assert!(n.up, "fail of already-down node {node}");
+        n.up = false;
+        n.in_use = 0;
+        let mut killed = Vec::new();
+        for c in self.containers.iter_mut() {
+            if c.node == node && !c.dead && c.state != ContainerState::Completed {
+                c.kill(now);
+                killed.push(c.id);
+            }
+        }
+        killed
+    }
+
+    /// Bring a crashed node back. Its slots rejoin `total`/`free` empty.
+    pub fn recover_node(&mut self, node: NodeId) {
+        let n = &mut self.nodes[node as usize];
+        debug_assert!(!n.up, "recover of live node {node}");
+        debug_assert_eq!(n.in_use, 0, "down node held slots");
+        n.up = true;
     }
 
     pub fn container(&self, cid: ContainerId) -> &Container {
@@ -114,6 +149,33 @@ mod tests {
         let a = cl.allocate(1, 0, 0, 0).unwrap();
         let b = cl.allocate(1, 0, 1, 0).unwrap();
         assert_ne!(cl.container(a).node, cl.container(b).node);
+    }
+
+    #[test]
+    fn fail_node_kills_containers_and_drops_capacity() {
+        let mut cl = Cluster::new(2, 2);
+        let a = cl.allocate(1, 0, 0, 0).unwrap();
+        let b = cl.allocate(1, 0, 1, 0).unwrap();
+        let victim = cl.container(a).node;
+        let killed = cl.fail_node(victim, 50);
+        assert_eq!(killed, vec![a]);
+        assert!(cl.container(a).dead);
+        assert_eq!(cl.container(a).state, ContainerState::Completed);
+        assert!(!cl.container(b).dead);
+        assert_eq!(cl.total(), 2);
+        assert_eq!(cl.used(), 1);
+        assert_eq!(cl.free(), 1);
+        assert!(cl.conservation_holds());
+        // Allocation avoids the down node.
+        let c = cl.allocate(2, 0, 0, 60).unwrap();
+        assert_ne!(cl.container(c).node, victim);
+        assert!(cl.allocate(2, 0, 1, 60).is_none(), "no slots on the up node left");
+        cl.recover_node(victim);
+        assert_eq!(cl.total(), 4);
+        assert_eq!(cl.nominal_total(), 4);
+        assert!(cl.conservation_holds());
+        let d = cl.allocate(2, 0, 1, 70).unwrap();
+        assert_eq!(cl.container(d).node, victim, "recovered node is emptiest");
     }
 
     #[test]

@@ -11,14 +11,20 @@ pub struct Node {
     pub capacity: u32,
     /// Slots currently held by live containers.
     pub in_use: u32,
+    /// False while the node is crashed (fault injection). A down node
+    /// contributes nothing to capacity, free, or used.
+    pub up: bool,
 }
 
 impl Node {
     pub fn new(id: NodeId, capacity: u32) -> Self {
-        Node { id, capacity, in_use: 0 }
+        Node { id, capacity, in_use: 0, up: true }
     }
 
     pub fn free(&self) -> u32 {
+        if !self.up {
+            return 0;
+        }
         self.capacity - self.in_use
     }
 }
@@ -35,5 +41,14 @@ mod tests {
         assert_eq!(n.free(), 5);
         n.in_use = 8;
         assert_eq!(n.free(), 0);
+    }
+
+    #[test]
+    fn down_node_has_no_free_slots() {
+        let mut n = Node::new(0, 8);
+        n.up = false;
+        assert_eq!(n.free(), 0);
+        n.up = true;
+        assert_eq!(n.free(), 8);
     }
 }

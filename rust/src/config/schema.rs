@@ -2,6 +2,7 @@
 //! (`configs/*.toml`) with defaults matching the paper's testbed (§V.A).
 
 use super::toml::{self, Doc};
+use crate::sim::fault::FaultPlan;
 use crate::util::Time;
 
 /// Scheduler selection.
@@ -155,6 +156,10 @@ pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub sched: SchedConfig,
     pub workload: WorkloadConfig,
+    /// Node crash/recovery plan (empty by default — no faults).  Part of
+    /// the `Debug` representation, so it enters the sweep-grid fingerprint
+    /// and shards with different plans refuse to merge.
+    pub faults: FaultPlan,
 }
 
 impl ExperimentConfig {
@@ -229,6 +234,9 @@ impl ExperimentConfig {
         if let Some(v) = toml::get_int(doc, "workload", "seed") {
             self.workload.seed = v as u64;
         }
+        if let Some(s) = toml::get_str(doc, "faults", "plan") {
+            self.faults = FaultPlan::parse(s)?;
+        }
         Ok(())
     }
 
@@ -259,7 +267,11 @@ impl ExperimentConfig {
             "mapreduce" | "spark" | "mixed" => {}
             other => return Err(format!("unknown platform `{other}`")),
         }
-        Ok(())
+        // Materialization re-checks node ranges/overlap with stochastic
+        // draws included; here it doubles as plan validation.
+        self.faults
+            .materialize(self.cluster.nodes, self.workload.seed)
+            .map(|_| ())
     }
 }
 
@@ -312,6 +324,21 @@ seed = 7
         assert!(ExperimentConfig::from_toml("[sched]\nkind = \"bogus\"").is_err());
         assert!(ExperimentConfig::from_toml("[workload]\njobs = 0").is_err());
         assert!(ExperimentConfig::from_toml("[workload]\nplatform = \"dask\"").is_err());
+    }
+
+    #[test]
+    fn fault_plan_from_toml() {
+        let cfg = ExperimentConfig::from_toml(
+            "[faults]\nplan = \"60000:0:30000;120000:1+2:60000\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.fixed.len(), 3);
+        assert_eq!(cfg.faults.fixed[0].node, 0);
+        // Default is the empty plan.
+        assert!(ExperimentConfig::default().faults.is_empty());
+        // Plans referencing out-of-range nodes are rejected at validate.
+        assert!(ExperimentConfig::from_toml("[faults]\nplan = \"1000:9:500\"").is_err());
+        assert!(ExperimentConfig::from_toml("[faults]\nplan = \"garbage\"").is_err());
     }
 
     #[test]

@@ -28,7 +28,9 @@ use crate::util::stats::Ci95;
 /// Tag every shard file carries; guards against feeding arbitrary JSON in.
 pub const SHARD_FORMAT: &str = "dress-sweep-shard";
 /// Bumped whenever the shard schema changes incompatibly.
-pub const SHARD_VERSION: u64 = 1;
+/// v2: fault/recovery counters (lost attempts, lost/wasted/useful work,
+/// outage count) joined the cell summary.
+pub const SHARD_VERSION: u64 = 2;
 
 // ------------------------------------------------------------ fingerprint
 
@@ -211,6 +213,18 @@ pub struct CellSummary {
     pub util_sum_used: u64,
     /// Max containers simultaneously busy.
     pub util_peak: u32,
+    /// Container attempts started over the whole run.
+    pub attempts: u32,
+    /// Attempts killed by node crashes (fault plan).
+    pub lost_attempts: u32,
+    /// Run-time thrown away by crashes, ms.
+    pub lost_work_ms: u64,
+    /// Total wasted run-time (crashes plus ordinary task failures), ms.
+    pub wasted_work_ms: u64,
+    /// Run-time of attempts that completed, ms.
+    pub useful_work_ms: u64,
+    /// Node outages that fired during the run.
+    pub outages: u32,
     pub jobs: Vec<JobMetrics>,
 }
 
@@ -232,7 +246,24 @@ impl CellSummary {
             util_area_ms: r.util.area_ms,
             util_sum_used: r.util.sum_used,
             util_peak: r.util.peak_used,
+            attempts: r.attempts,
+            lost_attempts: r.lost_attempts,
+            lost_work_ms: r.lost_work_ms,
+            wasted_work_ms: r.wasted_work_ms,
+            useful_work_ms: r.useful_work_ms,
+            outages: r.outages.len() as u32,
             jobs: r.jobs.clone(),
+        }
+    }
+
+    /// Goodput recomputed from the wire integers — exactly the fraction
+    /// the originating [`RunResult::goodput`] computed.
+    pub fn goodput(&self) -> f64 {
+        let denom = self.useful_work_ms + self.wasted_work_ms;
+        if denom == 0 {
+            1.0
+        } else {
+            self.useful_work_ms as f64 / denom as f64
         }
     }
 
@@ -264,6 +295,12 @@ impl CellSummary {
         o.set("util_area_ms", Json::Num(self.util_area_ms as f64));
         o.set("util_sum_used", Json::Num(self.util_sum_used as f64));
         o.set("util_peak", Json::Num(self.util_peak as f64));
+        o.set("attempts", Json::Num(self.attempts as f64));
+        o.set("lost_attempts", Json::Num(self.lost_attempts as f64));
+        o.set("lost_work_ms", Json::Num(self.lost_work_ms as f64));
+        o.set("wasted_work_ms", Json::Num(self.wasted_work_ms as f64));
+        o.set("useful_work_ms", Json::Num(self.useful_work_ms as f64));
+        o.set("outages", Json::Num(self.outages as f64));
         let jobs: Vec<Json> = self
             .jobs
             .iter()
@@ -322,6 +359,19 @@ impl CellSummary {
                  (occupancy above capacity)"
             ));
         }
+        let attempts = u64_field(v, "attempts")? as u32;
+        let lost_attempts = u64_field(v, "lost_attempts")? as u32;
+        let lost_work_ms = u64_field(v, "lost_work_ms")?;
+        let wasted_work_ms = u64_field(v, "wasted_work_ms")?;
+        if lost_attempts > attempts {
+            return Err(format!("lost_attempts {lost_attempts} exceeds attempts {attempts}"));
+        }
+        if lost_work_ms > wasted_work_ms {
+            return Err(format!(
+                "lost_work_ms {lost_work_ms} exceeds wasted_work_ms {wasted_work_ms} \
+                 (crash losses are a subset of waste)"
+            ));
+        }
         Ok(CellSummary {
             index: u64_field(v, "index")? as usize,
             seed: u64_field(v, "seed")?,
@@ -337,6 +387,12 @@ impl CellSummary {
             util_area_ms,
             util_sum_used: u64_field(v, "util_sum_used")?,
             util_peak,
+            attempts,
+            lost_attempts,
+            lost_work_ms,
+            wasted_work_ms,
+            useful_work_ms: u64_field(v, "useful_work_ms")?,
+            outages: u64_field(v, "outages")? as u32,
             jobs,
         })
     }
@@ -450,10 +506,30 @@ pub fn shard_from_json(v: &Json) -> Result<ShardFile, String> {
 /// reassembles cells by grid index.  The result is indistinguishable from
 /// summarizing an unsharded `run_sweep`.
 pub fn merge_shards(files: Vec<ShardFile>) -> Result<(SweepMeta, Vec<CellSummary>), String> {
+    let (meta, count, seen) = validate_shard_set(&files)?;
+    let missing: Vec<usize> =
+        seen.iter().enumerate().filter(|(_, &s)| !s).map(|(i, _)| i).collect();
+    if !missing.is_empty() {
+        return Err(format!(
+            "incomplete merge: missing shards {missing:?} of /{count} \
+             (pass --partial to merge what survived)"
+        ));
+    }
+    let mut cells: Vec<CellSummary> = files.into_iter().flat_map(|f| f.cells).collect();
+    cells.sort_by_key(|c| c.index);
+    assert_eq!(cells.len(), meta.cells(), "validated shards cannot under-cover the grid");
+    Ok((meta, cells))
+}
+
+/// Shared validation for both merge flavors: every file must describe the
+/// same grid (meta equality includes the fingerprint) and the same
+/// partition width, with each shard index in range and present at most
+/// once.  Returns which shard indices are present.
+fn validate_shard_set(files: &[ShardFile]) -> Result<(SweepMeta, usize, Vec<bool>), String> {
     let first = files.first().ok_or("no shard files to merge")?;
     let meta = first.meta.clone();
     let count = first.shard.count;
-    for f in &files {
+    for f in files {
         if f.meta != meta {
             return Err(format!(
                 "shard grid mismatch: fingerprint {} vs {} — these files came from different \
@@ -469,7 +545,7 @@ pub fn merge_shards(files: Vec<ShardFile>) -> Result<(SweepMeta, Vec<CellSummary
         }
     }
     let mut seen = vec![false; count];
-    for f in &files {
+    for f in files {
         if f.shard.index >= count {
             return Err(format!("shard index {} out of range for /{count}", f.shard.index));
         }
@@ -478,15 +554,63 @@ pub fn merge_shards(files: Vec<ShardFile>) -> Result<(SweepMeta, Vec<CellSummary
         }
         seen[f.shard.index] = true;
     }
-    let missing: Vec<usize> =
-        seen.iter().enumerate().filter(|(_, &s)| !s).map(|(i, _)| i).collect();
-    if !missing.is_empty() {
-        return Err(format!("incomplete merge: missing shards {missing:?} of /{count}"));
+    Ok((meta, count, seen))
+}
+
+/// What a (possibly incomplete) shard set covers of its grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coverage {
+    /// Partition width the shards were swept with.
+    pub shard_count: usize,
+    pub shards_present: Vec<usize>,
+    pub shards_missing: Vec<usize>,
+    /// Grid indices no surviving shard carries, ascending.
+    pub missing_cells: Vec<usize>,
+    pub total_cells: usize,
+}
+
+impl Coverage {
+    pub fn is_complete(&self) -> bool {
+        self.shards_missing.is_empty()
     }
+
+    pub fn present_cells(&self) -> usize {
+        self.total_cells - self.missing_cells.len()
+    }
+}
+
+/// Merge an *incomplete* shard set (`dress sweep-merge --partial`): the
+/// same grid/partition validation as [`merge_shards`], but missing shards
+/// are tolerated and reported in the returned [`Coverage`] instead of
+/// rejected.  Cells come back sorted by grid index with holes where the
+/// missing shards were.
+pub fn merge_shards_partial(
+    files: Vec<ShardFile>,
+) -> Result<(SweepMeta, Vec<CellSummary>, Coverage), String> {
+    let (meta, count, seen) = validate_shard_set(&files)?;
+    let shards_present: Vec<usize> =
+        seen.iter().enumerate().filter(|(_, &s)| s).map(|(i, _)| i).collect();
+    let shards_missing: Vec<usize> =
+        seen.iter().enumerate().filter(|(_, &s)| !s).map(|(i, _)| i).collect();
     let mut cells: Vec<CellSummary> = files.into_iter().flat_map(|f| f.cells).collect();
     cells.sort_by_key(|c| c.index);
-    assert_eq!(cells.len(), meta.cells(), "validated shards cannot under-cover the grid");
-    Ok((meta, cells))
+    let mut have = cells.iter().map(|c| c.index).peekable();
+    let mut missing_cells = Vec::new();
+    for idx in 0..meta.cells() {
+        if have.peek() == Some(&idx) {
+            have.next();
+        } else {
+            missing_cells.push(idx);
+        }
+    }
+    let cov = Coverage {
+        shard_count: count,
+        shards_present,
+        shards_missing,
+        missing_cells,
+        total_cells: meta.cells(),
+    };
+    Ok((meta, cells, cov))
 }
 
 // ---------------------------------------------------------------- reports
@@ -514,20 +638,34 @@ pub fn pair_comparisons(
         .collect()
 }
 
-/// Seed aggregates per (workload, scheduler): makespan, average waiting
-/// and time-weighted utilization as 95% CIs across the seed axis.
+/// Seed aggregates per (workload, scheduler): makespan, average waiting,
+/// time-weighted utilization and goodput as 95% CIs across the seed axis.
+///
+/// Tolerates sparse cell sets (partial merges): absent seeds simply drop
+/// out of a group's sample (`n` in the output reflects what survived),
+/// and a group with no surviving cells is omitted.  On a complete grid
+/// this is byte-identical to the historical full-grid behavior.
 pub fn sweep_stat_rows(meta: &SweepMeta, cells: &[CellSummary]) -> Vec<StatsRow> {
+    let mut by_index: Vec<Option<&CellSummary>> = vec![None; meta.cells()];
+    for c in cells {
+        by_index[c.index] = Some(c);
+    }
     let mut rows = Vec::new();
     for (w, _) in meta.workloads.iter().enumerate() {
         for (k, sched) in meta.scheds.iter().enumerate() {
             let mut makespans = Vec::with_capacity(meta.seeds.len());
             let mut waits = Vec::with_capacity(meta.seeds.len());
             let mut utils = Vec::with_capacity(meta.seeds.len());
+            let mut goodputs = Vec::with_capacity(meta.seeds.len());
             for s in 0..meta.seeds.len() {
-                let c = &cells[meta.index(w, k, s)];
+                let Some(c) = by_index[meta.index(w, k, s)] else { continue };
                 makespans.push(c.makespan_ms as f64 / 1000.0);
                 waits.push(avg_wait_s(c));
                 utils.push(100.0 * c.util().mean_utilization());
+                goodputs.push(c.goodput());
+            }
+            if makespans.is_empty() {
+                continue;
             }
             let group = format!("w{w}/{sched}");
             rows.push(StatsRow {
@@ -540,7 +678,12 @@ pub fn sweep_stat_rows(meta: &SweepMeta, cells: &[CellSummary]) -> Vec<StatsRow>
                 metric: "avg_wait_s".into(),
                 ci: Ci95::of(&waits),
             });
-            rows.push(StatsRow { group, metric: "util_pct".into(), ci: Ci95::of(&utils) });
+            rows.push(StatsRow {
+                group: group.clone(),
+                metric: "util_pct".into(),
+                ci: Ci95::of(&utils),
+            });
+            rows.push(StatsRow { group, metric: "goodput".into(), ci: Ci95::of(&goodputs) });
         }
     }
     rows
@@ -553,6 +696,106 @@ pub fn sweep_claim_checks(meta: &SweepMeta, cells: &[CellSummary]) -> Vec<SweepC
     let spark = pair_comparisons(meta, cells, 0);
     let mr = pair_comparisons(meta, cells, 1);
     paper::evaluate_sweep_claims(&spark, &mr)
+}
+
+/// The per-cell table shared by the full and partial reports.
+fn cell_table(meta: &SweepMeta, cells: &[CellSummary]) -> String {
+    let header = [
+        "Cell", "Wkld", "Seed", "Scheduler", "Makespan (s)", "Avg wait (s)", "Util (%)",
+        "Events", "Lost", "Goodput",
+    ];
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            let (w, _, _) = meta.point(c.index);
+            vec![
+                c.index.to_string(),
+                format!("w{w}"),
+                c.seed.to_string(),
+                c.scheduler.clone(),
+                format!("{:.1}", c.makespan_ms as f64 / 1000.0),
+                format!("{:.1}", avg_wait_s(c)),
+                format!("{:.1}", 100.0 * c.util().mean_utilization()),
+                c.events.to_string(),
+                c.lost_attempts.to_string(),
+                format!("{:.3}", c.goodput()),
+            ]
+        })
+        .collect();
+    report::render_table(&header, &rows)
+}
+
+/// Render the degraded report for a partial merge: the coverage section
+/// (which shards and grid cells survived) followed by the per-cell table
+/// and seed aggregates over the surviving cells only.  Paper-mode claim
+/// checks need complete DRESS/baseline pairs, so they are skipped with a
+/// note rather than judged on holes.
+pub fn render_partial_sweep_report(
+    meta: &SweepMeta,
+    cells: &[CellSummary],
+    cov: &Coverage,
+) -> String {
+    let mut out = format!(
+        "partial sweep report: {} seeds x {} schedulers x {} workloads = {} cells ({})\n",
+        meta.seeds.len(),
+        meta.scheds.len(),
+        meta.workloads.len(),
+        meta.cells(),
+        meta.mode.as_str(),
+    );
+    out.push_str(&format!("grid fingerprint: {}\n", meta.fingerprint));
+    for (w, label) in meta.workloads.iter().enumerate() {
+        out.push_str(&format!("workload {w}: {label}\n"));
+    }
+    out.push('\n');
+
+    out.push_str(&format!(
+        "coverage: {}/{} shards present, {}/{} cells\n",
+        cov.shards_present.len(),
+        cov.shard_count,
+        cov.present_cells(),
+        cov.total_cells,
+    ));
+    out.push_str(&format!("  shards present: {:?}\n", cov.shards_present));
+    if cov.is_complete() {
+        out.push_str("  all shards present — the partition is complete\n");
+    } else {
+        out.push_str(&format!("  shards missing: {:?}\n", cov.shards_missing));
+        out.push_str("  missing cells (by grid index):\n");
+        for &idx in &cov.missing_cells {
+            let (w, k, s) = meta.point(idx);
+            out.push_str(&format!(
+                "    cell {idx} = w{w}/{}/seed {}\n",
+                meta.scheds[k], meta.seeds[s]
+            ));
+        }
+    }
+    out.push('\n');
+
+    out.push_str(&cell_table(meta, cells));
+    out.push('\n');
+
+    out.push_str("seed aggregates over surviving cells (Student-t 95% CI; n varies):\n");
+    out.push_str(&report::stats_table(&sweep_stat_rows(meta, cells)));
+
+    if meta.mode == SweepMode::Paper {
+        out.push('\n');
+        if cov.is_complete() {
+            let checks = sweep_claim_checks(meta, cells);
+            out.push_str("paper claims (pass/fail on the 95% CI bound):\n");
+            for c in &checks {
+                let (row, _) = report::comparison_row_ci(&c.claim, &c.ci);
+                out.push_str(&row);
+                out.push('\n');
+            }
+        } else {
+            out.push_str(
+                "paper claims: skipped — claim CIs need complete DRESS/baseline \
+                 pairs on every seed (merge the missing shards and re-run)\n",
+            );
+        }
+    }
+    out
 }
 
 fn avg_wait_s(c: &CellSummary) -> f64 {
@@ -583,26 +826,7 @@ pub fn render_sweep_report(meta: &SweepMeta, cells: &[CellSummary]) -> String {
     }
     out.push('\n');
 
-    let header = [
-        "Cell", "Wkld", "Seed", "Scheduler", "Makespan (s)", "Avg wait (s)", "Util (%)", "Events",
-    ];
-    let rows: Vec<Vec<String>> = cells
-        .iter()
-        .map(|c| {
-            let (w, _, _) = meta.point(c.index);
-            vec![
-                c.index.to_string(),
-                format!("w{w}"),
-                c.seed.to_string(),
-                c.scheduler.clone(),
-                format!("{:.1}", c.makespan_ms as f64 / 1000.0),
-                format!("{:.1}", avg_wait_s(c)),
-                format!("{:.1}", 100.0 * c.util().mean_utilization()),
-                c.events.to_string(),
-            ]
-        })
-        .collect();
-    out.push_str(&report::render_table(&header, &rows));
+    out.push_str(&cell_table(meta, cells));
     out.push('\n');
 
     out.push_str("seed aggregates (Student-t 95% CI):\n");
@@ -801,10 +1025,71 @@ mod tests {
         assert!(report.contains("n_seeds") && report.contains("ci_lo"));
         assert!(report.contains("w0/fifo") && report.contains("w0/dress"));
         assert!(report.contains("Util (%)") && report.contains("util_pct"));
+        assert!(report.contains("Goodput") && report.contains("goodput"));
         assert!(!report.contains("paper claims"), "grid mode has no claim section");
         let rows = sweep_stat_rows(&meta, &cells);
-        assert_eq!(rows.len(), 6, "2 scheds x 3 metrics");
+        assert_eq!(rows.len(), 8, "2 scheds x 4 metrics");
         assert!(rows.iter().all(|r| r.ci.n == 3));
+    }
+
+    #[test]
+    fn partial_merge_reports_coverage_over_surviving_cells() {
+        // Grid: 1 workload x [fifo, dress] x seeds [5, 6] = 4 cells.
+        // Shards of /3 own {0,3}, {1}, {2}; drop shard 1 (cell 1 =
+        // w0/fifo/seed 6) and merge the survivors.
+        let g = tiny_grid(vec![5, 6]);
+        let meta = SweepMeta::of(&g, SweepMode::Grid);
+        let mk = |i: usize, n: usize| {
+            let spec = ShardSpec { index: i, count: n };
+            ShardFile { meta: meta.clone(), shard: spec, cells: run_shard(&g, spec, 1) }
+        };
+        let (m, cells, cov) = merge_shards_partial(vec![mk(2, 3), mk(0, 3)]).unwrap();
+        assert_eq!(m, meta);
+        assert_eq!(cov.shard_count, 3);
+        assert_eq!(cov.shards_present, vec![0, 2]);
+        assert_eq!(cov.shards_missing, vec![1]);
+        assert_eq!(cov.missing_cells, vec![1]);
+        assert_eq!(cov.present_cells(), 3);
+        assert!(!cov.is_complete());
+        let indices: Vec<usize> = cells.iter().map(|c| c.index).collect();
+        assert_eq!(indices, vec![0, 2, 3]);
+
+        let report = render_partial_sweep_report(&meta, &cells, &cov);
+        assert!(report.contains("coverage: 2/3 shards present, 3/4 cells"), "{report}");
+        assert!(report.contains("shards missing: [1]"));
+        assert!(report.contains("cell 1 = w0/fifo/seed 6"));
+        // Degraded aggregates: fifo survives with one seed, dress with two.
+        let rows = sweep_stat_rows(&meta, &cells);
+        let n_of = |g: &str| rows.iter().find(|r| r.group == g).unwrap().ci.n;
+        assert_eq!(n_of("w0/fifo"), 1);
+        assert_eq!(n_of("w0/dress"), 2);
+
+        // A complete set through the partial path covers everything.
+        let (_, cells2, cov2) = merge_shards_partial(vec![mk(0, 2), mk(1, 2)]).unwrap();
+        assert!(cov2.is_complete());
+        assert_eq!(cells2.len(), 4);
+
+        // The partial path still rejects foreign grids.
+        let mut alien = mk(1, 3);
+        alien.meta.fingerprint = "0000000000000000".into();
+        assert!(merge_shards_partial(vec![mk(0, 3), alien]).unwrap_err().contains("mismatch"));
+    }
+
+    #[test]
+    fn cell_summary_validates_fault_integers() {
+        let g = tiny_grid(vec![5]);
+        let (cfg, specs) = g.cell(0);
+        let r = crate::sim::run_experiment_with(&cfg, specs, g.opts);
+        let cell = CellSummary::of(&g, 0, &r);
+        assert_eq!(cell.outages, 0, "no fault plan, no outages");
+        assert_eq!(cell.lost_attempts, 0);
+        assert!((cell.goodput() - r.goodput()).abs() < 1e-12);
+        let mut bad = cell.to_json();
+        bad.set("lost_attempts", Json::Num((cell.attempts + 1) as f64));
+        assert!(CellSummary::from_json(&bad).unwrap_err().contains("lost_attempts"));
+        let mut bad = cell.to_json();
+        bad.set("lost_work_ms", Json::Num(cell.wasted_work_ms as f64 + 1.0));
+        assert!(CellSummary::from_json(&bad).unwrap_err().contains("lost_work_ms"));
     }
 
     #[test]

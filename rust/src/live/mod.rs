@@ -35,6 +35,19 @@ pub struct LiveConfig {
     pub units_per_sec: f64,
     /// Hard wall-clock cap.
     pub max_wall: Duration,
+    /// Per-attempt task deadline.  A dispatched attempt that has not
+    /// reported back within `task_deadline << attempt` (multiplicative
+    /// backoff) is presumed lost — dead worker, dropped completion — and
+    /// its slot is reclaimed and the task requeued.
+    pub task_deadline: Duration,
+    /// Attempts beyond the first before a task is abandoned and its job
+    /// reported in [`LiveReport::unfinished`].
+    pub max_retries: u32,
+    /// Fault injection: this many workers die silently on their first
+    /// task — they consume the message, report nothing, and exit.  The
+    /// deadline/requeue machinery must absorb both the lost task and the
+    /// permanently smaller pool.  0 in production.
+    pub simulate_worker_deaths: u32,
 }
 
 impl Default for LiveConfig {
@@ -44,6 +57,9 @@ impl Default for LiveConfig {
             hb: Duration::from_millis(100),
             units_per_sec: 0.25,
             max_wall: Duration::from_secs(300),
+            task_deadline: Duration::from_secs(30),
+            max_retries: 2,
+            simulate_worker_deaths: 0,
         }
     }
 }
@@ -52,11 +68,17 @@ impl Default for LiveConfig {
 #[derive(Debug, Clone)]
 pub struct LiveReport {
     pub scheduler: String,
+    /// Metrics for jobs that *finished*; abandoned jobs are not here.
     pub jobs: Vec<JobMetrics>,
     pub makespan: Duration,
     pub tasks_run: usize,
     /// Sum of all task checksums — proof the PJRT compute really happened.
     pub checksum: f64,
+    /// Jobs that did not finish: a task exhausted its retries (or the
+    /// whole worker pool died).  Empty on a healthy run.
+    pub unfinished: Vec<JobId>,
+    /// Task attempts requeued after a deadline expiry or failed attempt.
+    pub requeues: usize,
 }
 
 struct TaskMsg {
@@ -65,21 +87,39 @@ struct TaskMsg {
     task: usize,
     units: u32,
     seed: u64,
+    attempt: u32,
 }
 
 struct DoneMsg {
     job: JobId,
     phase: usize,
     task: usize,
+    /// Echo of [`TaskMsg::attempt`]: completions from superseded attempts
+    /// (the deadline path already requeued the task) are discarded instead
+    /// of corrupting the state machine.
+    attempt: u32,
+    /// False when the compute failed or panicked; triggers a retry.
+    ok: bool,
     started: Instant,
     finished: Instant,
     checksum: f32,
 }
 
+const PENDING: u8 = 0;
+const RUNNING: u8 = 1;
+const DONE: u8 = 2;
+const ABANDONED: u8 = 3;
+
 #[derive(Clone)]
 struct LiveTask {
     units: u32,
-    state: u8, // 0 pending, 1 running, 2 done
+    state: u8, // PENDING / RUNNING / DONE / ABANDONED
+    /// Attempt counter; incremented on every requeue.  The running
+    /// attempt's number rides along in TaskMsg/DoneMsg for stale-completion
+    /// detection.
+    attempt: u32,
+    /// When the current attempt was dispatched (deadline anchor).
+    running_since: Option<Time>,
 }
 
 struct LiveJob {
@@ -90,25 +130,38 @@ struct LiveJob {
     first_start: Option<Time>,
     finish: Option<Time>,
     occupied: u32,
+    /// A task exhausted its retries: the job can never finish.  Failed
+    /// jobs read as `finished` to schedulers and stop dispatching.
+    failed: bool,
 }
 
 impl LiveJob {
     fn pending_tasks(&self) -> u32 {
-        if self.cur_phase >= self.tasks.len() {
+        if self.failed || self.cur_phase >= self.tasks.len() {
             return 0;
         }
-        self.tasks[self.cur_phase].iter().filter(|t| t.state == 0).count() as u32
+        self.tasks[self.cur_phase].iter().filter(|t| t.state == PENDING).count() as u32
     }
     fn advance(&mut self) {
         while self.cur_phase < self.tasks.len()
-            && self.tasks[self.cur_phase].iter().all(|t| t.state == 2)
+            && self.tasks[self.cur_phase].iter().all(|t| t.state == DONE)
         {
             self.cur_phase += 1;
         }
     }
     fn all_done(&self) -> bool {
-        self.tasks.iter().all(|p| p.iter().all(|t| t.state == 2))
+        self.tasks.iter().all(|p| p.iter().all(|t| t.state == DONE))
     }
+    /// Finished or permanently failed — nothing left to drive.
+    fn terminal(&self) -> bool {
+        self.finish.is_some() || self.failed
+    }
+}
+
+/// Deadline for a given attempt: base doubled per retry (backoff gives a
+/// slow-but-alive worker a growing grace window before we burn a retry).
+fn attempt_deadline_ms(base: Duration, attempt: u32) -> Time {
+    (base.as_millis() as Time).saturating_mul(1 << attempt.min(16))
 }
 
 /// Run `specs` under `sched` with real PJRT task compute.
@@ -132,24 +185,43 @@ pub fn run_live(
 
     // Worker pool. PJRT handles are not Send, so each worker owns its own
     // client + compiled executable (compiled once per thread, reused for
-    // every task — still zero Python on the request path).
+    // every task — still zero Python on the request path).  A worker that
+    // fails to initialize, or panics mid-task, must never take the run
+    // down with it: init failures exit the thread (the rest of the pool
+    // absorbs the load), task panics are caught and reported as failed
+    // attempts, and a silently-dead worker is covered by the driver's
+    // per-task deadline.
     let mut handles = Vec::new();
-    for _ in 0..cfg.workers.max(1) {
+    for widx in 0..cfg.workers.max(1) {
         let rx = Arc::clone(&task_rx);
         let tx = done_tx.clone();
         let path = taskwork_path.to_string();
+        let lethal = (widx as u32) < cfg.simulate_worker_deaths;
         handles.push(std::thread::spawn(move || {
-            let rt = Runtime::cpu().expect("worker PJRT client");
-            let work = TaskWork::load(&rt, &path).expect("worker taskwork load");
+            let Ok(rt) = Runtime::cpu() else { return };
+            let Ok(work) = TaskWork::load(&rt, &path) else { return };
             loop {
                 let msg = { rx.lock().unwrap().recv() };
                 let Ok(m) = msg else { break };
+                if lethal {
+                    // Fault injection: die holding the task, reporting
+                    // nothing — exactly what a crashed machine looks like.
+                    return;
+                }
                 let started = Instant::now();
-                let checksum = work.run_units(m.seed, m.units).unwrap_or(f32::NAN);
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    work.run_units(m.seed, m.units)
+                }));
+                let (ok, checksum) = match out {
+                    Ok(Ok(c)) if c.is_finite() => (true, c),
+                    _ => (false, f32::NAN),
+                };
                 let _ = tx.send(DoneMsg {
                     job: m.job,
                     phase: m.phase,
                     task: m.task,
+                    attempt: m.attempt,
+                    ok,
                     started,
                     finished: Instant::now(),
                     checksum,
@@ -158,6 +230,9 @@ pub fn run_live(
         }));
     }
     drop(done_tx);
+    // Drop the driver's receiver handle so `task_tx.send` starts failing
+    // the moment every worker has exited — the observable all-dead signal.
+    drop(task_rx);
 
     let epoch = Instant::now();
     let now_ms = |t: Instant| t.duration_since(epoch).as_millis() as Time;
@@ -175,7 +250,9 @@ pub fn run_live(
                             units: ((t.duration_ms as f64 / 1000.0 * cfg.units_per_sec).ceil()
                                 as u32)
                                 .max(1),
-                            state: 0,
+                            state: PENDING,
+                            attempt: 0,
+                            running_since: None,
                         })
                         .collect()
                 })
@@ -188,6 +265,7 @@ pub fn run_live(
                 first_start: None,
                 finish: None,
                 occupied: 0,
+                failed: false,
             }
         })
         .collect();
@@ -195,8 +273,10 @@ pub fn run_live(
     let total = cfg.workers as u32;
     let mut tasks_run = 0usize;
     let mut checksum = 0f64;
+    let mut requeues = 0usize;
     let mut transitions: Vec<Transition> = Vec::new();
     let mut cid: u32 = 0;
+    let mut pool_dead = false;
 
     loop {
         let wall = epoch.elapsed();
@@ -207,8 +287,33 @@ pub fn run_live(
 
         // Drain completions.
         while let Ok(d) = done_rx.try_recv() {
-            let ji = jobs.iter().position(|j| j.spec.id == d.job).unwrap();
-            jobs[ji].tasks[d.phase][d.task].state = 2;
+            let Some(ji) = jobs.iter().position(|j| j.spec.id == d.job) else { continue };
+            let t = &mut jobs[ji].tasks[d.phase][d.task];
+            if t.state != RUNNING || t.attempt != d.attempt {
+                // Stale: this attempt was already presumed lost and
+                // requeued (its occupied slot was reclaimed then).
+                continue;
+            }
+            if !d.ok {
+                // Failed/panicked attempt: reclaim the slot and retry
+                // (or abandon once the retry budget is spent).
+                t.running_since = None;
+                let abandon = t.attempt >= cfg.max_retries;
+                if abandon {
+                    t.state = ABANDONED;
+                } else {
+                    t.state = PENDING;
+                    t.attempt += 1;
+                    requeues += 1;
+                }
+                jobs[ji].occupied -= 1;
+                if abandon {
+                    jobs[ji].failed = true;
+                }
+                continue;
+            }
+            t.state = DONE;
+            t.running_since = None;
             jobs[ji].occupied -= 1;
             let start_ms = now_ms(d.started);
             if jobs[ji].first_start.is_none() {
@@ -229,6 +334,43 @@ pub fn run_live(
             checksum += d.checksum as f64;
         }
 
+        // Deadline scan: an attempt running past its backed-off deadline
+        // was lost — a dead worker, a dropped completion — so reclaim the
+        // slot and requeue.  Should the attempt report after all, the
+        // echoed attempt number marks it stale above.
+        for j in jobs.iter_mut() {
+            if j.terminal() || j.cur_phase >= j.tasks.len() {
+                continue;
+            }
+            let mut failed = false;
+            let mut reclaimed = 0u32;
+            let phase = j.cur_phase;
+            for t in j.tasks[phase].iter_mut() {
+                if t.state != RUNNING {
+                    continue;
+                }
+                let Some(since) = t.running_since else { continue };
+                if now.saturating_sub(since) <= attempt_deadline_ms(cfg.task_deadline, t.attempt)
+                {
+                    continue;
+                }
+                t.running_since = None;
+                reclaimed += 1;
+                if t.attempt >= cfg.max_retries {
+                    t.state = ABANDONED;
+                    failed = true;
+                } else {
+                    t.state = PENDING;
+                    t.attempt += 1;
+                    requeues += 1;
+                }
+            }
+            j.occupied -= reclaimed;
+            if failed {
+                j.failed = true;
+            }
+        }
+
         // Submissions (arrival times are wall-clock offsets).
         for j in jobs.iter_mut() {
             if !j.submitted && j.spec.submit_ms <= now {
@@ -236,7 +378,15 @@ pub fn run_live(
             }
         }
 
-        if jobs.iter().all(|j| j.finish.is_some()) {
+        if pool_dead {
+            // Every worker is gone: nothing pending can ever run again.
+            for j in jobs.iter_mut() {
+                if !j.terminal() {
+                    j.failed = true;
+                }
+            }
+        }
+        if jobs.iter().all(|j| j.terminal()) {
             break;
         }
 
@@ -250,7 +400,7 @@ pub fn run_live(
                 demand: j.spec.demand.min(total),
                 submit_ms: j.spec.submit_ms,
                 started: j.first_start.is_some() || j.occupied > 0,
-                finished: j.finish.is_some(),
+                finished: j.terminal(),
                 pending_tasks: j.pending_tasks(),
                 occupied: j.occupied,
             })
@@ -265,17 +415,38 @@ pub fn run_live(
         let allocs = sched.schedule(&view);
         transitions.clear();
         let mut free = total.saturating_sub(occupied_total);
-        for a in allocs {
-            let ji = jobs.iter().position(|j| j.spec.id == a.job).unwrap();
+        'dispatch: for a in allocs {
+            let Some(ji) = jobs.iter().position(|j| j.spec.id == a.job) else { continue };
+            if jobs[ji].terminal() {
+                continue;
+            }
             for _ in 0..a.n.min(free) {
                 let phase = jobs[ji].cur_phase;
                 if phase >= jobs[ji].tasks.len() {
                     break;
                 }
-                let Some(ti) = jobs[ji].tasks[phase].iter().position(|t| t.state == 0) else {
+                let Some(ti) =
+                    jobs[ji].tasks[phase].iter().position(|t| t.state == PENDING)
+                else {
                     break;
                 };
-                jobs[ji].tasks[phase][ti].state = 1;
+                // Send before mutating: if the whole pool is gone the task
+                // stays PENDING (nothing to undo) and the run winds down
+                // through the pool-dead path instead of panicking.
+                let sent = task_tx.send(TaskMsg {
+                    job: a.job,
+                    phase,
+                    task: ti,
+                    units: jobs[ji].tasks[phase][ti].units,
+                    seed: (a.job as u64) << 16 | ti as u64,
+                    attempt: jobs[ji].tasks[phase][ti].attempt,
+                });
+                if sent.is_err() {
+                    pool_dead = true;
+                    break 'dispatch;
+                }
+                jobs[ji].tasks[phase][ti].state = RUNNING;
+                jobs[ji].tasks[phase][ti].running_since = Some(now);
                 jobs[ji].occupied += 1;
                 free -= 1;
                 cid += 1;
@@ -286,15 +457,6 @@ pub fn run_live(
                     task: ti,
                     to: ContainerState::Running,
                 });
-                task_tx
-                    .send(TaskMsg {
-                        job: a.job,
-                        phase,
-                        task: ti,
-                        units: jobs[ji].tasks[phase][ti].units,
-                        seed: (a.job as u64) << 16 | ti as u64,
-                    })
-                    .expect("worker pool alive");
             }
         }
 
@@ -306,21 +468,27 @@ pub fn run_live(
         let _ = h.join();
     }
 
+    // Metrics only for jobs that actually finished; a job that never
+    // started (all attempts lost) or never finished must not panic the
+    // report, and wall-clock jitter must not underflow the subtractions.
     let job_metrics: Vec<JobMetrics> = jobs
         .iter()
-        .map(|j| {
-            let waiting = j.first_start.unwrap().saturating_sub(j.spec.submit_ms);
-            let completion = j.finish.unwrap().saturating_sub(j.spec.submit_ms);
-            JobMetrics {
+        .filter_map(|j| {
+            let (first, finish) = (j.first_start?, j.finish?);
+            let waiting = first.saturating_sub(j.spec.submit_ms);
+            let completion = finish.saturating_sub(j.spec.submit_ms);
+            Some(JobMetrics {
                 id: j.spec.id,
                 demand: j.spec.demand,
                 submit_ms: j.spec.submit_ms,
                 waiting_ms: waiting,
                 completion_ms: completion,
-                execution_ms: completion - waiting,
-            }
+                execution_ms: completion.saturating_sub(waiting),
+            })
         })
         .collect();
+    let unfinished: Vec<JobId> =
+        jobs.iter().filter(|j| j.finish.is_none()).map(|j| j.spec.id).collect();
 
     Ok(LiveReport {
         scheduler: sched.name().to_string(),
@@ -328,6 +496,8 @@ pub fn run_live(
         makespan: epoch.elapsed(),
         tasks_run,
         checksum,
+        unfinished,
+        requeues,
     })
 }
 
@@ -342,5 +512,47 @@ mod tests {
         let c = LiveConfig::default();
         assert!(c.workers > 0);
         assert!(c.hb < Duration::from_secs(1));
+        assert!(c.task_deadline > c.hb, "deadline shorter than a heartbeat would thrash");
+        assert!(c.max_retries >= 1);
+        assert_eq!(c.simulate_worker_deaths, 0, "fault injection must be off by default");
+    }
+
+    #[test]
+    fn deadline_backoff_doubles_and_never_overflows() {
+        let base = Duration::from_secs(30);
+        assert_eq!(attempt_deadline_ms(base, 0), 30_000);
+        assert_eq!(attempt_deadline_ms(base, 1), 60_000);
+        assert_eq!(attempt_deadline_ms(base, 3), 240_000);
+        // The shift is capped, so absurd attempt counts stay finite.
+        assert_eq!(attempt_deadline_ms(base, 64), attempt_deadline_ms(base, 16));
+    }
+
+    #[test]
+    fn failed_job_reports_no_pending_tasks() {
+        let mut j = LiveJob {
+            spec: JobSpec {
+                id: 1,
+                name: "t".into(),
+                platform: crate::jobs::Platform::MapReduce,
+                submit_ms: 0,
+                demand: 2,
+                phases: vec![],
+            },
+            cur_phase: 0,
+            tasks: vec![vec![
+                LiveTask { units: 1, state: PENDING, attempt: 0, running_since: None },
+                LiveTask { units: 1, state: ABANDONED, attempt: 3, running_since: None },
+            ]],
+            submitted: true,
+            first_start: None,
+            finish: None,
+            occupied: 0,
+            failed: true,
+        };
+        assert_eq!(j.pending_tasks(), 0, "failed jobs must not advertise work");
+        assert!(j.terminal());
+        assert!(!j.all_done());
+        j.failed = false;
+        assert_eq!(j.pending_tasks(), 1);
     }
 }

@@ -175,6 +175,12 @@ mod tests {
             util_recorded: 0,
             delta_recorded: 0,
             failures: 0,
+            lost_attempts: 0,
+            lost_work_ms: 0,
+            useful_work_ms: 0,
+            wasted_work_ms: 0,
+            attempts: 0,
+            outages: vec![],
             events: 0,
             sched_ticks: 0,
             tasks_recorded: 0,

@@ -36,7 +36,6 @@ pub struct DressScheduler {
     classifier: Classifier,
     estimator: EstimatorBank,
     delta: f64,
-    total: u32,
     hb_ms: Time,
     gang: bool,
     /// Ablation: freeze δ at its initial value (disables Algorithm 3).
@@ -46,7 +45,10 @@ pub struct DressScheduler {
 }
 
 impl DressScheduler {
-    pub fn new(cfg: &SchedConfig, total: u32) -> Self {
+    /// `_total` is the provisioned capacity; DRESS re-derives its split
+    /// from the *live* `ClusterView::total` each heartbeat (time-varying
+    /// under a fault plan), so construction keeps no capacity state.
+    pub fn new(cfg: &SchedConfig, _total: u32) -> Self {
         DressScheduler {
             classifier: Classifier::new(cfg.theta),
             estimator: EstimatorBank::new(EstimatorParams {
@@ -55,7 +57,6 @@ impl DressScheduler {
                 pw_ms: cfg.pw_ms,
             }),
             delta: cfg.delta0,
-            total,
             hb_ms: 1_000,
             gang: cfg.gang,
             freeze_delta: false,
@@ -83,10 +84,11 @@ impl DressScheduler {
         self.classifier.get(job).unwrap_or(Category::Sd)
     }
 
-    /// Pool quotas: SD gets round(δ·Tot), LD the rest.
-    fn quotas(&self) -> (u32, u32) {
-        let sd = ((self.delta * self.total as f64).round() as u32).clamp(1, self.total - 1);
-        (sd, self.total - sd)
+    /// Pool quotas over the *live* capacity: SD gets round(δ·Tot), LD the
+    /// rest.  `total` must be >= 2 (both pools need at least one slot).
+    fn quotas(&self, total: u32) -> (u32, u32) {
+        let sd = ((self.delta * total as f64).round() as u32).clamp(1, total - 1);
+        (sd, total - sd)
     }
 
     /// FCFS-with-ascending-fallback admission inside one category.
@@ -168,6 +170,15 @@ impl Scheduler for DressScheduler {
         self.estimator.ingest(view.transitions);
         self.estimator.tick(view.now);
 
+        // Degraded capacity (fault plan): the split is re-derived from the
+        // live total every heartbeat.  Below two slots there is no way to
+        // give each pool its mandatory minimum, so grant nothing and wait
+        // for recovery — classification and estimator state stay warm above.
+        let total = view.total;
+        if total < 2 {
+            return Vec::new();
+        }
+
         // One fused pass over the view (perf iter 4): per-category
         // occupancy plus the running / waiting partitions, all in
         // submission order.  The seed re-derived each of these with its own
@@ -200,7 +211,7 @@ impl Scheduler for DressScheduler {
         } else {
             self.estimator.predicted_release_pair(view.now, horizon)
         };
-        let (sd_quota, ld_quota) = self.quotas();
+        let (sd_quota, ld_quota) = self.quotas(total);
         // Free containers attributable per pool: quota minus occupancy,
         // bounded by what is globally free.
         let ac1 = sd_quota.saturating_sub(occ_sd).min(view.free) as f64;
@@ -215,7 +226,7 @@ impl Scheduler for DressScheduler {
             self.delta = adjust(
                 self.delta,
                 &ReserveInputs {
-                    total: self.total,
+                    total,
                     ac1,
                     ac2,
                     f1,
@@ -233,7 +244,7 @@ impl Scheduler for DressScheduler {
         // (4) allocation against the adjusted quotas.  Occupancy is
         // unchanged since the fused pass (the view is immutable), so the
         // counters are reused instead of rescanned.
-        let (sd_quota, ld_quota) = self.quotas();
+        let (sd_quota, ld_quota) = self.quotas(total);
         let mut sd_free = sd_quota.saturating_sub(occ_sd);
         let mut ld_free = ld_quota.saturating_sub(occ_ld);
         let mut free = view.free;
@@ -296,7 +307,7 @@ impl Scheduler for DressScheduler {
                 free -= want;
                 // δ grows with each migrated reservation (line 23).
                 if !self.freeze_delta {
-                    self.delta = (self.delta + want as f64 / self.total as f64)
+                    self.delta = (self.delta + want as f64 / total as f64)
                         .clamp(reserve::DELTA_MIN, reserve::DELTA_MAX);
                 }
             }
@@ -369,6 +380,21 @@ mod tests {
         let mut s = dress(40);
         let allocs = s.schedule(&view(40, 40, jobs.clone()));
         assert!(allocs.iter().any(|a| a.job == 1 && a.n == 4), "{allocs:?}");
+    }
+
+    #[test]
+    fn split_tracks_live_total_under_degraded_capacity() {
+        // Built against 40 slots but observing a 20-slot cluster (node
+        // down): grants must respect the live capacity, and a <2-slot view
+        // grants nothing at all (no room for both mandatory pool minimums).
+        let jobs = vec![jv(1, 18, 18)];
+        let mut s = dress(40);
+        let allocs = s.schedule(&view(20, 20, jobs.clone()));
+        let granted: u32 = allocs.iter().map(|a| a.n).sum();
+        assert!(granted <= 20, "over-allocated on degraded cluster: {allocs:?}");
+        assert!(allocs.iter().any(|a| a.job == 1), "{allocs:?}");
+        let mut s2 = dress(40);
+        assert!(s2.schedule(&view(1, 1, jobs)).is_empty());
     }
 
     #[test]

@@ -18,13 +18,15 @@ pub struct MultiDress {
     thresholds: Vec<f64>,
     /// Current reserve share per bucket (sums to 1).
     shares: Vec<f64>,
-    total: u32,
     cats: Vec<Option<usize>>, // job id -> bucket, sticky
 }
 
 impl MultiDress {
     /// `thresholds` must be ascending, in (0,1). Buckets = len + 1.
-    pub fn new(thresholds: Vec<f64>, total: u32) -> Self {
+    /// `_total` is the provisioned capacity; pools are sized from the
+    /// *live* `ClusterView::total` each heartbeat (time-varying under a
+    /// fault plan), so construction keeps no capacity state.
+    pub fn new(thresholds: Vec<f64>, _total: u32) -> Self {
         assert!(!thresholds.is_empty());
         assert!(thresholds.windows(2).all(|w| w[0] < w[1]));
         assert!(thresholds.iter().all(|&t| 0.0 < t && t < 1.0));
@@ -32,7 +34,6 @@ impl MultiDress {
         MultiDress {
             thresholds,
             shares: vec![1.0 / n as f64; n],
-            total,
             cats: Vec::new(),
         }
     }
@@ -45,7 +46,8 @@ impl MultiDress {
         &self.shares
     }
 
-    fn classify(&mut self, job: JobId, demand: u32) -> usize {
+    /// Sticky bucket assignment against the capacity observed at arrival.
+    fn classify(&mut self, job: JobId, demand: u32, total: u32) -> usize {
         let idx = job as usize;
         if idx >= self.cats.len() {
             self.cats.resize(idx + 1, None);
@@ -56,7 +58,7 @@ impl MultiDress {
         let b = self
             .thresholds
             .iter()
-            .position(|&t| (demand as f64) <= t * self.total as f64)
+            .position(|&t| (demand as f64) <= t * total as f64)
             .unwrap_or(self.thresholds.len());
         self.cats[idx] = Some(b);
         b
@@ -74,7 +76,7 @@ impl MultiDress {
     /// reservation has the paper's "dynamic" character without thrash).
     /// Each bucket with pending work gets a floor large enough for its
     /// smallest waiting job, so no bucket starves on share arithmetic.
-    fn adjust_shares(&mut self, pending: &[f64], min_pending_demand: &[u32]) {
+    fn adjust_shares(&mut self, pending: &[f64], min_pending_demand: &[u32], cap: u32) {
         let total: f64 = pending.iter().sum();
         let n = self.buckets();
         let mut target: Vec<f64> = if total <= 0.0 {
@@ -84,7 +86,7 @@ impl MultiDress {
         };
         for (k, t) in target.iter_mut().enumerate() {
             if min_pending_demand[k] > 0 {
-                let floor = (min_pending_demand[k] as f64 + 1.0) / self.total as f64;
+                let floor = (min_pending_demand[k] as f64 + 1.0) / cap as f64;
                 *t = t.max(floor);
             }
         }
@@ -106,8 +108,16 @@ impl Scheduler for MultiDress {
 
     fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation> {
         let n = self.buckets();
+        // Live capacity (time-varying under a fault plan); pools, floors
+        // and demand clamps are all derived from it.  A fully-crashed
+        // cluster has nothing to hand out — and would divide by zero in
+        // the share floor — so bail early while keeping buckets sticky.
+        let total = view.total;
         for j in view.jobs {
-            self.classify(j.id, j.demand);
+            self.classify(j.id, j.demand, total);
+        }
+        if total == 0 {
+            return Vec::new();
         }
 
         // Pending demand per bucket -> share adjustment.
@@ -116,10 +126,10 @@ impl Scheduler for MultiDress {
         for j in view.jobs.iter().filter(|j| !j.started && !j.finished) {
             let b = self.bucket_of(j.id);
             pending[b] += j.demand as f64;
-            let d = j.demand.min(self.total);
+            let d = j.demand.min(total);
             min_pending[b] = if min_pending[b] == 0 { d } else { min_pending[b].min(d) };
         }
-        self.adjust_shares(&pending, &min_pending);
+        self.adjust_shares(&pending, &min_pending, total);
 
         // Pool accounting.
         let mut occupied = vec![0u32; n];
@@ -130,7 +140,7 @@ impl Scheduler for MultiDress {
             .shares
             .iter()
             .zip(&occupied)
-            .map(|(&s, &occ)| ((s * self.total as f64).round() as u32).saturating_sub(occ))
+            .map(|(&s, &occ)| ((s * total as f64).round() as u32).saturating_sub(occ))
             .collect();
 
         let mut free = view.free;
@@ -160,7 +170,7 @@ impl Scheduler for MultiDress {
                 .filter(|j| !j.started && !j.finished && self.bucket_of(j.id) == b)
                 .collect();
             for j in waiting {
-                let want = j.demand.min(j.pending_tasks).min(self.total);
+                let want = j.demand.min(j.pending_tasks).min(total);
                 if want == 0 || free == 0 {
                     continue;
                 }
@@ -228,11 +238,34 @@ mod tests {
     #[test]
     fn classification_ladder() {
         let mut m = md();
-        assert_eq!(m.classify(1, 3), 0);
-        assert_eq!(m.classify(2, 10), 1);
-        assert_eq!(m.classify(3, 30), 2);
-        // sticky
-        assert_eq!(m.classify(1, 30), 0);
+        assert_eq!(m.classify(1, 3, 40), 0);
+        assert_eq!(m.classify(2, 10, 40), 1);
+        assert_eq!(m.classify(3, 30, 40), 2);
+        // sticky: re-seen jobs keep their bucket even as demand/total move
+        assert_eq!(m.classify(1, 30, 40), 0);
+        assert_eq!(m.classify(2, 10, 20), 1);
+    }
+
+    #[test]
+    fn degraded_total_shrinks_pools() {
+        let mut m = md();
+        // On a half-capacity view the pools must be sized from the live
+        // total: a job wanting 18 of the 20 surviving slots still starts
+        // (borrowing idle smaller pools), and a zero-capacity view is a
+        // no-op rather than a divide-by-zero in the share floor.
+        let jobs = vec![jv(1, 18, 18)];
+        let mut started_ok = false;
+        for _ in 0..20 {
+            let allocs = m.schedule(&view(20, 20, jobs.clone()));
+            let granted: u32 = allocs.iter().map(|a| a.n).sum();
+            assert!(granted <= 20, "over-allocated on degraded cluster: {allocs:?}");
+            if allocs.iter().any(|a| a.job == 1 && a.n == 18) {
+                started_ok = true;
+                break;
+            }
+        }
+        assert!(started_ok, "job starved on degraded cluster");
+        assert!(m.schedule(&view(0, 0, jobs)).is_empty());
     }
 
     #[test]

@@ -49,7 +49,11 @@ pub struct ClusterView<'a> {
     pub now: Time,
     /// Free containers (the paper's `A_c`).
     pub free: u32,
-    /// Total containers (the paper's `Tot_R`).
+    /// Total containers (the paper's `Tot_R`).  **Time-varying** under a
+    /// fault plan: crashed nodes drop out of this figure until they
+    /// recover, so schedulers must re-derive any capacity split from the
+    /// view every heartbeat rather than caching a construction-time total.
+    /// May be 0 while every node is down.
     pub total: u32,
     /// Submitted jobs in submission order.  May include already-finished
     /// entries with `finished = true` — the engine tombstones completed
@@ -89,8 +93,9 @@ pub trait Scheduler {
     }
 }
 
-/// Construct a scheduler from config. `total` is the cluster container
-/// count (needed by DRESS for δ·Tot_R bookkeeping).
+/// Construct a scheduler from config. `total` is the *provisioned* cluster
+/// container count; schedulers treat it as a hint only and follow the live
+/// `ClusterView::total` for capacity splits.
 pub fn build(cfg: &SchedConfig, total: u32) -> Box<dyn Scheduler> {
     match cfg.kind {
         SchedKind::Fifo => Box::new(FifoScheduler::new(cfg.gang)),

@@ -23,6 +23,7 @@
 //! truth every tick.
 
 use super::event::{Event, EventQueue, QueueKind};
+use super::fault::OutageRecord;
 use super::metric::{MetricSink, MetricSinkKind};
 use super::sink::{SinkKind, TraceSink};
 use super::trace::{TaskTrace, TraceRecorder};
@@ -62,6 +63,24 @@ pub struct RunResult {
     pub delta_recorded: u64,
     /// Injected container failures survived (task re-attempts).
     pub failures: u32,
+    /// Task attempts killed by node crashes (fault plan); each was
+    /// requeued and eventually re-ran to completion.
+    pub lost_attempts: u32,
+    /// Run-time destroyed by node crashes: `Σ (crash − run_start)` over
+    /// killed Running tasks.
+    pub lost_work_ms: Time,
+    /// Run-time that ended in a successful completion (`Σ finish − start`
+    /// over completed attempts) — the goodput numerator.
+    pub useful_work_ms: Time,
+    /// Run-time thrown away for any reason: crash-killed work plus the
+    /// partial work of coin-flip container failures.
+    pub wasted_work_ms: Time,
+    /// Container attempts created over the run (completed + coin-flip
+    /// failures + crash-killed; conservation is property-tested).
+    pub attempts: u32,
+    /// Per-outage accounting, in injection order.  Only outages whose
+    /// crash actually fired during the run appear.
+    pub outages: Vec<OutageRecord>,
     /// Total simulation events processed (throughput accounting).
     pub events: u64,
     /// Scheduler heartbeat rounds executed.
@@ -74,6 +93,19 @@ pub struct RunResult {
     /// Heartbeat transitions still held in memory at run end — bounded by
     /// the sink policy (0 for counting, `cap` for ring, all for full).
     pub retained_transitions: usize,
+}
+
+impl RunResult {
+    /// Goodput: the fraction of executed run-time that ended in a
+    /// successful completion, `useful / (useful + wasted)`.  1.0 when no
+    /// work was wasted (including the degenerate no-work case).
+    pub fn goodput(&self) -> f64 {
+        let total = self.useful_work_ms + self.wasted_work_ms;
+        if total == 0 {
+            return 1.0;
+        }
+        self.useful_work_ms as f64 / total as f64
+    }
 }
 
 /// Engine knobs beyond the experiment config.
@@ -172,6 +204,19 @@ impl JobIndex {
     }
 }
 
+/// Engine-side state of one planned outage.
+#[derive(Debug)]
+struct OutageState {
+    rec: OutageRecord,
+    /// Whether the crash event has fired (outages scheduled past the end
+    /// of the run never do and are excluded from results).
+    fired: bool,
+    /// When the node came back up (None while still down).
+    node_back_at: Option<Time>,
+    /// Killed tasks `(job slot, phase, task)` not yet re-completed.
+    waiting: Vec<(usize, usize, usize)>,
+}
+
 /// The engine. Owns everything for one run.
 pub struct Engine {
     cfg: ExperimentConfig,
@@ -194,6 +239,19 @@ pub struct Engine {
     /// Exact online δ accumulator.
     delta_accum: DeltaSummary,
     failures: u32,
+    /// Provisioned capacity (crash-independent), for demand clamping:
+    /// a transient outage must not permanently truncate a job's request.
+    nominal_total: u32,
+    /// Materialized fault plan, indexed by `Event::NodeFail/NodeRecover`
+    /// payloads.
+    outages: Vec<OutageState>,
+    /// Outages that have crashed but not fully healed — gates the
+    /// per-finish recovery bookkeeping so an empty plan pays nothing.
+    open_outages: usize,
+    lost_attempts: u32,
+    lost_work_ms: Time,
+    useful_work_ms: Time,
+    wasted_work_ms: Time,
     /// Safety valve against pathological schedules.
     max_ms: Time,
     opts: EngineOptions,
@@ -241,6 +299,31 @@ impl Engine {
             queue.push(s.submit_ms, Event::JobSubmit(s.id));
         }
         queue.push(0, Event::SchedTick);
+        // Fault events go in last so an empty plan leaves the sequence
+        // numbers of every pre-existing event untouched (bit-identity).
+        // Stochastic draws use the dedicated fault stream, never `rng`.
+        let planned = cfg
+            .faults
+            .materialize(cfg.cluster.nodes, cfg.workload.seed)
+            .unwrap_or_else(|e| panic!("invalid fault plan: {e}"));
+        let mut outages = Vec::with_capacity(planned.len());
+        for (i, o) in planned.iter().enumerate() {
+            queue.push(o.at_ms, Event::NodeFail(i as u32));
+            queue.push(o.at_ms + o.down_ms, Event::NodeRecover(i as u32));
+            outages.push(OutageState {
+                rec: OutageRecord {
+                    node: o.node,
+                    at_ms: o.at_ms,
+                    down_ms: o.down_ms,
+                    killed: 0,
+                    lost_work_ms: 0,
+                    recovered_at: None,
+                },
+                fired: false,
+                node_back_at: None,
+                waiting: Vec::new(),
+            });
+        }
         let index = JobIndex::build(&specs);
         let remaining_tasks: Vec<u32> = specs.iter().map(|s| s.total_tasks()).collect();
         let n = specs.len();
@@ -260,6 +343,13 @@ impl Engine {
             util_accum: UtilSummary::new(total),
             delta_accum: DeltaSummary::default(),
             failures: 0,
+            nominal_total: total,
+            outages,
+            open_outages: 0,
+            lost_attempts: 0,
+            lost_work_ms: 0,
+            useful_work_ms: 0,
+            wasted_work_ms: 0,
             max_ms: 40 * 3_600 * 1_000, // 40 simulated hours
             opts,
             index,
@@ -292,8 +382,10 @@ impl Engine {
     fn view_insert(&mut self, slot: usize) {
         // A demand above cluster capacity can never gang-start; YARN callers
         // are granted at most the cluster, so the view clamps (prevents
-        // head-of-line livelock for oversized requests).
-        let total = self.cluster.total();
+        // head-of-line livelock for oversized requests).  Clamped to the
+        // *nominal* capacity: a transient outage must not truncate the
+        // request forever (the node comes back, gang jobs must too).
+        let total = self.nominal_total;
         let j = &self.jobs[slot];
         let jv = JobView {
             id: j.id(),
@@ -365,7 +457,7 @@ impl Engine {
     /// ones included with `finished = true` (schedulers filter them).
     /// Reference path for `EngineOptions::naive_hot_path`.
     fn naive_view_jobs(&self) -> Vec<JobView> {
-        let total = self.cluster.total();
+        let total = self.nominal_total;
         self.jobs
             .iter()
             .filter(|j| j.submitted)
@@ -463,6 +555,11 @@ impl Engine {
     }
 
     fn on_container_advance(&mut self, cid: u32) {
+        // The queue cannot remove entries, so events for containers killed
+        // by a node crash still fire — and must be ignored.
+        if self.cluster.container(cid).dead {
+            return;
+        }
         let new_state = self.cluster.container_mut(cid).advance(self.now);
         self.record_transition(cid, new_state);
         let (job, phase, task) = {
@@ -493,6 +590,9 @@ impl Engine {
     }
 
     fn on_task_finish(&mut self, cid: u32) {
+        if self.cluster.container(cid).dead {
+            return;
+        }
         let new_state = self.cluster.container_mut(cid).advance(self.now);
         debug_assert_eq!(new_state, ContainerState::Completed);
         self.record_transition(cid, ContainerState::Completed);
@@ -511,6 +611,10 @@ impl Engine {
         self.jobs[ji].tasks[phase][task].state = TaskState::Done { start, finish: self.now };
         self.jobs[ji].occupied -= 1;
         self.view_entry(ji).occupied -= 1;
+        self.useful_work_ms += self.now - start;
+        if self.open_outages > 0 {
+            self.note_recompletion(ji, phase, task);
+        }
         self.sink.record(TaskTrace {
             job,
             phase,
@@ -539,14 +643,18 @@ impl Engine {
     /// Container dies mid-task: release the slot, reset the task to
     /// Pending so the scheduler re-grants it.
     fn on_task_fail(&mut self, cid: u32) {
+        if self.cluster.container(cid).dead {
+            return;
+        }
         let new_state = self.cluster.container_mut(cid).advance(self.now);
         debug_assert_eq!(new_state, ContainerState::Completed);
         self.record_transition(cid, ContainerState::Completed);
-        let (job, phase, task) = {
+        let (job, phase, task, run_start) = {
             let c = self.cluster.container(cid);
-            (c.job, c.phase, c.task)
+            (c.job, c.phase, c.task, c.run_start)
         };
         self.cluster.release(cid);
+        self.wasted_work_ms += self.now - run_start;
         let ji = self.job_index(job);
         debug_assert!(matches!(
             self.jobs[ji].tasks[phase][task].state,
@@ -558,6 +666,78 @@ impl Engine {
         v.occupied -= 1;
         v.pending_tasks += 1;
         self.failures += 1;
+    }
+
+    /// A node crashes: its capacity leaves `total`, every container on it
+    /// dies, and the killed tasks requeue as Pending (with their accrued
+    /// run-time counted as lost).  No Completed heartbeat transition is
+    /// recorded for killed containers — the node vanished, it did not
+    /// report.
+    fn on_node_fail(&mut self, oidx: u32) {
+        let oidx = oidx as usize;
+        let node = self.outages[oidx].rec.node;
+        let killed = self.cluster.fail_node(node, self.now);
+        let mut lost: Time = 0;
+        for &cid in &killed {
+            let (job, phase, task) = {
+                let c = self.cluster.container(cid);
+                (c.job, c.phase, c.task)
+            };
+            let ji = self.job_index(job);
+            if let TaskState::Running { start, .. } = self.jobs[ji].tasks[phase][task].state {
+                lost += self.now - start;
+            }
+            self.jobs[ji].tasks[phase][task].state = TaskState::Pending;
+            self.jobs[ji].occupied -= 1;
+            let v = self.view_entry(ji);
+            v.occupied -= 1;
+            v.pending_tasks += 1;
+            self.outages[oidx].waiting.push((ji, phase, task));
+        }
+        self.lost_attempts += killed.len() as u32;
+        self.lost_work_ms += lost;
+        self.wasted_work_ms += lost;
+        let o = &mut self.outages[oidx];
+        o.fired = true;
+        o.rec.killed = killed.len() as u32;
+        o.rec.lost_work_ms = lost;
+        self.open_outages += 1;
+    }
+
+    /// The node comes back: its (empty) slots rejoin capacity.  The outage
+    /// is healed once the node is up AND every task it killed re-completed.
+    fn on_node_recover(&mut self, oidx: u32) {
+        let oidx = oidx as usize;
+        let node = self.outages[oidx].rec.node;
+        self.cluster.recover_node(node);
+        let o = &mut self.outages[oidx];
+        o.node_back_at = Some(self.now);
+        if o.waiting.is_empty() && o.rec.recovered_at.is_none() {
+            o.rec.recovered_at = Some(self.now);
+            self.open_outages -= 1;
+        }
+    }
+
+    /// A task just completed; clear it from every open outage still
+    /// waiting on it (a task can appear in several if re-killed).  Only
+    /// called while an outage is open, so the empty-plan fast path never
+    /// touches this.
+    fn note_recompletion(&mut self, ji: usize, phase: usize, task: usize) {
+        let now = self.now;
+        let mut healed = 0;
+        for o in self.outages.iter_mut() {
+            if !o.fired || o.rec.recovered_at.is_some() {
+                continue;
+            }
+            if let Some(p) = o.waiting.iter().position(|&w| w == (ji, phase, task)) {
+                o.waiting.swap_remove(p);
+                if o.waiting.is_empty() && o.node_back_at.is_some() {
+                    o.rec.recovered_at = Some(now);
+                    healed += 1;
+                }
+            }
+        }
+        self.open_outages -= healed;
     }
 
     fn on_sched_tick(&mut self) {
@@ -627,6 +807,8 @@ impl Engine {
                 Event::ContainerAdvance(cid) => self.on_container_advance(cid),
                 Event::TaskFinish(cid) => self.on_task_finish(cid),
                 Event::TaskFail(cid) => self.on_task_fail(cid),
+                Event::NodeFail(o) => self.on_node_fail(o),
+                Event::NodeRecover(o) => self.on_node_recover(o),
             }
             if self.all_finished() {
                 break;
@@ -653,6 +835,17 @@ impl Engine {
             util_recorded,
             delta_recorded,
             failures: self.failures,
+            lost_attempts: self.lost_attempts,
+            lost_work_ms: self.lost_work_ms,
+            useful_work_ms: self.useful_work_ms,
+            wasted_work_ms: self.wasted_work_ms,
+            attempts: self.cluster.containers.len() as u32,
+            outages: self
+                .outages
+                .iter()
+                .filter(|o| o.fired)
+                .map(|o| o.rec)
+                .collect(),
             events: self.events,
             sched_ticks: self.ticks,
             tasks_recorded,
@@ -824,6 +1017,57 @@ mod tests {
             .delta_history
             .iter()
             .all(|&(_, d)| (DELTA_MIN..=DELTA_MAX).contains(&d)));
+    }
+
+    #[test]
+    fn node_crash_requeues_and_recovers() {
+        let mut c = cfg(SchedKind::Capacity);
+        c.faults = crate::sim::fault::FaultPlan::empty().with_outage(6_000, 0, 20_000);
+        let specs = vec![
+            tiny_job(1, 0, 4, &[8_000, 8_000, 9_000, 9_000]),
+            tiny_job(2, 1_000, 2, &[7_000, 7_000]),
+        ];
+        let res = run_experiment(&c, specs.clone());
+        assert_eq!(res.trace.tasks.len(), 6, "every task completed despite the crash");
+        assert_eq!(res.outages.len(), 1);
+        let o = &res.outages[0];
+        assert!(o.killed > 0, "node 0 held running containers at t=6 s");
+        assert_eq!(res.lost_attempts, o.killed);
+        assert!(res.lost_work_ms > 0 && o.lost_work_ms == res.lost_work_ms);
+        assert!(o.recovered_at.is_some(), "short downtime heals within the run");
+        assert!(o.time_to_recover_ms().unwrap() >= 20_000, "downtime bounds recovery");
+        assert!(res.goodput() < 1.0, "killed work must dent goodput");
+        assert!(res.wasted_work_ms >= res.lost_work_ms);
+        // Conservation: every attempt completed, coin-failed, or was killed.
+        assert_eq!(
+            res.attempts as usize,
+            res.trace.tasks.len() + res.failures as usize + res.lost_attempts as usize
+        );
+        // The no-fault baseline is untouched and no slower.
+        let base = run_experiment(&cfg(SchedKind::Capacity), specs);
+        assert!(base.outages.is_empty() && base.lost_attempts == 0);
+        assert_eq!(base.goodput(), 1.0);
+        assert!(res.system.makespan_ms >= base.system.makespan_ms);
+    }
+
+    #[test]
+    fn crash_of_idle_node_heals_at_recovery_time() {
+        // Nothing runs on the crashed node: killed == 0, recovery is
+        // exactly the configured downtime.
+        let mut c = cfg(SchedKind::Fifo);
+        c.cluster.nodes = 3;
+        c.faults = crate::sim::fault::FaultPlan::empty().with_outage(1, 2, 5_000);
+        let res = run_experiment(&c, vec![tiny_job(1, 0, 1, &[2_000])]);
+        assert_eq!(res.outages.len(), 1);
+        let o = &res.outages[0];
+        assert!(res.jobs[0].completion_ms > 0);
+        if o.killed == 0 {
+            assert_eq!(o.lost_work_ms, 0);
+            // Healing may still require the run to outlive the downtime.
+            if let Some(t) = o.time_to_recover_ms() {
+                assert_eq!(t, 5_000);
+            }
+        }
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub enum Event {
     /// A running container dies mid-task (failure injection); the task is
     /// re-attempted in a fresh container, as on YARN.
     TaskFail(ContainerId),
+    /// A whole node crashes (fault plan); the payload indexes the engine's
+    /// outage table, not a node id — one outage may span several nodes.
+    NodeFail(u32),
+    /// A crashed node comes back after its configured downtime.
+    NodeRecover(u32),
 }
 
 /// Which queue implementation an [`EventQueue`] uses.
@@ -62,6 +67,8 @@ impl EventEntry {
             Event::ContainerAdvance(c) => EventEntry(2, c, 0),
             Event::TaskFinish(c) => EventEntry(3, c, 0),
             Event::TaskFail(c) => EventEntry(4, c, 0),
+            Event::NodeFail(o) => EventEntry(5, o, 0),
+            Event::NodeRecover(o) => EventEntry(6, o, 0),
         }
     }
 
@@ -71,7 +78,9 @@ impl EventEntry {
             1 => Event::SchedTick,
             2 => Event::ContainerAdvance(self.1),
             3 => Event::TaskFinish(self.1),
-            _ => Event::TaskFail(self.1),
+            4 => Event::TaskFail(self.1),
+            5 => Event::NodeFail(self.1),
+            _ => Event::NodeRecover(self.1),
         }
     }
 }
@@ -331,6 +340,8 @@ mod tests {
             Event::ContainerAdvance(9),
             Event::TaskFinish(11),
             Event::TaskFail(13),
+            Event::NodeFail(2),
+            Event::NodeRecover(2),
         ];
         for kind in BOTH {
             let mut q = EventQueue::with_kind(kind);

@@ -1,0 +1,413 @@
+//! Deterministic node-level fault injection.
+//!
+//! A [`FaultPlan`] describes when whole nodes crash and recover.  The
+//! engine materializes the plan into concrete [`Outage`]s at start-up and
+//! injects them through the ordinary event queue (`Event::NodeFail` /
+//! `Event::NodeRecover`), so fault handling obeys the same exact
+//! (time, seq) total order as everything else and runs are bit-for-bit
+//! reproducible.
+//!
+//! Two guarantees matter for the golden-determinism suite:
+//!
+//! * **Empty plan ⇒ zero perturbation.**  An empty plan materializes to no
+//!   outages, pushes no events, and draws nothing from any RNG — existing
+//!   seeded runs are untouched byte-for-byte.
+//! * **Dedicated RNG stream.**  Stochastic plans (MTBF/MTTR renewal per
+//!   node) draw from `Rng::new(workload_seed ^ FAULT_SEED_SALT)` — an
+//!   independent SplitMix64 stream, never the engine's event RNG — so
+//!   adding or removing stochastic faults cannot shift task-duration or
+//!   failure-coin draws.
+
+use crate::cluster::NodeId;
+use crate::util::rng::Rng;
+use crate::util::Time;
+
+/// Salt XORed into the workload seed to derive the fault stream.  Distinct
+/// from the engine's event-stream salt (`0xD8E5_5000`) by construction.
+pub const FAULT_SEED_SALT: u64 = 0xFA17_0000_5EED_0001;
+
+/// Downtime used by the [`FaultPlan::at`] shorthand (one minute).
+pub const DEFAULT_DOWN_MS: Time = 60_000;
+
+/// One planned crash of one node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Outage {
+    /// Crash time.
+    pub at_ms: Time,
+    /// Node that goes down.
+    pub node: NodeId,
+    /// Downtime; the node recovers at `at_ms + down_ms`.
+    pub down_ms: Time,
+}
+
+/// Parameters of a per-node alternating-renewal fault process: each node
+/// independently alternates exponential up-times (mean `mtbf_ms`) and
+/// exponential down-times (mean `mttr_ms`), with crashes drawn only
+/// before `until_ms`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StochasticFaults {
+    pub mtbf_ms: Time,
+    pub mttr_ms: Time,
+    pub until_ms: Time,
+}
+
+/// A declarative fault plan: explicit outages plus an optional stochastic
+/// process.  `Debug` formatting feeds the sweep-grid fingerprint, so two
+/// shards with different plans refuse to merge.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub fixed: Vec<Outage>,
+    pub stochastic: Option<StochasticFaults>,
+}
+
+impl FaultPlan {
+    /// The no-fault plan (also `Default`).
+    pub fn empty() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Shorthand: crash `node` at `at_ms` for [`DEFAULT_DOWN_MS`].
+    pub fn at(at_ms: Time, node: NodeId) -> FaultPlan {
+        FaultPlan::default().with_outage(at_ms, node, DEFAULT_DOWN_MS)
+    }
+
+    /// Add one explicit outage.
+    pub fn with_outage(mut self, at_ms: Time, node: NodeId, down_ms: Time) -> FaultPlan {
+        self.fixed.push(Outage { at_ms, node, down_ms });
+        self
+    }
+
+    /// Add a correlated outage: every listed node crashes at the same
+    /// instant for the same downtime (rack/switch failure).
+    pub fn correlated(mut self, at_ms: Time, nodes: &[NodeId], down_ms: Time) -> FaultPlan {
+        for &n in nodes {
+            self.fixed.push(Outage { at_ms, node: n, down_ms });
+        }
+        self
+    }
+
+    /// Attach a stochastic MTBF/MTTR process.
+    pub fn stochastic(mut self, mtbf_ms: Time, mttr_ms: Time, until_ms: Time) -> FaultPlan {
+        self.stochastic = Some(StochasticFaults { mtbf_ms, mttr_ms, until_ms });
+        self
+    }
+
+    /// True when the plan can never produce an outage.
+    pub fn is_empty(&self) -> bool {
+        self.fixed.is_empty() && self.stochastic.is_none()
+    }
+
+    /// Parse the CLI/TOML spec string.  Grammar (segments joined by `;`):
+    ///
+    /// * `T:N:D` — crash node `N` at time `T` ms for `D` ms.
+    /// * `T:N1+N2+…:D` — correlated outage of several nodes.
+    /// * `mtbf=U,mttr=R,until=H` — stochastic process (all ms).
+    /// * `none` / empty — the empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultPlan::default());
+        }
+        let mut plan = FaultPlan::default();
+        for seg in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            if seg.contains('=') {
+                if plan.stochastic.is_some() {
+                    return Err(format!("fault plan `{spec}`: multiple stochastic segments"));
+                }
+                let (mut mtbf, mut mttr, mut until) = (None, None, None);
+                for kv in seg.split(',') {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| format!("fault segment `{seg}`: expected key=value"))?;
+                    let v: Time = v
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("fault segment `{seg}`: {e}"))?;
+                    match k.trim() {
+                        "mtbf" => mtbf = Some(v),
+                        "mttr" => mttr = Some(v),
+                        "until" => until = Some(v),
+                        other => {
+                            return Err(format!("fault segment `{seg}`: unknown key `{other}`"))
+                        }
+                    }
+                }
+                plan.stochastic = Some(StochasticFaults {
+                    mtbf_ms: mtbf.ok_or_else(|| format!("fault segment `{seg}`: missing mtbf"))?,
+                    mttr_ms: mttr.ok_or_else(|| format!("fault segment `{seg}`: missing mttr"))?,
+                    until_ms: until
+                        .ok_or_else(|| format!("fault segment `{seg}`: missing until"))?,
+                });
+            } else {
+                let parts: Vec<&str> = seg.split(':').collect();
+                if parts.len() != 3 {
+                    return Err(format!(
+                        "fault segment `{seg}`: expected T:NODE[+NODE…]:DOWN_MS"
+                    ));
+                }
+                let at: Time = parts[0]
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("fault segment `{seg}`: bad time: {e}"))?;
+                let down: Time = parts[2]
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("fault segment `{seg}`: bad downtime: {e}"))?;
+                for n in parts[1].split('+') {
+                    let node: NodeId = n
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("fault segment `{seg}`: bad node: {e}"))?;
+                    plan.fixed.push(Outage { at_ms: at, node, down_ms: down });
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Canonical spec string — parses back to an equal plan.
+    pub fn to_spec(&self) -> String {
+        if self.is_empty() {
+            return "none".into();
+        }
+        let mut segs: Vec<String> = self
+            .fixed
+            .iter()
+            .map(|o| format!("{}:{}:{}", o.at_ms, o.node, o.down_ms))
+            .collect();
+        if let Some(s) = self.stochastic {
+            segs.push(format!("mtbf={},mttr={},until={}", s.mtbf_ms, s.mttr_ms, s.until_ms));
+        }
+        segs.join(";")
+    }
+
+    /// Expand the plan into a concrete, validated outage list for a
+    /// cluster of `nodes` nodes.  Stochastic draws come exclusively from
+    /// the dedicated fault stream derived from `seed` (one per-node fork),
+    /// so an empty plan performs **zero** RNG work.  The result is sorted
+    /// by `(at_ms, node)` and checked for per-node overlap: a node must
+    /// be back up before its next scheduled crash (touching intervals are
+    /// allowed — recovery events sort before same-time crash events).
+    pub fn materialize(&self, nodes: u16, seed: u64) -> Result<Vec<Outage>, String> {
+        let mut out = self.fixed.clone();
+        if let Some(s) = self.stochastic {
+            if s.mtbf_ms == 0 || s.mttr_ms == 0 {
+                return Err("fault plan: mtbf and mttr must be > 0".into());
+            }
+            let mut root = Rng::new(seed ^ FAULT_SEED_SALT);
+            for node in 0..nodes {
+                let mut r = root.fork(node as u64);
+                let mut t: Time = 0;
+                loop {
+                    t = t.saturating_add(exp_ms(&mut r, s.mtbf_ms));
+                    if t >= s.until_ms {
+                        break;
+                    }
+                    let down = exp_ms(&mut r, s.mttr_ms);
+                    out.push(Outage { at_ms: t, node, down_ms: down });
+                    t = t.saturating_add(down);
+                }
+            }
+        }
+        for o in &out {
+            if o.node as usize >= nodes as usize {
+                return Err(format!(
+                    "fault plan: node {} out of range (cluster has {nodes} nodes)",
+                    o.node
+                ));
+            }
+            if o.down_ms == 0 {
+                return Err(format!("fault plan: zero downtime for node {} at {}", o.node, o.at_ms));
+            }
+        }
+        out.sort_unstable();
+        // Overlap is a per-node notion, so check with same-node entries
+        // adjacent (the (time, node) sort interleaves nodes).
+        let mut by_node = out.clone();
+        by_node.sort_unstable_by_key(|o| (o.node, o.at_ms));
+        for w in by_node.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if a.node == b.node && b.at_ms < a.at_ms + a.down_ms {
+                return Err(format!(
+                    "fault plan: overlapping outages for node {} at {} and {}",
+                    a.node, a.at_ms, b.at_ms
+                ));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_spec())
+    }
+}
+
+/// Exponential draw with the given mean, floored to 1 ms so renewal
+/// processes always make progress.
+fn exp_ms(r: &mut Rng, mean_ms: Time) -> Time {
+    let u = r.next_f64(); // [0, 1)
+    let x = -(mean_ms as f64) * (1.0 - u).ln();
+    (x as Time).max(1)
+}
+
+/// What one outage did to the run — filled in by the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutageRecord {
+    pub node: NodeId,
+    pub at_ms: Time,
+    pub down_ms: Time,
+    /// Task attempts killed by the crash.
+    pub killed: u32,
+    /// Run-time thrown away: `Σ (crash − run_start)` over killed Running
+    /// tasks (Launching attempts die with zero accrued work).
+    pub lost_work_ms: Time,
+    /// When the outage was fully healed: the node is back up AND every
+    /// task it killed has re-completed.  `None` when the run finished
+    /// before the node's downtime elapsed (the outage outlived the run).
+    pub recovered_at: Option<Time>,
+}
+
+impl OutageRecord {
+    /// Crash → fully-healed latency.
+    pub fn time_to_recover_ms(&self) -> Option<Time> {
+        self.recovered_at.map(|t| t - self.at_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_materializes_to_nothing() {
+        let plan = FaultPlan::empty();
+        assert!(plan.is_empty());
+        assert_eq!(plan.materialize(5, 42).unwrap(), vec![]);
+        assert_eq!(plan.to_spec(), "none");
+    }
+
+    #[test]
+    fn at_shorthand_and_builder() {
+        let plan = FaultPlan::at(60_000, 2);
+        let out = plan.materialize(5, 1).unwrap();
+        assert_eq!(out, vec![Outage { at_ms: 60_000, node: 2, down_ms: DEFAULT_DOWN_MS }]);
+        let plan = FaultPlan::empty()
+            .with_outage(10, 0, 5)
+            .correlated(100, &[1, 3], 50);
+        let out = plan.materialize(5, 1).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[1], Outage { at_ms: 100, node: 1, down_ms: 50 });
+        assert_eq!(out[2], Outage { at_ms: 100, node: 3, down_ms: 50 });
+    }
+
+    #[test]
+    fn parse_fixed_correlated_and_stochastic() {
+        let plan = FaultPlan::parse("60000:0:30000; 120000:1+2:60000").unwrap();
+        assert_eq!(plan.fixed.len(), 3);
+        assert_eq!(plan.fixed[0], Outage { at_ms: 60_000, node: 0, down_ms: 30_000 });
+        assert_eq!(plan.fixed[1], Outage { at_ms: 120_000, node: 1, down_ms: 60_000 });
+        assert_eq!(plan.fixed[2], Outage { at_ms: 120_000, node: 2, down_ms: 60_000 });
+        assert!(plan.stochastic.is_none());
+
+        let plan = FaultPlan::parse("mtbf=600000,mttr=30000,until=3600000").unwrap();
+        assert_eq!(
+            plan.stochastic,
+            Some(StochasticFaults { mtbf_ms: 600_000, mttr_ms: 30_000, until_ms: 3_600_000 })
+        );
+        assert!(FaultPlan::parse("none").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "60000:0",              // missing downtime
+            "abc:0:1",              // bad time
+            "1:zz:1",               // bad node
+            "mtbf=1,mttr=2",        // missing until
+            "mtbf=1,bogus=2,until=3",
+            "mtbf=1,mttr=2,until=3;mtbf=4,mttr=5,until=6", // two stochastic segs
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips() {
+        for spec in [
+            "60000:0:30000;120000:1:60000",
+            "1:4:2;mtbf=10,mttr=20,until=30",
+            "none",
+        ] {
+            let plan = FaultPlan::parse(spec).unwrap();
+            assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap(), plan, "{spec}");
+        }
+    }
+
+    #[test]
+    fn materialize_validates() {
+        // Node out of range.
+        assert!(FaultPlan::at(1, 9).materialize(5, 0).is_err());
+        // Zero downtime.
+        assert!(FaultPlan::empty().with_outage(1, 0, 0).materialize(5, 0).is_err());
+        // Same-node overlap rejected; touching intervals allowed.
+        let overlap = FaultPlan::empty().with_outage(100, 0, 50).with_outage(120, 0, 10);
+        assert!(overlap.materialize(5, 0).is_err());
+        let touching = FaultPlan::empty().with_outage(100, 0, 50).with_outage(150, 0, 10);
+        assert_eq!(touching.materialize(5, 0).unwrap().len(), 2);
+        // Different nodes may overlap freely (that's a correlated outage).
+        let cross = FaultPlan::empty().correlated(100, &[0, 1], 500);
+        assert_eq!(cross.materialize(5, 0).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn stochastic_is_seed_stable_and_non_overlapping() {
+        let plan = FaultPlan::empty().stochastic(50_000, 10_000, 1_000_000);
+        let a = plan.materialize(4, 42).unwrap();
+        let b = plan.materialize(4, 42).unwrap();
+        assert_eq!(a, b, "same seed, same outages");
+        assert!(!a.is_empty(), "a 1000 s horizon at 50 s MTBF should crash something");
+        let c = plan.materialize(4, 43).unwrap();
+        assert_ne!(a, c, "different seed, different outages");
+        for o in &a {
+            assert!(o.at_ms < 1_000_000 && o.down_ms >= 1);
+            assert!(o.node < 4);
+        }
+        // Per-node renewal structure: alternating up/down can't overlap.
+        let mut by_node = a.clone();
+        by_node.sort_unstable_by_key(|o| (o.node, o.at_ms));
+        for w in by_node.windows(2) {
+            if w[0].node == w[1].node {
+                assert!(w[1].at_ms >= w[0].at_ms + w[0].down_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_stream_is_isolated_from_engine_salt() {
+        // The fault stream must not collide with the engine's event
+        // stream for the same workload seed.
+        let seed = 7u64;
+        let mut fault = Rng::new(seed ^ FAULT_SEED_SALT);
+        let mut engine = Rng::new(seed ^ 0xD8E5_5000);
+        let same = (0..64).filter(|_| fault.next_u64() == engine.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn outage_record_recovery_latency() {
+        let mut rec = OutageRecord {
+            node: 1,
+            at_ms: 1_000,
+            down_ms: 500,
+            killed: 3,
+            lost_work_ms: 900,
+            recovered_at: None,
+        };
+        assert_eq!(rec.time_to_recover_ms(), None);
+        rec.recovered_at = Some(2_500);
+        assert_eq!(rec.time_to_recover_ms(), Some(1_500));
+    }
+}

@@ -3,12 +3,14 @@
 
 pub mod engine;
 pub mod event;
+pub mod fault;
 pub mod metric;
 pub mod sink;
 pub mod trace;
 
 pub use engine::{run_experiment, run_experiment_with, Engine, EngineOptions, RunResult};
 pub use event::{Event, EventQueue, QueueKind};
+pub use fault::{FaultPlan, Outage, OutageRecord, StochasticFaults};
 pub use metric::{MetricSink, MetricSinkKind};
 pub use sink::{SinkKind, TraceSink};
 pub use trace::{TaskTrace, TraceRecorder};

@@ -1,0 +1,136 @@
+//! Fault-injection matrix: every scheduler must absorb node crashes.
+//!
+//! For Fifo, Fair, Capacity and Dress under {empty, single-crash,
+//! correlated-outage} plans on a congested mixed workload:
+//!
+//! * every job still finishes (the engine asserts no starvation),
+//! * attempt conservation holds: attempts created == completed tasks +
+//!   coin-flip failures + crash-killed attempts,
+//! * crash-killed work shows up in the recovery accounting (lost work,
+//!   per-outage time-to-recover, goodput < 1), and
+//! * DRESS's δ trajectory actually reacts to the capacity loss.
+
+use dress::config::{ExperimentConfig, SchedKind};
+use dress::sim::engine::run_experiment;
+use dress::sim::{FaultPlan, RunResult};
+use dress::workload::{generate, WorkloadMix};
+
+const KINDS: [SchedKind; 4] =
+    [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress];
+
+/// 24 mixed jobs every 2 s on the default 5x8 cluster: congested from the
+/// first minute, so a crash in that window always has victims.
+fn faulted(kind: SchedKind, plan: FaultPlan) -> RunResult {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sched.kind = kind;
+    cfg.faults = plan;
+    run_experiment(&cfg, generate(24, WorkloadMix::Mixed, 0.3, 2_000, 42))
+}
+
+fn expected_tasks() -> u32 {
+    generate(24, WorkloadMix::Mixed, 0.3, 2_000, 42).iter().map(|s| s.total_tasks()).sum()
+}
+
+/// Shared invariants for any completed run under any plan.
+fn check_conservation(kind: SchedKind, r: &RunResult, label: &str) {
+    assert_eq!(
+        r.trace.tasks.len() as u32,
+        expected_tasks(),
+        "{kind:?}/{label}: not every task completed"
+    );
+    assert_eq!(
+        r.attempts,
+        r.trace.tasks.len() as u32 + r.failures + r.lost_attempts,
+        "{kind:?}/{label}: attempt conservation violated"
+    );
+    assert_eq!(
+        r.outages.iter().map(|o| o.killed).sum::<u32>(),
+        r.lost_attempts,
+        "{kind:?}/{label}: per-outage kills disagree with the run total"
+    );
+    assert!(
+        r.lost_work_ms <= r.wasted_work_ms,
+        "{kind:?}/{label}: crash-lost work exceeds total wasted work"
+    );
+    let g = r.goodput();
+    assert!((0.0..=1.0).contains(&g), "{kind:?}/{label}: goodput {g} out of range");
+}
+
+#[test]
+fn empty_plan_runs_clean_for_all_schedulers() {
+    for kind in KINDS {
+        let r = faulted(kind, FaultPlan::empty());
+        check_conservation(kind, &r, "empty");
+        assert!(r.outages.is_empty(), "{kind:?}: phantom outage");
+        assert_eq!(r.lost_attempts, 0, "{kind:?}: lost attempts without a fault plan");
+        assert_eq!(r.goodput(), 1.0, "{kind:?}: goodput must be perfect without faults");
+    }
+}
+
+#[test]
+fn single_crash_recovers_under_all_schedulers() {
+    // Node 0 (8 of 40 slots) dies at t=40 s for 60 s — mid-congestion, so
+    // running tasks are killed, requeued, and must all re-complete.
+    let plan = FaultPlan::empty().with_outage(40_000, 0, 60_000);
+    for kind in KINDS {
+        let r = faulted(kind, plan.clone());
+        check_conservation(kind, &r, "single-crash");
+        assert_eq!(r.outages.len(), 1, "{kind:?}: outage not recorded");
+        let o = &r.outages[0];
+        assert!(o.killed > 0, "{kind:?}: crash killed nothing on a congested cluster");
+        assert!(r.lost_attempts > 0 && r.lost_work_ms > 0, "{kind:?}: no work lost");
+        assert!(r.goodput() < 1.0, "{kind:?}: lost work must show up in goodput");
+        let ttr = o
+            .time_to_recover_ms()
+            .unwrap_or_else(|| panic!("{kind:?}: outage never healed"));
+        assert!(
+            ttr >= o.down_ms,
+            "{kind:?}: healed in {ttr} ms, below the {} ms downtime",
+            o.down_ms
+        );
+    }
+}
+
+#[test]
+fn correlated_outage_recovers_under_all_schedulers() {
+    // A rack failure: nodes 1 and 2 (16 of 40 slots) die together at
+    // t=45 s for 90 s.  Every scheduler must still drain the workload.
+    let plan = FaultPlan::empty().correlated(45_000, &[1, 2], 90_000);
+    for kind in KINDS {
+        let r = faulted(kind, plan.clone());
+        check_conservation(kind, &r, "correlated");
+        assert_eq!(r.outages.len(), 2, "{kind:?}: both halves of the outage must record");
+        assert!(r.lost_attempts > 0, "{kind:?}: correlated crash killed nothing");
+        for o in &r.outages {
+            assert_eq!(o.at_ms, 45_000);
+            if let Some(t) = o.recovered_at {
+                assert!(t >= o.at_ms + o.down_ms, "{kind:?}: healed before the node was up");
+            }
+        }
+    }
+}
+
+#[test]
+fn dress_delta_trace_reacts_to_capacity_loss() {
+    // DRESS re-derives its reservation split from the live total, so a
+    // 60 s capacity dip must perturb the δ trajectory (and the schedule).
+    let calm = faulted(SchedKind::Dress, FaultPlan::empty());
+    let stormy = faulted(SchedKind::Dress, FaultPlan::empty().with_outage(40_000, 0, 60_000));
+    assert!(!calm.delta_history.is_empty() && !stormy.delta_history.is_empty());
+    assert_ne!(
+        calm.delta_history, stormy.delta_history,
+        "δ trajectory blind to a 20% capacity loss"
+    );
+}
+
+#[test]
+fn stochastic_plan_is_reproducible_end_to_end() {
+    // Same seed, same stochastic plan => bit-identical recovery ledger.
+    let plan = FaultPlan::empty().stochastic(120_000, 20_000, 300_000);
+    let a = faulted(SchedKind::Capacity, plan.clone());
+    let b = faulted(SchedKind::Capacity, plan);
+    assert_eq!(a.outages, b.outages, "stochastic outage ledger not seed-stable");
+    assert_eq!(a.lost_work_ms, b.lost_work_ms);
+    assert_eq!(a.system.makespan_ms, b.system.makespan_ms);
+    check_conservation(SchedKind::Capacity, &a, "stochastic");
+}

@@ -370,6 +370,51 @@ fn full_metric_retention_report_bytes_stable_across_sharding() {
 }
 
 #[test]
+fn inert_fault_plans_are_bit_identical_for_all_schedulers() {
+    // Three plans that can never fire an outage inside the run — the
+    // explicit empty plan, a stochastic process whose horizon materializes
+    // zero crashes, and a fixed crash far beyond the makespan — must leave
+    // every scheduler's golden bit-identical to the default config.  The
+    // stochastic case is the RNG-isolation proof: its materialization does
+    // draw from the dedicated fault stream, and nothing moves.
+    use dress::sim::FaultPlan;
+    let specs = generate(24, WorkloadMix::Mixed, 0.3, 2_000, 42);
+    let run_with = |kind: SchedKind, faults: FaultPlan| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sched.kind = kind;
+        cfg.faults = faults;
+        Golden::of(&run_experiment_with(&cfg, specs.clone(), EngineOptions::default()))
+    };
+    for kind in KINDS {
+        let baseline = run_with(kind, FaultPlan::default());
+        assert_eq!(
+            baseline,
+            run_with(kind, FaultPlan::empty()),
+            "{kind:?}: empty fault plan perturbed the run"
+        );
+        // mtbf >> until: the first up-time draw always overshoots the
+        // horizon, so the plan materializes to nothing.
+        assert_eq!(
+            baseline,
+            run_with(kind, FaultPlan::empty().stochastic(1_000_000, 1_000, 1)),
+            "{kind:?}: zero-outage stochastic plan leaked into the event RNG"
+        );
+        // A crash scheduled long after the last job finishes never pops
+        // off the queue, so the golden — and the outage ledger — is clean.
+        assert_eq!(
+            baseline,
+            run_with(kind, FaultPlan::at(100_000_000, 0)),
+            "{kind:?}: post-makespan outage perturbed the run"
+        );
+    }
+    // Sensitivity: a crash *inside* the run must move the fingerprint,
+    // else the three equalities above prove nothing.
+    let calm = run_with(SchedKind::Dress, FaultPlan::default());
+    let stormy = run_with(SchedKind::Dress, FaultPlan::empty().with_outage(40_000, 0, 60_000));
+    assert_ne!(calm, stormy, "golden fingerprint blind to a live outage");
+}
+
+#[test]
 fn cross_seed_runs_differ() {
     // Sanity that the fingerprint is actually sensitive: different seeds
     // must yield different goldens (else the equality tests prove nothing).

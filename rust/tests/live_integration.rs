@@ -32,6 +32,7 @@ fn live_run_completes_with_real_compute() {
         hb: std::time::Duration::from_millis(20),
         units_per_sec: 1.0,
         max_wall: std::time::Duration::from_secs(120),
+        ..Default::default()
     };
     let sched_cfg = SchedConfig { kind: SchedKind::Dress, ..Default::default() };
     let sched = dress::sched::build(&sched_cfg, 3);
@@ -60,6 +61,7 @@ fn live_capacity_baseline_also_completes() {
         hb: std::time::Duration::from_millis(20),
         units_per_sec: 1.0,
         max_wall: std::time::Duration::from_secs(120),
+        ..Default::default()
     };
     let sched_cfg = SchedConfig { kind: SchedKind::Capacity, ..Default::default() };
     let sched = dress::sched::build(&sched_cfg, 2);
@@ -73,4 +75,76 @@ fn live_capacity_baseline_also_completes() {
     .expect("live run");
     assert_eq!(rep.scheduler, "capacity");
     assert_eq!(rep.jobs.len(), 2);
+    assert!(rep.unfinished.is_empty(), "healthy run left {:?} unfinished", rep.unfinished);
+}
+
+#[test]
+fn live_run_survives_a_dead_worker() {
+    let Some(dir) = find_artifacts_dir() else { return };
+    // One of three workers silently dies holding its first task.  The
+    // deadline scan must reclaim the lost attempt and the surviving pool
+    // must finish every job — no hang, no panic, nothing unfinished.
+    let cfg = LiveConfig {
+        workers: 3,
+        hb: std::time::Duration::from_millis(20),
+        units_per_sec: 1.0,
+        max_wall: std::time::Duration::from_secs(120),
+        task_deadline: std::time::Duration::from_secs(2),
+        simulate_worker_deaths: 1,
+        ..Default::default()
+    };
+    let sched_cfg = SchedConfig { kind: SchedKind::Dress, ..Default::default() };
+    let sched = dress::sched::build(&sched_cfg, 3);
+    let rep = run_live(
+        &cfg,
+        &sched_cfg,
+        tiny_specs(3, 42),
+        sched,
+        dir.join("taskwork.hlo.txt").to_str().unwrap(),
+    )
+    .expect("live run with a dead worker");
+    assert!(rep.unfinished.is_empty(), "jobs lost to a single dead worker: {:?}", rep.unfinished);
+    assert_eq!(rep.jobs.len(), 3);
+    assert!(rep.checksum.is_finite());
+    // Whether the doomed worker ever won a task is a race; if it did, the
+    // requeue path must have fired.
+    if rep.requeues > 0 {
+        eprintln!("NOTE: dead worker ate a task; {} requeue(s) recovered it", rep.requeues);
+    }
+}
+
+#[test]
+fn all_workers_dead_reports_unfinished_instead_of_hanging() {
+    let Some(dir) = find_artifacts_dir() else { return };
+    // The entire pool (one worker) dies on its first task.  The run must
+    // wind down through the pool-dead path — reporting the jobs as
+    // unfinished — rather than spinning until max_wall or panicking on a
+    // closed channel.
+    let cfg = LiveConfig {
+        workers: 1,
+        hb: std::time::Duration::from_millis(20),
+        units_per_sec: 1.0,
+        max_wall: std::time::Duration::from_secs(60),
+        task_deadline: std::time::Duration::from_millis(300),
+        simulate_worker_deaths: 1,
+        ..Default::default()
+    };
+    let sched_cfg = SchedConfig { kind: SchedKind::Fifo, ..Default::default() };
+    let sched = dress::sched::build(&sched_cfg, 1);
+    let t0 = std::time::Instant::now();
+    let rep = run_live(
+        &cfg,
+        &sched_cfg,
+        tiny_specs(2, 7),
+        sched,
+        dir.join("taskwork.hlo.txt").to_str().unwrap(),
+    )
+    .expect("pool death must degrade, not error");
+    assert_eq!(rep.unfinished.len(), 2, "all jobs should be unfinished: {rep:?}");
+    assert!(rep.jobs.is_empty(), "no job can have finished: {:?}", rep.jobs);
+    assert!(
+        t0.elapsed() < cfg.max_wall,
+        "pool-dead wind-down should beat max_wall, took {:?}",
+        t0.elapsed()
+    );
 }

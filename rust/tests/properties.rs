@@ -151,6 +151,70 @@ fn dress_makespan_within_bound_of_capacity() {
     );
 }
 
+#[test]
+fn crashed_tasks_eventually_complete_with_work_conserved() {
+    // Random worlds with a random single-node outage: every task still
+    // completes exactly once, attempt conservation holds (attempts ==
+    // completed + coin-flip failures + crash-killed), the per-outage kill
+    // ledger sums to the run total, and recovery timestamps are sane.
+    forall(
+        "crash recovery + conservation",
+        12,
+        |rng| {
+            let (mut cfg, seed, jobs) = gen_world(rng);
+            let kind = [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress]
+                [(rng.next_u64() % 4) as usize];
+            cfg.sched.kind = kind;
+            let node = (rng.next_u64() % cfg.cluster.nodes as u64) as u16;
+            let at = rng.next_u64() % 60_000;
+            let down = 1_000 + rng.next_u64() % 30_000;
+            cfg.faults = dress::sim::FaultPlan::empty().with_outage(at, node, down);
+            (cfg, seed, jobs)
+        },
+        |(cfg, seed, jobs)| {
+            let specs = generate(*jobs, WorkloadMix::Mixed, 0.3, 2_000, *seed);
+            let expected: u32 = specs.iter().map(|s| s.total_tasks()).sum();
+            // run_experiment asserts all_finished internally: a crashed
+            // task that never re-completes fails the starvation check.
+            let res = run_experiment(cfg, specs);
+            if res.trace.tasks.len() as u32 != expected {
+                return Err(format!("ran {} tasks, expected {expected}", res.trace.tasks.len()));
+            }
+            if res.attempts != expected + res.failures + res.lost_attempts {
+                return Err(format!(
+                    "conservation: {} attempts != {expected} done + {} failed + {} lost",
+                    res.attempts, res.failures, res.lost_attempts
+                ));
+            }
+            let killed: u32 = res.outages.iter().map(|o| o.killed).sum();
+            if killed != res.lost_attempts {
+                return Err(format!("outage ledger {killed} != lost total {}", res.lost_attempts));
+            }
+            if res.lost_work_ms > res.wasted_work_ms {
+                return Err(format!(
+                    "lost {} ms > wasted {} ms",
+                    res.lost_work_ms, res.wasted_work_ms
+                ));
+            }
+            if !(0.0..=1.0).contains(&res.goodput()) {
+                return Err(format!("goodput {}", res.goodput()));
+            }
+            for o in &res.outages {
+                if let Some(t) = o.recovered_at {
+                    if t < o.at_ms + o.down_ms {
+                        return Err(format!(
+                            "node {} healed at {t}, before its downtime ended at {}",
+                            o.node,
+                            o.at_ms + o.down_ms
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// One random op for the queue model: push at a time, or pop.
 #[derive(Debug, Clone, Copy)]
 enum QueueOp {
