@@ -1,8 +1,14 @@
 //! Perf: engine throughput at scale — events/sec and sched-ticks/sec on
-//! heavy-tailed congested bursts of 1k / 5k / 10k jobs (counting trace
-//! sinks, so the numbers measure scheduling, not trace-vector growth —
-//! and memory stays O(active jobs)), plus the indexed-vs-naive hot-path
-//! speedup against the seed engine's rebuild-every-tick reference path.
+//! heavy-tailed congested bursts of 1k / 5k / 10k / 100k jobs (counting
+//! trace sinks, so the numbers measure scheduling, not trace-vector
+//! growth — and memory stays O(active jobs)), plus the indexed-vs-naive
+//! hot-path speedup against the seed engine's rebuild-every-tick
+//! reference path.
+//!
+//! `DRESS_BENCH_FULL=1` adds the 1M-job row.  That run needs a larger
+//! cluster (50 nodes): on the default 40 containers a million jobs would
+//! take ~170 simulated hours, past the engine's livelock guard; each row
+//! records the `nodes` it ran on so trajectories compare like with like.
 //!
 //! Updates `BENCH_engine.json` in the working directory for trajectory
 //! tracking (schema documented in docs/PERFORMANCE.md), preserving the
@@ -32,15 +38,41 @@ fn timed(cfg: &ExperimentConfig, n: u32, opts: EngineOptions) -> (RunResult, f64
     (res, t0.elapsed().as_secs_f64())
 }
 
+/// Process peak resident set (`VmHWM`) in bytes — 0 where /proc is
+/// unavailable.  A high-water mark, so later rows inherit earlier rows'
+/// peaks; the interesting reading is the largest size's.
+fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("VmHWM:"))
+        .and_then(|v| v.trim().trim_end_matches("kB").trim().parse::<u64>().ok())
+        .map_or(0, |kb| kb * 1024)
+}
+
 fn main() {
     println!("=== perf: engine throughput at scale (congested_burst) ===");
     let opts = EngineOptions::throughput();
+    let full = std::env::var("DRESS_BENCH_FULL").is_ok_and(|v| v == "1");
+    let mut sizes = vec![1_000u32, 5_000, 10_000, 100_000];
+    if full {
+        sizes.push(1_000_000);
+    } else {
+        println!("(set DRESS_BENCH_FULL=1 for the 1M-job row)");
+    }
     let mut runs = Vec::new();
 
-    for n in [1_000u32, 5_000, 10_000] {
+    for n in sizes {
         for kind in [SchedKind::Capacity, SchedKind::Dress] {
             let mut cfg = ExperimentConfig::default();
             cfg.sched.kind = kind;
+            if n >= 1_000_000 {
+                // Keep the simulated horizon under the engine's livelock
+                // guard: ~10x the capacity for ~10x the jobs of the 100k row.
+                cfg.cluster.nodes = 50;
+            }
             let (res, wall_s) = timed(&cfg, n, opts);
             let eps = res.events as f64 / wall_s;
             let tps = res.sched_ticks as f64 / wall_s;
@@ -59,6 +91,8 @@ fn main() {
             let mut row = Json::obj();
             row.set("jobs", Json::Num(n as f64));
             row.set("scheduler", Json::Str(kind.name().to_string()));
+            row.set("nodes", Json::Num(cfg.cluster.nodes as f64));
+            row.set("peak_rss_bytes", Json::Num(peak_rss_bytes() as f64));
             row.set("events", Json::Num(res.events as f64));
             row.set("sched_ticks", Json::Num(res.sched_ticks as f64));
             row.set("wall_ms", Json::Num((wall_s * 100_000.0).round() / 100.0));
@@ -69,10 +103,12 @@ fn main() {
                 "retained_transitions",
                 Json::Num(res.retained_transitions as f64),
             );
-            // Metric-sink retention: must be 0 under the counting preset
-            // (the bounded-memory guarantee this bench runs under), while
-            // the exact time-weighted utilization integers still report.
+            // Bounded-memory guarantees under the throughput preset: no
+            // per-tick metric samples and no heartbeat transitions retained
+            // (the exact time-weighted summaries still report), at every
+            // size up to 1M jobs.
             assert_eq!(res.util_history.len(), 0, "counting metric sink retained samples");
+            assert_eq!(res.retained_transitions, 0, "throughput preset retained transitions");
             row.set(
                 "retained_util_samples",
                 Json::Num(res.util_history.len() as f64),

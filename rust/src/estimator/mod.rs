@@ -51,11 +51,24 @@ pub struct EstimatorBank {
     jobs: IdMap<JobEstimator>,
     /// Category per job (0 = SD, 1 = LD), registered by the scheduler.
     cats: IdMap<u8>,
+    /// Dirty set for the batched tick (perf iter 6): job ids whose
+    /// estimator may still mutate on a tick.  Jobs enter on ingest and
+    /// leave once [`JobEstimator::tick_pending`] reports quiescence, so
+    /// idle jobs cost nothing per heartbeat.
+    active: Vec<JobId>,
+    /// id -> currently in `active` (dense, like the id maps).
+    active_mark: Vec<bool>,
 }
 
 impl EstimatorBank {
     pub fn new(params: EstimatorParams) -> Self {
-        EstimatorBank { params, jobs: IdMap::new(), cats: IdMap::new() }
+        EstimatorBank {
+            params,
+            jobs: IdMap::new(),
+            cats: IdMap::new(),
+            active: Vec::new(),
+            active_mark: Vec::new(),
+        }
     }
 
     /// Register a job's category at submission (θ classification).
@@ -71,14 +84,55 @@ impl EstimatorBank {
             self.jobs
                 .get_or_insert_with(tr.job, || JobEstimator::new(tr.job, cat, params))
                 .on_transition(tr);
+            self.mark_active(tr.job);
         }
     }
 
-    /// Advance window-based detection to `now` (each heartbeat).
+    fn mark_active(&mut self, job: JobId) {
+        let i = job as usize;
+        if i >= self.active_mark.len() {
+            self.active_mark.resize(i + 1, false);
+        }
+        if !self.active_mark[i] {
+            self.active_mark[i] = true;
+            self.active.push(job);
+        }
+    }
+
+    /// Advance window-based detection to `now` (each heartbeat): one
+    /// batched pass over the dirty jobs only, retaining those whose
+    /// detection state can still move without new observations.  Skipped
+    /// jobs are exactly the ones whose `tick` would be a no-op (see
+    /// [`JobEstimator::tick_pending`]), and per-job ticks are independent,
+    /// so results are bit-identical to [`Self::tick_all`].
     pub fn tick(&mut self, now: Time) {
+        let mut w = 0;
+        for r in 0..self.active.len() {
+            let id = self.active[r];
+            let est = self.jobs.get_mut(id).expect("active job has an estimator");
+            est.tick(now);
+            if est.tick_pending() {
+                self.active[w] = id;
+                w += 1;
+            } else {
+                self.active_mark[id as usize] = false;
+            }
+        }
+        self.active.truncate(w);
+    }
+
+    /// The pre-batching reference pass: tick every known estimator,
+    /// dormant or not.  Kept for equivalence tests
+    /// (`DressScheduler::naive_estimator_tick`).
+    pub fn tick_all(&mut self, now: Time) {
         for est in self.jobs.values_mut() {
             est.tick(now);
         }
+    }
+
+    /// Jobs currently in the batched tick's dirty set (instrumentation).
+    pub fn active_jobs(&self) -> usize {
+        self.active.len()
     }
 
     /// Snapshot all live phase estimates (input to Eq. 1-3 / the kernel).
@@ -155,5 +209,44 @@ mod tests {
         let bank = EstimatorBank::new(EstimatorParams::default());
         assert_eq!(bank.predicted_release(0, 0, 1_000), 0.0);
         assert!(bank.snapshot().is_empty());
+    }
+
+    #[test]
+    fn batched_tick_matches_tick_all() {
+        // Identical observation streams; one bank ticks the dirty set, the
+        // other ticks everything.  Detection state must agree exactly
+        // (tests/properties.rs fuzzes this over random interleavings).
+        let mut batched = EstimatorBank::new(EstimatorParams::default());
+        let mut naive = EstimatorBank::new(EstimatorParams::default());
+        let stream = [
+            tr(1_000, 1, 0, ContainerState::Running),
+            tr(1_100, 1, 1, ContainerState::Running),
+            tr(1_300, 2, 0, ContainerState::Running),
+            tr(9_000, 1, 0, ContainerState::Completed),
+            tr(9_200, 1, 1, ContainerState::Completed),
+            tr(30_000, 2, 0, ContainerState::Completed),
+        ];
+        let mut fed = 0;
+        for now in (2_000..60_000).step_by(1_000) {
+            while fed < stream.len() && stream[fed].time < now {
+                batched.ingest(&stream[fed..fed + 1]);
+                naive.ingest(&stream[fed..fed + 1]);
+                fed += 1;
+            }
+            batched.tick(now);
+            naive.tick_all(now);
+        }
+        for id in [1, 2] {
+            assert_eq!(
+                format!("{:?}", batched.job(id)),
+                format!("{:?}", naive.job(id)),
+                "estimator state drift for job {id}"
+            );
+        }
+        let (b1, b2) = batched.predicted_release_pair(40_000, 60_000);
+        let (n1, n2) = naive.predicted_release_pair(40_000, 60_000);
+        assert_eq!(b1.to_bits(), n1.to_bits());
+        assert_eq!(b2.to_bits(), n2.to_bits());
+        assert_eq!(batched.active_jobs(), 0, "drained jobs must leave the dirty set");
     }
 }

@@ -132,6 +132,48 @@ impl JobEstimator {
         }
     }
 
+    /// Whether a future [`Self::tick`] could still mutate this estimator
+    /// without new transitions arriving.  Derived from the exact mutation
+    /// conditions of `detect_phase_starts`, `detect_release`, and the β
+    /// block; when this returns `false`, `tick(now)` is a no-op for
+    /// *every* `now`, so the bank's batched pass can skip the job until
+    /// its next ingested transition (`EstimatorBank::tick`).  Proven
+    /// equivalent to unconditional ticking by the property test in
+    /// tests/properties.rs and by whole-run goldens.
+    pub fn tick_pending(&self) -> bool {
+        // Algorithm 1 can open a phase (stability fallback fires once the
+        // oldest start ages past pw) or close an open ramp as time passes.
+        if !self.unassigned_starts.is_empty() || self.open_phase.is_some() {
+            return true;
+        }
+        // Algorithm 2 operates on the earliest unclosed phase.
+        if let Some(p) = self.phases.iter().find(|p| !p.closed) {
+            // Pending finishes can fix γ or be attributed to the phase.
+            if !self.unassigned_finishes.is_empty() {
+                return true;
+            }
+            // With γ known and no finishes in flight, the close conditions
+            // (`completed >= c`, or a stall with tasks still running) are
+            // time-independent: if one holds, the very next tick mutates.
+            if p.gamma.is_some() && (p.completed >= p.c || self.running > 0) {
+                return true;
+            }
+            // γ still unknown and nothing to observe: dormant until the
+            // next transition re-marks the job.
+            return false;
+        }
+        // All phases closed: β catches up to the latest finish once the
+        // job is drained.
+        if self.running == 0 && self.alpha.is_some() {
+            if let Some(last) = self.last_finish {
+                if self.beta.is_none_or(|b| b < last) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
     // --- Algorithm 1 ---------------------------------------------------
     fn detect_phase_starts(&mut self, now: Time) {
         let pw = self.params.pw_ms;

@@ -9,6 +9,8 @@
 
 pub mod job;
 pub mod spec;
+pub mod store;
 
 pub use job::{JobRt, TaskRt, TaskState};
 pub use spec::{JobId, JobSpec, PhaseKind, PhaseSpec, Platform, TaskSpec};
+pub use store::{JobLayout, JobStore};

@@ -1,0 +1,581 @@
+//! Job-state storage layouts behind one engine-facing API.
+//!
+//! The engine tracks per-job execution state (phase cursor, task states,
+//! occupancy, completion times) keyed by dense job *slots* (see the
+//! engine's `JobIndex`).  Two layouts implement the same contract:
+//!
+//! * [`JobLayout::Soa`] (default) — struct-of-arrays: hot per-job fields
+//!   (remaining tasks, demand, phase cursor, occupancy, timestamps) live in
+//!   parallel dense vectors indexed by slot, and all task states across all
+//!   jobs share two flat arrays addressed through per-job offset tables.
+//!   The per-event state machine then touches a handful of adjacent `u32`/
+//!   `u64` lanes instead of walking `Vec<Vec<TaskRt>>` pointer forests, and
+//!   cold data (the full [`JobSpec`] — name, platform, phase specs) sits in
+//!   a side arena read only at init and metrics time.
+//! * [`JobLayout::Aos`] — the original array-of-structs layout
+//!   ([`JobRt`] records), kept as the reference path: the golden-
+//!   determinism suite runs whole experiments on both layouts and requires
+//!   bit-identical results.
+//!
+//! Every mutator mirrors `JobRt` semantics exactly (same scan orders, same
+//! barrier rules), so layout choice can never change simulation output —
+//! only memory traffic.  See docs/PERFORMANCE.md §"Memory layout &
+//! batching".
+
+use super::job::{JobRt, TaskState};
+use super::spec::{JobId, JobSpec};
+use crate::cluster::ContainerId;
+use crate::metrics::JobMetrics;
+use crate::util::Time;
+
+/// Which job-state layout the engine uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum JobLayout {
+    /// Struct-of-arrays hot layout (default).
+    #[default]
+    Soa,
+    /// Array-of-structs reference layout (the pre-SoA `JobRt` records).
+    Aos,
+}
+
+/// Outcome of completing one task (see [`JobStore::finish_task`]).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskFinish {
+    /// When the completed attempt started running.
+    pub start: Time,
+    /// The phase cursor moved (a barrier was crossed).
+    pub phase_advanced: bool,
+    /// This completion finished the whole job (its finish time was set).
+    pub finished_job: bool,
+}
+
+/// Sentinel for "timestamp not yet set" in the SoA timestamp lanes.
+const NO_TIME: Time = Time::MAX;
+
+/// Engine-facing job-state store; see the module docs for the layouts.
+#[derive(Debug)]
+pub enum JobStore {
+    Aos(AosStore),
+    Soa(SoaStore),
+}
+
+impl JobStore {
+    pub fn new(specs: Vec<JobSpec>, layout: JobLayout) -> JobStore {
+        match layout {
+            JobLayout::Aos => JobStore::Aos(AosStore::new(specs)),
+            JobLayout::Soa => JobStore::Soa(SoaStore::new(specs)),
+        }
+    }
+
+    pub fn layout(&self) -> JobLayout {
+        match self {
+            JobStore::Aos(_) => JobLayout::Aos,
+            JobStore::Soa(_) => JobLayout::Soa,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            JobStore::Aos(s) => s.jobs.len(),
+            JobStore::Soa(s) => s.specs.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn id(&self, slot: usize) -> JobId {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].id(),
+            JobStore::Soa(s) => s.specs[slot].id,
+        }
+    }
+
+    /// Raw requested demand (`r_i`), unclamped — view construction clamps.
+    pub fn demand(&self, slot: usize) -> u32 {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].spec.demand,
+            JobStore::Soa(s) => s.demand[slot],
+        }
+    }
+
+    pub fn submit_ms(&self, slot: usize) -> Time {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].spec.submit_ms,
+            JobStore::Soa(s) => s.submit_ms[slot],
+        }
+    }
+
+    pub fn submitted(&self, slot: usize) -> bool {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].submitted,
+            JobStore::Soa(s) => s.submitted[slot],
+        }
+    }
+
+    pub fn mark_submitted(&mut self, slot: usize) {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].submitted = true,
+            JobStore::Soa(s) => s.submitted[slot] = true,
+        }
+    }
+
+    pub fn started(&self, slot: usize) -> bool {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].started(),
+            JobStore::Soa(s) => s.first_start[slot] != NO_TIME,
+        }
+    }
+
+    pub fn finished(&self, slot: usize) -> bool {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].finished(),
+            JobStore::Soa(s) => s.finish[slot] != NO_TIME,
+        }
+    }
+
+    pub fn occupied(&self, slot: usize) -> u32 {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].occupied,
+            JobStore::Soa(s) => s.occupied[slot],
+        }
+    }
+
+    /// Not-yet-Done tasks; 0 == job complete.
+    pub fn remaining_tasks(&self, slot: usize) -> u32 {
+        match self {
+            JobStore::Aos(s) => s.remaining[slot],
+            JobStore::Soa(s) => s.remaining[slot],
+        }
+    }
+
+    /// Tasks of the current phase still waiting for a container — exactly
+    /// [`JobRt::pending_tasks`] semantics under both layouts.
+    pub fn pending_tasks(&self, slot: usize) -> u32 {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].pending_tasks(),
+            JobStore::Soa(s) => s.pending_tasks(slot),
+        }
+    }
+
+    /// Next pending task of the current phase, in task order.
+    pub fn next_pending(&self, slot: usize) -> Option<(usize, usize)> {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].next_pending(),
+            JobStore::Soa(s) => s.next_pending(slot),
+        }
+    }
+
+    /// Pending -> Launching; the job now holds the container.
+    pub fn begin_launch(&mut self, slot: usize, phase: usize, task: usize, cid: ContainerId) {
+        match self {
+            JobStore::Aos(s) => {
+                s.jobs[slot].tasks[phase][task].state = TaskState::Launching(cid);
+                s.jobs[slot].occupied += 1;
+            }
+            JobStore::Soa(s) => {
+                let gi = s.task_index(slot, phase, task);
+                debug_assert_eq!(s.task_state[gi], TaskState::Pending);
+                s.task_state[gi] = TaskState::Launching(cid);
+                s.occupied[slot] += 1;
+            }
+        }
+    }
+
+    /// Launching -> Running at `now`; sets the job's first-start timestamp
+    /// if unset.  Returns the task's duration (for finish scheduling).
+    pub fn begin_run(
+        &mut self,
+        slot: usize,
+        phase: usize,
+        task: usize,
+        cid: ContainerId,
+        now: Time,
+    ) -> Time {
+        match self {
+            JobStore::Aos(s) => {
+                let j = &mut s.jobs[slot];
+                j.tasks[phase][task].state = TaskState::Running { container: cid, start: now };
+                if j.first_start.is_none() {
+                    j.first_start = Some(now);
+                }
+                j.tasks[phase][task].duration_ms
+            }
+            JobStore::Soa(s) => {
+                let gi = s.task_index(slot, phase, task);
+                s.task_state[gi] = TaskState::Running { container: cid, start: now };
+                if s.first_start[slot] == NO_TIME {
+                    s.first_start[slot] = now;
+                }
+                s.task_dur[gi]
+            }
+        }
+    }
+
+    /// Running -> Done at `now`: releases the container from the job,
+    /// decrements the remaining-task counter, advances the phase cursor
+    /// past completed barriers, and sets the job finish time when the last
+    /// task lands.  Panics on a non-Running task (engine invariant).
+    pub fn finish_task(&mut self, slot: usize, phase: usize, task: usize, now: Time) -> TaskFinish {
+        match self {
+            JobStore::Aos(s) => {
+                let start = match s.jobs[slot].tasks[phase][task].state {
+                    TaskState::Running { start, .. } => start,
+                    other => panic!("finish of non-running task: {other:?}"),
+                };
+                s.jobs[slot].tasks[phase][task].state =
+                    TaskState::Done { start, finish: now };
+                s.jobs[slot].occupied -= 1;
+                s.remaining[slot] -= 1;
+                let before = s.jobs[slot].cur_phase;
+                s.jobs[slot].advance_phase();
+                let mut finished_job = false;
+                if s.remaining[slot] == 0 {
+                    debug_assert!(s.jobs[slot].all_done());
+                    if s.jobs[slot].finish.is_none() {
+                        s.jobs[slot].finish = Some(now);
+                        finished_job = true;
+                    }
+                }
+                TaskFinish {
+                    start,
+                    phase_advanced: s.jobs[slot].cur_phase != before,
+                    finished_job,
+                }
+            }
+            JobStore::Soa(s) => {
+                let gi = s.task_index(slot, phase, task);
+                let start = match s.task_state[gi] {
+                    TaskState::Running { start, .. } => start,
+                    other => panic!("finish of non-running task: {other:?}"),
+                };
+                s.task_state[gi] = TaskState::Done { start, finish: now };
+                s.occupied[slot] -= 1;
+                s.remaining[slot] -= 1;
+                let before = s.cur_phase[slot];
+                s.advance_phase(slot);
+                let mut finished_job = false;
+                if s.remaining[slot] == 0 {
+                    debug_assert!(s.all_done(slot));
+                    if s.finish[slot] == NO_TIME {
+                        s.finish[slot] = now;
+                        finished_job = true;
+                    }
+                }
+                TaskFinish {
+                    start,
+                    phase_advanced: s.cur_phase[slot] != before,
+                    finished_job,
+                }
+            }
+        }
+    }
+
+    /// Kill an attempt (coin-flip failure or node crash): the task drops
+    /// back to Pending for a fresh grant and the container is released from
+    /// the job.  Returns the run start if the attempt was Running (crash
+    /// accounting), `None` if it was still Launching.
+    pub fn requeue_task(&mut self, slot: usize, phase: usize, task: usize) -> Option<Time> {
+        match self {
+            JobStore::Aos(s) => {
+                let was = s.jobs[slot].tasks[phase][task].state;
+                s.jobs[slot].tasks[phase][task].state = TaskState::Pending;
+                s.jobs[slot].occupied -= 1;
+                match was {
+                    TaskState::Running { start, .. } => Some(start),
+                    _ => None,
+                }
+            }
+            JobStore::Soa(s) => {
+                let gi = s.task_index(slot, phase, task);
+                let was = s.task_state[gi];
+                s.task_state[gi] = TaskState::Pending;
+                s.occupied[slot] -= 1;
+                match was {
+                    TaskState::Running { start, .. } => Some(start),
+                    _ => None,
+                }
+            }
+        }
+    }
+
+    /// Final per-job metrics, in slot order.  Panics if any job never
+    /// started or never finished (the engine asserts completion first).
+    pub fn metrics(&self) -> Vec<JobMetrics> {
+        match self {
+            JobStore::Aos(s) => s.jobs.iter().map(JobMetrics::of).collect(),
+            JobStore::Soa(s) => (0..s.specs.len()).map(|slot| s.metrics(slot)).collect(),
+        }
+    }
+}
+
+/// Array-of-structs reference layout: one [`JobRt`] per slot plus the
+/// remaining-task counters the indexed engine always kept.
+#[derive(Debug)]
+pub struct AosStore {
+    jobs: Vec<JobRt>,
+    remaining: Vec<u32>,
+}
+
+impl AosStore {
+    fn new(specs: Vec<JobSpec>) -> AosStore {
+        let remaining = specs.iter().map(|s| s.total_tasks()).collect();
+        AosStore { jobs: specs.into_iter().map(JobRt::new).collect(), remaining }
+    }
+}
+
+/// Struct-of-arrays hot layout; all vectors are slot-parallel except the
+/// flat task lanes, which are addressed through `task_off`/`phase_off`.
+#[derive(Debug)]
+pub struct SoaStore {
+    // Hot per-job lanes (slot-parallel).
+    demand: Vec<u32>,
+    submit_ms: Vec<Time>,
+    submitted: Vec<bool>,
+    cur_phase: Vec<u32>,
+    occupied: Vec<u32>,
+    remaining: Vec<u32>,
+    /// `NO_TIME` until the first task enters Running.
+    first_start: Vec<Time>,
+    /// `NO_TIME` until the last task completes.
+    finish: Vec<Time>,
+    // Flat task lanes shared by all jobs.
+    task_state: Vec<TaskState>,
+    task_dur: Vec<Time>,
+    /// `n + 1` prefix offsets: job `slot`'s tasks occupy
+    /// `task_off[slot]..task_off[slot + 1]` of the task lanes.
+    task_off: Vec<u32>,
+    /// `n + 1` prefix offsets into `phase_end`.
+    phase_off: Vec<u32>,
+    /// Per-phase *cumulative* task counts within each job: phase `p` of
+    /// job `slot` covers local task indices
+    /// `phase_end[phase_off[slot] + p - 1]..phase_end[phase_off[slot] + p]`
+    /// (0-based lower bound for `p == 0`).
+    phase_end: Vec<u32>,
+    /// Cold side arena: full specs, read at init and metrics time only.
+    specs: Vec<JobSpec>,
+}
+
+impl SoaStore {
+    fn new(specs: Vec<JobSpec>) -> SoaStore {
+        let n = specs.len();
+        let mut task_off = Vec::with_capacity(n + 1);
+        let mut phase_off = Vec::with_capacity(n + 1);
+        let mut phase_end = Vec::new();
+        let mut task_state = Vec::new();
+        let mut task_dur = Vec::new();
+        task_off.push(0u32);
+        phase_off.push(0u32);
+        for s in &specs {
+            let mut cum = 0u32;
+            for p in &s.phases {
+                for t in &p.tasks {
+                    task_state.push(TaskState::Pending);
+                    task_dur.push(t.duration_ms);
+                }
+                cum += p.tasks.len() as u32;
+                phase_end.push(cum);
+            }
+            task_off.push(task_state.len() as u32);
+            phase_off.push(phase_end.len() as u32);
+        }
+        SoaStore {
+            demand: specs.iter().map(|s| s.demand).collect(),
+            submit_ms: specs.iter().map(|s| s.submit_ms).collect(),
+            submitted: vec![false; n],
+            cur_phase: vec![0; n],
+            occupied: vec![0; n],
+            remaining: specs.iter().map(|s| s.total_tasks()).collect(),
+            first_start: vec![NO_TIME; n],
+            finish: vec![NO_TIME; n],
+            task_state,
+            task_dur,
+            task_off,
+            phase_off,
+            phase_end,
+            specs,
+        }
+    }
+
+    fn nphases(&self, slot: usize) -> usize {
+        (self.phase_off[slot + 1] - self.phase_off[slot]) as usize
+    }
+
+    /// Global task-lane range of `phase` within `slot`.
+    fn task_range(&self, slot: usize, phase: usize) -> (usize, usize) {
+        let pbase = self.phase_off[slot] as usize;
+        let tbase = self.task_off[slot] as usize;
+        let lo = if phase == 0 { 0 } else { self.phase_end[pbase + phase - 1] as usize };
+        let hi = self.phase_end[pbase + phase] as usize;
+        (tbase + lo, tbase + hi)
+    }
+
+    fn task_index(&self, slot: usize, phase: usize, task: usize) -> usize {
+        let (lo, hi) = self.task_range(slot, phase);
+        debug_assert!(lo + task < hi, "task index out of phase range");
+        lo + task
+    }
+
+    fn pending_tasks(&self, slot: usize) -> u32 {
+        let cur = self.cur_phase[slot] as usize;
+        if self.finish[slot] != NO_TIME || cur >= self.nphases(slot) {
+            return 0;
+        }
+        let (lo, hi) = self.task_range(slot, cur);
+        self.task_state[lo..hi]
+            .iter()
+            .filter(|&&t| t == TaskState::Pending)
+            .count() as u32
+    }
+
+    fn next_pending(&self, slot: usize) -> Option<(usize, usize)> {
+        let cur = self.cur_phase[slot] as usize;
+        if cur >= self.nphases(slot) {
+            return None;
+        }
+        let (lo, hi) = self.task_range(slot, cur);
+        self.task_state[lo..hi]
+            .iter()
+            .position(|&t| t == TaskState::Pending)
+            .map(|i| (cur, i))
+    }
+
+    fn phase_complete(&self, slot: usize, phase: usize) -> bool {
+        let (lo, hi) = self.task_range(slot, phase);
+        self.task_state[lo..hi]
+            .iter()
+            .all(|t| matches!(t, TaskState::Done { .. }))
+    }
+
+    fn advance_phase(&mut self, slot: usize) {
+        while (self.cur_phase[slot] as usize) < self.nphases(slot)
+            && self.phase_complete(slot, self.cur_phase[slot] as usize)
+        {
+            self.cur_phase[slot] += 1;
+        }
+    }
+
+    fn all_done(&self, slot: usize) -> bool {
+        let (lo, hi) = (self.task_off[slot] as usize, self.task_off[slot + 1] as usize);
+        self.task_state[lo..hi]
+            .iter()
+            .all(|t| matches!(t, TaskState::Done { .. }))
+    }
+
+    fn metrics(&self, slot: usize) -> JobMetrics {
+        assert!(self.first_start[slot] != NO_TIME, "job never started");
+        assert!(self.finish[slot] != NO_TIME, "job never finished");
+        let submit = self.submit_ms[slot];
+        let waiting = self.first_start[slot].saturating_sub(submit);
+        let completion = self.finish[slot].saturating_sub(submit);
+        JobMetrics {
+            id: self.specs[slot].id,
+            demand: self.demand[slot],
+            submit_ms: submit,
+            waiting_ms: waiting,
+            completion_ms: completion,
+            execution_ms: completion - waiting,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::spec::{PhaseKind, PhaseSpec, Platform};
+
+    fn spec(id: u32, phases: &[&[Time]]) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("j{id}"),
+            platform: Platform::MapReduce,
+            submit_ms: id as Time * 1_000,
+            demand: 2,
+            phases: phases
+                .iter()
+                .map(|durs| PhaseSpec::new(PhaseKind::Map, durs))
+                .collect(),
+        }
+    }
+
+    fn both() -> [JobStore; 2] {
+        let specs = vec![spec(1, &[&[5_000, 6_000], &[4_000]]), spec(2, &[&[3_000]])];
+        [
+            JobStore::new(specs.clone(), JobLayout::Aos),
+            JobStore::new(specs, JobLayout::Soa),
+        ]
+    }
+
+    #[test]
+    fn layouts_agree_on_initial_state() {
+        for st in both() {
+            let l = st.layout();
+            assert_eq!(st.len(), 2, "{l:?}");
+            assert_eq!(st.id(0), 1, "{l:?}");
+            assert_eq!(st.demand(1), 2, "{l:?}");
+            assert_eq!(st.submit_ms(1), 2_000, "{l:?}");
+            assert_eq!(st.pending_tasks(0), 2, "{l:?}");
+            assert_eq!(st.remaining_tasks(0), 3, "{l:?}");
+            assert_eq!(st.next_pending(0), Some((0, 0)), "{l:?}");
+            assert!(!st.started(0) && !st.finished(0), "{l:?}");
+        }
+    }
+
+    #[test]
+    fn layouts_agree_on_full_lifecycle() {
+        for mut st in both() {
+            let l = st.layout();
+            st.mark_submitted(0);
+            // Launch + run both phase-0 tasks of job 0.
+            st.begin_launch(0, 0, 0, 7);
+            st.begin_launch(0, 0, 1, 8);
+            assert_eq!(st.occupied(0), 2, "{l:?}");
+            assert_eq!(st.pending_tasks(0), 0, "{l:?}");
+            assert_eq!(st.begin_run(0, 0, 0, 7, 100), 5_000, "{l:?}");
+            assert_eq!(st.begin_run(0, 0, 1, 8, 150), 6_000, "{l:?}");
+            assert!(st.started(0), "{l:?}");
+            // First finish: barrier not crossed yet.
+            let f = st.finish_task(0, 0, 0, 5_100);
+            assert_eq!(f.start, 100, "{l:?}");
+            assert!(!f.phase_advanced && !f.finished_job, "{l:?}");
+            assert_eq!(st.remaining_tasks(0), 2, "{l:?}");
+            // Second finish crosses the barrier into phase 1.
+            let f = st.finish_task(0, 0, 1, 6_150);
+            assert!(f.phase_advanced && !f.finished_job, "{l:?}");
+            assert_eq!(st.pending_tasks(0), 1, "{l:?}");
+            assert_eq!(st.next_pending(0), Some((1, 0)), "{l:?}");
+            // Phase 1: fail once (requeue), then complete.
+            st.begin_launch(0, 1, 0, 9);
+            assert_eq!(st.requeue_task(0, 1, 0), None, "{l:?}: killed while Launching");
+            assert_eq!(st.pending_tasks(0), 1, "{l:?}");
+            st.begin_launch(0, 1, 0, 10);
+            st.begin_run(0, 1, 0, 10, 7_000);
+            assert_eq!(st.requeue_task(0, 1, 0), Some(7_000), "{l:?}: killed while Running");
+            st.begin_launch(0, 1, 0, 11);
+            st.begin_run(0, 1, 0, 11, 8_000);
+            let f = st.finish_task(0, 1, 0, 12_000);
+            assert!(f.finished_job && f.phase_advanced, "{l:?}");
+            assert!(st.finished(0), "{l:?}");
+            assert_eq!(st.occupied(0), 0, "{l:?}");
+            assert_eq!(st.pending_tasks(0), 0, "{l:?}");
+        }
+    }
+
+    #[test]
+    fn layouts_agree_on_metrics() {
+        let mut results = Vec::new();
+        for mut st in both() {
+            for slot in 0..st.len() {
+                st.mark_submitted(slot);
+                while let Some((phase, task)) = st.next_pending(slot) {
+                    st.begin_launch(slot, phase, task, 1);
+                    let d = st.begin_run(slot, phase, task, 1, 10_000);
+                    st.finish_task(slot, phase, task, 10_000 + d);
+                }
+            }
+            results.push(st.metrics());
+        }
+        assert_eq!(results[0], results[1], "AoS and SoA metrics must agree");
+    }
+}

@@ -42,6 +42,10 @@ pub struct DressScheduler {
     pub freeze_delta: bool,
     /// Ablation: ignore the release estimator (F₁ = F₂ = 0 in Algorithm 3).
     pub disable_estimator: bool,
+    /// Reference path (perf iter 6): tick every estimator per heartbeat
+    /// instead of only the dirty set.  Bit-identical by construction; kept
+    /// for equivalence goldens.
+    pub naive_estimator_tick: bool,
 }
 
 impl DressScheduler {
@@ -61,6 +65,7 @@ impl DressScheduler {
             gang: cfg.gang,
             freeze_delta: false,
             disable_estimator: false,
+            naive_estimator_tick: false,
         }
     }
 
@@ -168,7 +173,11 @@ impl Scheduler for DressScheduler {
 
         // (2) estimator ingest + tick (Algorithms 1-2).
         self.estimator.ingest(view.transitions);
-        self.estimator.tick(view.now);
+        if self.naive_estimator_tick {
+            self.estimator.tick_all(view.now);
+        } else {
+            self.estimator.tick(view.now);
+        }
 
         // Degraded capacity (fault plan): the split is re-derived from the
         // live total every heartbeat.  Below two slots there is no way to

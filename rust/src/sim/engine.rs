@@ -20,7 +20,14 @@
 //! reference path alive for equivalence tests (tests/golden_determinism.rs)
 //! and for the speedup measurement in benches/perf_throughput.rs.  Debug
 //! builds additionally cross-check the incremental view against ground
-//! truth every tick.
+//! truth — every tick for test-sized runs, sampled every
+//! `DRESS_VIEW_CHECK_EVERY` ticks (default 64) at scale.
+//!
+//! Job state lives behind [`JobStore`] (perf iter 6): the default
+//! struct-of-arrays layout keeps hot per-job lanes dense and all task
+//! states in flat arrays, while `EngineOptions::jobs = JobLayout::Aos`
+//! selects the original `JobRt` record layout as the reference path — the
+//! golden suite proves both bit-identical.
 
 use super::event::{Event, EventQueue, QueueKind};
 use super::fault::OutageRecord;
@@ -29,7 +36,7 @@ use super::sink::{SinkKind, TraceSink};
 use super::trace::{TaskTrace, TraceRecorder};
 use crate::cluster::{Cluster, ContainerState, HeartbeatLog, Transition};
 use crate::config::ExperimentConfig;
-use crate::jobs::{JobRt, JobSpec, TaskState};
+use crate::jobs::{JobLayout, JobSpec, JobStore};
 use crate::metrics::{DeltaSummary, JobMetrics, SystemMetrics, UtilSummary};
 use crate::sched::{Allocation, ClusterView, JobView, Scheduler};
 use crate::util::rng::Rng;
@@ -129,6 +136,10 @@ pub struct EngineOptions {
     /// engine's behavior).  Reference path for equivalence tests and
     /// speedup baselines; simulation results are identical either way.
     pub naive_hot_path: bool,
+    /// Job-state storage layout ([`JobLayout`]).  Struct-of-arrays by
+    /// default; the array-of-structs reference layout exists for
+    /// equivalence tests.  Simulation results are identical either way.
+    pub jobs: JobLayout,
 }
 
 impl Default for EngineOptions {
@@ -138,6 +149,7 @@ impl Default for EngineOptions {
             metrics: MetricSinkKind::Full,
             queue: QueueKind::Calendar,
             naive_hot_path: false,
+            jobs: JobLayout::Soa,
         }
     }
 }
@@ -221,7 +233,8 @@ struct OutageState {
 pub struct Engine {
     cfg: ExperimentConfig,
     cluster: Cluster,
-    jobs: Vec<JobRt>,
+    /// Per-job execution state, SoA or AoS per `opts.jobs`.
+    store: JobStore,
     queue: EventQueue,
     heartbeats: HeartbeatLog,
     sched: Box<dyn Scheduler>,
@@ -259,9 +272,6 @@ pub struct Engine {
     index: JobIndex,
     /// Jobs with `finish` set (replaces the seed's all-jobs scan).
     finished_jobs: usize,
-    /// Not-yet-Done tasks per slot; 0 == job complete (O(1) per event,
-    /// replaces per-finish `all_done` scans).
-    remaining_tasks: Vec<u32>,
     /// Incrementally-maintained scheduler view: submitted jobs in
     /// submission order.  Completion tombstones the entry (`finished =
     /// true`, exactly what the seed exposed; schedulers filter) and the
@@ -276,6 +286,11 @@ pub struct Engine {
     view_tombstones: usize,
     events: u64,
     ticks: u64,
+    /// Debug-build view cross-check cadence in ticks (1 = every tick).
+    #[cfg(debug_assertions)]
+    view_check_every: u64,
+    #[cfg(debug_assertions)]
+    ticks_since_check: u64,
 }
 
 impl Engine {
@@ -325,13 +340,25 @@ impl Engine {
             });
         }
         let index = JobIndex::build(&specs);
-        let remaining_tasks: Vec<u32> = specs.iter().map(|s| s.total_tasks()).collect();
         let n = specs.len();
         let total = cluster.total();
+        // Debug-build view-check cadence: every tick for test-sized runs
+        // (the historical behavior the small goldens exercise), sampled at
+        // 64 for big scenarios so debug `cargo test` survives 100k-job
+        // horizons.  `DRESS_VIEW_CHECK_EVERY` overrides either default.
+        #[cfg(debug_assertions)]
+        let view_check_every = match std::env::var("DRESS_VIEW_CHECK_EVERY")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            Some(k) => k.max(1),
+            None if n <= 1_024 => 1,
+            None => 64,
+        };
         Engine {
             cfg,
             cluster,
-            jobs: specs.into_iter().map(JobRt::new).collect(),
+            store: JobStore::new(specs, opts.jobs),
             queue,
             heartbeats: HeartbeatLog::with_retention(opts.trace),
             sched,
@@ -354,13 +381,16 @@ impl Engine {
             opts,
             index,
             finished_jobs: 0,
-            remaining_tasks,
             view_jobs: Vec::new(),
             view_slots: Vec::new(),
             view_pos: vec![usize::MAX; n],
             view_tombstones: 0,
             events: 0,
             ticks: 0,
+            #[cfg(debug_assertions)]
+            view_check_every,
+            #[cfg(debug_assertions)]
+            ticks_since_check: 0,
         }
     }
 
@@ -369,7 +399,7 @@ impl Engine {
     }
 
     fn all_finished(&self) -> bool {
-        self.finished_jobs == self.jobs.len()
+        self.finished_jobs == self.store.len()
     }
 
     // --- incremental view maintenance -----------------------------------
@@ -386,15 +416,14 @@ impl Engine {
         // *nominal* capacity: a transient outage must not truncate the
         // request forever (the node comes back, gang jobs must too).
         let total = self.nominal_total;
-        let j = &self.jobs[slot];
         let jv = JobView {
-            id: j.id(),
-            demand: j.spec.demand.min(total),
-            submit_ms: j.spec.submit_ms,
-            started: j.started(),
+            id: self.store.id(slot),
+            demand: self.store.demand(slot).min(total),
+            submit_ms: self.store.submit_ms(slot),
+            started: self.store.started(slot),
             finished: false,
-            pending_tasks: j.pending_tasks(),
-            occupied: j.occupied,
+            pending_tasks: self.store.pending_tasks(slot),
+            occupied: self.store.occupied(slot),
         };
         if self.view_slots.last().is_none_or(|&s| s < slot) {
             self.view_pos[slot] = self.view_jobs.len();
@@ -458,37 +487,42 @@ impl Engine {
     /// Reference path for `EngineOptions::naive_hot_path`.
     fn naive_view_jobs(&self) -> Vec<JobView> {
         let total = self.nominal_total;
-        self.jobs
-            .iter()
-            .filter(|j| j.submitted)
-            .map(|j| JobView {
-                id: j.id(),
-                demand: j.spec.demand.min(total),
-                submit_ms: j.spec.submit_ms,
-                started: j.started(),
-                finished: j.finished(),
-                pending_tasks: j.pending_tasks(),
-                occupied: j.occupied,
+        (0..self.store.len())
+            .filter(|&slot| self.store.submitted(slot))
+            .map(|slot| JobView {
+                id: self.store.id(slot),
+                demand: self.store.demand(slot).min(total),
+                submit_ms: self.store.submit_ms(slot),
+                started: self.store.started(slot),
+                finished: self.store.finished(slot),
+                pending_tasks: self.store.pending_tasks(slot),
+                occupied: self.store.occupied(slot),
             })
             .collect()
     }
 
     /// Debug-build cross-check: the incremental view must equal ground
-    /// truth derived from the job records (runs on every tick under
-    /// `cargo test`, so the whole suite exercises the equivalence).
+    /// truth derived from the job store (runs every
+    /// `view_check_every`-th tick under `cargo test`, so the whole suite
+    /// exercises the equivalence).
     #[cfg(debug_assertions)]
     fn assert_view_consistent(&self) {
         let mut live = 0;
-        for (slot, j) in self.jobs.iter().enumerate() {
-            if j.submitted && !j.finished() {
+        for slot in 0..self.store.len() {
+            let id = self.store.id(slot);
+            if self.store.submitted(slot) && !self.store.finished(slot) {
                 let pos = self.view_pos[slot];
-                assert_ne!(pos, usize::MAX, "active job {} missing from view", j.id());
+                assert_ne!(pos, usize::MAX, "active job {id} missing from view");
                 let v = &self.view_jobs[pos];
-                assert_eq!(v.id, j.id());
-                assert!(!v.finished, "J{} live entry tombstoned", j.id());
-                assert_eq!(v.started, j.started(), "J{} started drift", j.id());
-                assert_eq!(v.pending_tasks, j.pending_tasks(), "J{} pending drift", j.id());
-                assert_eq!(v.occupied, j.occupied, "J{} occupied drift", j.id());
+                assert_eq!(v.id, id);
+                assert!(!v.finished, "J{id} live entry tombstoned");
+                assert_eq!(v.started, self.store.started(slot), "J{id} started drift");
+                assert_eq!(
+                    v.pending_tasks,
+                    self.store.pending_tasks(slot),
+                    "J{id} pending drift"
+                );
+                assert_eq!(v.occupied, self.store.occupied(slot), "J{id} occupied drift");
                 live += 1;
             } else {
                 assert_eq!(self.view_pos[slot], usize::MAX, "inactive job indexed in view");
@@ -511,15 +545,14 @@ impl Engine {
             if self.cluster.free() == 0 {
                 break;
             }
-            let Some((phase, task)) = self.jobs[ji].next_pending() else {
+            let Some((phase, task)) = self.store.next_pending(ji) else {
                 break;
             };
             let cid = self
                 .cluster
                 .allocate(alloc.job, phase, task, self.now)
                 .expect("free checked above");
-            self.jobs[ji].tasks[phase][task].state = TaskState::Launching(cid);
-            self.jobs[ji].occupied += 1;
+            self.store.begin_launch(ji, phase, task, cid);
             let v = self.view_entry(ji);
             v.occupied += 1;
             v.pending_tasks -= 1;
@@ -568,13 +601,8 @@ impl Engine {
         };
         if new_state == ContainerState::Running {
             let ji = self.job_index(job);
-            self.jobs[ji].tasks[phase][task].state =
-                TaskState::Running { container: cid, start: self.now };
-            if self.jobs[ji].first_start.is_none() {
-                self.jobs[ji].first_start = Some(self.now);
-            }
+            let dur = self.store.begin_run(ji, phase, task, cid, self.now);
             self.view_entry(ji).started = true;
-            let dur = self.jobs[ji].tasks[phase][task].duration_ms;
             // Failure injection: the container may die mid-task; the task
             // is then re-attempted in a fresh container (YARN AM behavior).
             let pf = self.cfg.cluster.task_failure_prob;
@@ -603,15 +631,10 @@ impl Engine {
         self.cluster.release(cid);
 
         let ji = self.job_index(job);
-        let start = match self.jobs[ji].tasks[phase][task].state {
-            TaskState::Running { start, .. } => start,
-            other => panic!("finish of non-running task: {other:?}"),
-        };
-        debug_assert_eq!(start, run_start);
-        self.jobs[ji].tasks[phase][task].state = TaskState::Done { start, finish: self.now };
-        self.jobs[ji].occupied -= 1;
+        let fin = self.store.finish_task(ji, phase, task, self.now);
+        debug_assert_eq!(fin.start, run_start);
         self.view_entry(ji).occupied -= 1;
-        self.useful_work_ms += self.now - start;
+        self.useful_work_ms += self.now - fin.start;
         if self.open_outages > 0 {
             self.note_recompletion(ji, phase, task);
         }
@@ -620,22 +643,15 @@ impl Engine {
             phase,
             task,
             granted: run_start, // grant time folded into startup elsewhere
-            start,
+            start: fin.start,
             finish: self.now,
         });
-        self.remaining_tasks[ji] -= 1;
-        let phase_before = self.jobs[ji].cur_phase;
-        self.jobs[ji].advance_phase();
-        if self.remaining_tasks[ji] == 0 {
-            debug_assert!(self.jobs[ji].all_done());
-            if self.jobs[ji].finish.is_none() {
-                self.jobs[ji].finish = Some(self.now);
-                self.finished_jobs += 1;
-                self.view_retire(ji);
-            }
-        } else if self.jobs[ji].cur_phase != phase_before {
+        if fin.finished_job {
+            self.finished_jobs += 1;
+            self.view_retire(ji);
+        } else if fin.phase_advanced {
             // Barrier crossed: the newly-runnable phase is all-Pending.
-            let pending = self.jobs[ji].pending_tasks();
+            let pending = self.store.pending_tasks(ji);
             self.view_entry(ji).pending_tasks = pending;
         }
     }
@@ -656,12 +672,8 @@ impl Engine {
         self.cluster.release(cid);
         self.wasted_work_ms += self.now - run_start;
         let ji = self.job_index(job);
-        debug_assert!(matches!(
-            self.jobs[ji].tasks[phase][task].state,
-            TaskState::Running { .. }
-        ));
-        self.jobs[ji].tasks[phase][task].state = TaskState::Pending;
-        self.jobs[ji].occupied -= 1;
+        let was_running = self.store.requeue_task(ji, phase, task);
+        debug_assert!(was_running.is_some(), "coin-flip fail of non-running task");
         let v = self.view_entry(ji);
         v.occupied -= 1;
         v.pending_tasks += 1;
@@ -684,11 +696,9 @@ impl Engine {
                 (c.job, c.phase, c.task)
             };
             let ji = self.job_index(job);
-            if let TaskState::Running { start, .. } = self.jobs[ji].tasks[phase][task].state {
+            if let Some(start) = self.store.requeue_task(ji, phase, task) {
                 lost += self.now - start;
             }
-            self.jobs[ji].tasks[phase][task].state = TaskState::Pending;
-            self.jobs[ji].occupied -= 1;
             let v = self.view_entry(ji);
             v.occupied -= 1;
             v.pending_tasks += 1;
@@ -744,7 +754,13 @@ impl Engine {
         self.ticks += 1;
         let transitions = self.heartbeats.drain();
         #[cfg(debug_assertions)]
-        self.assert_view_consistent();
+        {
+            self.ticks_since_check += 1;
+            if self.ticks_since_check >= self.view_check_every {
+                self.ticks_since_check = 0;
+                self.assert_view_consistent();
+            }
+        }
         // Indexed path: borrow the maintained active-job slice — O(1).
         // Naive path: rebuild from scratch like the seed engine did.
         let scratch: Vec<JobView>;
@@ -766,7 +782,7 @@ impl Engine {
         let mut free = self.cluster.free();
         for a in allocs {
             let ji = self.job_index(a.job);
-            let pending = self.jobs[ji].pending_tasks();
+            let pending = self.store.pending_tasks(ji);
             let n = a.n.min(pending).min(free);
             if n == 0 {
                 continue;
@@ -800,7 +816,7 @@ impl Engine {
             match ev {
                 Event::JobSubmit(id) => {
                     let ji = self.job_index(id);
-                    self.jobs[ji].submitted = true;
+                    self.store.mark_submitted(ji);
                     self.view_insert(ji);
                 }
                 Event::SchedTick => self.on_sched_tick(),
@@ -816,7 +832,7 @@ impl Engine {
         }
         assert!(self.all_finished(), "run ended with unfinished jobs (starvation)");
 
-        let jobs: Vec<JobMetrics> = self.jobs.iter().map(JobMetrics::of).collect();
+        let jobs: Vec<JobMetrics> = self.store.metrics();
         // Utilization comes from the online accumulator, never from the
         // retained samples — exact under every metric-sink policy.
         let system = SystemMetrics::of(&jobs, &self.util_accum);
@@ -1216,6 +1232,68 @@ mod tests {
         assert_eq!(cal.events, heap.events);
         assert_eq!(cal.delta_history, heap.delta_history);
         assert_eq!(cal.trace.tasks, heap.trace.tasks);
+    }
+
+    #[test]
+    fn aos_layout_matches_soa_default() {
+        // Quick in-module check; the full 4-scheduler matrix (plus fault
+        // plans) lives in tests/golden_determinism.rs.
+        let mut c = cfg(SchedKind::Dress);
+        c.cluster.task_failure_prob = 0.2;
+        let specs = crate::workload::generate(
+            8,
+            crate::workload::WorkloadMix::Mixed,
+            0.4,
+            1_500,
+            21,
+        );
+        let soa = run_experiment(&c, specs.clone());
+        let aos = run_experiment_with(
+            &c,
+            specs,
+            EngineOptions { jobs: JobLayout::Aos, ..Default::default() },
+        );
+        assert_eq!(soa.system.makespan_ms, aos.system.makespan_ms);
+        assert_eq!(soa.events, aos.events);
+        assert_eq!(soa.failures, aos.failures);
+        assert_eq!(soa.jobs, aos.jobs, "per-job metrics must be layout-independent");
+        assert_eq!(soa.trace.tasks, aos.trace.tasks);
+    }
+
+    #[test]
+    fn calendar_span_width_rule_matches_default() {
+        let c = cfg(SchedKind::Dress);
+        let specs = crate::workload::generate(
+            6,
+            crate::workload::WorkloadMix::Mixed,
+            0.4,
+            1_500,
+            13,
+        );
+        let gap = run_experiment(&c, specs.clone());
+        let span = run_experiment_with(
+            &c,
+            specs,
+            EngineOptions { queue: QueueKind::CalendarSpan, ..Default::default() },
+        );
+        assert_eq!(gap.system.makespan_ms, span.system.makespan_ms);
+        assert_eq!(gap.events, span.events);
+        assert_eq!(gap.delta_history, span.delta_history);
+        assert_eq!(gap.trace.tasks, span.trace.tasks);
+    }
+
+    #[test]
+    fn view_check_cadence_env_override_accepted() {
+        // Any cadence is semantics-preserving (the check is an assertion,
+        // not behavior); this pins that the env knob parses and the run
+        // still completes with a sampled cross-check.
+        std::env::set_var("DRESS_VIEW_CHECK_EVERY", "7");
+        let res = run_experiment(
+            &cfg(SchedKind::Capacity),
+            vec![tiny_job(1, 0, 2, &[2_000, 2_000])],
+        );
+        std::env::remove_var("DRESS_VIEW_CHECK_EVERY");
+        assert_eq!(res.jobs.len(), 1);
     }
 
     #[test]

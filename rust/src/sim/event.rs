@@ -1,24 +1,33 @@
 //! Event types and the time-ordered event queue.
 //!
-//! Two interchangeable queue implementations sit behind the same
-//! [`EventQueue`] API, both honoring the exact (time, insertion-sequence)
+//! Three interchangeable queue implementations sit behind the same
+//! [`EventQueue`] API, all honoring the exact (time, insertion-sequence)
 //! total order that keeps runs deterministic:
 //!
 //! * [`QueueKind::Calendar`] (default) — a calendar queue (bucketed timing
 //!   wheel, Brown 1988): events hash into `time / width mod nbuckets`
 //!   buckets; pop scans the current "day" window, so in the steady state
 //!   push and pop are O(1) amortized instead of the binary heap's
-//!   O(log n).  The bucket count doubles/halves with occupancy and the
-//!   bucket width re-derives from the live event-time span on every
-//!   resize (see docs/PERFORMANCE.md for sizing notes).
+//!   O(log n).  Event payloads live in a slab arena behind `u32` handles,
+//!   so bucket inserts and resizes move 24-byte keys, not fat enums.  The
+//!   bucket count doubles/halves with occupancy (with hysteresis — see
+//!   [`CalendarQueue::maybe_shrink`]) and the bucket width re-derives on
+//!   every resize from a reservoir of recently observed inter-pop gaps
+//!   (Brown's sampled-gap rule; see docs/PERFORMANCE.md for sizing notes).
+//! * [`QueueKind::CalendarSpan`] — the same wheel with the pre-gap-sampling
+//!   width heuristic (`span * 3 / len` over the live events).  Kept as the
+//!   reference path for the width rule: bucket width affects only *where*
+//!   events sit, never pop order, and the golden-determinism suite proves
+//!   whole runs bit-identical across all three kinds.
 //! * [`QueueKind::Heap`] — the seed's `BinaryHeap` ordered by
 //!   `(time, seq)`.  Kept as the reference model: the golden-determinism
-//!   suite runs whole experiments on both kinds and requires bit-identical
+//!   suite runs whole experiments on every kind and requires bit-identical
 //!   results, and `tests/properties.rs` drives random interleaved
 //!   push/pop sequences against it.
 
 use crate::cluster::ContainerId;
 use crate::jobs::JobId;
+use crate::util::slab::Slab;
 use crate::util::Time;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -47,9 +56,13 @@ pub enum Event {
 /// Which queue implementation an [`EventQueue`] uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum QueueKind {
-    /// Bucketed calendar queue — O(1) amortized push/pop.
+    /// Bucketed calendar queue — O(1) amortized push/pop, widths from
+    /// sampled inter-pop gaps.
     #[default]
     Calendar,
+    /// Calendar queue with the older `span/len` width heuristic — the
+    /// reference path for the gap-sampled rule.
+    CalendarSpan,
     /// `BinaryHeap` reference implementation — O(log n) per op.
     Heap,
 }
@@ -85,16 +98,27 @@ impl EventEntry {
     }
 }
 
+/// Reservoir size for the sampled inter-pop gap rule.  32 recent gaps is
+/// enough to track regime shifts (burst → drain) within a few dozen events
+/// while staying a single cache line of `u64`s to average on resize.
+const GAP_SAMPLES: usize = 32;
+
 /// Calendar queue: `nbuckets` (a power of two) buckets of `width` ms each.
 /// An event at time `t` lives in bucket `(t / width) % nbuckets`; buckets
 /// are kept sorted descending by `(time, seq)` so the bucket minimum is a
 /// O(1) `Vec::pop` from the tail.  Pop walks day windows from the current
 /// bucket; a full empty year falls back to a direct min search (rare — it
 /// only happens when the queue is sparse relative to its span).
+///
+/// Bucket elements are `(time, seq, handle)` triples: the comparison key
+/// stays inline (no pointer chase during the sorted insert) while the fat
+/// [`Event`] payload sits in `arena` and never moves on insert or resize.
 #[derive(Debug)]
 struct CalendarQueue {
     /// Each bucket sorted descending by (time, seq): last element = min.
-    buckets: Vec<Vec<(Time, u64, EventEntry)>>,
+    buckets: Vec<Vec<(Time, u64, u32)>>,
+    /// Event payloads behind the `u32` handles stored in `buckets`.
+    arena: Slab<EventEntry>,
     /// `buckets.len() - 1`; bucket count is always a power of two.
     mask: usize,
     /// Bucket width in ms (>= 1).
@@ -104,6 +128,16 @@ struct CalendarQueue {
     /// Exclusive upper bound of the current bucket's day window.
     cur_top: Time,
     len: usize,
+    /// Use the sampled-gap width rule (false = span/len reference rule).
+    gap_sampled: bool,
+    /// Ring of recent nonzero inter-pop gaps (ms); only `gap_len` valid.
+    gaps: [Time; GAP_SAMPLES],
+    gap_len: usize,
+    gap_pos: usize,
+    /// Timestamp of the most recent pop, once any pop has happened.
+    last_pop: Option<Time>,
+    /// Total resizes (grow + shrink) — hysteresis regression counter.
+    resizes: u64,
 }
 
 const INIT_BUCKETS: usize = 16;
@@ -111,14 +145,21 @@ const INIT_WIDTH: Time = 1024;
 const MAX_BUCKETS: usize = 1 << 20;
 
 impl CalendarQueue {
-    fn new() -> Self {
+    fn new(gap_sampled: bool) -> Self {
         CalendarQueue {
             buckets: (0..INIT_BUCKETS).map(|_| Vec::new()).collect(),
+            arena: Slab::new(),
             mask: INIT_BUCKETS - 1,
             width: INIT_WIDTH,
             cur: 0,
             cur_top: INIT_WIDTH,
             len: 0,
+            gap_sampled,
+            gaps: [0; GAP_SAMPLES],
+            gap_len: 0,
+            gap_pos: 0,
+            last_pop: None,
+            resizes: 0,
         }
     }
 
@@ -137,11 +178,12 @@ impl CalendarQueue {
         if self.len == 0 || time < self.cur_top.saturating_sub(self.width) {
             self.seek(time);
         }
+        let handle = self.arena.alloc(entry);
         let idx = ((time / self.width) as usize) & self.mask;
         let bucket = &mut self.buckets[idx];
         // Descending order; seq is unique so there are no equal keys.
         let pos = bucket.partition_point(|&(t, s, _)| (t, s) > (time, seq));
-        bucket.insert(pos, (time, seq, entry));
+        bucket.insert(pos, (time, seq, handle));
         self.len += 1;
         if self.len > 4 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS {
             self.resize(self.buckets.len() * 2);
@@ -157,10 +199,12 @@ impl CalendarQueue {
             let bucket = &mut self.buckets[self.cur];
             if let Some(&(t, _, _)) = bucket.last() {
                 if t < self.cur_top {
-                    let item = bucket.pop().unwrap();
+                    let (t, s, h) = bucket.pop().unwrap();
                     self.len -= 1;
+                    let entry = self.arena.take(h);
+                    self.note_pop(t);
                     self.maybe_shrink();
-                    return Some(item);
+                    return Some((t, s, entry));
                 }
             }
             self.cur = (self.cur + 1) & self.mask;
@@ -170,34 +214,73 @@ impl CalendarQueue {
         // to the globally minimal event (each bucket's min is its tail).
         let (t, _, _) = self.min_entry().expect("len > 0");
         self.seek(t);
-        let item = self.buckets[self.cur].pop().unwrap();
+        let (t, s, h) = self.buckets[self.cur].pop().unwrap();
         self.len -= 1;
+        let entry = self.arena.take(h);
+        self.note_pop(t);
         self.maybe_shrink();
-        Some(item)
+        Some((t, s, entry))
     }
 
-    /// Globally minimal (time, seq) entry, by scanning bucket tails.
-    fn min_entry(&self) -> Option<(Time, u64, EventEntry)> {
+    /// Globally minimal (time, seq, handle) entry, by scanning bucket tails.
+    fn min_entry(&self) -> Option<(Time, u64, u32)> {
         self.buckets
             .iter()
             .filter_map(|b| b.last().copied())
             .min_by_key(|&(t, s, _)| (t, s))
     }
 
+    /// Record the gap between consecutive pops into the reservoir.  Zero
+    /// gaps (simultaneous events) and backwards pops (possible after a
+    /// push into the past) carry no width information and are skipped.
+    fn note_pop(&mut self, t: Time) {
+        if let Some(prev) = self.last_pop {
+            let gap = t.saturating_sub(prev);
+            if gap > 0 {
+                self.gaps[self.gap_pos] = gap;
+                self.gap_pos = (self.gap_pos + 1) % GAP_SAMPLES;
+                self.gap_len = (self.gap_len + 1).min(GAP_SAMPLES);
+            }
+        }
+        self.last_pop = Some(t);
+    }
+
+    /// Width from the sampled gaps: 3× the mean recent inter-pop gap, i.e.
+    /// ≈3 events per bucket in the steady state (Brown's rule).  `None`
+    /// when sampling is off or no gap has been observed yet.
+    fn sampled_width(&self) -> Option<Time> {
+        if !self.gap_sampled || self.gap_len == 0 {
+            return None;
+        }
+        let sum: Time = self.gaps[..self.gap_len].iter().sum();
+        Some((3 * sum / self.gap_len as u64).max(1))
+    }
+
+    /// Shrink with hysteresis: only below ⅛ occupancy (`len * 8 < nbuckets`,
+    /// strictly inside the "< ¼" band) while growth triggers above 4×.  The
+    /// 32× dead band between the two thresholds means a ±1 len oscillation
+    /// at either boundary can trigger at most one resize — see the
+    /// `calendar_resize_hysteresis_no_thrash` regression test.
     fn maybe_shrink(&mut self) {
-        if self.buckets.len() > INIT_BUCKETS && self.len < self.buckets.len() / 4 {
+        if self.buckets.len() > INIT_BUCKETS && self.len * 8 < self.buckets.len() {
             self.resize(self.buckets.len() / 2);
         }
     }
 
-    /// Rebuild with `nbuckets` buckets and a width re-derived from the live
-    /// event span (≈3 events per bucket on average — Brown's rule of thumb
-    /// applied to the span/len mean gap instead of a sampled gap).
+    /// Rebuild with `nbuckets` buckets and a re-derived width: 3× the mean
+    /// sampled inter-pop gap when available, else 3× the live-span mean gap
+    /// (`span * 3 / len`) as the cold-start / reference rule.  The sampled
+    /// rule is robust to bursty arrivals — one far-future outlier inflates
+    /// the span (collapsing occupancy to one bucket) but barely moves the
+    /// mean of 32 recent gaps.
     fn resize(&mut self, nbuckets: usize) {
-        let all: Vec<(Time, u64, EventEntry)> =
+        self.resizes += 1;
+        let all: Vec<(Time, u64, u32)> =
             self.buckets.iter_mut().flat_map(std::mem::take).collect();
         debug_assert_eq!(all.len(), self.len);
-        if let (Some(min_t), Some(max_t)) = (
+        if let Some(w) = self.sampled_width() {
+            self.width = w;
+        } else if let (Some(min_t), Some(max_t)) = (
             all.iter().map(|&(t, _, _)| t).min(),
             all.iter().map(|&(t, _, _)| t).max(),
         ) {
@@ -206,9 +289,9 @@ impl CalendarQueue {
         }
         self.buckets = (0..nbuckets).map(|_| Vec::new()).collect();
         self.mask = nbuckets - 1;
-        for &(t, s, e) in &all {
+        for &(t, s, h) in &all {
             let idx = ((t / self.width) as usize) & self.mask;
-            self.buckets[idx].push((t, s, e));
+            self.buckets[idx].push((t, s, h));
         }
         for bucket in self.buckets.iter_mut() {
             bucket.sort_unstable_by(|x, y| (y.0, y.1).cmp(&(x.0, x.1)));
@@ -248,15 +331,17 @@ impl EventQueue {
 
     pub fn with_kind(kind: QueueKind) -> Self {
         let imp = match kind {
-            QueueKind::Calendar => Imp::Calendar(CalendarQueue::new()),
+            QueueKind::Calendar => Imp::Calendar(CalendarQueue::new(true)),
+            QueueKind::CalendarSpan => Imp::Calendar(CalendarQueue::new(false)),
             QueueKind::Heap => Imp::Heap(BinaryHeap::new()),
         };
         EventQueue { imp, seq: 0 }
     }
 
     pub fn kind(&self) -> QueueKind {
-        match self.imp {
-            Imp::Calendar(_) => QueueKind::Calendar,
+        match &self.imp {
+            Imp::Calendar(c) if c.gap_sampled => QueueKind::Calendar,
+            Imp::Calendar(_) => QueueKind::CalendarSpan,
             Imp::Heap(_) => QueueKind::Heap,
         }
     }
@@ -278,7 +363,7 @@ impl EventQueue {
     }
 
     /// Time of the next event.  O(1) on the heap kind; O(nbuckets) on the
-    /// calendar kind (a full bucket-tail scan) — fine for occasional
+    /// calendar kinds (a full bucket-tail scan) — fine for occasional
     /// inspection, but don't call it per event on hot paths.
     pub fn peek_time(&self) -> Option<Time> {
         match &self.imp {
@@ -297,17 +382,27 @@ impl EventQueue {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Total bucket-table resizes so far (always 0 on the heap kind) —
+    /// instrumentation for the resize-hysteresis regression test.
+    pub fn resizes(&self) -> u64 {
+        match &self.imp {
+            Imp::Calendar(c) => c.resizes,
+            Imp::Heap(_) => 0,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    const BOTH: [QueueKind; 2] = [QueueKind::Calendar, QueueKind::Heap];
+    const KINDS: [QueueKind; 3] =
+        [QueueKind::Calendar, QueueKind::CalendarSpan, QueueKind::Heap];
 
     #[test]
     fn pops_in_time_order() {
-        for kind in BOTH {
+        for kind in KINDS {
             let mut q = EventQueue::with_kind(kind);
             q.push(30, Event::SchedTick);
             q.push(10, Event::JobSubmit(1));
@@ -321,7 +416,7 @@ mod tests {
 
     #[test]
     fn fifo_among_simultaneous() {
-        for kind in BOTH {
+        for kind in KINDS {
             let mut q = EventQueue::with_kind(kind);
             q.push(5, Event::JobSubmit(1));
             q.push(5, Event::JobSubmit(2));
@@ -329,6 +424,13 @@ mod tests {
             assert_eq!(q.pop(), Some((5, Event::JobSubmit(1))), "{kind:?}");
             assert_eq!(q.pop(), Some((5, Event::JobSubmit(2))), "{kind:?}");
             assert_eq!(q.pop(), Some((5, Event::SchedTick)), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn kind_roundtrips() {
+        for kind in KINDS {
+            assert_eq!(EventQueue::with_kind(kind).kind(), kind);
         }
     }
 
@@ -343,7 +445,7 @@ mod tests {
             Event::NodeFail(2),
             Event::NodeRecover(2),
         ];
-        for kind in BOTH {
+        for kind in KINDS {
             let mut q = EventQueue::with_kind(kind);
             for (i, e) in events.iter().enumerate() {
                 q.push(i as Time, *e);
@@ -356,7 +458,7 @@ mod tests {
 
     #[test]
     fn peek_time_matches_next_pop() {
-        for kind in BOTH {
+        for kind in KINDS {
             let mut q = EventQueue::with_kind(kind);
             assert_eq!(q.peek_time(), None, "{kind:?}");
             q.push(42, Event::SchedTick);
@@ -371,27 +473,29 @@ mod tests {
     fn calendar_survives_resize_and_sparse_times() {
         // Push enough events to force several grow cycles, over a time
         // span wide enough to wrap the wheel many times, then drain and
-        // check total (time, push-order) sorting.
-        let mut q = EventQueue::with_kind(QueueKind::Calendar);
-        let mut expect: Vec<(Time, u64)> = Vec::new();
-        let mut x = 0x1234_5678_9abc_def0u64;
-        for i in 0..5_000u64 {
-            // xorshift: deterministic scatter across ~10^8 ms.
-            x ^= x << 13;
-            x ^= x >> 7;
-            x ^= x << 17;
-            let t = x % 100_000_000;
-            q.push(t, Event::ContainerAdvance((i % 1000) as u32));
-            expect.push((t, i));
-        }
-        expect.sort_unstable();
-        let mut got = Vec::new();
-        while let Some((t, _)) = q.pop() {
-            got.push(t);
-        }
-        assert_eq!(got.len(), expect.len());
-        for (g, (e, _)) in got.iter().zip(&expect) {
-            assert_eq!(g, e);
+        // check total (time, push-order) sorting — under both width rules.
+        for kind in [QueueKind::Calendar, QueueKind::CalendarSpan] {
+            let mut q = EventQueue::with_kind(kind);
+            let mut expect: Vec<(Time, u64)> = Vec::new();
+            let mut x = 0x1234_5678_9abc_def0u64;
+            for i in 0..5_000u64 {
+                // xorshift: deterministic scatter across ~10^8 ms.
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                let t = x % 100_000_000;
+                q.push(t, Event::ContainerAdvance((i % 1000) as u32));
+                expect.push((t, i));
+            }
+            expect.sort_unstable();
+            let mut got = Vec::new();
+            while let Some((t, _)) = q.pop() {
+                got.push(t);
+            }
+            assert_eq!(got.len(), expect.len(), "{kind:?}");
+            for (g, (e, _)) in got.iter().zip(&expect) {
+                assert_eq!(g, e, "{kind:?}");
+            }
         }
     }
 
@@ -399,19 +503,21 @@ mod tests {
     fn calendar_handles_push_into_the_past() {
         // Generic callers may push a time below the last popped one; the
         // cursor must rewind rather than skip the event.
-        let mut q = EventQueue::with_kind(QueueKind::Calendar);
-        q.push(1_000_000, Event::SchedTick);
-        assert_eq!(q.pop(), Some((1_000_000, Event::SchedTick)));
-        q.push(3, Event::JobSubmit(1));
-        q.push(2_000_000, Event::SchedTick);
-        assert_eq!(q.pop(), Some((3, Event::JobSubmit(1))));
-        assert_eq!(q.pop(), Some((2_000_000, Event::SchedTick)));
-        assert!(q.is_empty());
+        for kind in [QueueKind::Calendar, QueueKind::CalendarSpan] {
+            let mut q = EventQueue::with_kind(kind);
+            q.push(1_000_000, Event::SchedTick);
+            assert_eq!(q.pop(), Some((1_000_000, Event::SchedTick)), "{kind:?}");
+            q.push(3, Event::JobSubmit(1));
+            q.push(2_000_000, Event::SchedTick);
+            assert_eq!(q.pop(), Some((3, Event::JobSubmit(1))), "{kind:?}");
+            assert_eq!(q.pop(), Some((2_000_000, Event::SchedTick)), "{kind:?}");
+            assert!(q.is_empty(), "{kind:?}");
+        }
     }
 
     #[test]
     fn same_time_reinsertion_keeps_fifo_order() {
-        for kind in BOTH {
+        for kind in KINDS {
             let mut q = EventQueue::with_kind(kind);
             q.push(9, Event::JobSubmit(1));
             assert_eq!(q.pop(), Some((9, Event::JobSubmit(1))), "{kind:?}");
@@ -422,5 +528,79 @@ mod tests {
             assert_eq!(q.pop(), Some((9, Event::JobSubmit(2))), "{kind:?}");
             assert_eq!(q.pop(), Some((9, Event::JobSubmit(3))), "{kind:?}");
         }
+    }
+
+    #[test]
+    fn calendar_resize_hysteresis_no_thrash() {
+        // Ping-pong the length across the grow boundary (INIT_BUCKETS=16,
+        // grow when len > 64) and then across the shrink boundary: each
+        // crossing may trigger at most one resize, never an oscillation.
+        for kind in [QueueKind::Calendar, QueueKind::CalendarSpan] {
+            let mut q = EventQueue::with_kind(kind);
+            let mut t: Time = 0;
+            for _ in 0..65 {
+                t += 10;
+                q.push(t, Event::SchedTick);
+            }
+            let after_grow = q.resizes();
+            assert_eq!(after_grow, 1, "{kind:?}: one grow at >4x occupancy");
+            // Oscillate ±1 around the grow boundary (len 64 <-> 65).
+            for _ in 0..200 {
+                q.pop();
+                t += 10;
+                q.push(t, Event::SchedTick);
+            }
+            assert_eq!(
+                q.resizes(),
+                after_grow,
+                "{kind:?}: ping-pong at the grow boundary must not resize"
+            );
+            // Drain toward the shrink boundary (32 buckets: shrink only
+            // once len*8 < 32, i.e. len <= 3) ...
+            while q.len() > 3 {
+                q.pop();
+            }
+            let after_shrink = q.resizes();
+            assert!(
+                after_shrink <= after_grow + 1,
+                "{kind:?}: at most one shrink crossing the boundary"
+            );
+            // ... and oscillate ±1 there too (len 3 <-> 4).
+            for _ in 0..200 {
+                t += 10;
+                q.push(t, Event::SchedTick);
+                q.pop();
+            }
+            assert_eq!(
+                q.resizes(),
+                after_shrink,
+                "{kind:?}: ping-pong at the shrink boundary must not resize"
+            );
+        }
+    }
+
+    #[test]
+    fn arena_reuses_slots_under_churn() {
+        // Steady-state push/pop churn must recycle arena slots instead of
+        // growing the payload store without bound.
+        let mut q = EventQueue::with_kind(QueueKind::Calendar);
+        let mut t: Time = 0;
+        for _ in 0..32 {
+            t += 7;
+            q.push(t, Event::SchedTick);
+        }
+        for _ in 0..10_000 {
+            q.pop();
+            t += 7;
+            q.push(t, Event::TaskFinish(1));
+        }
+        let arena_slots = match &q.imp {
+            Imp::Calendar(c) => c.arena.capacity(),
+            Imp::Heap(_) => unreachable!(),
+        };
+        assert!(
+            arena_slots <= 33,
+            "arena grew to {arena_slots} slots for 32 live events"
+        );
     }
 }

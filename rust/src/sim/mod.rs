@@ -10,6 +10,7 @@ pub mod trace;
 
 pub use engine::{run_experiment, run_experiment_with, Engine, EngineOptions, RunResult};
 pub use event::{Event, EventQueue, QueueKind};
+pub use crate::jobs::JobLayout;
 pub use fault::{FaultPlan, Outage, OutageRecord, StochasticFaults};
 pub use metric::{MetricSink, MetricSinkKind};
 pub use sink::{SinkKind, TraceSink};

@@ -8,6 +8,7 @@ pub mod idmap;
 pub mod json;
 pub mod propcheck;
 pub mod rng;
+pub mod slab;
 pub mod stats;
 
 /// Simulation time in milliseconds.

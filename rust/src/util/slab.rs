@@ -1,0 +1,108 @@
+//! Generic slab arena: dense `Vec<T>` storage behind stable `u32` handles
+//! with free-list reuse.
+//!
+//! The calendar queue keeps its fat `Event` payloads here so bucket inserts
+//! and resizes move 24-byte `(time, seq, handle)` keys instead of the full
+//! entry (see docs/PERFORMANCE.md §"Memory layout & batching").  The slab is
+//! deliberately minimal — `alloc` hands out the most recently freed slot
+//! (LIFO reuse keeps hot slots cache-resident), `take` reads a slot and
+//! frees it in one step.  There is no occupancy tagging: callers own the
+//! discipline that a handle is taken at most once per alloc.  Debug builds
+//! check double-frees; `tests/properties.rs` model-checks random
+//! alloc/take interleavings against a reference map.
+
+#[derive(Debug)]
+pub struct Slab<T> {
+    slots: Vec<T>,
+    free: Vec<u32>,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab { slots: Vec::new(), free: Vec::new() }
+    }
+
+    /// Store `v`, reusing the most recently freed slot if any.
+    pub fn alloc(&mut self, v: T) -> u32 {
+        match self.free.pop() {
+            Some(h) => {
+                self.slots[h as usize] = v;
+                h
+            }
+            None => {
+                let h = self.slots.len();
+                assert!(h < u32::MAX as usize, "slab handle space exhausted");
+                self.slots.push(v);
+                h as u32
+            }
+        }
+    }
+
+    /// Live (allocated, not yet taken) entry count.
+    pub fn live(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// High-water slot count — total slots ever allocated (live + free).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+impl<T: Copy> Slab<T> {
+    /// Read the value at `h` and free the slot for reuse.
+    pub fn take(&mut self, h: u32) -> T {
+        debug_assert!(
+            !self.free.contains(&h),
+            "double free of slab handle {h}"
+        );
+        let v = self.slots[h as usize];
+        self.free.push(h);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_take_roundtrip() {
+        let mut s = Slab::new();
+        let a = s.alloc(10u64);
+        let b = s.alloc(20);
+        assert_eq!(s.live(), 2);
+        assert_eq!(s.take(a), 10);
+        assert_eq!(s.live(), 1);
+        // LIFO reuse: the freed slot is handed back first.
+        let c = s.alloc(30);
+        assert_eq!(c, a);
+        assert_eq!(s.take(b), 20);
+        assert_eq!(s.take(c), 30);
+        assert_eq!(s.live(), 0);
+        assert_eq!(s.capacity(), 2);
+    }
+
+    #[test]
+    fn capacity_tracks_high_water_not_live() {
+        let mut s = Slab::new();
+        let hs: Vec<u32> = (0..8u64).map(|i| s.alloc(i)).collect();
+        for &h in &hs {
+            s.take(h);
+        }
+        assert_eq!(s.live(), 0);
+        assert_eq!(s.capacity(), 8);
+        // Churn within the freed pool never grows the slot vector.
+        for i in 0..100u64 {
+            let h = s.alloc(i);
+            assert_eq!(s.take(h), i);
+        }
+        assert_eq!(s.capacity(), 8);
+    }
+}

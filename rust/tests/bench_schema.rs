@@ -41,6 +41,11 @@ fn bench_engine_json_parses_and_has_required_sections() {
         for key in [
             "jobs",
             "scheduler",
+            // Cluster size the row ran on (1M rows use a larger cluster to
+            // stay under the livelock guard) and the process RSS high-water
+            // mark, so memory trajectories travel with the throughput ones.
+            "nodes",
+            "peak_rss_bytes",
             "events",
             "wall_ms",
             "events_per_sec",
@@ -56,15 +61,27 @@ fn bench_engine_json_parses_and_has_required_sections() {
         ] {
             assert!(row.get(key).is_some(), "run row missing `{key}`: {row:?}");
         }
-        // Whether pending or measured, the bounded-memory invariant is a
-        // constant of the counting preset, so the checked-in value can be
+        // Whether pending or measured, the bounded-memory invariants are
+        // constants of the counting preset, so the checked-in values can be
         // pinned unconditionally.
         assert_eq!(
             row.get("retained_util_samples").and_then(|v| v.as_f64()),
             Some(0.0),
             "counting-preset bench must retain zero per-tick samples: {row:?}"
         );
+        assert_eq!(
+            row.get("retained_transitions").and_then(|v| v.as_f64()),
+            Some(0.0),
+            "counting-preset bench must retain zero transitions: {row:?}"
+        );
     }
+    // The default matrix reaches 100k jobs (1M rides behind
+    // DRESS_BENCH_FULL=1 and is optional in the checked-in file).
+    let sizes: Vec<f64> = runs.iter().filter_map(|r| r.get("jobs").and_then(|v| v.as_f64())).collect();
+    assert!(
+        sizes.contains(&100_000.0),
+        "runs must include the 100k-job rows (got sizes {sizes:?})"
+    );
 
     // The sweep section added with the parallel executor, extended by the
     // shard/statistics layer: every worker row carries the wall-time

@@ -415,6 +415,141 @@ fn inert_fault_plans_are_bit_identical_for_all_schedulers() {
 }
 
 #[test]
+fn soa_layout_reproduces_aos_reference_all_schedulers() {
+    // The SoA job store (perf iter 6) against the original JobRt records,
+    // with and without coin-flip failure injection: layout is invisible to
+    // the simulation, so every golden must be bit-identical.
+    use dress::sim::JobLayout;
+    let aos = EngineOptions { jobs: JobLayout::Aos, ..Default::default() };
+    let specs = generate(24, WorkloadMix::Mixed, 0.3, 2_000, 42);
+    for kind in KINDS {
+        let soa = run_opts(kind, specs.clone(), EngineOptions::default(), 0.0);
+        let aref = run_opts(kind, specs.clone(), aos, 0.0);
+        assert_eq!(soa, aref, "{kind:?}: SoA layout diverged from AoS reference");
+    }
+    let specs = generate(12, WorkloadMix::Mixed, 0.4, 1_500, 7);
+    for kind in KINDS {
+        let soa = run_opts(kind, specs.clone(), EngineOptions::default(), 0.2);
+        let aref = run_opts(kind, specs.clone(), aos, 0.2);
+        assert_eq!(soa, aref, "{kind:?}: SoA divergence under failures");
+        assert!(soa.failures > 0, "{kind:?}: failure injection inert");
+    }
+}
+
+#[test]
+fn soa_layout_reproduces_aos_reference_under_fault_plan() {
+    // Node outages exercise requeue/lost-work accounting, which the store
+    // now owns; the layouts must agree on a crashing cluster too.
+    use dress::sim::{FaultPlan, JobLayout};
+    let specs = generate(16, WorkloadMix::Mixed, 0.3, 1_500, 11);
+    for kind in KINDS {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sched.kind = kind;
+        cfg.faults = FaultPlan::empty().with_outage(30_000, 0, 45_000);
+        let soa = run_experiment_with(&cfg, specs.clone(), EngineOptions::default());
+        let aref = run_experiment_with(
+            &cfg,
+            specs.clone(),
+            EngineOptions { jobs: JobLayout::Aos, ..Default::default() },
+        );
+        assert!(soa.lost_attempts > 0, "{kind:?}: outage killed nothing");
+        assert_eq!(
+            Golden::of(&soa),
+            Golden::of(&aref),
+            "{kind:?}: SoA divergence under node outage"
+        );
+        assert_eq!(soa.lost_work_ms, aref.lost_work_ms, "{kind:?}: lost-work drift");
+        assert_eq!(soa.trace.tasks, aref.trace.tasks, "{kind:?}: trace drift");
+    }
+}
+
+#[test]
+fn gap_sampled_widths_reproduce_span_rule_all_schedulers() {
+    // Bucket width only affects *where* entries sit, never pop order: the
+    // gap-sampled default and the span/len reference rule must produce
+    // bit-identical experiments, with and without failure injection.
+    let span = EngineOptions { queue: QueueKind::CalendarSpan, ..Default::default() };
+    let specs = generate(24, WorkloadMix::Mixed, 0.3, 2_000, 42);
+    for kind in KINDS {
+        let gap = run_opts(kind, specs.clone(), EngineOptions::default(), 0.0);
+        let sref = run_opts(kind, specs.clone(), span, 0.0);
+        assert_eq!(gap, sref, "{kind:?}: gap-sampled widths diverged from span rule");
+    }
+    let specs = generate(12, WorkloadMix::Mixed, 0.4, 1_500, 7);
+    for kind in [SchedKind::Capacity, SchedKind::Dress] {
+        let gap = run_opts(kind, specs.clone(), EngineOptions::default(), 0.2);
+        let sref = run_opts(kind, specs.clone(), span, 0.2);
+        assert_eq!(gap, sref, "{kind:?}: width-rule divergence under failures");
+    }
+}
+
+/// Run Dress with an explicitly constructed scheduler so the
+/// `naive_estimator_tick` reference flag can be set.
+fn run_dress_estimator(specs: Vec<dress::jobs::JobSpec>, naive_tick: bool, failures: f64) -> Golden {
+    use dress::sched::DressScheduler;
+    use dress::sim::Engine;
+    let mut cfg = ExperimentConfig::default();
+    cfg.sched.kind = SchedKind::Dress;
+    cfg.cluster.task_failure_prob = failures;
+    let mut sched = DressScheduler::new(&cfg.sched, cfg.cluster.total_containers());
+    sched.naive_estimator_tick = naive_tick;
+    Golden::of(&Engine::with_options(cfg, specs, Box::new(sched), EngineOptions::default()).run())
+}
+
+#[test]
+fn batched_estimator_tick_reproduces_naive_reference() {
+    // The dirty-set estimator tick skips exactly the jobs whose tick is a
+    // no-op, so δ history — the most estimator-sensitive golden component —
+    // must stay bit-identical to ticking every estimator each heartbeat.
+    let specs = generate(24, WorkloadMix::Mixed, 0.3, 2_000, 42);
+    let batched = run_dress_estimator(specs.clone(), false, 0.0);
+    let naive = run_dress_estimator(specs, true, 0.0);
+    assert_eq!(batched, naive, "batched estimator tick diverged");
+    assert!(!batched.delta_history.is_empty(), "δ history empty; test proves nothing");
+
+    let specs = generate(12, WorkloadMix::Mixed, 0.4, 1_500, 7);
+    let batched = run_dress_estimator(specs.clone(), false, 0.2);
+    let naive = run_dress_estimator(specs, true, 0.2);
+    assert_eq!(batched, naive, "batched estimator divergence under failures");
+}
+
+#[test]
+fn modern_hot_path_reproduces_full_reference_stack() {
+    // Everything at once: the shipped configuration (SoA store, gap-sampled
+    // calendar queue, indexed views, batched estimator) against a run with
+    // *every* reference path enabled — AoS records, span-rule widths, naive
+    // per-tick view rebuilds — on a congested burst and under a fault plan.
+    use dress::sim::{FaultPlan, JobLayout};
+    let reference = EngineOptions {
+        naive_hot_path: true,
+        queue: QueueKind::CalendarSpan,
+        jobs: JobLayout::Aos,
+        ..Default::default()
+    };
+    let specs = congested_burst(200, 100, 0xFEED);
+    for kind in KINDS {
+        let modern = run_opts(kind, specs.clone(), EngineOptions::default(), 0.0);
+        let refr = run_opts(kind, specs.clone(), reference, 0.0);
+        assert_eq!(modern, refr, "{kind:?}: modern stack diverged from full reference");
+    }
+    let specs = generate(16, WorkloadMix::Mixed, 0.3, 1_500, 11);
+    for kind in [SchedKind::Capacity, SchedKind::Dress] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sched.kind = kind;
+        cfg.cluster.task_failure_prob = 0.1;
+        cfg.faults = FaultPlan::empty().with_outage(30_000, 0, 45_000);
+        let modern = run_experiment_with(&cfg, specs.clone(), EngineOptions::default());
+        let refr = run_experiment_with(&cfg, specs.clone(), reference);
+        assert_eq!(
+            Golden::of(&modern),
+            Golden::of(&refr),
+            "{kind:?}: modern stack divergence under faults"
+        );
+        assert_eq!(modern.trace.tasks, refr.trace.tasks, "{kind:?}: trace drift");
+    }
+}
+
+#[test]
 fn cross_seed_runs_differ() {
     // Sanity that the fingerprint is actually sensitive: different seeds
     // must yield different goldens (else the equality tests prove nothing).

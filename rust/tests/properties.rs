@@ -267,23 +267,179 @@ fn run_queue_script(kind: QueueKind, script: &[QueueOp]) -> Vec<Option<(u64, Eve
 
 #[test]
 fn calendar_queue_matches_binary_heap_reference_model() {
+    // Both calendar width rules (gap-sampled default and the span/len
+    // reference) must drain identically to the heap model.
     forall(
         "calendar == heap on random interleaved push/pop",
         60,
         gen_queue_script,
         |script| {
-            let cal = run_queue_script(QueueKind::Calendar, script);
             let heap = run_queue_script(QueueKind::Heap, script);
-            if cal != heap {
-                let first = cal
-                    .iter()
-                    .zip(&heap)
-                    .position(|(a, b)| a != b)
-                    .unwrap_or(usize::MAX);
+            for kind in [QueueKind::Calendar, QueueKind::CalendarSpan] {
+                let cal = run_queue_script(kind, script);
+                if cal != heap {
+                    let first = cal
+                        .iter()
+                        .zip(&heap)
+                        .position(|(a, b)| a != b)
+                        .unwrap_or(usize::MAX);
+                    return Err(format!(
+                        "{kind:?} pop sequences diverge at pop #{first}: {:?} vs heap {:?}",
+                        cal.get(first),
+                        heap.get(first)
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One random op for the slab model: alloc a payload, or take a live
+/// handle (chosen by the embedded index seed so the script is
+/// deterministic once generated).
+#[derive(Debug, Clone, Copy)]
+enum SlabOp {
+    Alloc(u64),
+    Take(u64),
+}
+
+#[test]
+fn slab_arena_matches_map_reference_model() {
+    use dress::util::slab::Slab;
+    use std::collections::HashMap;
+
+    forall(
+        "slab == handle map on random alloc/take",
+        60,
+        |rng| {
+            let len = 50 + (rng.next_u64() % 400) as usize;
+            (0..len)
+                .map(|_| {
+                    if rng.chance(0.55) {
+                        SlabOp::Alloc(rng.next_u64())
+                    } else {
+                        SlabOp::Take(rng.next_u64())
+                    }
+                })
+                .collect::<Vec<SlabOp>>()
+        },
+        |script| {
+            let mut slab: Slab<u64> = Slab::new();
+            let mut live: Vec<u32> = Vec::new(); // insertion-ordered handles
+            let mut model: HashMap<u32, u64> = HashMap::new();
+            let mut peak_live = 0usize;
+            for op in script {
+                match *op {
+                    SlabOp::Alloc(v) => {
+                        let h = slab.alloc(v);
+                        if model.insert(h, v).is_some() {
+                            return Err(format!("handle {h} double-allocated while live"));
+                        }
+                        live.push(h);
+                        peak_live = peak_live.max(live.len());
+                    }
+                    SlabOp::Take(seed) => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let h = live.swap_remove((seed % live.len() as u64) as usize);
+                        let want = model.remove(&h).expect("model tracks every live handle");
+                        let got = slab.take(h);
+                        if got != want {
+                            return Err(format!("handle {h}: payload {got} != {want}"));
+                        }
+                    }
+                }
+                if slab.live() != model.len() {
+                    return Err(format!("live {} != model {}", slab.live(), model.len()));
+                }
+            }
+            // Freed slots must be reused: the backing store never grows past
+            // the peak number of simultaneously live payloads.
+            if slab.capacity() > peak_live {
                 return Err(format!(
-                    "pop sequences diverge at pop #{first}: calendar {:?} vs heap {:?}",
-                    cal.get(first),
-                    heap.get(first)
+                    "capacity {} exceeds peak live {peak_live} (free list not reused)",
+                    slab.capacity()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batched_estimator_tick_matches_naive_reference() {
+    use dress::cluster::{ContainerState, Transition};
+    use dress::estimator::{EstimatorBank, EstimatorParams};
+
+    // Random plausible observation streams (each task Running then
+    // Completed, times interleaved across jobs) fed to two banks; one
+    // ticks only its dirty set, the other ticks every estimator.  All
+    // detection state and both release curves must stay bit-identical.
+    forall(
+        "batched tick == tick_all on random streams",
+        40,
+        |rng| {
+            let jobs = 1 + rng.index(6) as u32;
+            let mut stream: Vec<Transition> = Vec::new();
+            for job in 1..=jobs {
+                let tasks = 1 + rng.index(5);
+                for task in 0..tasks {
+                    let start = rng.next_u64() % 20_000;
+                    let dur = 500 + rng.next_u64() % 40_000;
+                    let c = (job * 8 + task as u32) % 64;
+                    stream.push(Transition {
+                        time: start,
+                        container: c,
+                        job,
+                        task,
+                        to: ContainerState::Running,
+                    });
+                    stream.push(Transition {
+                        time: start + dur,
+                        container: c,
+                        job,
+                        task,
+                        to: ContainerState::Completed,
+                    });
+                }
+            }
+            stream.sort_by_key(|t| t.time);
+            let hb = 200 + rng.next_u64() % 2_000;
+            (stream, jobs, hb)
+        },
+        |(stream, jobs, hb)| {
+            let mut batched = EstimatorBank::new(EstimatorParams::default());
+            let mut naive = EstimatorBank::new(EstimatorParams::default());
+            let horizon = stream.last().map_or(0, |t| t.time) + 30_000;
+            let mut fed = 0;
+            let mut now = *hb;
+            while now < horizon {
+                let upto = stream[fed..].iter().take_while(|t| t.time < now).count();
+                batched.ingest(&stream[fed..fed + upto]);
+                naive.ingest(&stream[fed..fed + upto]);
+                fed += upto;
+                batched.tick(now);
+                naive.tick_all(now);
+                let (b1, b2) = batched.predicted_release_pair(now, now + hb);
+                let (n1, n2) = naive.predicted_release_pair(now, now + hb);
+                if b1.to_bits() != n1.to_bits() || b2.to_bits() != n2.to_bits() {
+                    return Err(format!("release pair drift at now={now}: ({b1}, {b2}) vs ({n1}, {n2})"));
+                }
+                now += hb;
+            }
+            for id in 1..=*jobs {
+                let b = format!("{:?}", batched.job(id));
+                let n = format!("{:?}", naive.job(id));
+                if b != n {
+                    return Err(format!("estimator state drift for job {id}: {b} vs {n}"));
+                }
+            }
+            if batched.active_jobs() != 0 {
+                return Err(format!(
+                    "{} jobs stuck in the dirty set after all work drained",
+                    batched.active_jobs()
                 ));
             }
             Ok(())
