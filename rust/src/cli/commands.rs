@@ -18,17 +18,18 @@ USAGE:
               [--small-frac F] [--seed S] [--csv out-prefix]
               [--metric-sink full|counting|ring:N|decimate:K]
               [--fault-plan SPEC] [--trace in.trace] [--export-trace out.trace]
+              [--tune-delta]
   dress compare [--jobs N] [--platform mapreduce|spark|mixed] [--seed S]
   dress repro <fig1|fig2|fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table2|all>
               [--seed S]
   dress trace <wordcount|pagerank-mr|pagerank-spark> [--seed S]
   dress live  [--jobs N] [--workers W] [--sched dress|capacity] [--seed S]
-              [--simulate-deaths K]
+              [--simulate-deaths K] [--admission] [--commit-timeout-ms T]
   dress sweep [--seeds K] [--seed S] [--jobs W | --workers W] [--njobs N]
               [--platform mapreduce|spark|mixed|burst] [--small-frac F]
               [--metric-sink full|counting|ring:N|decimate:K]
-              [--fault-plan SPEC] [--paper] [--shard i/N] [--out shard.json]
-              [--report report.txt] [--csv out-prefix]
+              [--fault-plan SPEC] [--tune-delta] [--paper] [--shard i/N]
+              [--out shard.json] [--report report.txt] [--csv out-prefix]
   dress sweep-merge <shard.json...> [--partial] [--report report.txt]
               [--csv out-prefix]
   dress bench
@@ -56,6 +57,14 @@ segments joined by `;` — `T:N:D` crashes node N at T ms for D ms,
 `mtbf=U,mttr=R,until=H` adds a seeded stochastic crash/recovery process
 (isolated RNG stream: `none`/empty leaves every run bit-identical).
 The plan is part of the sweep-grid fingerprint.
+
+--tune-delta turns on the online shadow δ auto-tuner (DRESS only — see
+docs/ADMISSION.md): the scheduler replays its recent submit/complete
+window against candidate δ values every few heartbeats and adopts the
+winner, clamped to the reserve band.  Deterministic given the seed, and
+part of the sweep-grid fingerprint.  `dress live --admission` fronts
+arriving jobs with the probe → reserve (commit timeout) → commit
+lifecycle; --commit-timeout-ms sets the reservation expiry.
 ";
 
 /// Entry point used by `main.rs`; returns a process exit code.
@@ -145,6 +154,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if let Some(sink) = args.flag("metric-sink") {
         opts.metrics = crate::sim::MetricSinkKind::parse(sink)?;
     }
+    opts.tune_delta = args.switch("tune-delta");
     let res = crate::sim::run_experiment_with(&cfg, specs, opts);
     let header = ["Job", "Demand", "Waiting (s)", "Completion (s)"];
     let rows: Vec<Vec<String>> = res
@@ -429,9 +439,15 @@ fn cmd_live(args: &Args) -> Result<(), String> {
     }
 
     let deaths = args.flag_u64("simulate-deaths", 0)? as u32;
+    let admission = if args.switch("admission") {
+        crate::live::AdmissionConfig::enabled(args.flag_u64("commit-timeout-ms", 10_000)?)
+    } else {
+        crate::live::AdmissionConfig::default()
+    };
     let cfg = crate::live::LiveConfig {
         workers,
         simulate_worker_deaths: deaths,
+        admission,
         ..Default::default()
     };
     let sched_cfg = crate::config::SchedConfig { kind, ..Default::default() };
@@ -449,6 +465,12 @@ fn cmd_live(args: &Args) -> Result<(), String> {
         println!(
             "resilience: {} requeued attempt(s), {} unfinished job(s) {:?}",
             report.requeues, report.unfinished.len(), report.unfinished
+        );
+    }
+    if report.admission_probes > 0 {
+        println!(
+            "admission: {} probe(s), {} container(s) of reserved capacity expired back",
+            report.admission_probes, report.admission_expired_capacity
         );
     }
     for j in &report.jobs {
@@ -524,6 +546,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     if let Some(spec) = args.flag("fault-plan") {
         grid.base.faults = crate::sim::FaultPlan::parse(spec)?;
         grid.base.validate()?;
+    }
+    // And the shadow tuner: tuned and untuned sweeps are different
+    // experiments (EngineOptions is part of the fingerprint).
+    if args.switch("tune-delta") {
+        grid.opts.tune_delta = true;
     }
     let meta = SweepMeta::of(&grid, mode);
 
@@ -726,6 +753,27 @@ mod tests {
             run_cli(&args(&format!("{base} --shard 1/2 --out {b} --metric-sink full"))),
             0
         );
+        assert_eq!(run_cli(&args(&format!("sweep-merge {a} {b}"))), 1);
+    }
+
+    #[test]
+    fn run_accepts_tune_delta_flag() {
+        assert_eq!(run_cli(&args("run --jobs 4 --sched dress --seed 3 --tune-delta")), 0);
+        // Harmless on schedulers with no δ to tune.
+        assert_eq!(run_cli(&args("run --jobs 4 --sched fifo --seed 3 --tune-delta")), 0);
+    }
+
+    #[test]
+    fn sweep_tune_delta_is_part_of_the_fingerprint() {
+        // A tuned shard and an untuned shard describe different
+        // experiments and must refuse to merge.
+        let (a, b) = (tmp("tune-a.json"), tmp("tune-b.json"));
+        let base = "sweep --seeds 2 --njobs 3";
+        assert_eq!(
+            run_cli(&args(&format!("{base} --shard 0/2 --out {a} --tune-delta"))),
+            0
+        );
+        assert_eq!(run_cli(&args(&format!("{base} --shard 1/2 --out {b}"))), 0);
         assert_eq!(run_cli(&args(&format!("sweep-merge {a} {b}"))), 1);
     }
 

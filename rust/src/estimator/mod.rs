@@ -45,7 +45,7 @@ impl Default for EstimatorParams {
 /// hot path is an array index instead of a `BTreeMap` walk.  Iteration
 /// order stays ascending-by-id, keeping float accumulation in
 /// [`Self::predicted_release_pair`] bit-identical to the tree it replaced.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct EstimatorBank {
     params: EstimatorParams,
     jobs: IdMap<JobEstimator>,

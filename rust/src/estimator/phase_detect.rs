@@ -51,7 +51,7 @@ impl PhaseObs {
 }
 
 /// Per-job online estimator (Algorithms 1 + 2 fused over one event stream).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct JobEstimator {
     pub job: JobId,
     pub cat: u8,

@@ -53,7 +53,7 @@ pub struct TaskFinish {
 const NO_TIME: Time = Time::MAX;
 
 /// Engine-facing job-state store; see the module docs for the layouts.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub enum JobStore {
     Aos(AosStore),
     Soa(SoaStore),
@@ -312,7 +312,7 @@ impl JobStore {
 
 /// Array-of-structs reference layout: one [`JobRt`] per slot plus the
 /// remaining-task counters the indexed engine always kept.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct AosStore {
     jobs: Vec<JobRt>,
     remaining: Vec<u32>,
@@ -327,7 +327,7 @@ impl AosStore {
 
 /// Struct-of-arrays hot layout; all vectors are slot-parallel except the
 /// flat task lanes, which are addressed through `task_off`/`phase_off`.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct SoaStore {
     // Hot per-job lanes (slot-parallel).
     demand: Vec<u32>,

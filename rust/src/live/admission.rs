@@ -1,0 +1,387 @@
+//! Admission front: the probe → reserve → commit lifecycle
+//! (docs/ADMISSION.md).
+//!
+//! Production multi-user platforms do not drop arriving work straight
+//! into the scheduler queue; they *admit* it.  [`AdmissionCtl`] models
+//! the three-level lifecycle on top of the shadow layer:
+//!
+//! 1. [`AdmissionCtl::probe`] — a read-only what-if: shadow-replay the
+//!    arrival against a [`SchedSnapshot`] and report whether capacity is
+//!    available *right now*.  Takes `&self`; purity is structural and
+//!    property-tested (tests/properties.rs).
+//! 2. [`AdmissionCtl::reserve`] — hold capacity behind a ticket with a
+//!    commit timeout.  The expiry rides the same exact `(time, seq)`
+//!    event-queue discipline as the simulator — a *private*
+//!    [`EventQueue`] carrying [`Event::ReservationExpire`] — so expiry
+//!    order is deterministic and happens at exactly the timeout tick.
+//! 3. [`AdmissionCtl::commit`] — convert the held reservation into
+//!    admitted capacity (released back when the work retires).
+//!
+//! Accounting invariant, property-tested over random interleavings:
+//! `available() + reserved() + committed() == total()` at every step
+//! (with `available` saturating at 0 while an outage has `total` below
+//! the held capacity), and a reservation that reaches its timeout
+//! un-committed returns its capacity at exactly `expires_at`.
+//!
+//! The disabled path ([`AdmissionConfig::default`]) is inert by
+//! construction: `reserve` refuses, the private queue never sees a push,
+//! and no RNG exists anywhere in this module — mirroring the
+//! empty-fault-plan and `tune_delta`-off zero-overhead guarantees.
+
+use crate::sched::shadow::{self, SchedSnapshot, ShadowEvent, ShadowScore, ShadowWindow};
+use crate::sim::{Event, EventQueue, QueueKind};
+use crate::util::Time;
+
+/// Ticket handle returned by [`AdmissionCtl::reserve`].
+pub type TicketId = u32;
+
+/// Admission-front knobs.  The default is **disabled** — and the
+/// disabled front is inert: no reservations, no events, no allocations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionConfig {
+    /// Master switch; off means every `reserve` is refused and the
+    /// lifecycle collapses to the legacy submit-directly path.
+    pub enabled: bool,
+    /// How long a reservation holds capacity before expiring back.
+    pub commit_timeout_ms: Time,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { enabled: false, commit_timeout_ms: 10_000 }
+    }
+}
+
+impl AdmissionConfig {
+    /// An enabled front with the given commit timeout (clamped ≥ 1 ms so
+    /// an expiry can never collide with its own reserve tick).
+    pub fn enabled(commit_timeout_ms: Time) -> Self {
+        AdmissionConfig { enabled: true, commit_timeout_ms: commit_timeout_ms.max(1) }
+    }
+}
+
+/// Lifecycle state of one reservation ticket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TicketState {
+    /// Capacity held, commit timeout pending.
+    Reserved,
+    /// Committed before the timeout: capacity stays held until
+    /// [`AdmissionCtl::release`].
+    Committed,
+    /// The timeout fired first: capacity returned at `expires_at`.
+    Expired,
+    /// Committed capacity returned (the admitted work retired).
+    Released,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Ticket {
+    demand: u32,
+    state: TicketState,
+    expires_at: Time,
+}
+
+/// Outcome of a read-only probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeDecision {
+    /// Capacity is available to reserve right now.
+    Admit,
+    /// The front is holding too much; retry after a release/expiry.
+    Defer,
+}
+
+/// What a probe reports: the decision, the shadow what-if score for the
+/// hypothetical arrival, and the capacity the front could still reserve.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeReport {
+    pub decision: ProbeDecision,
+    pub score: ShadowScore,
+    pub available: u32,
+}
+
+/// The admission front.  Owns its own event queue (reservation expiries
+/// never enter the simulator's queue — the engine's arm for
+/// [`Event::ReservationExpire`] is inert by design) and all capacity
+/// accounting.
+#[derive(Debug)]
+pub struct AdmissionCtl {
+    cfg: AdmissionConfig,
+    /// Live capacity ceiling; tracks `ClusterView::total` under outages
+    /// via [`Self::set_total`].
+    total: u32,
+    /// Capacity held by un-expired, un-committed reservations.
+    reserved: u32,
+    /// Capacity held by committed (admitted, not yet released) tickets.
+    committed: u32,
+    /// Cumulative capacity returned through expiry (diagnostics).
+    expired_capacity: u64,
+    /// Expiry events ever scheduled — the inertness counter the golden
+    /// layer asserts stays 0 while the front is disabled.
+    expiries_scheduled: u64,
+    tickets: Vec<Ticket>,
+    /// Private `(time, seq)` queue of [`Event::ReservationExpire`].
+    queue: EventQueue,
+    /// Admission clock: the latest `now` any mutating call has seen.
+    now: Time,
+}
+
+impl AdmissionCtl {
+    pub fn new(cfg: AdmissionConfig, total: u32) -> Self {
+        AdmissionCtl {
+            cfg,
+            total,
+            reserved: 0,
+            committed: 0,
+            expired_capacity: 0,
+            expiries_scheduled: 0,
+            tickets: Vec::new(),
+            queue: EventQueue::with_kind(QueueKind::Calendar),
+            now: 0,
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    pub fn total(&self) -> u32 {
+        self.total
+    }
+
+    pub fn reserved(&self) -> u32 {
+        self.reserved
+    }
+
+    pub fn committed(&self) -> u32 {
+        self.committed
+    }
+
+    /// Capacity the front could still reserve.  Saturating: an outage
+    /// can pull `total` below what is already held, and the deficit must
+    /// read as 0 availability, not wrap.
+    pub fn available(&self) -> u32 {
+        self.total.saturating_sub(self.reserved + self.committed)
+    }
+
+    /// Cumulative capacity returned through expiries.
+    pub fn expired_capacity(&self) -> u64 {
+        self.expired_capacity
+    }
+
+    /// Expiry events ever pushed to the private queue (0 while disabled).
+    pub fn expiries_scheduled(&self) -> u64 {
+        self.expiries_scheduled
+    }
+
+    pub fn ticket_state(&self, id: TicketId) -> Option<TicketState> {
+        self.tickets.get(id as usize).map(|t| t.state)
+    }
+
+    pub fn ticket_expires_at(&self, id: TicketId) -> Option<Time> {
+        self.tickets.get(id as usize).map(|t| t.expires_at)
+    }
+
+    /// Track the live capacity ceiling (degraded during an outage,
+    /// restored on recovery).  Held reservations are *not* revoked — the
+    /// deficit surfaces as zero availability until expiries/releases
+    /// drain it, exactly like YARN riding out a node loss.
+    pub fn set_total(&mut self, total: u32) {
+        self.total = total;
+    }
+
+    /// Read-only what-if (level 1): would a `demand`-container arrival
+    /// be admitted now, and how would the cluster fare?  `&self` — no
+    /// ticket, no held capacity, no event, no RNG; N probes leave every
+    /// fingerprint bit untouched (tests/properties.rs).
+    pub fn probe(&self, snap: &SchedSnapshot, demand: u32) -> ProbeReport {
+        let mut window = ShadowWindow::new(1);
+        let next_id = snap.jobs.iter().map(|j| j.id).max().unwrap_or(0) + 1;
+        window.push(ShadowEvent::Submit { job: next_id, demand, at: snap.now });
+        let score = shadow::replay(snap, &window, snap.delta, shadow::REPLAY_TICKS);
+        let available = self.available();
+        let decision = if demand > 0 && demand <= available {
+            ProbeDecision::Admit
+        } else {
+            ProbeDecision::Defer
+        };
+        ProbeReport { decision, score, available }
+    }
+
+    /// Hold `demand` containers behind a commit timeout (level 2).
+    /// Returns `None` when the front is disabled, the demand is 0, or
+    /// not enough capacity is free to hold.
+    pub fn reserve(&mut self, now: Time, demand: u32) -> Option<TicketId> {
+        self.advance(now);
+        if !self.cfg.enabled || demand == 0 || demand > self.available() {
+            return None;
+        }
+        let id = self.tickets.len() as TicketId;
+        let expires_at = now + self.cfg.commit_timeout_ms;
+        self.tickets.push(Ticket { demand, state: TicketState::Reserved, expires_at });
+        self.reserved += demand;
+        self.queue.push(expires_at, Event::ReservationExpire(id));
+        self.expiries_scheduled += 1;
+        Some(id)
+    }
+
+    /// Convert a held reservation into admitted capacity (level 3).
+    /// Fails (`false`) if the ticket already expired — the timeout is
+    /// applied first, so a commit arriving at `expires_at` or later
+    /// always loses to the expiry.
+    pub fn commit(&mut self, now: Time, id: TicketId) -> bool {
+        self.advance(now);
+        let Some(t) = self.tickets.get_mut(id as usize) else { return false };
+        if t.state != TicketState::Reserved {
+            return false;
+        }
+        t.state = TicketState::Committed;
+        self.reserved -= t.demand;
+        self.committed += t.demand;
+        true
+    }
+
+    /// Return a committed ticket's capacity (the admitted work retired).
+    pub fn release(&mut self, now: Time, id: TicketId) -> bool {
+        self.advance(now);
+        let Some(t) = self.tickets.get_mut(id as usize) else { return false };
+        if t.state != TicketState::Committed {
+            return false;
+        }
+        t.state = TicketState::Released;
+        self.committed -= t.demand;
+        true
+    }
+
+    /// Apply every expiry due at or before `now`, in exact `(time, seq)`
+    /// order.  Expiry of an already-committed ticket is a stale event
+    /// (the queue cannot remove entries — same discipline as the
+    /// engine's dead-container events) and is ignored.
+    pub fn advance(&mut self, now: Time) {
+        self.now = self.now.max(now);
+        while self.queue.peek_time().is_some_and(|t| t <= now) {
+            let (_, ev) = self.queue.pop().expect("peeked");
+            let Event::ReservationExpire(id) = ev else {
+                unreachable!("admission queue carries only expiries");
+            };
+            let t = &mut self.tickets[id as usize];
+            if t.state == TicketState::Reserved {
+                t.state = TicketState::Expired;
+                self.reserved -= t.demand;
+                self.expired_capacity += t.demand as u64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::JobView;
+
+    fn snap(free: u32, total: u32) -> SchedSnapshot {
+        let jobs: Vec<JobView> = Vec::new();
+        SchedSnapshot::of_view(0, free, total, &jobs, 0.10, 0.10)
+    }
+
+    fn conserved(c: &AdmissionCtl) {
+        assert_eq!(
+            c.available() + c.reserved() + c.committed(),
+            c.total(),
+            "capacity accounting broke"
+        );
+    }
+
+    #[test]
+    fn default_front_is_disabled_and_inert() {
+        let mut c = AdmissionCtl::new(AdmissionConfig::default(), 8);
+        assert!(!c.config().enabled);
+        assert_eq!(c.reserve(0, 2), None, "disabled front must refuse");
+        assert_eq!(c.expiries_scheduled(), 0, "disabled front pushed an event");
+        // Probing the disabled front is still a pure read.
+        let before = format!("{c:?}");
+        let s = snap(8, 8);
+        for d in [1, 4, 9] {
+            c.probe(&s, d);
+        }
+        assert_eq!(format!("{c:?}"), before, "probe mutated the front");
+        conserved(&c);
+    }
+
+    #[test]
+    fn probe_admits_within_available_and_defers_beyond() {
+        let mut c = AdmissionCtl::new(AdmissionConfig::enabled(5_000), 8);
+        let s = snap(8, 8);
+        assert_eq!(c.probe(&s, 4).decision, ProbeDecision::Admit);
+        assert_eq!(c.probe(&s, 9).decision, ProbeDecision::Defer);
+        assert_eq!(c.probe(&s, 0).decision, ProbeDecision::Defer);
+        let t = c.reserve(0, 6).unwrap();
+        assert_eq!(c.probe(&s, 4).decision, ProbeDecision::Defer, "held capacity ignored");
+        assert_eq!(c.probe(&s, 2).decision, ProbeDecision::Admit);
+        assert!(c.commit(100, t));
+        conserved(&c);
+    }
+
+    #[test]
+    fn commit_before_timeout_holds_capacity_until_release() {
+        let mut c = AdmissionCtl::new(AdmissionConfig::enabled(5_000), 8);
+        let t = c.reserve(1_000, 3).unwrap();
+        assert_eq!(c.reserved(), 3);
+        conserved(&c);
+        assert!(c.commit(2_000, t));
+        assert_eq!((c.reserved(), c.committed()), (0, 3));
+        conserved(&c);
+        // The stale expiry event at 6 000 must not return committed capacity.
+        c.advance(10_000);
+        assert_eq!(c.committed(), 3);
+        assert_eq!(c.ticket_state(t), Some(TicketState::Committed));
+        conserved(&c);
+        assert!(c.release(11_000, t));
+        assert_eq!(c.available(), 8);
+        assert!(!c.release(11_000, t), "double release must fail");
+        conserved(&c);
+    }
+
+    #[test]
+    fn expiry_returns_capacity_at_exactly_the_timeout_tick() {
+        let mut c = AdmissionCtl::new(AdmissionConfig::enabled(5_000), 8);
+        let t = c.reserve(1_000, 3).unwrap();
+        assert_eq!(c.ticket_expires_at(t), Some(6_000));
+        c.advance(5_999);
+        assert_eq!(c.reserved(), 3, "expired one tick early");
+        c.advance(6_000);
+        assert_eq!(c.reserved(), 0, "capacity not back at the timeout tick");
+        assert_eq!(c.ticket_state(t), Some(TicketState::Expired));
+        assert_eq!(c.expired_capacity(), 3);
+        assert!(!c.commit(6_000, t), "commit at the timeout tick loses to expiry");
+        conserved(&c);
+    }
+
+    #[test]
+    fn degraded_capacity_saturates_availability() {
+        let mut c = AdmissionCtl::new(AdmissionConfig::enabled(5_000), 8);
+        let t = c.reserve(0, 6).unwrap();
+        c.set_total(4); // outage: total drops below held capacity
+        assert_eq!(c.available(), 0, "deficit must read as zero, not wrap");
+        assert_eq!(c.reserve(100, 1), None);
+        assert!(c.commit(200, t));
+        c.set_total(8); // recovery
+        assert_eq!(c.available(), 2);
+        conserved(&c);
+    }
+
+    #[test]
+    fn reserve_respects_live_capacity() {
+        let mut c = AdmissionCtl::new(AdmissionConfig::enabled(1_000), 4);
+        assert!(c.reserve(0, 5).is_none(), "over-capacity reserve accepted");
+        let a = c.reserve(0, 3).unwrap();
+        assert!(c.reserve(0, 2).is_none(), "second reserve overlaps the first");
+        let b = c.reserve(0, 1).unwrap();
+        assert_ne!(a, b);
+        conserved(&c);
+        // Both expire; everything comes back.
+        c.advance(1_000);
+        assert_eq!((c.reserved(), c.available()), (0, 4));
+        assert_eq!(c.expired_capacity(), 4);
+        conserved(&c);
+    }
+}

@@ -11,12 +11,19 @@
 //! iteration steps on a 64x64 operator), so congestion, waiting and phase
 //! barriers are all real.
 
+pub mod admission;
+
+pub use admission::{
+    AdmissionConfig, AdmissionCtl, ProbeDecision, ProbeReport, TicketId, TicketState,
+};
+
 use crate::bail;
 use crate::cluster::{ContainerState, Transition};
 use crate::config::SchedConfig;
 use crate::jobs::{JobId, JobSpec};
 use crate::metrics::JobMetrics;
 use crate::runtime::{Runtime, TaskWork};
+use crate::sched::shadow::SchedSnapshot;
 use crate::sched::{ClusterView, JobView, Scheduler};
 use crate::util::error::Result;
 use crate::util::Time;
@@ -48,6 +55,10 @@ pub struct LiveConfig {
     /// deadline/requeue machinery must absorb both the lost task and the
     /// permanently smaller pool.  0 in production.
     pub simulate_worker_deaths: u32,
+    /// Admission front (probe → reserve → commit; see live/admission.rs
+    /// and docs/ADMISSION.md).  Disabled by default, and the disabled
+    /// front is inert — the run is identical to the pre-admission driver.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for LiveConfig {
@@ -60,6 +71,7 @@ impl Default for LiveConfig {
             task_deadline: Duration::from_secs(30),
             max_retries: 2,
             simulate_worker_deaths: 0,
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -79,6 +91,11 @@ pub struct LiveReport {
     pub unfinished: Vec<JobId>,
     /// Task attempts requeued after a deadline expiry or failed attempt.
     pub requeues: usize,
+    /// Admission probes performed (0 with the front disabled).
+    pub admission_probes: usize,
+    /// Capacity returned through reservation expiry (0 when disabled, or
+    /// when every reservation committed in time).
+    pub admission_expired_capacity: u64,
 }
 
 struct TaskMsg {
@@ -133,6 +150,9 @@ struct LiveJob {
     /// A task exhausted its retries: the job can never finish.  Failed
     /// jobs read as `finished` to schedulers and stop dispatching.
     failed: bool,
+    /// Admission reservation (None with the front disabled, or before
+    /// the job passes probe → reserve).
+    ticket: Option<TicketId>,
 }
 
 impl LiveJob {
@@ -172,7 +192,6 @@ pub fn run_live(
     mut sched: Box<dyn Scheduler>,
     taskwork_path: &str,
 ) -> Result<LiveReport> {
-    let _ = sched_cfg;
     // Sanity-check the artifact on the main thread before spawning workers.
     {
         let rt = Runtime::cpu()?;
@@ -266,11 +285,14 @@ pub fn run_live(
                 finish: None,
                 occupied: 0,
                 failed: false,
+                ticket: None,
             }
         })
         .collect();
 
     let total = cfg.workers as u32;
+    let mut ctl = AdmissionCtl::new(cfg.admission, total);
+    let mut admission_probes = 0usize;
     let mut tasks_run = 0usize;
     let mut checksum = 0f64;
     let mut requeues = 0usize;
@@ -371,10 +393,66 @@ pub fn run_live(
             }
         }
 
-        // Submissions (arrival times are wall-clock offsets).
-        for j in jobs.iter_mut() {
-            if !j.submitted && j.spec.submit_ms <= now {
-                j.submitted = true;
+        // Submissions (arrival times are wall-clock offsets).  With the
+        // admission front enabled, an arriving job must pass probe →
+        // reserve before the scheduler sees it; the reservation commits
+        // at the job's first dispatch and releases when it retires.  A
+        // job whose probe defers (or whose reservation expired before it
+        // dispatched) simply re-probes on the next heartbeat.
+        if ctl.config().enabled {
+            ctl.advance(now);
+            // Release retired jobs first so their capacity is available
+            // to arrivals on this very heartbeat.
+            for j in jobs.iter() {
+                if j.terminal() {
+                    if let Some(t) = j.ticket {
+                        if ctl.ticket_state(t) == Some(TicketState::Committed) {
+                            ctl.release(now, t);
+                        }
+                    }
+                }
+            }
+            let occupied_total: u32 = jobs.iter().map(|j| j.occupied).sum();
+            let admitted: Vec<JobView> = jobs
+                .iter()
+                .filter(|j| j.submitted)
+                .map(|j| JobView {
+                    id: j.spec.id,
+                    demand: j.spec.demand.min(total),
+                    submit_ms: j.spec.submit_ms,
+                    started: j.first_start.is_some() || j.occupied > 0,
+                    finished: j.terminal(),
+                    pending_tasks: j.pending_tasks(),
+                    occupied: j.occupied,
+                })
+                .collect();
+            let snap = SchedSnapshot::of_view(
+                now,
+                total.saturating_sub(occupied_total),
+                total,
+                &admitted,
+                sched_cfg.delta0,
+                sched_cfg.theta,
+            );
+            for j in jobs.iter_mut() {
+                if j.submitted || j.spec.submit_ms > now || j.terminal() {
+                    continue;
+                }
+                let demand = j.spec.demand.min(total).max(1);
+                admission_probes += 1;
+                if ctl.probe(&snap, demand).decision != ProbeDecision::Admit {
+                    continue;
+                }
+                if let Some(t) = ctl.reserve(now, demand) {
+                    j.ticket = Some(t);
+                    j.submitted = true;
+                }
+            }
+        } else {
+            for j in jobs.iter_mut() {
+                if !j.submitted && j.spec.submit_ms <= now {
+                    j.submitted = true;
+                }
             }
         }
 
@@ -448,6 +526,14 @@ pub fn run_live(
                 jobs[ji].tasks[phase][ti].state = RUNNING;
                 jobs[ji].tasks[phase][ti].running_since = Some(now);
                 jobs[ji].occupied += 1;
+                // First dispatch commits the admission reservation (a
+                // no-op for already-committed or expired tickets, and
+                // for the disabled front where no ticket exists).
+                if let Some(t) = jobs[ji].ticket {
+                    if ctl.ticket_state(t) == Some(TicketState::Reserved) {
+                        ctl.commit(now, t);
+                    }
+                }
                 free -= 1;
                 cid += 1;
                 transitions.push(Transition {
@@ -498,6 +584,8 @@ pub fn run_live(
         checksum,
         unfinished,
         requeues,
+        admission_probes,
+        admission_expired_capacity: ctl.expired_capacity(),
     })
 }
 
@@ -515,6 +603,7 @@ mod tests {
         assert!(c.task_deadline > c.hb, "deadline shorter than a heartbeat would thrash");
         assert!(c.max_retries >= 1);
         assert_eq!(c.simulate_worker_deaths, 0, "fault injection must be off by default");
+        assert!(!c.admission.enabled, "admission front must be off by default");
     }
 
     #[test]
@@ -548,6 +637,7 @@ mod tests {
             finish: None,
             occupied: 0,
             failed: true,
+            ticket: None,
         };
         assert_eq!(j.pending_tasks(), 0, "failed jobs must not advertise work");
         assert!(j.terminal());

@@ -18,12 +18,13 @@ pub use categories::{Category, Classifier};
 pub use multi::MultiDress;
 pub use reserve::{adjust, ReserveInputs};
 
+use super::shadow::{self, SchedSnapshot, ShadowEvent, ShadowWindow};
 use super::{Allocation, ClusterView, JobView, Scheduler};
 use crate::config::SchedConfig;
 use crate::estimator::{EstimatorBank, EstimatorParams};
 use crate::jobs::JobId;
 use crate::util::Time;
-use std::collections::HashSet;
+use std::collections::{BTreeSet, HashSet};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DressStats {
@@ -46,6 +47,22 @@ pub struct DressScheduler {
     /// instead of only the dirty set.  Bit-identical by construction; kept
     /// for equivalence goldens.
     pub naive_estimator_tick: bool,
+    /// Opt-in online δ auto-tuner (`EngineOptions::tune_delta`): every
+    /// [`shadow::DEFAULT_TUNE_EVERY`] heartbeats, replay the recent
+    /// submit/complete window against a snapshot under a candidate ladder
+    /// and adopt the winner.  Off by default; when off, none of the tuner
+    /// state below is ever touched (zero-overhead disabled path — pinned
+    /// by the golden inertness test).
+    pub tune_delta: bool,
+    /// Tuner cadence K, in heartbeats.
+    pub tune_every: u32,
+    /// Heartbeats since the last re-tune.
+    tune_ticks: u32,
+    /// Ring buffer of recent submit/complete observations.
+    window: ShadowWindow,
+    /// Active jobs currently tracked by the observer (BTreeSet: completion
+    /// events must enter the window in deterministic ascending-id order).
+    tracked: BTreeSet<JobId>,
 }
 
 impl DressScheduler {
@@ -66,11 +83,61 @@ impl DressScheduler {
             freeze_delta: false,
             disable_estimator: false,
             naive_estimator_tick: false,
+            tune_delta: false,
+            tune_every: shadow::DEFAULT_TUNE_EVERY,
+            tune_ticks: 0,
+            window: ShadowWindow::new(shadow::DEFAULT_WINDOW),
+            tracked: BTreeSet::new(),
         }
     }
 
     pub fn delta(&self) -> f64 {
         self.delta
+    }
+
+    /// Freeze classifier + estimator + δ + the observable view into a
+    /// cheaply-cloneable [`SchedSnapshot`] (docs/ADMISSION.md).
+    pub fn snapshot(&self, view: &ClusterView) -> SchedSnapshot {
+        SchedSnapshot {
+            now: view.now,
+            free: view.free,
+            total: view.total,
+            jobs: view.jobs.to_vec(),
+            delta: self.delta,
+            classifier: self.classifier.clone(),
+            estimator: self.estimator.clone(),
+        }
+    }
+
+    /// Restore tunable state from a snapshot — the inverse of
+    /// [`Self::snapshot`] for shadow executors that borrow the live
+    /// scheduler, run a what-if, and put it back.
+    pub fn restore(&mut self, snap: &SchedSnapshot) {
+        self.classifier = snap.classifier.clone();
+        self.estimator = snap.estimator.clone();
+        self.delta = snap.delta;
+    }
+
+    /// Record this heartbeat's submit/complete deltas into the shadow
+    /// window.  Only called while the tuner is on.
+    fn observe(&mut self, view: &ClusterView) {
+        let now = view.now;
+        let mut present: HashSet<JobId> = HashSet::with_capacity(view.jobs.len());
+        for j in view.jobs.iter().filter(|j| !j.finished) {
+            present.insert(j.id);
+            if self.tracked.insert(j.id) {
+                self.window.push(ShadowEvent::Submit { job: j.id, demand: j.demand, at: now });
+            }
+        }
+        // Jobs that left the view (finished, then tombstoned or compacted
+        // away) complete in ascending-id order — deterministic window
+        // contents regardless of hash-set iteration order.
+        let gone: Vec<JobId> =
+            self.tracked.iter().copied().filter(|id| !present.contains(id)).collect();
+        for id in gone {
+            self.tracked.remove(&id);
+            self.window.push(ShadowEvent::Complete { job: id, at: now });
+        }
     }
 
     pub fn stats(&self, view: &ClusterView) -> DressStats {
@@ -162,12 +229,37 @@ impl Scheduler for DressScheduler {
         Some(self.delta)
     }
 
+    fn set_tune_delta(&mut self, on: bool) {
+        self.tune_delta = on;
+    }
+
+    fn snapshot(&self, view: &ClusterView) -> Option<SchedSnapshot> {
+        Some(DressScheduler::snapshot(self, view))
+    }
+
     fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation> {
         // (1) classify new arrivals against observed A_c.
         for j in view.jobs {
             if self.classifier.get(j.id).is_none() {
                 let cat = self.classifier.classify(j.id, j.demand, view.free, view.total);
                 self.estimator.register(j.id, cat.index());
+            }
+        }
+
+        // (1b) opt-in shadow tuner: observe the stream, and every K
+        // heartbeats replay the window under a candidate ladder and adopt
+        // the winning δ (clamped inside `shadow::tune_delta`).  The whole
+        // block is behind the flag: disabled runs touch no tuner state,
+        // push no events and draw no randomness (replay uses none) — the
+        // golden inertness test holds them bit-identical to the pre-tuner
+        // engine.
+        if self.tune_delta {
+            self.observe(view);
+            self.tune_ticks += 1;
+            if self.tune_ticks >= self.tune_every.max(1) && view.total >= 2 {
+                self.tune_ticks = 0;
+                let snap = DressScheduler::snapshot(self, view);
+                self.delta = shadow::tune_delta(&snap, &self.window, self.delta, shadow::REPLAY_TICKS);
             }
         }
 

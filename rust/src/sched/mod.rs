@@ -10,11 +10,13 @@ pub mod capacity;
 pub mod dress;
 pub mod fair;
 pub mod fifo;
+pub mod shadow;
 
 pub use capacity::CapacityScheduler;
 pub use dress::DressScheduler;
 pub use fair::FairScheduler;
 pub use fifo::FifoScheduler;
+pub use shadow::{SchedSnapshot, ShadowEvent, ShadowScore, ShadowWindow};
 
 use crate::cluster::Transition;
 use crate::config::{SchedConfig, SchedKind};
@@ -89,6 +91,21 @@ pub trait Scheduler {
 
     /// Introspection for reports: DRESS's current reserve ratio δ.
     fn reserve_ratio(&self) -> Option<f64> {
+        None
+    }
+
+    /// Opt-in online shadow tuner (`EngineOptions::tune_delta`).  Default
+    /// is a no-op: only DRESS has a δ to tune, and with the flag off the
+    /// tuner path must cost nothing (see docs/ADMISSION.md).
+    fn set_tune_delta(&mut self, on: bool) {
+        let _ = on;
+    }
+
+    /// Freeze the scheduler's tunable state into a [`shadow::SchedSnapshot`]
+    /// for what-if evaluation.  `None` for schedulers with no hidden state
+    /// (callers fall back to [`shadow::SchedSnapshot::of_view`]).
+    fn snapshot(&self, view: &ClusterView) -> Option<shadow::SchedSnapshot> {
+        let _ = view;
         None
     }
 }

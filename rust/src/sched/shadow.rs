@@ -1,0 +1,447 @@
+//! Shadow schedules: cheaply-cloneable scheduler snapshots and a bounded
+//! what-if replay executor (docs/ADMISSION.md).
+//!
+//! A [`SchedSnapshot`] freezes everything a what-if evaluation needs —
+//! the observable job table, the live capacity totals, and (for DRESS)
+//! the classifier + estimator-bank state and the current δ — behind a
+//! plain `Clone`.  A [`ShadowWindow`] ring-buffers the recent
+//! submit/complete stream.  [`replay`] runs a coarse deterministic
+//! admission model of that window against a snapshot under one candidate
+//! δ and scores it; [`tune_delta`] ranks a candidate ladder and returns
+//! the winner, clamped to `reserve::DELTA_MIN..=DELTA_MAX`.
+//!
+//! Everything here is pure with respect to live state: replay clones the
+//! snapshot's classifier, never touches the caller's, and draws **zero**
+//! random numbers — the same inputs always produce the same tuned δ
+//! (pinned by `tests/admission_integration.rs`).
+
+use super::dress::reserve::{DELTA_MAX, DELTA_MIN};
+use super::dress::{Category, Classifier};
+use super::JobView;
+use crate::estimator::EstimatorBank;
+use crate::jobs::JobId;
+use crate::util::Time;
+
+/// Default ring capacity for the recent-event window.
+pub const DEFAULT_WINDOW: usize = 256;
+/// Default tuner cadence: re-tune every K heartbeats.
+pub const DEFAULT_TUNE_EVERY: u32 = 16;
+/// Synthetic heartbeats one replay simulates.
+pub const REPLAY_TICKS: u32 = 32;
+
+/// One observed scheduling-stream event, as ring-buffered by the tuner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShadowEvent {
+    /// A job entered the scheduler's view.
+    Submit { job: JobId, demand: u32, at: Time },
+    /// A job left the view (finished or retired).
+    Complete { job: JobId, at: Time },
+}
+
+impl ShadowEvent {
+    pub fn at(&self) -> Time {
+        match *self {
+            ShadowEvent::Submit { at, .. } | ShadowEvent::Complete { at, .. } => at,
+        }
+    }
+}
+
+/// Fixed-capacity ring buffer over [`ShadowEvent`]s: pushes never
+/// allocate once warm, and the oldest entry is overwritten when full.
+#[derive(Debug, Clone)]
+pub struct ShadowWindow {
+    cap: usize,
+    buf: Vec<ShadowEvent>,
+    /// Next write position (== oldest entry once the ring has wrapped).
+    head: usize,
+}
+
+impl ShadowWindow {
+    pub fn new(cap: usize) -> Self {
+        // The backing Vec grows lazily up to `cap`: a window that is never
+        // pushed to (tuner disabled) costs no heap allocation at all.
+        ShadowWindow { cap: cap.max(1), buf: Vec::new(), head: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn push(&mut self, e: ShadowEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Events oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &ShadowEvent> {
+        let (wrapped, recent) = if self.buf.len() < self.cap {
+            (&self.buf[..0], &self.buf[..])
+        } else {
+            (&self.buf[self.head..], &self.buf[..self.head])
+        };
+        wrapped.iter().chain(recent.iter())
+    }
+}
+
+/// A frozen, cheaply-cloneable picture of scheduler + cluster state.
+///
+/// Cloned parts: the job table (`Vec<JobView>`, `Copy` rows), the DRESS
+/// classifier (one `Vec<Option<Category>>`) and the estimator bank.
+/// Shared/derived parts: capacity totals are plain integers; nothing
+/// borrows from the live engine, so a snapshot outlives any view.
+#[derive(Debug, Clone)]
+pub struct SchedSnapshot {
+    pub now: Time,
+    pub free: u32,
+    pub total: u32,
+    /// Active + tombstoned jobs, in submission order (a copy of the
+    /// engine's `ClusterView::jobs` slice).
+    pub jobs: Vec<JobView>,
+    /// DRESS reserve ratio at capture time (δ₀ default for non-DRESS).
+    pub delta: f64,
+    pub classifier: Classifier,
+    pub estimator: EstimatorBank,
+}
+
+impl SchedSnapshot {
+    /// Scheduler-agnostic snapshot: capacity + job table from a view,
+    /// neutral classifier/estimator state.  `delta` is whatever the live
+    /// scheduler reports (`reserve_ratio()`), or a caller-chosen default.
+    pub fn of_view(
+        now: Time,
+        free: u32,
+        total: u32,
+        jobs: &[JobView],
+        delta: f64,
+        theta: f64,
+    ) -> SchedSnapshot {
+        SchedSnapshot {
+            now,
+            free,
+            total,
+            jobs: jobs.to_vec(),
+            delta,
+            classifier: Classifier::new(theta),
+            estimator: EstimatorBank::default(),
+        }
+    }
+
+    /// Containers demanded by jobs that have not started yet — the
+    /// backlog a probe weighs against free capacity.
+    pub fn waiting_demand(&self) -> u64 {
+        self.jobs
+            .iter()
+            .filter(|j| !j.finished && !j.started)
+            .map(|j| j.demand as u64)
+            .sum()
+    }
+}
+
+/// Per-candidate outcome of one shadow replay.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShadowScore {
+    pub delta: f64,
+    /// Jobs that drained all task-units within the replay horizon.
+    pub completed: u32,
+    /// Slot-ticks of useful service performed (goodput proxy).
+    pub goodput: u64,
+}
+
+impl ShadowScore {
+    /// Strictly-better ordering: completions first, then goodput.
+    fn beats(&self, other: &ShadowScore) -> bool {
+        (self.completed, self.goodput) > (other.completed, other.goodput)
+    }
+}
+
+/// One simulated job inside a replay.
+struct ShadowJob {
+    demand: u32,
+    /// Task-units still to serve (pending + in-flight at capture).
+    remaining: u32,
+    /// Slots held this synthetic tick.
+    occupied: u32,
+    cat: Category,
+    /// Synthetic tick at which the job becomes visible.
+    arrive: u32,
+    done: bool,
+}
+
+/// Replay the snapshot + recent window under one candidate δ.
+///
+/// The service model is deliberately coarse — every granted slot serves
+/// one task-unit per synthetic heartbeat — because the score is only
+/// ever *compared between candidates under the same model*.  What the
+/// model does preserve exactly is the DRESS admission discipline: the
+/// δ split (`round(δ·total)` clamped to leave both pools ≥ 1), per-pool
+/// FCFS admission in submission order, and leftover free slots flowing
+/// to the smallest blocked jobs.  No RNG, no live-state access.
+pub fn replay(
+    snap: &SchedSnapshot,
+    window: &ShadowWindow,
+    delta: f64,
+    ticks: u32,
+) -> ShadowScore {
+    let total = snap.total;
+    if total < 2 || ticks == 0 {
+        return ShadowScore { delta, completed: 0, goodput: 0 };
+    }
+    // Replay classifies synthetic arrivals against a *clone* — probe
+    // purity: the caller's classifier is untouched.
+    let mut classifier = snap.classifier.clone();
+
+    // Live jobs at capture: visible from tick 0.
+    let mut jobs: Vec<ShadowJob> = snap
+        .jobs
+        .iter()
+        .filter(|j| !j.finished)
+        .map(|j| ShadowJob {
+            demand: j.demand.max(1),
+            remaining: j.pending_tasks + j.occupied,
+            occupied: 0,
+            cat: classifier.classify(j.id, j.demand, snap.free, total),
+            arrive: 0,
+            done: false,
+        })
+        .collect();
+
+    // Recent window replayed as synthetic arrivals spread over the
+    // horizon: each Submit re-arrives at a tick proportional to its age
+    // (oldest → tick 0, newest → last tick).  Completes carry no load.
+    let submits: Vec<(JobId, u32, Time)> = window
+        .iter()
+        .filter_map(|e| match *e {
+            ShadowEvent::Submit { job, demand, at } => Some((job, demand, at)),
+            ShadowEvent::Complete { .. } => None,
+        })
+        .collect();
+    if let (Some(oldest), Some(newest)) =
+        (submits.first().map(|s| s.2), submits.last().map(|s| s.2))
+    {
+        let span = newest.saturating_sub(oldest).max(1);
+        for &(job, demand, at) in &submits {
+            let arrive = ((at - oldest) * (ticks as u64 - 1) / span) as u32;
+            jobs.push(ShadowJob {
+                demand: demand.max(1),
+                remaining: demand.max(1),
+                occupied: 0,
+                // Re-arrivals keep their real id: the sticky classifier
+                // reuses the live category when the job was already seen.
+                cat: classifier.classify(job, demand, snap.free, total),
+                arrive,
+                done: false,
+            });
+        }
+    }
+
+    let sd_quota = ((delta * total as f64).round() as u32).clamp(1, total - 1);
+    let ld_quota = total - sd_quota;
+    let mut completed = 0u32;
+    let mut goodput = 0u64;
+
+    for t in 0..ticks {
+        // Service: every held slot completes one task-unit, then frees.
+        for j in jobs.iter_mut() {
+            if j.occupied > 0 {
+                goodput += j.occupied as u64;
+                j.remaining -= j.occupied.min(j.remaining);
+                j.occupied = 0;
+            }
+            if !j.done && j.arrive <= t && j.remaining == 0 {
+                j.done = true;
+                completed += 1;
+            }
+        }
+        // Admission under the candidate split: per-pool FCFS in
+        // submission order, then leftovers to the smallest blocked jobs.
+        let mut free = total;
+        let (mut sd_free, mut ld_free) = (sd_quota, ld_quota);
+        let mut blocked: Vec<usize> = Vec::new();
+        for (i, j) in jobs.iter_mut().enumerate() {
+            if j.done || j.arrive > t || j.remaining == 0 {
+                continue;
+            }
+            let want = j.remaining.min(j.demand);
+            let pool = match j.cat {
+                Category::Sd => &mut sd_free,
+                Category::Ld => &mut ld_free,
+            };
+            let n = want.min(*pool).min(free);
+            if n > 0 {
+                j.occupied = n;
+                *pool -= n;
+                free -= n;
+            }
+            if j.occupied < want {
+                blocked.push(i);
+            }
+        }
+        if free > 0 && !blocked.is_empty() {
+            blocked.sort_by_key(|&i| (jobs[i].demand, i));
+            for i in blocked {
+                if free == 0 {
+                    break;
+                }
+                let j = &mut jobs[i];
+                let extra = (j.remaining.min(j.demand) - j.occupied).min(free);
+                j.occupied += extra;
+                free -= extra;
+            }
+        }
+    }
+    ShadowScore { delta, completed, goodput }
+}
+
+/// Rank a deterministic candidate ladder around `current` by shadow
+/// replay and return the winning δ, clamped to the legal band.  The
+/// current value is evaluated first and wins all ties, so an
+/// uninformative window (empty, or scores all equal) never moves δ.
+pub fn tune_delta(
+    snap: &SchedSnapshot,
+    window: &ShadowWindow,
+    current: f64,
+    ticks: u32,
+) -> f64 {
+    let current = current.clamp(DELTA_MIN, DELTA_MAX);
+    if snap.total < 2 {
+        return current;
+    }
+    let ladder = [current, current - 0.05, current + 0.05, current - 0.10, current + 0.10];
+    let mut best: Option<ShadowScore> = None;
+    for cand in ladder {
+        let cand = cand.clamp(DELTA_MIN, DELTA_MAX);
+        if best.as_ref().is_some_and(|b| b.delta.to_bits() == cand.to_bits()) {
+            continue;
+        }
+        let score = replay(snap, window, cand, ticks);
+        match &best {
+            Some(b) if !score.beats(b) => {}
+            _ => best = Some(score),
+        }
+    }
+    best.map_or(current, |b| b.delta.clamp(DELTA_MIN, DELTA_MAX))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::JobView;
+
+    fn jv(id: JobId, demand: u32, pending: u32, started: bool) -> JobView {
+        JobView {
+            id,
+            demand,
+            submit_ms: id as Time * 500,
+            started,
+            finished: false,
+            pending_tasks: pending,
+            occupied: 0,
+        }
+    }
+
+    fn snap(free: u32, total: u32, jobs: Vec<JobView>) -> SchedSnapshot {
+        SchedSnapshot::of_view(10_000, free, total, &jobs, 0.10, 0.10)
+    }
+
+    #[test]
+    fn window_ring_overwrites_oldest() {
+        let mut w = ShadowWindow::new(3);
+        for i in 0..5u32 {
+            w.push(ShadowEvent::Complete { job: i, at: i as Time });
+        }
+        assert_eq!(w.len(), 3);
+        let ats: Vec<Time> = w.iter().map(|e| e.at()).collect();
+        assert_eq!(ats, vec![2, 3, 4], "oldest events evicted, order preserved");
+    }
+
+    #[test]
+    fn empty_window_never_allocates() {
+        let w = ShadowWindow::new(DEFAULT_WINDOW);
+        assert_eq!(w.buf.capacity(), 0, "idle window must not pre-allocate");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let s = snap(20, 40, vec![jv(1, 4, 4, false), jv(2, 30, 30, false)]);
+        let mut w = ShadowWindow::new(16);
+        w.push(ShadowEvent::Submit { job: 3, demand: 6, at: 9_000 });
+        w.push(ShadowEvent::Submit { job: 4, demand: 2, at: 9_500 });
+        let a = replay(&s, &w, 0.2, REPLAY_TICKS);
+        let b = replay(&s, &w, 0.2, REPLAY_TICKS);
+        assert_eq!(a, b);
+        assert!(a.completed > 0 && a.goodput > 0);
+    }
+
+    #[test]
+    fn replay_never_mutates_the_snapshot() {
+        let s = snap(10, 40, vec![jv(1, 4, 4, false), jv(7, 30, 30, true)]);
+        let before = format!("{s:?}");
+        let w = ShadowWindow::new(8);
+        for d in [0.02, 0.5, 0.95] {
+            replay(&s, &w, d, 16);
+        }
+        assert_eq!(format!("{s:?}"), before, "replay touched the snapshot");
+    }
+
+    #[test]
+    fn tuned_delta_stays_in_band_and_keeps_current_on_empty_window() {
+        let s = snap(40, 40, vec![]);
+        let w = ShadowWindow::new(8);
+        for d in [0.0, 0.02, 0.10, 0.5, 0.95, 1.5] {
+            let tuned = tune_delta(&s, &w, d, REPLAY_TICKS);
+            assert!((DELTA_MIN..=DELTA_MAX).contains(&tuned), "tuned {tuned} out of band");
+            let clamped = d.clamp(DELTA_MIN, DELTA_MAX);
+            assert_eq!(
+                tuned.to_bits(),
+                clamped.to_bits(),
+                "uninformative window moved δ {clamped} -> {tuned}"
+            );
+        }
+    }
+
+    #[test]
+    fn degraded_capacity_replay_is_a_noop() {
+        let s = snap(1, 1, vec![jv(1, 3, 3, false)]);
+        let w = ShadowWindow::new(8);
+        assert_eq!(replay(&s, &w, 0.5, 16), ShadowScore { delta: 0.5, completed: 0, goodput: 0 });
+        assert_eq!(tune_delta(&s, &w, 0.10, 16).to_bits(), 0.10f64.to_bits());
+    }
+
+    #[test]
+    fn congested_window_prefers_a_working_split() {
+        // A stream of small jobs against a big running backlog: some
+        // candidate must complete at least as much as every other, and
+        // the chosen δ is one of the ladder values.
+        let mut jobs = vec![jv(1, 36, 36, true)];
+        for id in 2..10u32 {
+            jobs.push(jv(id, 2, 2, false));
+        }
+        let s = snap(4, 40, jobs);
+        let mut w = ShadowWindow::new(32);
+        for id in 10..20u32 {
+            w.push(ShadowEvent::Submit { job: id, demand: 2, at: 9_000 + id as Time * 50 });
+        }
+        let tuned = tune_delta(&s, &w, 0.10, REPLAY_TICKS);
+        assert!((DELTA_MIN..=DELTA_MAX).contains(&tuned));
+        let chosen = replay(&s, &w, tuned, REPLAY_TICKS);
+        for cand in [0.05, 0.10, 0.15, 0.20] {
+            let other = replay(&s, &w, cand, REPLAY_TICKS);
+            assert!(
+                !other.beats(&chosen),
+                "candidate {cand} beats adopted δ {tuned}: {other:?} > {chosen:?}"
+            );
+        }
+    }
+}

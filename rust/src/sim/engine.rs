@@ -38,6 +38,7 @@ use crate::cluster::{Cluster, ContainerState, HeartbeatLog, Transition};
 use crate::config::ExperimentConfig;
 use crate::jobs::{JobLayout, JobSpec, JobStore};
 use crate::metrics::{DeltaSummary, JobMetrics, SystemMetrics, UtilSummary};
+use crate::sched::shadow::{self, SchedSnapshot, ShadowEvent, ShadowWindow};
 use crate::sched::{Allocation, ClusterView, JobView, Scheduler};
 use crate::util::rng::Rng;
 use crate::util::Time;
@@ -140,6 +141,13 @@ pub struct EngineOptions {
     /// default; the array-of-structs reference layout exists for
     /// equivalence tests.  Simulation results are identical either way.
     pub jobs: JobLayout,
+    /// Opt-in online δ auto-tuner: the DRESS scheduler shadow-replays its
+    /// recent submit/complete window against candidate δ values every K
+    /// heartbeats and adopts the winner (see [`crate::sched::shadow`] and
+    /// docs/ADMISSION.md).  Off by default — and proven *bit-identical*
+    /// off by tests/golden_determinism.rs: zero RNG draws, zero events,
+    /// zero allocations.  No-op for the baseline schedulers.
+    pub tune_delta: bool,
 }
 
 impl Default for EngineOptions {
@@ -150,6 +158,7 @@ impl Default for EngineOptions {
             queue: QueueKind::Calendar,
             naive_hot_path: false,
             jobs: JobLayout::Soa,
+            tune_delta: false,
         }
     }
 }
@@ -301,9 +310,13 @@ impl Engine {
     pub fn with_options(
         cfg: ExperimentConfig,
         specs: Vec<JobSpec>,
-        sched: Box<dyn Scheduler>,
+        mut sched: Box<dyn Scheduler>,
         opts: EngineOptions,
     ) -> Self {
+        // Arm the opt-in shadow tuner before the first heartbeat; with the
+        // flag off this is a no-op for every scheduler (default trait impl)
+        // and the run stays bit-identical (tests/golden_determinism.rs).
+        sched.set_tune_delta(opts.tune_delta);
         for s in &specs {
             s.validate().unwrap_or_else(|e| panic!("invalid job spec: {e}"));
         }
@@ -804,32 +817,129 @@ impl Engine {
         }
     }
 
+    /// Advance the simulation by exactly one event.  Returns `false` once
+    /// the run is over (every job finished, or the queue drained).
+    ///
+    /// `run()` is just `while self.step() {}` + [`Self::finish`]; the
+    /// stepping form exists so tests can interleave read-only
+    /// [`Self::probe`]s with live execution and fingerprint the state
+    /// between events (tests/properties.rs probe-purity property).
+    pub fn step(&mut self) -> bool {
+        if self.all_finished() {
+            return false;
+        }
+        let Some((t, ev)) = self.queue.pop() else {
+            return false;
+        };
+        assert!(t >= self.now, "time went backwards");
+        self.now = t;
+        if self.now > self.max_ms {
+            panic!("simulation exceeded {} ms — livelocked schedule?", self.max_ms);
+        }
+        self.events += 1;
+        match ev {
+            Event::JobSubmit(id) => {
+                let ji = self.job_index(id);
+                self.store.mark_submitted(ji);
+                self.view_insert(ji);
+            }
+            Event::SchedTick => self.on_sched_tick(),
+            Event::ContainerAdvance(cid) => self.on_container_advance(cid),
+            Event::TaskFinish(cid) => self.on_task_finish(cid),
+            Event::TaskFail(cid) => self.on_task_fail(cid),
+            Event::NodeFail(o) => self.on_node_fail(o),
+            Event::NodeRecover(o) => self.on_node_recover(o),
+            // Reservation timeouts live in the admission layer's private
+            // queue (live/admission.rs), never in the engine's; the arm
+            // exists only for exhaustiveness and is inert by design.
+            Event::ReservationExpire(_) => {}
+        }
+        !self.all_finished()
+    }
+
+    /// Read-only admission probe against the live engine: snapshot the
+    /// scheduler's tunable state (or a neutral view-only snapshot for
+    /// baselines), overlay one hypothetical `demand`-container arrival,
+    /// and shadow-replay it.  Purity is structural — `&self`, no RNG
+    /// stream access, no event pushes — and is property-tested: N probes
+    /// leave [`Self::state_fingerprint`] exactly unchanged.
+    pub fn probe(&self, demand: u32) -> shadow::ShadowScore {
+        let jobs = self.naive_view_jobs();
+        let view = ClusterView {
+            now: self.now,
+            free: self.cluster.free(),
+            total: self.cluster.total(),
+            jobs: &jobs,
+            transitions: &[],
+        };
+        let snap = self.sched.snapshot(&view).unwrap_or_else(|| {
+            SchedSnapshot::of_view(
+                view.now,
+                view.free,
+                view.total,
+                view.jobs,
+                self.sched.reserve_ratio().unwrap_or(self.cfg.sched.delta0),
+                self.cfg.sched.theta,
+            )
+        });
+        let mut window = ShadowWindow::new(1);
+        let next_id = jobs.iter().map(|j| j.id).max().unwrap_or(0) + 1;
+        window.push(ShadowEvent::Submit { job: next_id, demand, at: self.now });
+        shadow::replay(&snap, &window, snap.delta, shadow::REPLAY_TICKS)
+    }
+
+    /// FNV-1a-64 digest of the full observable simulation state: job-store
+    /// lanes, event-queue shape, the scheduler view, classifier/estimator
+    /// state and δ (via the scheduler snapshot), the exact metric
+    /// accumulators, and every progress counter.  Equal fingerprints mean
+    /// the two engines are in identical simulation states; the probe-purity
+    /// property (tests/properties.rs) pins that probes never move it.
+    pub fn state_fingerprint(&self) -> u64 {
+        let jobs = self.naive_view_jobs();
+        let view = ClusterView {
+            now: self.now,
+            free: self.cluster.free(),
+            total: self.cluster.total(),
+            jobs: &jobs,
+            transitions: &[],
+        };
+        let snap = self.sched.snapshot(&view);
+        let repr = format!(
+            "{}|{}|{}|{}|{:?}|{}|{}|{:?}|{:?}|{}|{}|{:?}|{:?}|{:?}|{:?}",
+            self.now,
+            self.events,
+            self.ticks,
+            self.queue.len(),
+            self.queue.peek_time(),
+            self.cluster.free(),
+            self.cluster.total(),
+            self.sched.reserve_ratio(),
+            snap,
+            self.finished_jobs,
+            self.failures,
+            jobs,
+            self.store,
+            self.util_accum,
+            self.delta_accum,
+        );
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in repr.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+
     /// Run to completion and produce the result bundle.
     pub fn run(mut self) -> RunResult {
-        while let Some((t, ev)) = self.queue.pop() {
-            assert!(t >= self.now, "time went backwards");
-            self.now = t;
-            if self.now > self.max_ms {
-                panic!("simulation exceeded {} ms — livelocked schedule?", self.max_ms);
-            }
-            self.events += 1;
-            match ev {
-                Event::JobSubmit(id) => {
-                    let ji = self.job_index(id);
-                    self.store.mark_submitted(ji);
-                    self.view_insert(ji);
-                }
-                Event::SchedTick => self.on_sched_tick(),
-                Event::ContainerAdvance(cid) => self.on_container_advance(cid),
-                Event::TaskFinish(cid) => self.on_task_finish(cid),
-                Event::TaskFail(cid) => self.on_task_fail(cid),
-                Event::NodeFail(o) => self.on_node_fail(o),
-                Event::NodeRecover(o) => self.on_node_recover(o),
-            }
-            if self.all_finished() {
-                break;
-            }
-        }
+        while self.step() {}
+        self.finish()
+    }
+
+    /// Consume a completed engine into its [`RunResult`].  Panics if jobs
+    /// remain unfinished (starvation) — callers drive [`Self::step`] to
+    /// `false` first.
+    pub fn finish(self) -> RunResult {
         assert!(self.all_finished(), "run ended with unfinished jobs (starvation)");
 
         let jobs: Vec<JobMetrics> = self.store.metrics();

@@ -51,6 +51,11 @@ pub enum Event {
     NodeFail(u32),
     /// A crashed node comes back after its configured downtime.
     NodeRecover(u32),
+    /// An admission reservation's commit timeout fired (payload: the
+    /// reservation ticket id).  Scheduled by the admission front's
+    /// *private* queue (live/admission.rs) — the engine's own queue never
+    /// carries one, so the disabled admission path pushes zero events.
+    ReservationExpire(u32),
 }
 
 /// Which queue implementation an [`EventQueue`] uses.
@@ -82,6 +87,7 @@ impl EventEntry {
             Event::TaskFail(c) => EventEntry(4, c, 0),
             Event::NodeFail(o) => EventEntry(5, o, 0),
             Event::NodeRecover(o) => EventEntry(6, o, 0),
+            Event::ReservationExpire(r) => EventEntry(7, r, 0),
         }
     }
 
@@ -93,7 +99,8 @@ impl EventEntry {
             3 => Event::TaskFinish(self.1),
             4 => Event::TaskFail(self.1),
             5 => Event::NodeFail(self.1),
-            _ => Event::NodeRecover(self.1),
+            6 => Event::NodeRecover(self.1),
+            _ => Event::ReservationExpire(self.1),
         }
     }
 }
@@ -444,6 +451,7 @@ mod tests {
             Event::TaskFail(13),
             Event::NodeFail(2),
             Event::NodeRecover(2),
+            Event::ReservationExpire(5),
         ];
         for kind in KINDS {
             let mut q = EventQueue::with_kind(kind);

@@ -12,13 +12,30 @@
 use crate::jobs::{JobSpec, PhaseKind, PhaseSpec, Platform, TaskSpec};
 use crate::util::Time;
 
+/// Trace names are single whitespace-delimited tokens on `#`-commentable
+/// lines, so a name containing whitespace or `#` (perfectly legal in a
+/// `JobSpec`) would render a line `from_trace` cannot re-parse — or would
+/// silently truncate at the comment marker.  Rendering substitutes `_`
+/// for those bytes (and for an empty name), which makes
+/// parse → render → parse a fixed point for every input.
+fn sanitize_name(name: &str) -> String {
+    if name.is_empty() {
+        return "_".into();
+    }
+    name.chars().map(|c| if c.is_whitespace() || c == '#' { '_' } else { c }).collect()
+}
+
 /// Serialize specs to the trace format.
 pub fn to_trace(specs: &[JobSpec]) -> String {
     let mut out = String::from("# dress workload trace v1\n");
     for s in specs {
         out.push_str(&format!(
             "job {} {} {} {} {} phases",
-            s.id, s.name, s.platform, s.submit_ms, s.demand
+            s.id,
+            sanitize_name(&s.name),
+            s.platform,
+            s.submit_ms,
+            s.demand
         ));
         for p in &s.phases {
             let kind = match p.kind {
@@ -137,5 +154,97 @@ mod tests {
             .contains("duration"));
         // invalid spec (no phases) rejected via validate()
         assert!(from_trace("job 1 a mapreduce 0 4 phases").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        // One broken field per case, each with the offending token in the
+        // error so a bad row in a big trace is findable.
+        for (row, needle) in [
+            ("job x a mapreduce 0 4 phases map:1000", "id"),
+            ("job 1 a hadoop 0 4 phases map:1000", "platform"),
+            ("job 1 a mapreduce noon 4 phases map:1000", "submit_ms"),
+            ("job 1 a mapreduce 0 lots phases map:1000", "demand"),
+            ("job 1 a mapreduce 0 4 stages map:1000", "phases"),
+            ("job 1 a mapreduce 0 4 phases shuffle:1000", "phase kind"),
+            ("job 1 a mapreduce 0 4 phases map1000", "phase token"),
+            ("job 1 a mapreduce 0 4 phases map:1000,", "duration"),
+            ("job 1 a mapreduce 0 4", "phases"),
+            ("job 1 a mapreduce 0", "demand"),
+            ("job 1 a", "platform"),
+        ] {
+            let e = from_trace(row).unwrap_err();
+            assert!(e.contains(needle), "`{row}` error `{e}` lacks `{needle}`");
+            assert!(e.contains("line 1"), "`{row}` error `{e}` lacks a line number");
+        }
+    }
+
+    #[test]
+    fn hostile_names_render_reparseable() {
+        // Names with whitespace / '#' are legal in JobSpec but would break
+        // the line format; rendering sanitizes them so the round trip
+        // never produces an unparseable trace.
+        let specs = vec![
+            JobSpec {
+                id: 1,
+                name: "my job #7".into(),
+                platform: Platform::MapReduce,
+                submit_ms: 0,
+                demand: 2,
+                phases: vec![PhaseSpec::new(PhaseKind::Map, &[1_000, 2_000])],
+            },
+            JobSpec {
+                id: 2,
+                name: String::new(),
+                platform: Platform::Spark,
+                submit_ms: 500,
+                demand: 1,
+                phases: vec![PhaseSpec::new(PhaseKind::SparkStage, &[3_000])],
+            },
+        ];
+        let text = to_trace(&specs);
+        let back = from_trace(&text).expect("sanitized trace must re-parse");
+        assert_eq!(back[0].name, "my_job__7");
+        assert_eq!(back[1].name, "_");
+        // Everything except the name survives exactly.
+        assert_eq!((back[0].id, back[0].demand, &back[0].phases), (1, 2, &specs[0].phases));
+        assert_eq!((back[1].id, back[1].submit_ms), (2, 500));
+    }
+
+    #[test]
+    fn parse_render_parse_is_a_fixed_point() {
+        // After one render the text representation is stable: rendering
+        // what was parsed reproduces the same bytes, for generated and
+        // hostile-name workloads alike.
+        let mut specs = generate(6, WorkloadMix::Mixed, 0.4, 1_500, 7);
+        specs[0].name = "two words".into();
+        specs[1].name = "trailing#comment".into();
+        let text1 = to_trace(&specs);
+        let parsed = from_trace(&text1).unwrap();
+        let text2 = to_trace(&parsed);
+        assert_eq!(text1, text2, "render is not a fixed point of parse∘render");
+        assert_eq!(from_trace(&text2).unwrap(), parsed);
+    }
+
+    #[test]
+    fn parses_checked_in_fixture() {
+        // Compile-time include keeps the fixture path valid wherever the
+        // test binary runs from.
+        let text = include_str!("../../tests/fixtures/workload.trace");
+        let specs = from_trace(text).expect("fixture trace must parse");
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].name, "wordcount");
+        assert_eq!(specs[0].platform, Platform::MapReduce);
+        assert_eq!(specs[0].phases[0].tasks.len(), 3);
+        assert_eq!(specs[2].platform, Platform::Spark);
+        assert_eq!(specs[2].phases.len(), 3, "inline comment must not eat phases");
+        assert_eq!(specs[3].submit_ms, 7_500);
+        for s in &specs {
+            s.validate().expect("fixture specs must be valid");
+        }
+        // One render is a fixed point for the fixture too.
+        let rendered = to_trace(&specs);
+        assert_eq!(from_trace(&rendered).unwrap(), specs);
+        assert_eq!(to_trace(&from_trace(&rendered).unwrap()), rendered);
     }
 }

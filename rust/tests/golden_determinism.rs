@@ -550,6 +550,94 @@ fn modern_hot_path_reproduces_full_reference_stack() {
 }
 
 #[test]
+fn disabled_shadow_tuner_is_bit_identical_for_all_schedulers() {
+    // PR 8's face of the PR 5 empty-fault-plan guarantee: with
+    // `tune_delta` off (the default) and no admission config in play, the
+    // shadow layer must cost zero RNG draws and zero events — the whole
+    // run is bit-identical to the pre-shadow engine.  Three claims:
+    //
+    // 1. Explicit `tune_delta: false` == default options (pins the
+    //    default itself).
+    // 2. `tune_delta: true` on the *baseline* schedulers == off: the
+    //    trait-level no-op means the flag cannot perturb Fifo, Fair or
+    //    Capacity even when armed.
+    // 3. Both hold under coin-flip failure injection — the RNG-isolation
+    //    proof: if the disabled (or no-op-armed) shadow layer drew from
+    //    the engine RNG, the failure pattern would shift and the goldens
+    //    would diverge.
+    let off = EngineOptions { tune_delta: false, ..Default::default() };
+    let on = EngineOptions { tune_delta: true, ..Default::default() };
+    for failures in [0.0, 0.2] {
+        let specs = generate(24, WorkloadMix::Mixed, 0.3, 2_000, 42);
+        for kind in KINDS {
+            let baseline = run_opts(kind, specs.clone(), EngineOptions::default(), failures);
+            assert_eq!(
+                baseline,
+                run_opts(kind, specs.clone(), off, failures),
+                "{kind:?} (failures={failures}): explicit tune_delta=false != default"
+            );
+            if kind != SchedKind::Dress {
+                assert_eq!(
+                    baseline,
+                    run_opts(kind, specs.clone(), on, failures),
+                    "{kind:?} (failures={failures}): armed tuner perturbed a baseline scheduler"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn disabled_shadow_tuner_is_bit_identical_under_fault_plans() {
+    // Same zero-overhead claim with the deterministic outage machinery
+    // live: node crash/recover events, requeues and degraded capacity all
+    // flow through the (time, seq) queue the shadow layer must never
+    // touch when disabled.
+    use dress::sim::FaultPlan;
+    let specs = generate(16, WorkloadMix::Mixed, 0.3, 1_500, 11);
+    let off = EngineOptions { tune_delta: false, ..Default::default() };
+    let on = EngineOptions { tune_delta: true, ..Default::default() };
+    for kind in KINDS {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sched.kind = kind;
+        cfg.faults = FaultPlan::empty().with_outage(30_000, 0, 45_000);
+        let baseline = Golden::of(&run_experiment_with(&cfg, specs.clone(), EngineOptions::default()));
+        assert_eq!(
+            baseline,
+            Golden::of(&run_experiment_with(&cfg, specs.clone(), off)),
+            "{kind:?}: tune_delta=false perturbed a faulted run"
+        );
+        if kind != SchedKind::Dress {
+            assert_eq!(
+                baseline,
+                Golden::of(&run_experiment_with(&cfg, specs.clone(), on)),
+                "{kind:?}: armed tuner perturbed a faulted baseline run"
+            );
+        }
+    }
+}
+
+#[test]
+fn tuned_dress_runs_are_deterministic_and_in_band() {
+    // The armed tuner on DRESS: run-to-run bit-identical (replay draws no
+    // randomness, the window is a deterministic function of the event
+    // stream), and every δ it ever adopts stays inside the legal band.
+    use dress::sched::dress::reserve::{DELTA_MAX, DELTA_MIN};
+    let on = EngineOptions { tune_delta: true, ..Default::default() };
+    let specs = congested_burst(120, 80, 0xBEEF);
+    let a = run_opts(SchedKind::Dress, specs.clone(), on, 0.0);
+    let b = run_opts(SchedKind::Dress, specs.clone(), on, 0.0);
+    assert_eq!(a, b, "tuned run not deterministic");
+    assert!(!a.delta_history.is_empty(), "tuned run recorded no δ samples");
+    for &(at, d) in &a.delta_history {
+        assert!(
+            (DELTA_MIN..=DELTA_MAX).contains(&d),
+            "adopted δ {d} at t={at} outside [{DELTA_MIN}, {DELTA_MAX}]"
+        );
+    }
+}
+
+#[test]
 fn cross_seed_runs_differ() {
     // Sanity that the fingerprint is actually sensitive: different seeds
     // must yield different goldens (else the equality tests prove nothing).

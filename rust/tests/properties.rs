@@ -528,6 +528,247 @@ fn release_curves_nonnegative_and_bounded() {
 }
 
 #[test]
+fn probes_never_perturb_engine_state_or_outcome() {
+    use dress::sim::{Engine, EngineOptions};
+
+    // Random worlds, random schedulers, probes interleaved with live
+    // stepping at a random cadence: every probe must (a) be idempotent,
+    // (b) leave the engine's full state fingerprint — job-store lanes,
+    // event-queue contents, estimator state, δ history — exactly
+    // unchanged, and (c) the probed run must finish bit-identical to an
+    // unprobed twin.
+    forall(
+        "probe purity",
+        8,
+        |rng| {
+            let (cfg, seed, jobs) = gen_world(rng);
+            let kind = [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress]
+                [(rng.next_u64() % 4) as usize];
+            let probe_every = 1 + rng.next_u64() % 5;
+            let demands: Vec<u32> =
+                (0..3).map(|_| 1 + (rng.next_u64() % 9) as u32).collect();
+            (cfg, seed, jobs, kind, probe_every, demands)
+        },
+        |(cfg, seed, jobs, kind, probe_every, demands)| {
+            let mut cfg = cfg.clone();
+            cfg.sched.kind = *kind;
+            let specs = generate(*jobs, WorkloadMix::Mixed, 0.3, 2_000, *seed);
+            let total = cfg.cluster.total_containers();
+            let fingerprint = |r: &dress::sim::RunResult| {
+                (
+                    r.system.makespan_ms,
+                    r.trace.tasks.clone(),
+                    format!("{:?}", r.jobs),
+                    r.delta_history.clone(),
+                )
+            };
+            let build = |specs: Vec<dress::jobs::JobSpec>| {
+                Engine::with_options(
+                    cfg.clone(),
+                    specs,
+                    dress::sched::build(&cfg.sched, total),
+                    EngineOptions::default(),
+                )
+            };
+            let plain = fingerprint(&build(specs.clone()).run());
+
+            let mut eng = build(specs);
+            let mut steps = 0u64;
+            loop {
+                let alive = eng.step();
+                steps += 1;
+                if steps % probe_every == 0 {
+                    let before = eng.state_fingerprint();
+                    for &d in demands {
+                        let s1 = eng.probe(d);
+                        let s2 = eng.probe(d);
+                        if s1 != s2 {
+                            return Err(format!(
+                                "{kind:?} step {steps}: probe({d}) not idempotent: {s1:?} vs {s2:?}"
+                            ));
+                        }
+                        let after = eng.state_fingerprint();
+                        if after != before {
+                            return Err(format!(
+                                "{kind:?} step {steps}: probe({d}) perturbed engine state \
+                                 ({before:#x} -> {after:#x})"
+                            ));
+                        }
+                    }
+                }
+                if !alive {
+                    break;
+                }
+            }
+            if fingerprint(&eng.finish()) != plain {
+                return Err(format!("{kind:?}: probed run diverged from unprobed twin"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn admission_reservations_conserve_capacity() {
+    use dress::live::{AdmissionConfig, AdmissionCtl, TicketId, TicketState};
+    use dress::sched::SchedSnapshot;
+
+    // Random op scripts (probe / reserve / commit / release / degrade /
+    // restore) with monotone time: after every op the capacity ledger
+    // reconciles — available + reserved + committed == total (available
+    // pinned at 0 while an outage leaves total below the held sum) — and
+    // the controller's aggregate counters equal the per-ticket sums an
+    // external observer keeps.  A deterministic epilogue pins exact-tick
+    // expiry: capacity returns at `expires_at`, not one tick before.
+    forall(
+        "reservation conservation",
+        30,
+        |rng| {
+            let total = 2 + (rng.next_u64() % 30) as u32;
+            let timeout = 1 + rng.next_u64() % 4_000;
+            let len = 20 + rng.index(80);
+            let script: Vec<(u8, u64, u32)> = (0..len)
+                .map(|_| {
+                    (
+                        (rng.next_u64() % 6) as u8,
+                        rng.next_u64() % 700,
+                        1 + (rng.next_u64() % 12) as u32,
+                    )
+                })
+                .collect();
+            (total, timeout, script)
+        },
+        |(total, timeout, script)| {
+            let mut ctl = AdmissionCtl::new(AdmissionConfig::enabled(*timeout), *total);
+            let mut now = 0u64;
+            // (id, demand) of every ticket ever granted.
+            let mut tickets: Vec<(TicketId, u32)> = Vec::new();
+            let check = |ctl: &AdmissionCtl, tickets: &[(TicketId, u32)], op: &str| {
+                let held = ctl.reserved() as u64 + ctl.committed() as u64;
+                if held <= ctl.total() as u64 {
+                    if ctl.available() as u64 + held != ctl.total() as u64 {
+                        return Err(format!(
+                            "{op}: {} avail + {held} held != {} total",
+                            ctl.available(),
+                            ctl.total()
+                        ));
+                    }
+                } else if ctl.available() != 0 {
+                    return Err(format!(
+                        "{op}: available {} nonzero while held {held} exceeds degraded total {}",
+                        ctl.available(),
+                        ctl.total()
+                    ));
+                }
+                let sum_in = |want: TicketState| -> u64 {
+                    tickets
+                        .iter()
+                        .filter(|(id, _)| ctl.ticket_state(*id) == Some(want))
+                        .map(|&(_, d)| d as u64)
+                        .sum()
+                };
+                if sum_in(TicketState::Reserved) != ctl.reserved() as u64 {
+                    return Err(format!("{op}: reserved counter != per-ticket sum"));
+                }
+                if sum_in(TicketState::Committed) != ctl.committed() as u64 {
+                    return Err(format!("{op}: committed counter != per-ticket sum"));
+                }
+                if sum_in(TicketState::Expired) != ctl.expired_capacity() {
+                    return Err(format!("{op}: expired_capacity != per-ticket sum"));
+                }
+                Ok(())
+            };
+            for &(op, dt, demand) in script {
+                now += dt;
+                match op {
+                    0 => {
+                        // Probe purity: the controller's Debug state is its
+                        // full state; a probe must not move a byte of it.
+                        let before = format!("{ctl:?}");
+                        let snap = SchedSnapshot::of_view(
+                            now,
+                            ctl.available(),
+                            ctl.total(),
+                            &[],
+                            0.10,
+                            0.10,
+                        );
+                        let _ = ctl.probe(&snap, demand);
+                        if format!("{ctl:?}") != before {
+                            return Err("probe mutated the admission controller".into());
+                        }
+                    }
+                    1 => {
+                        if let Some(id) = ctl.reserve(now, demand) {
+                            if ctl.ticket_state(id) != Some(TicketState::Reserved) {
+                                return Err(format!("fresh ticket {id} not Reserved"));
+                            }
+                            tickets.push((id, demand));
+                        }
+                    }
+                    2 | 3 => {
+                        if !tickets.is_empty() {
+                            let (id, _) = tickets[(dt as usize) % tickets.len()];
+                            if op == 2 {
+                                ctl.commit(now, id);
+                            } else {
+                                ctl.release(now, id);
+                            }
+                        }
+                    }
+                    4 => ctl.set_total(total / 2), // outage halves capacity
+                    _ => ctl.set_total(*total),    // recovery restores it
+                }
+                check(&ctl, &tickets, &format!("op {op} at t={now}"))?;
+            }
+
+            // Exact-tick expiry: restore capacity, grant one reservation,
+            // and watch it flip at precisely `expires_at`.
+            ctl.set_total(*total);
+            ctl.advance(now);
+            if ctl.available() == 0 {
+                return Ok(()); // script left everything legitimately held
+            }
+            let id = ctl
+                .reserve(now, 1)
+                .ok_or("controller refused a 1-slot reservation with capacity available")?;
+            tickets.push((id, 1));
+            let expires = ctl.ticket_expires_at(id).expect("granted ticket has a deadline");
+            ctl.advance(expires - 1);
+            if ctl.ticket_state(id) != Some(TicketState::Reserved) {
+                return Err(format!("ticket {id} expired early (t={} < {expires})", expires - 1));
+            }
+            let avail_before = ctl.available() as u64;
+            // Script tickets reserved at this exact `now` share the
+            // deadline; the tick must return *all* of them, exactly.
+            let due: u64 = tickets
+                .iter()
+                .filter(|&&(tid, _)| {
+                    ctl.ticket_state(tid) == Some(TicketState::Reserved)
+                        && ctl.ticket_expires_at(tid) == Some(expires)
+                })
+                .map(|&(_, d)| d as u64)
+                .sum();
+            ctl.advance(expires);
+            if ctl.ticket_state(id) != Some(TicketState::Expired) {
+                return Err(format!("ticket {id} still held at its deadline {expires}"));
+            }
+            if ctl.available() as u64 != avail_before + due {
+                return Err(format!(
+                    "expiry returned {} slots, expected {due}",
+                    ctl.available() as u64 - avail_before
+                ));
+            }
+            if ctl.commit(expires, id) {
+                return Err(format!("commit at the deadline revived expired ticket {id}"));
+            }
+            check(&ctl, &tickets, "epilogue")?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn paired_delta_ci_sign_consistent_with_per_seed_deltas() {
     use dress::util::stats;
 
