@@ -1,15 +1,16 @@
-//! Perf: scheduler decision latency per heartbeat (all four schedulers)
+//! Perf: scheduler decision latency per heartbeat (all five schedulers)
 //! at 20 and 200 active jobs.  Target: <= 10 µs at 20 jobs (DESIGN.md §8).
 
 use dress::bench_harness::{bench, black_box};
 use dress::config::{SchedConfig, SchedKind};
+use dress::jobs::Demand;
 use dress::sched::{self, ClusterView, JobView};
 
 fn mk_jobs(n: u32) -> Vec<JobView> {
     (0..n)
         .map(|i| JobView {
             id: i + 1,
-            demand: 2 + (i % 24),
+            demand: Demand::scalar(2 + (i % 24)),
             submit_ms: i as u64 * 5_000,
             started: i % 3 == 0,
             finished: false,
@@ -21,7 +22,13 @@ fn mk_jobs(n: u32) -> Vec<JobView> {
 
 fn main() {
     println!("=== perf: scheduler decision per heartbeat ===");
-    for kind in [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress] {
+    for kind in [
+        SchedKind::Fifo,
+        SchedKind::Fair,
+        SchedKind::Capacity,
+        SchedKind::Dress,
+        SchedKind::MaxWeight,
+    ] {
         for njobs in [20u32, 200] {
             let cfg = SchedConfig { kind, ..Default::default() };
             let mut s = sched::build(&cfg, 40);
@@ -31,6 +38,8 @@ fn main() {
                     now: i as u64 * 1_000,
                     free: 12,
                     total: 40,
+                    free_mem: 12,
+                    total_mem: 40,
                     jobs: &jobs,
                     transitions: &[],
                 };

@@ -18,9 +18,15 @@ fn main() {
     println!("DRESS:        makespan {:>5.1}s  avg wait {:>5.1}s  (paper rearranged: 30s / 5.75s)\n",
         r.dress_makespan_s, r.dress_avg_wait_s);
 
-    // All four schedulers on the same workload.
+    // All five schedulers on the same workload.
     let mut rows = Vec::new();
-    for kind in [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress] {
+    for kind in [
+        SchedKind::Fifo,
+        SchedKind::Fair,
+        SchedKind::Capacity,
+        SchedKind::Dress,
+        SchedKind::MaxWeight,
+    ] {
         let mut cfg = ExperimentConfig::default();
         cfg.cluster.nodes = 1;
         cfg.cluster.slots_per_node = 6;

@@ -37,10 +37,10 @@ fn main() -> dress::util::error::Result<()> {
                 t.duration_ms = t.duration_ms.min(2_000);
             }
         }
-        s.demand = s.demand.min(5);
+        s.demand = s.demand.min_each(dress::jobs::Demand::scalar(5));
         s.phases.truncate(2);
     }
-    let small_ids: Vec<u32> = specs.iter().filter(|s| s.demand <= 2).map(|s| s.id).collect();
+    let small_ids: Vec<u32> = specs.iter().filter(|s| s.demand.cpu <= 2).map(|s| s.id).collect();
     println!("e2e: 8 jobs / 6 containers, real PJRT compute per task; small jobs {small_ids:?}\n");
 
     let cfg = LiveConfig {

@@ -13,7 +13,7 @@ const USAGE: &str = "\
 dress — Dynamic RESource-reservation Scheme (paper reproduction)
 
 USAGE:
-  dress run   [--config file.toml] [--sched fifo|fair|capacity|dress]
+  dress run   [--config file.toml] [--sched fifo|fair|capacity|dress|maxweight]
               [--jobs N] [--platform mapreduce|spark|mixed]
               [--small-frac F] [--seed S] [--csv out-prefix]
               [--metric-sink full|counting|ring:N|decimate:K]
@@ -26,7 +26,8 @@ USAGE:
   dress live  [--jobs N] [--workers W] [--sched dress|capacity] [--seed S]
               [--simulate-deaths K] [--admission] [--commit-timeout-ms T]
   dress sweep [--seeds K] [--seed S] [--jobs W | --workers W] [--njobs N]
-              [--platform mapreduce|spark|mixed|burst] [--small-frac F]
+              [--platform mapreduce|spark|mixed|burst|burst-vec] [--small-frac F]
+              [--trace in.trace]
               [--metric-sink full|counting|ring:N|decimate:K]
               [--fault-plan SPEC] [--tune-delta] [--paper] [--shard i/N]
               [--out shard.json] [--report report.txt] [--csv out-prefix]
@@ -34,9 +35,13 @@ USAGE:
               [--csv out-prefix]
   dress bench
 
-`sweep` fans a K-seed x 4-scheduler grid across W worker threads
+`sweep` fans a K-seed x 5-scheduler grid across W worker threads
 (--jobs 0 = all cores; results are bit-identical to --jobs 1) with
-counting trace sinks (O(active) memory).  --paper instead sweeps the
+counting trace sinks (O(active) memory).  --platform burst-vec draws
+stochastic vector (cpu x mem) demands; --trace FILE replays a recorded
+trace instead of a synthetic preset (the trace text is part of the grid
+fingerprint, so trace and synthetic shards refuse to merge).
+--paper instead sweeps the
 DRESS-vs-Capacity pairs behind Figs 7/9 + Table II and reports each
 claim as mean ± 95% CI over seeds, judged on the CI bound.
 --metric-sink bounds what the per-tick utilization/δ streams retain
@@ -245,7 +250,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Run all four schedulers (plus the multi-category DRESS extension) on
+/// Run all five schedulers (plus the multi-category DRESS extension) on
 /// one identical workload and print Table-II rows + fairness.
 fn cmd_compare(args: &Args) -> Result<(), String> {
     let mut cfg = load_config(args)?;
@@ -266,7 +271,13 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
     );
     let mut rows = Vec::new();
     let mut fairness = Vec::new();
-    for kind in [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress] {
+    for kind in [
+        SchedKind::Fifo,
+        SchedKind::Fair,
+        SchedKind::Capacity,
+        SchedKind::Dress,
+        SchedKind::MaxWeight,
+    ] {
         cfg.sched.kind = kind;
         let res = run_experiment(&cfg, specs.clone());
         fairness.push((kind.name().to_string(), crate::metrics::jain_index(&crate::metrics::slowdowns(&res.jobs))));
@@ -435,7 +446,7 @@ fn cmd_live(args: &Args) -> Result<(), String> {
                 t.duration_ms = t.duration_ms.min(4_000);
             }
         }
-        s.demand = s.demand.min(4);
+        s.demand = s.demand.min_each(crate::jobs::Demand::scalar(4));
     }
 
     let deaths = args.flag_u64("simulate-deaths", 0)? as u32;
@@ -513,13 +524,24 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         // Multi-seed claim verification: the Figs 7/9 + Table II pair grid.
         (sweep::paper_grid(&seeds), SweepMode::Paper)
     } else {
-        let mix = WorkloadMix::parse(platform);
-        let workload = match (platform, mix) {
-            ("burst", _) => SweepWorkload::CongestedBurst { n: njobs, arrival_mean_ms: 100 },
-            (_, Ok(mix)) => {
-                SweepWorkload::Generate { n: njobs, mix, small_frac, arrival_ms: 5_000 }
+        // A recorded trace replaces the synthetic preset entirely; its
+        // text rides into the grid fingerprint (content-addressed), so
+        // trace shards and synthetic shards can never be merged.
+        let workload = if let Some(path) = args.flag("trace") {
+            let text =
+                std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+            SweepWorkload::trace(path, text)?
+        } else {
+            match (platform, WorkloadMix::parse(platform)) {
+                ("burst", _) => SweepWorkload::CongestedBurst { n: njobs, arrival_mean_ms: 100 },
+                ("burst-vec", _) => {
+                    SweepWorkload::CongestedBurstVec { n: njobs, arrival_mean_ms: 100 }
+                }
+                (_, Ok(mix)) => {
+                    SweepWorkload::Generate { n: njobs, mix, small_frac, arrival_ms: 5_000 }
+                }
+                (_, Err(e)) => return Err(e),
             }
-            (_, Err(e)) => return Err(e),
         };
         let grid = SweepGrid {
             base: ExperimentConfig::default(),
@@ -529,6 +551,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
                 SchedKind::Fair,
                 SchedKind::Capacity,
                 SchedKind::Dress,
+                SchedKind::MaxWeight,
             ],
             workloads: vec![workload],
             // Counting sinks: a sweep is a throughput tool, keep memory flat.
@@ -730,6 +753,64 @@ mod tests {
     #[test]
     fn sweep_rejects_zero_seeds() {
         assert_eq!(run_cli(&args("sweep --seeds 0")), 1);
+    }
+
+    #[test]
+    fn run_accepts_maxweight_scheduler() {
+        assert_eq!(run_cli(&args("run --jobs 4 --sched maxweight --seed 3")), 0);
+    }
+
+    #[test]
+    fn sweep_runs_burst_vec_platform() {
+        assert_eq!(run_cli(&args("sweep --seeds 2 --njobs 4 --platform burst-vec --seed 7")), 0);
+    }
+
+    /// The checked-in fixture trace (also exercised by the tracefile
+    /// parser tests); paths are whitespace-free so `args()` can split.
+    const FIXTURE_TRACE: &str =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/workload.trace");
+
+    #[test]
+    fn sweep_replays_a_trace_through_shards_and_merge() {
+        // A recorded trace flows through the same shard/merge machinery
+        // as synthetic presets: two shards merge back to the bytes of a
+        // single-process sweep of the same trace.
+        let (s0, s1) = (tmp("trace-shard0.json"), tmp("trace-shard1.json"));
+        let (merged, full) = (tmp("trace-merged.txt"), tmp("trace-full.txt"));
+        let base = format!("sweep --seeds 2 --seed 5 --jobs 2 --trace {FIXTURE_TRACE}");
+        assert_eq!(run_cli(&args(&format!("{base} --shard 0/2 --out {s0}"))), 0);
+        assert_eq!(run_cli(&args(&format!("{base} --shard 1/2 --out {s1}"))), 0);
+        assert_eq!(run_cli(&args(&format!("sweep-merge {s0} {s1} --report {merged}"))), 0);
+        assert_eq!(run_cli(&args(&format!("{base} --report {full}"))), 0);
+        let merged_text = std::fs::read_to_string(&merged).unwrap();
+        assert!(!merged_text.is_empty());
+        assert_eq!(
+            merged_text,
+            std::fs::read_to_string(&full).unwrap(),
+            "merged trace report diverged from full run"
+        );
+    }
+
+    #[test]
+    fn sweep_trace_workload_is_part_of_the_fingerprint() {
+        // A trace shard and a synthetic shard describe different grids
+        // and must refuse to merge.
+        let (a, b) = (tmp("trace-src-a.json"), tmp("trace-src-b.json"));
+        let base = "sweep --seeds 2 --seed 5";
+        assert_eq!(
+            run_cli(&args(&format!("{base} --trace {FIXTURE_TRACE} --shard 0/2 --out {a}"))),
+            0
+        );
+        assert_eq!(run_cli(&args(&format!("{base} --njobs 4 --shard 1/2 --out {b}"))), 0);
+        assert_eq!(run_cli(&args(&format!("sweep-merge {a} {b}"))), 1);
+    }
+
+    #[test]
+    fn sweep_rejects_missing_or_invalid_trace() {
+        assert_eq!(run_cli(&args("sweep --seeds 1 --trace /no/such/file.trace")), 1);
+        let bad = tmp("bad.trace");
+        std::fs::write(&bad, "job zero\n").unwrap();
+        assert_eq!(run_cli(&args(&format!("sweep --seeds 1 --trace {bad}"))), 1);
     }
 
     #[test]

@@ -74,6 +74,9 @@ pub struct Container {
     pub phase: usize,
     pub task: usize,
     pub state: ContainerState,
+    /// Memory units this container occupies on its node
+    /// (`Demand::mem_per_container()`; exactly 1 for scalar demands).
+    pub mem: u32,
     /// When the container entered `state`.
     pub state_since: Time,
     /// When the container entered Running (0 until then).
@@ -85,7 +88,15 @@ pub struct Container {
 }
 
 impl Container {
-    pub fn new(id: ContainerId, node: super::NodeId, job: JobId, phase: usize, task: usize, now: Time) -> Self {
+    pub fn new(
+        id: ContainerId,
+        node: super::NodeId,
+        job: JobId,
+        phase: usize,
+        task: usize,
+        mem: u32,
+        now: Time,
+    ) -> Self {
         Container {
             id,
             node,
@@ -93,6 +104,7 @@ impl Container {
             phase,
             task,
             state: ContainerState::New,
+            mem,
             state_since: now,
             run_start: 0,
             dead: false,
@@ -143,7 +155,7 @@ mod tests {
 
     #[test]
     fn advance_walks_all_states() {
-        let mut c = Container::new(0, 0, 1, 0, 0, 10);
+        let mut c = Container::new(0, 0, 1, 0, 0, 1, 10);
         let mut t = 10;
         for expect in &ContainerState::ALL[1..] {
             t += 5;
@@ -156,7 +168,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "advance on completed")]
     fn advance_past_completed_panics() {
-        let mut c = Container::new(0, 0, 1, 0, 0, 0);
+        let mut c = Container::new(0, 0, 1, 0, 0, 1, 0);
         for _ in 0..6 {
             c.advance(1);
         }

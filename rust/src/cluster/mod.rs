@@ -44,6 +44,27 @@ impl Cluster {
         self.nodes.iter().map(|n| n.capacity).sum()
     }
 
+    /// Live memory capacity (one unit per provisioned slot); crashed
+    /// nodes contribute nothing, mirroring `total`.
+    pub fn total_mem(&self) -> u32 {
+        self.nodes.iter().filter(|n| n.up).map(|n| n.mem_capacity).sum()
+    }
+
+    /// Memory capacity as provisioned, ignoring crashes (mem-axis
+    /// counterpart of `nominal_total`, used for per-axis demand clamping).
+    pub fn nominal_total_mem(&self) -> u32 {
+        self.nodes.iter().map(|n| n.mem_capacity).sum()
+    }
+
+    /// Largest single-node memory capacity as provisioned (crashed nodes
+    /// included — the bound must not shrink during a transient outage).
+    /// This is the widest per-container footprint any node can ever
+    /// host: a job demanding more memory per container than this fits no
+    /// node and would starve forever, so the engine clamps to it.
+    pub fn max_node_mem(&self) -> u32 {
+        self.nodes.iter().map(|n| n.mem_capacity).max().unwrap_or(1)
+    }
+
     /// Currently free slots (the paper's `A_c`).
     pub fn free(&self) -> u32 {
         self.nodes.iter().map(|n| n.free()).sum()
@@ -54,33 +75,53 @@ impl Cluster {
         self.nodes.iter().filter(|n| n.up).map(|n| n.in_use).sum()
     }
 
-    /// Allocate a new container for (job, phase, task) on the least-loaded
-    /// node with a free slot. Returns the container id, or None if full.
+    /// Currently free memory units across live nodes.
+    pub fn free_mem(&self) -> u32 {
+        self.nodes.iter().map(|n| n.mem_free()).sum()
+    }
+
+    /// Currently occupied memory units.
+    pub fn used_mem(&self) -> u32 {
+        self.nodes.iter().filter(|n| n.up).map(|n| n.mem_in_use).sum()
+    }
+
+    /// Allocate a new container of `mem` memory units for (job, phase,
+    /// task) on the least-loaded node with a free slot and enough free
+    /// memory. Returns the container id, or None if no node fits.
+    ///
+    /// For `mem == 1` (every scalar demand) the memory filter is
+    /// implied by `free() > 0`, so node choice is bit-identical to the
+    /// pre-vector scheme: least `in_use` among up nodes with a free slot.
     pub fn allocate(
         &mut self,
         job: JobId,
         phase: usize,
         task: usize,
+        mem: u32,
         now: Time,
     ) -> Option<ContainerId> {
         let node = self
             .nodes
             .iter_mut()
-            .filter(|n| n.up && n.free() > 0)
+            .filter(|n| n.up && n.free() > 0 && n.mem_free() >= mem)
             .min_by_key(|n| n.in_use)?;
         node.in_use += 1;
+        node.mem_in_use += mem;
         let id = self.containers.len() as ContainerId;
-        self.containers.push(Container::new(id, node.id, job, phase, task, now));
+        self.containers.push(Container::new(id, node.id, job, phase, task, mem, now));
         Some(id)
     }
 
-    /// Release the slot held by a completed container.
+    /// Release the slot (and memory) held by a completed container.
     pub fn release(&mut self, cid: ContainerId) {
         let c = &self.containers[cid as usize];
         debug_assert_eq!(c.state, ContainerState::Completed, "release of live container");
+        let mem = c.mem;
         let node = &mut self.nodes[c.node as usize];
         debug_assert!(node.in_use > 0);
+        debug_assert!(node.mem_in_use >= mem);
         node.in_use -= 1;
+        node.mem_in_use -= mem;
     }
 
     /// Crash `node` at time `now`: take it out of capacity and kill every
@@ -92,6 +133,7 @@ impl Cluster {
         debug_assert!(n.up, "fail of already-down node {node}");
         n.up = false;
         n.in_use = 0;
+        n.mem_in_use = 0;
         let mut killed = Vec::new();
         for c in self.containers.iter_mut() {
             if c.node == node && !c.dead && c.state != ContainerState::Completed {
@@ -107,6 +149,7 @@ impl Cluster {
         let n = &mut self.nodes[node as usize];
         debug_assert!(!n.up, "recover of live node {node}");
         debug_assert_eq!(n.in_use, 0, "down node held slots");
+        debug_assert_eq!(n.mem_in_use, 0, "down node held memory");
         n.up = true;
     }
 
@@ -118,9 +161,11 @@ impl Cluster {
         &mut self.containers[cid as usize]
     }
 
-    /// Invariant: free + used == total (checked by property tests).
+    /// Invariant: free + used == total, on both resource axes (checked by
+    /// property tests and engine debug assertions).
     pub fn conservation_holds(&self) -> bool {
         self.free() + self.used() == self.total()
+            && self.free_mem() + self.used_mem() == self.total_mem()
     }
 }
 
@@ -133,29 +178,33 @@ mod tests {
         let mut cl = Cluster::new(5, 8);
         assert_eq!(cl.total(), 40);
         assert_eq!(cl.free(), 40);
-        let c0 = cl.allocate(1, 0, 0, 100).unwrap();
-        let _c1 = cl.allocate(1, 0, 1, 100).unwrap();
+        assert_eq!(cl.total_mem(), 40);
+        assert_eq!(cl.free_mem(), 40);
+        let c0 = cl.allocate(1, 0, 0, 1, 100).unwrap();
+        let _c1 = cl.allocate(1, 0, 1, 1, 100).unwrap();
         assert_eq!(cl.free(), 38);
+        assert_eq!(cl.free_mem(), 38);
         assert!(cl.conservation_holds());
         cl.container_mut(c0).state = ContainerState::Completed;
         cl.release(c0);
         assert_eq!(cl.free(), 39);
+        assert_eq!(cl.free_mem(), 39);
         assert!(cl.conservation_holds());
     }
 
     #[test]
     fn allocate_balances_nodes() {
         let mut cl = Cluster::new(2, 2);
-        let a = cl.allocate(1, 0, 0, 0).unwrap();
-        let b = cl.allocate(1, 0, 1, 0).unwrap();
+        let a = cl.allocate(1, 0, 0, 1, 0).unwrap();
+        let b = cl.allocate(1, 0, 1, 1, 0).unwrap();
         assert_ne!(cl.container(a).node, cl.container(b).node);
     }
 
     #[test]
     fn fail_node_kills_containers_and_drops_capacity() {
         let mut cl = Cluster::new(2, 2);
-        let a = cl.allocate(1, 0, 0, 0).unwrap();
-        let b = cl.allocate(1, 0, 1, 0).unwrap();
+        let a = cl.allocate(1, 0, 0, 1, 0).unwrap();
+        let b = cl.allocate(1, 0, 1, 1, 0).unwrap();
         let victim = cl.container(a).node;
         let killed = cl.fail_node(victim, 50);
         assert_eq!(killed, vec![a]);
@@ -167,23 +216,55 @@ mod tests {
         assert_eq!(cl.free(), 1);
         assert!(cl.conservation_holds());
         // Allocation avoids the down node.
-        let c = cl.allocate(2, 0, 0, 60).unwrap();
+        let c = cl.allocate(2, 0, 0, 1, 60).unwrap();
         assert_ne!(cl.container(c).node, victim);
-        assert!(cl.allocate(2, 0, 1, 60).is_none(), "no slots on the up node left");
+        assert!(cl.allocate(2, 0, 1, 1, 60).is_none(), "no slots on the up node left");
         cl.recover_node(victim);
         assert_eq!(cl.total(), 4);
         assert_eq!(cl.nominal_total(), 4);
+        assert_eq!(cl.nominal_total_mem(), 4);
         assert!(cl.conservation_holds());
-        let d = cl.allocate(2, 0, 1, 70).unwrap();
+        let d = cl.allocate(2, 0, 1, 1, 70).unwrap();
         assert_eq!(cl.container(d).node, victim, "recovered node is emptiest");
     }
 
     #[test]
     fn allocate_exhausts_to_none() {
         let mut cl = Cluster::new(1, 2);
-        assert!(cl.allocate(1, 0, 0, 0).is_some());
-        assert!(cl.allocate(1, 0, 1, 0).is_some());
-        assert!(cl.allocate(1, 0, 2, 0).is_none());
+        assert!(cl.allocate(1, 0, 0, 1, 0).is_some());
+        assert!(cl.allocate(1, 0, 1, 1, 0).is_some());
+        assert!(cl.allocate(1, 0, 2, 1, 0).is_none());
         assert_eq!(cl.free(), 0);
+    }
+
+    #[test]
+    fn memory_binds_before_slots_for_fat_containers() {
+        // 1 node x 4 slots = 4 mem units; 3-unit containers exhaust
+        // memory after one grant even though 3 slots remain.
+        let mut cl = Cluster::new(1, 4);
+        let a = cl.allocate(1, 0, 0, 3, 0).unwrap();
+        assert_eq!(cl.free(), 3);
+        assert_eq!(cl.free_mem(), 1);
+        assert!(cl.conservation_holds());
+        assert!(cl.allocate(1, 0, 1, 3, 0).is_none(), "memory axis must bind");
+        // A thin container still fits.
+        assert!(cl.allocate(1, 0, 1, 1, 0).is_some());
+        // Releasing the fat container returns all 3 units.
+        cl.container_mut(a).state = ContainerState::Completed;
+        cl.release(a);
+        assert_eq!(cl.free_mem(), 3);
+        assert!(cl.conservation_holds());
+    }
+
+    #[test]
+    fn fail_node_zeroes_memory_accounting() {
+        let mut cl = Cluster::new(2, 4);
+        let a = cl.allocate(1, 0, 0, 3, 0).unwrap();
+        let victim = cl.container(a).node;
+        cl.fail_node(victim, 10);
+        assert!(cl.conservation_holds());
+        cl.recover_node(victim);
+        assert_eq!(cl.free_mem(), 8);
+        assert!(cl.conservation_holds());
     }
 }

@@ -4,21 +4,32 @@
 pub type NodeId = u16;
 
 /// One slave node. The paper's testbed has 5 of these (c220g2).
+///
+/// Besides container slots (the cpu axis), every node carries a memory
+/// budget of one unit per slot.  Scalar-demand containers have a
+/// one-unit footprint, so in scalar runs `mem_in_use == in_use` and
+/// `mem_free() == free()` invariantly — the memory axis can never bind.
+/// Vector-demand containers carry `Demand::mem_per_container()` units
+/// each, so a node can run out of memory before it runs out of slots.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Node {
     pub id: NodeId,
-    /// Container slots this node offers.
+    /// Container slots this node offers (cpu-axis capacity).
     pub capacity: u32,
     /// Slots currently held by live containers.
     pub in_use: u32,
+    /// Memory units this node offers: one per slot.
+    pub mem_capacity: u32,
+    /// Memory units currently held by live containers.
+    pub mem_in_use: u32,
     /// False while the node is crashed (fault injection). A down node
-    /// contributes nothing to capacity, free, or used.
+    /// contributes nothing to capacity, free, or used — on either axis.
     pub up: bool,
 }
 
 impl Node {
     pub fn new(id: NodeId, capacity: u32) -> Self {
-        Node { id, capacity, in_use: 0, up: true }
+        Node { id, capacity, in_use: 0, mem_capacity: capacity, mem_in_use: 0, up: true }
     }
 
     pub fn free(&self) -> u32 {
@@ -26,6 +37,13 @@ impl Node {
             return 0;
         }
         self.capacity - self.in_use
+    }
+
+    pub fn mem_free(&self) -> u32 {
+        if !self.up {
+            return 0;
+        }
+        self.mem_capacity - self.mem_in_use
     }
 }
 
@@ -48,7 +66,19 @@ mod tests {
         let mut n = Node::new(0, 8);
         n.up = false;
         assert_eq!(n.free(), 0);
+        assert_eq!(n.mem_free(), 0);
         n.up = true;
         assert_eq!(n.free(), 8);
+        assert_eq!(n.mem_free(), 8);
+    }
+
+    #[test]
+    fn mem_axis_tracks_independently() {
+        let mut n = Node::new(0, 8);
+        assert_eq!(n.mem_capacity, 8, "one memory unit per slot");
+        n.in_use = 2;
+        n.mem_in_use = 6; // two 3-unit containers
+        assert_eq!(n.free(), 6);
+        assert_eq!(n.mem_free(), 2);
     }
 }

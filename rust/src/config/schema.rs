@@ -12,6 +12,8 @@ pub enum SchedKind {
     Fair,
     Capacity,
     Dress,
+    /// Greedy max-weight-over-configurations baseline (sched/maxweight.rs).
+    MaxWeight,
 }
 
 impl SchedKind {
@@ -21,7 +23,10 @@ impl SchedKind {
             "fair" => Ok(SchedKind::Fair),
             "capacity" => Ok(SchedKind::Capacity),
             "dress" => Ok(SchedKind::Dress),
-            other => Err(format!("unknown scheduler `{other}` (fifo|fair|capacity|dress)")),
+            "maxweight" => Ok(SchedKind::MaxWeight),
+            other => {
+                Err(format!("unknown scheduler `{other}` (fifo|fair|capacity|dress|maxweight)"))
+            }
         }
     }
 
@@ -31,6 +36,7 @@ impl SchedKind {
             SchedKind::Fair => "fair",
             SchedKind::Capacity => "capacity",
             SchedKind::Dress => "dress",
+            SchedKind::MaxWeight => "maxweight",
         }
     }
 }
@@ -343,7 +349,7 @@ seed = 7
 
     #[test]
     fn sched_kind_roundtrip() {
-        for k in ["fifo", "fair", "capacity", "dress"] {
+        for k in ["fifo", "fair", "capacity", "dress", "maxweight"] {
             assert_eq!(SchedKind::parse(k).unwrap().name(), k);
         }
     }

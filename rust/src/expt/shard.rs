@@ -14,7 +14,7 @@
 //! the full grid by index.  Because summaries are integers and every
 //! derived statistic is recomputed from them by the same code, the merged
 //! report is byte-identical to a single-process run — proven by
-//! `tests/golden_determinism.rs` for N ∈ {2, 3} over all four schedulers.
+//! `tests/golden_determinism.rs` for N ∈ {2, 3} over all five schedulers.
 
 use crate::expt::experiments::SMALL_DEMAND;
 use crate::expt::paper::{self, SweepClaimCheck};

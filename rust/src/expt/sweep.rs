@@ -20,34 +20,19 @@ use crate::config::{ExperimentConfig, SchedKind};
 use crate::jobs::JobSpec;
 use crate::metrics::compare_small_large;
 use crate::sim::{run_experiment_with, EngineOptions, RunResult};
-use crate::util::Time;
-use crate::workload::{congested_burst, generate, WorkloadMix};
+use crate::workload::WorkloadMix;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::experiments::{ExperimentPair, SMALL_DEMAND};
 
 /// One workload axis point; `build(seed)` materializes the spec list.
-#[derive(Debug, Clone)]
-pub enum SweepWorkload {
-    /// `workload::generate` — the paper's HiBench mixes.
-    Generate { n: u32, mix: WorkloadMix, small_frac: f64, arrival_ms: Time },
-    /// `workload::congested_burst` — heavy-tailed demands, Poisson burst.
-    CongestedBurst { n: u32, arrival_mean_ms: u64 },
-}
-
-impl SweepWorkload {
-    pub fn build(&self, seed: u64) -> Vec<JobSpec> {
-        match *self {
-            SweepWorkload::Generate { n, mix, small_frac, arrival_ms } => {
-                generate(n, mix, small_frac, arrival_ms, seed)
-            }
-            SweepWorkload::CongestedBurst { n, arrival_mean_ms } => {
-                congested_burst(n, arrival_mean_ms, seed)
-            }
-        }
-    }
-}
+///
+/// An alias for [`crate::workload::WorkloadSource`] — the enum moved to
+/// the workload layer when trace ingestion joined the sweep grid (its
+/// variant set, field names, and `Debug` form are unchanged, so existing
+/// grid fingerprints are preserved).
+pub use crate::workload::WorkloadSource as SweepWorkload;
 
 /// The full sweep specification: every (workload, sched, seed) cell runs
 /// `base` with that scheduler and that seed.

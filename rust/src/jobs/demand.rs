@@ -1,0 +1,185 @@
+//! Vector resource demands: CPU containers × memory units.
+//!
+//! The paper's `r_i` is a scalar container count.  Real congested platforms
+//! (and the max-weight setting of Psychas & Ghaderi, arXiv 1901.05998)
+//! schedule over resource *vectors*.  `Demand` generalizes `r_i` to a
+//! fixed-2-axis vector while keeping the scalar world as a strict special
+//! case: `Demand::scalar(n)` puts `n` on both axes, and every scheduler
+//! decision on a uniform demand reduces to exactly the old scalar
+//! arithmetic on axis 0 (see docs/RESOURCES.md for the proof obligations).
+//!
+//! Axis semantics:
+//! - axis 0 (`cpu`): containers requested — the grant currency, identical
+//!   to the old scalar `demand`.  One task occupies one container.
+//! - axis 1 (`mem`): job-level memory units.  Each launched container
+//!   carries a footprint of `mem_per_container()` units on its node.
+
+use std::fmt;
+
+/// Number of resource axes (fixed: CPU containers and memory units).
+pub const DEMAND_AXES: usize = 2;
+
+/// Human-readable axis names, indexed by axis number.  Used by
+/// `JobSpec::validate` errors and the docs so messages name the axis.
+pub const DEMAND_AXIS_NAMES: [&str; DEMAND_AXES] = ["cpu", "mem"];
+
+/// A per-job resource demand vector.
+///
+/// Ordering is lexicographic (cpu, then mem); for uniform demands this is
+/// identical to ordering by the old scalar value, which keeps pre-refactor
+/// sort orders intact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Demand {
+    /// Containers requested (the paper's `r_i`, the SD/LD key on axis 0).
+    pub cpu: u32,
+    /// Job-level memory units spread across the granted containers.
+    pub mem: u32,
+}
+
+impl Demand {
+    /// A true vector demand.
+    pub const fn new(cpu: u32, mem: u32) -> Self {
+        Demand { cpu, mem }
+    }
+
+    /// Compatibility constructor: the scalar world.  `scalar(n)` demands
+    /// `n` containers each carrying exactly one memory unit, so memory
+    /// never binds and every per-axis check degenerates to the cpu axis.
+    pub const fn scalar(n: u32) -> Self {
+        Demand { cpu: n, mem: n }
+    }
+
+    /// True for demands produced by `scalar` — both axes equal.
+    pub const fn is_uniform(self) -> bool {
+        self.cpu == self.mem
+    }
+
+    /// Axis accessor, `a < DEMAND_AXES`.
+    pub fn axis(self, a: usize) -> u32 {
+        match a {
+            0 => self.cpu,
+            1 => self.mem,
+            _ => panic!("demand axis {a} out of range"),
+        }
+    }
+
+    /// Memory footprint of one launched container: the job-level memory
+    /// demand split evenly over its containers, rounded up.  Exactly 1 for
+    /// uniform demands, so scalar runs consume one memory unit per slot.
+    pub fn mem_per_container(self) -> u32 {
+        self.mem.div_ceil(self.cpu.max(1))
+    }
+
+    /// Per-axis minimum (used for demand caps: both axes are clamped, so a
+    /// uniform demand stays uniform).
+    pub fn min_each(self, other: Demand) -> Demand {
+        Demand { cpu: self.cpu.min(other.cpu), mem: self.mem.min(other.mem) }
+    }
+
+    /// Dominant-resource axis against a capacity vector: the axis where
+    /// this demand claims the largest share of `total`.  Ties break toward
+    /// axis 0, so uniform demands against uniform capacity always pick the
+    /// cpu axis — the pre-refactor classification key.
+    pub fn dominant_axis(self, total: Demand) -> usize {
+        let share0 = self.cpu as f64 / total.cpu.max(1) as f64;
+        let share1 = self.mem as f64 / total.mem.max(1) as f64;
+        if share1 > share0 { 1 } else { 0 }
+    }
+
+    /// Parse a tracefile demand token: `"4"` (uniform) or `"4x8"`
+    /// (cpu x mem).  Errors mention "demand" so tracefile diagnostics
+    /// keep naming the offending column.
+    pub fn parse(token: &str) -> Result<Demand, String> {
+        match token.split_once('x') {
+            None => {
+                let n: u32 =
+                    token.parse().map_err(|e| format!("demand {token:?}: {e}"))?;
+                Ok(Demand::scalar(n))
+            }
+            Some((c, m)) => {
+                let cpu: u32 =
+                    c.parse().map_err(|e| format!("demand cpu axis {c:?}: {e}"))?;
+                let mem: u32 =
+                    m.parse().map_err(|e| format!("demand mem axis {m:?}: {e}"))?;
+                Ok(Demand { cpu, mem })
+            }
+        }
+    }
+}
+
+/// Renders uniform demands as the bare scalar (`4`) and vector demands as
+/// `cpu x mem` (`4x8`) — the tracefile token format.  `parse ∘ render` is
+/// the identity, which the tracefile fixed-point property pins.
+impl fmt::Display for Demand {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_uniform() {
+            write!(f, "{}", self.cpu)
+        } else {
+            write!(f, "{}x{}", self.cpu, self.mem)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_uniform_and_unit_footprint() {
+        let d = Demand::scalar(7);
+        assert_eq!(d.cpu, 7);
+        assert_eq!(d.mem, 7);
+        assert!(d.is_uniform());
+        assert_eq!(d.mem_per_container(), 1);
+    }
+
+    #[test]
+    fn vector_footprint_rounds_up() {
+        assert_eq!(Demand::new(4, 8).mem_per_container(), 2);
+        assert_eq!(Demand::new(4, 9).mem_per_container(), 3);
+        assert_eq!(Demand::new(3, 1).mem_per_container(), 1);
+        // Degenerate zero-cpu demand must not divide by zero (validate
+        // rejects it before any scheduler sees it).
+        assert_eq!(Demand::new(0, 5).mem_per_container(), 5);
+    }
+
+    #[test]
+    fn dominant_axis_ties_to_cpu() {
+        let total = Demand::scalar(40);
+        assert_eq!(Demand::scalar(10).dominant_axis(total), 0);
+        assert_eq!(Demand::new(4, 20).dominant_axis(total), 1);
+        assert_eq!(Demand::new(20, 4).dominant_axis(total), 0);
+        // Equal shares on a non-uniform demand still pick axis 0.
+        assert_eq!(Demand::new(10, 20).dominant_axis(Demand::new(40, 80)), 0);
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        for d in [Demand::scalar(1), Demand::scalar(30), Demand::new(4, 8), Demand::new(2, 17)] {
+            assert_eq!(Demand::parse(&d.to_string()).unwrap(), d);
+        }
+        assert_eq!(Demand::parse("4").unwrap(), Demand::scalar(4));
+        assert_eq!(Demand::parse("4x8").unwrap(), Demand::new(4, 8));
+    }
+
+    #[test]
+    fn parse_errors_name_the_demand_column() {
+        for bad in ["lots", "4xfoo", "x8", ""] {
+            let err = Demand::parse(bad).unwrap_err();
+            assert!(err.contains("demand"), "error should mention demand: {err}");
+        }
+    }
+
+    #[test]
+    fn ordering_matches_scalar_for_uniform() {
+        let mut v = vec![Demand::scalar(9), Demand::scalar(2), Demand::scalar(5)];
+        v.sort();
+        assert_eq!(v, vec![Demand::scalar(2), Demand::scalar(5), Demand::scalar(9)]);
+    }
+
+    #[test]
+    fn min_each_clamps_per_axis() {
+        assert_eq!(Demand::new(10, 40).min_each(Demand::scalar(8)), Demand::new(8, 8));
+        assert_eq!(Demand::scalar(3).min_each(Demand::scalar(8)), Demand::scalar(3));
+    }
+}

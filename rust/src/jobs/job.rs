@@ -134,6 +134,7 @@ impl JobRt {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::jobs::demand::Demand;
     use crate::jobs::spec::{PhaseKind, PhaseSpec, Platform};
 
     fn rt() -> JobRt {
@@ -142,7 +143,7 @@ mod tests {
             name: "sort".into(),
             platform: Platform::MapReduce,
             submit_ms: 1_000,
-            demand: 2,
+            demand: Demand::scalar(2),
             phases: vec![
                 PhaseSpec::new(PhaseKind::Map, &[5_000, 6_000]),
                 PhaseSpec::new(PhaseKind::Reduce, &[4_000]),

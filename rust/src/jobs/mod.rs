@@ -7,10 +7,12 @@
 //! boundaries).  A job's *resource demand* `r_i` is the number of containers
 //! it requests from the scheduler.
 
+pub mod demand;
 pub mod job;
 pub mod spec;
 pub mod store;
 
+pub use demand::{Demand, DEMAND_AXES, DEMAND_AXIS_NAMES};
 pub use job::{JobRt, TaskRt, TaskState};
 pub use spec::{JobId, JobSpec, PhaseKind, PhaseSpec, Platform, TaskSpec};
 pub use store::{JobLayout, JobStore};

@@ -1,6 +1,7 @@
 //! Immutable job specifications (what the workload generator produces and
 //! the simulator consumes).
 
+use crate::jobs::demand::{Demand, DEMAND_AXIS_NAMES};
 use crate::util::Time;
 
 /// Job identifier (index into the experiment's job list, 1-based in reports
@@ -69,8 +70,11 @@ pub struct JobSpec {
     pub platform: Platform,
     /// Submission time (ms since experiment start).
     pub submit_ms: Time,
-    /// Containers requested — the paper's `r_i`, the SD/LD classification key.
-    pub demand: u32,
+    /// Resource demand vector.  Axis 0 (cpu) is the paper's `r_i` — the
+    /// containers requested and the SD/LD classification key; axis 1 (mem)
+    /// is the job-level memory footprint.  `Demand::scalar(n)` reproduces
+    /// the pre-vector scalar world exactly.
+    pub demand: Demand,
     pub phases: Vec<PhaseSpec>,
 }
 
@@ -101,7 +105,16 @@ impl JobSpec {
             .sum()
     }
 
-    /// Structural validity: at least one phase, no empty phase, demand >= 1.
+    /// Structural validity: at least one phase, no empty phase, a nonzero
+    /// demand on every axis, no zero-length task.
+    ///
+    /// For *vector* (non-uniform) demands the widest phase must also fit
+    /// inside the per-axis demand: a phase wider than the cpu axis could
+    /// never reach full parallelism on the requested containers, and a
+    /// phase wider than the mem axis would imply sub-unit per-container
+    /// memory.  Uniform (scalar-compatibility) demands keep the historical
+    /// wave semantics — generated workloads legitimately cap `demand`
+    /// below the widest phase and run it in multiple waves.
     pub fn validate(&self) -> Result<(), String> {
         if self.phases.is_empty() {
             return Err(format!("job {} has no phases", self.id));
@@ -109,8 +122,32 @@ impl JobSpec {
         if self.phases.iter().any(|p| p.tasks.is_empty()) {
             return Err(format!("job {} has an empty phase", self.id));
         }
-        if self.demand == 0 {
-            return Err(format!("job {} demands 0 containers", self.id));
+        if self.demand.cpu == 0 {
+            return Err(format!(
+                "job {} demands 0 containers on the {} axis",
+                self.id, DEMAND_AXIS_NAMES[0]
+            ));
+        }
+        if self.demand.mem == 0 {
+            return Err(format!(
+                "job {} demands 0 memory units on the {} axis",
+                self.id, DEMAND_AXIS_NAMES[1]
+            ));
+        }
+        if !self.demand.is_uniform() {
+            let width = self.max_phase_width();
+            if width > self.demand.cpu {
+                return Err(format!(
+                    "job {} widest phase ({} tasks) exceeds its {}-axis demand {}",
+                    self.id, width, DEMAND_AXIS_NAMES[0], self.demand.cpu
+                ));
+            }
+            if width > self.demand.mem {
+                return Err(format!(
+                    "job {} widest phase ({} tasks) exceeds its {}-axis demand {}",
+                    self.id, width, DEMAND_AXIS_NAMES[1], self.demand.mem
+                ));
+            }
         }
         if self.phases.iter().any(|p| p.tasks.iter().any(|t| t.duration_ms == 0)) {
             return Err(format!("job {} has a zero-length task", self.id));
@@ -129,7 +166,7 @@ mod tests {
             name: "wordcount".into(),
             platform: Platform::MapReduce,
             submit_ms: 0,
-            demand: 4,
+            demand: Demand::scalar(4),
             phases: vec![
                 PhaseSpec::new(PhaseKind::Map, &[10_000, 12_000, 11_000]),
                 PhaseSpec::new(PhaseKind::Reduce, &[8_000]),
@@ -150,7 +187,7 @@ mod tests {
     #[test]
     fn validation_rejects_bad_specs() {
         let mut s = spec();
-        s.demand = 0;
+        s.demand = Demand::scalar(0);
         assert!(s.validate().is_err());
 
         let mut s = spec();
@@ -164,5 +201,42 @@ mod tests {
         let mut s = spec();
         s.phases[1].tasks[0].duration_ms = 0;
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validation_names_the_zero_axis() {
+        let mut s = spec();
+        s.demand = Demand::new(4, 0);
+        let err = s.validate().unwrap_err();
+        assert!(err.contains("mem"), "should name the mem axis: {err}");
+
+        let mut s = spec();
+        s.demand = Demand::new(0, 4);
+        let err = s.validate().unwrap_err();
+        assert!(err.contains("cpu"), "should name the cpu axis: {err}");
+    }
+
+    #[test]
+    fn vector_demand_rejects_phase_wider_than_axis() {
+        // Widest phase is 3 tasks; a vector demand of 2 containers can
+        // never run it at full width, and the error names the cpu axis.
+        let mut s = spec();
+        s.demand = Demand::new(2, 8);
+        let err = s.validate().unwrap_err();
+        assert!(err.contains("cpu"), "should name the cpu axis: {err}");
+
+        // A vector demand wide enough on both axes is fine.
+        let mut s = spec();
+        s.demand = Demand::new(3, 9);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn uniform_demand_keeps_wave_semantics() {
+        // Scalar-compatibility demands may sit below the widest phase —
+        // generated workloads cap demand and run wide phases in waves.
+        let mut s = spec();
+        s.demand = Demand::scalar(2);
+        assert!(s.validate().is_ok(), "uniform demand below phase width must stay legal");
     }
 }

@@ -22,6 +22,7 @@
 //! only memory traffic.  See docs/PERFORMANCE.md §"Memory layout &
 //! batching".
 
+use super::demand::Demand;
 use super::job::{JobRt, TaskState};
 use super::spec::{JobId, JobSpec};
 use crate::cluster::ContainerId;
@@ -92,8 +93,9 @@ impl JobStore {
         }
     }
 
-    /// Raw requested demand (`r_i`), unclamped — view construction clamps.
-    pub fn demand(&self, slot: usize) -> u32 {
+    /// Raw requested demand vector (axis 0 is the paper's `r_i`),
+    /// unclamped — view construction clamps per axis.
+    pub fn demand(&self, slot: usize) -> Demand {
         match self {
             JobStore::Aos(s) => s.jobs[slot].spec.demand,
             JobStore::Soa(s) => s.demand[slot],
@@ -329,8 +331,9 @@ impl AosStore {
 /// flat task lanes, which are addressed through `task_off`/`phase_off`.
 #[derive(Debug, Clone)]
 pub struct SoaStore {
-    // Hot per-job lanes (slot-parallel).
-    demand: Vec<u32>,
+    // Hot per-job lanes (slot-parallel).  The demand lane is the full
+    // vector (8 bytes/slot) — axis 0 stays the grant currency.
+    demand: Vec<Demand>,
     submit_ms: Vec<Time>,
     submitted: Vec<bool>,
     cur_phase: Vec<u32>,
@@ -471,7 +474,7 @@ impl SoaStore {
         let completion = self.finish[slot].saturating_sub(submit);
         JobMetrics {
             id: self.specs[slot].id,
-            demand: self.demand[slot],
+            demand: self.demand[slot].cpu,
             submit_ms: submit,
             waiting_ms: waiting,
             completion_ms: completion,
@@ -491,7 +494,7 @@ mod tests {
             name: format!("j{id}"),
             platform: Platform::MapReduce,
             submit_ms: id as Time * 1_000,
-            demand: 2,
+            demand: Demand::scalar(2),
             phases: phases
                 .iter()
                 .map(|durs| PhaseSpec::new(PhaseKind::Map, durs))
@@ -513,7 +516,7 @@ mod tests {
             let l = st.layout();
             assert_eq!(st.len(), 2, "{l:?}");
             assert_eq!(st.id(0), 1, "{l:?}");
-            assert_eq!(st.demand(1), 2, "{l:?}");
+            assert_eq!(st.demand(1), Demand::scalar(2), "{l:?}");
             assert_eq!(st.submit_ms(1), 2_000, "{l:?}");
             assert_eq!(st.pending_tasks(0), 2, "{l:?}");
             assert_eq!(st.remaining_tasks(0), 3, "{l:?}");

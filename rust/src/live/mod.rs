@@ -20,7 +20,7 @@ pub use admission::{
 use crate::bail;
 use crate::cluster::{ContainerState, Transition};
 use crate::config::SchedConfig;
-use crate::jobs::{JobId, JobSpec};
+use crate::jobs::{Demand, JobId, JobSpec};
 use crate::metrics::JobMetrics;
 use crate::runtime::{Runtime, TaskWork};
 use crate::sched::shadow::SchedSnapshot;
@@ -418,7 +418,7 @@ pub fn run_live(
                 .filter(|j| j.submitted)
                 .map(|j| JobView {
                     id: j.spec.id,
-                    demand: j.spec.demand.min(total),
+                    demand: j.spec.demand.min_each(Demand::scalar(total)),
                     submit_ms: j.spec.submit_ms,
                     started: j.first_start.is_some() || j.occupied > 0,
                     finished: j.terminal(),
@@ -438,7 +438,7 @@ pub fn run_live(
                 if j.submitted || j.spec.submit_ms > now || j.terminal() {
                     continue;
                 }
-                let demand = j.spec.demand.min(total).max(1);
+                let demand = j.spec.demand.cpu.min(total).max(1);
                 admission_probes += 1;
                 if ctl.probe(&snap, demand).decision != ProbeDecision::Admit {
                     continue;
@@ -475,7 +475,7 @@ pub fn run_live(
             .filter(|j| j.submitted)
             .map(|j| JobView {
                 id: j.spec.id,
-                demand: j.spec.demand.min(total),
+                demand: j.spec.demand.min_each(Demand::scalar(total)),
                 submit_ms: j.spec.submit_ms,
                 started: j.first_start.is_some() || j.occupied > 0,
                 finished: j.terminal(),
@@ -483,10 +483,19 @@ pub fn run_live(
                 occupied: j.occupied,
             })
             .collect();
+        // Live workers have one memory unit per slot; held containers debit
+        // their per-container footprint (exactly 1 for uniform demands, so
+        // the mem axis mirrors the slot axis on scalar workloads).
+        let mem_occupied: u32 = jobs
+            .iter()
+            .map(|j| j.occupied * j.spec.demand.mem_per_container().max(1))
+            .sum();
         let view = ClusterView {
             now,
             free: total.saturating_sub(occupied_total),
             total,
+            free_mem: total.saturating_sub(mem_occupied),
+            total_mem: total,
             jobs: &view_jobs,
             transitions: &transitions,
         };
@@ -565,7 +574,7 @@ pub fn run_live(
             let completion = finish.saturating_sub(j.spec.submit_ms);
             Some(JobMetrics {
                 id: j.spec.id,
-                demand: j.spec.demand,
+                demand: j.spec.demand.cpu,
                 submit_ms: j.spec.submit_ms,
                 waiting_ms: waiting,
                 completion_ms: completion,
@@ -624,7 +633,7 @@ mod tests {
                 name: "t".into(),
                 platform: crate::jobs::Platform::MapReduce,
                 submit_ms: 0,
-                demand: 2,
+                demand: Demand::scalar(2),
                 phases: vec![],
             },
             cur_phase: 0,

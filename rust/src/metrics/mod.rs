@@ -15,6 +15,9 @@ use crate::util::Time;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct JobMetrics {
     pub id: JobId,
+    /// Container (cpu-axis) demand — the grant currency and the SD/LD
+    /// reporting key.  Kept `u32` so shard wire records and claim CSVs
+    /// are unchanged by the vector-demand redesign.
     pub demand: u32,
     pub submit_ms: Time,
     /// Submission -> first task Running.
@@ -31,7 +34,7 @@ impl JobMetrics {
         let completion = job.completion_ms().expect("job never finished");
         JobMetrics {
             id: job.id(),
-            demand: job.spec.demand,
+            demand: job.spec.demand.cpu,
             submit_ms: job.spec.submit_ms,
             waiting_ms: waiting,
             completion_ms: completion,

@@ -70,7 +70,7 @@ impl Scheduler for CapacityScheduler {
             }
             let cap = (self.queue_caps[q] * view.total as f64).round() as u32;
             let head_room = cap.saturating_sub(used[q]).min(free);
-            let want = j.demand.min(j.pending_tasks);
+            let want = j.demand.cpu.min(j.pending_tasks);
             if want == 0 {
                 continue;
             }

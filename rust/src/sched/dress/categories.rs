@@ -8,7 +8,7 @@
 //! containers observed at that moment — so the same demand can land in
 //! different categories under different congestion, exactly as on YARN.
 
-use crate::jobs::JobId;
+use crate::jobs::{Demand, JobId};
 
 /// Job category.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,10 +45,23 @@ impl Classifier {
         Classifier { theta, assigned: Vec::new() }
     }
 
-    /// Classify `job` with `demand` containers against `available` (A_c) —
-    /// but use the total as a floor reference when the cluster is drained
-    /// (A_c = 0 would otherwise make every job LD).
-    pub fn classify(&mut self, job: JobId, demand: u32, available: u32, total: u32) -> Category {
+    /// Classify `job` with a `demand` vector against the `available` (A_c)
+    /// and `total` capacity vectors — but use the total as a floor
+    /// reference when the cluster is drained (A_c = 0 would otherwise make
+    /// every job LD).
+    ///
+    /// Vector generalization (docs/RESOURCES.md): the θ rule is applied on
+    /// the job's *dominant* resource axis — the axis where it claims the
+    /// largest share of the reference capacity — with ties breaking to the
+    /// cpu axis.  Every uniform (scalar) demand ties, so scalar runs
+    /// classify on exactly the pre-vector cpu-axis arithmetic.
+    pub fn classify(
+        &mut self,
+        job: JobId,
+        demand: Demand,
+        available: Demand,
+        total: Demand,
+    ) -> Category {
         if let Some(c) = self.get(job) {
             return c;
         }
@@ -58,9 +71,12 @@ impl Classifier {
         // congestion (A_c -> 0 makes every job LD), so we take the larger of
         // the two references: idle cluster => identical to the paper's rule,
         // congested => stable. Recorded as a substitution in DESIGN.md.
-        let _ = available;
-        let reference = available.max(total).max(1);
-        let cat = if (demand as f64) > self.theta * reference as f64 {
+        let reference = Demand::new(
+            available.cpu.max(total.cpu).max(1),
+            available.mem.max(total.mem).max(1),
+        );
+        let axis = demand.dominant_axis(reference);
+        let cat = if (demand.axis(axis) as f64) > self.theta * reference.axis(axis) as f64 {
             Category::Ld
         } else {
             Category::Sd
@@ -87,22 +103,26 @@ impl Classifier {
 mod tests {
     use super::*;
 
+    fn s(n: u32) -> Demand {
+        Demand::scalar(n)
+    }
+
     #[test]
     fn small_vs_large_at_idle_cluster() {
         let mut c = Classifier::new(0.10);
         // Idle 40-container cluster: threshold = 4 containers.
-        assert_eq!(c.classify(1, 3, 40, 40), Category::Sd);
-        assert_eq!(c.classify(2, 4, 40, 40), Category::Sd);
-        assert_eq!(c.classify(3, 5, 40, 40), Category::Ld);
-        assert_eq!(c.classify(4, 30, 40, 40), Category::Ld);
+        assert_eq!(c.classify(1, s(3), s(40), s(40)), Category::Sd);
+        assert_eq!(c.classify(2, s(4), s(40), s(40)), Category::Sd);
+        assert_eq!(c.classify(3, s(5), s(40), s(40)), Category::Ld);
+        assert_eq!(c.classify(4, s(30), s(40), s(40)), Category::Ld);
     }
 
     #[test]
     fn classification_is_sticky() {
         let mut c = Classifier::new(0.10);
-        assert_eq!(c.classify(1, 3, 40, 40), Category::Sd);
+        assert_eq!(c.classify(1, s(3), s(40), s(40)), Category::Sd);
         // Same job re-observed under drained cluster: unchanged.
-        assert_eq!(c.classify(1, 3, 0, 40), Category::Sd);
+        assert_eq!(c.classify(1, s(3), s(0), s(40)), Category::Sd);
         assert_eq!(c.get(1), Some(Category::Sd));
         assert_eq!(c.get(99), None);
     }
@@ -112,8 +132,20 @@ mod tests {
         let mut c = Classifier::new(0.10);
         // A_c = 0 on a 40-container cluster: threshold stays 4, so a
         // 3-container job is still SD (raw A_c would make everything LD).
-        assert_eq!(c.classify(1, 3, 0, 40), Category::Sd);
-        assert_eq!(c.classify(2, 5, 0, 40), Category::Ld);
+        assert_eq!(c.classify(1, s(3), s(0), s(40)), Category::Sd);
+        assert_eq!(c.classify(2, s(5), s(0), s(40)), Category::Ld);
+    }
+
+    #[test]
+    fn dominant_axis_drives_vector_classification() {
+        let mut c = Classifier::new(0.10);
+        // 3 containers (SD-sized on cpu) but 20/40 of the memory: the mem
+        // axis dominates and pushes the job into LD.
+        assert_eq!(c.classify(1, Demand::new(3, 20), s(40), s(40)), Category::Ld);
+        // Memory-light vector job stays governed by the cpu axis.
+        assert_eq!(c.classify(2, Demand::new(3, 4), s(40), s(40)), Category::Sd);
+        // cpu-dominant wide job is LD by the scalar rule regardless of mem.
+        assert_eq!(c.classify(3, Demand::new(30, 30), s(40), s(40)), Category::Ld);
     }
 
     #[test]

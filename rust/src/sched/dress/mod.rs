@@ -126,7 +126,11 @@ impl DressScheduler {
         for j in view.jobs.iter().filter(|j| !j.finished) {
             present.insert(j.id);
             if self.tracked.insert(j.id) {
-                self.window.push(ShadowEvent::Submit { job: j.id, demand: j.demand, at: now });
+                self.window.push(ShadowEvent::Submit {
+                    job: j.id,
+                    demand: j.demand.cpu,
+                    at: now,
+                });
             }
         }
         // Jobs that left the view (finished, then tombstoned or compacted
@@ -169,20 +173,34 @@ impl DressScheduler {
     /// (used when LD admits while no SD job is waiting — without it, a job
     /// demanding more than the LD quota could starve forever even on an
     /// idle cluster).  Deducted only after the own pool is exhausted.
+    ///
+    /// `free_mem` is the memory-axis headroom: each grant of `n` containers
+    /// to a job with per-container footprint `m` consumes `n·m` units, and
+    /// grants are clamped so the footprint always fits.  In scalar runs
+    /// `m == 1` and `free_mem` starts equal to `free` and is debited
+    /// identically, so the clamp is a provable no-op (see
+    /// docs/RESOURCES.md).
     fn admit_category(
         &self,
         waiting: &[&JobView],
         pool_free: &mut u32,
         borrow: &mut u32,
         free: &mut u32,
+        free_mem: &mut u32,
         allocs: &mut Vec<Allocation>,
     ) {
-        let mut grant = |j: &JobView, pool_free: &mut u32, borrow: &mut u32, free: &mut u32| -> Option<u32> {
-            let want = j.demand.min(j.pending_tasks);
+        let mut grant = |j: &JobView,
+                         pool_free: &mut u32,
+                         borrow: &mut u32,
+                         free: &mut u32,
+                         free_mem: &mut u32|
+         -> Option<u32> {
+            let mpt = j.demand.mem_per_container().max(1);
+            let want = j.demand.cpu.min(j.pending_tasks);
             if want == 0 {
                 return Some(0);
             }
-            let room = (*pool_free + *borrow).min(*free);
+            let room = (*pool_free + *borrow).min(*free).min(*free_mem / mpt);
             if self.gang && want > room {
                 return None;
             }
@@ -194,12 +212,13 @@ impl DressScheduler {
             *pool_free -= own;
             *borrow -= n - own;
             *free -= n;
+            *free_mem -= n * mpt;
             Some(n)
         };
         // First pass: FCFS gang.
         let mut blocked: Vec<&JobView> = Vec::new();
         for j in waiting {
-            match grant(j, pool_free, borrow, free) {
+            match grant(j, pool_free, borrow, free, free_mem) {
                 Some(n) if n > 0 => {
                     allocs.push(Allocation { job: j.id, n });
                 }
@@ -209,9 +228,11 @@ impl DressScheduler {
         }
         // Second pass (Algorithm 3 lines 12-20): ascending-demand packing of
         // the blocked jobs — small requests squeeze into the remainder.
-        blocked.sort_by_key(|j| (j.demand, j.submit_ms));
+        // Demand order is the cpu axis (the grant currency); for uniform
+        // demands this is exactly the pre-vector scalar order.
+        blocked.sort_by_key(|j| (j.demand.cpu, j.submit_ms));
         for j in blocked {
-            if let Some(n) = grant(j, pool_free, borrow, free) {
+            if let Some(n) = grant(j, pool_free, borrow, free, free_mem) {
                 if n > 0 {
                     allocs.push(Allocation { job: j.id, n });
                 }
@@ -241,7 +262,8 @@ impl Scheduler for DressScheduler {
         // (1) classify new arrivals against observed A_c.
         for j in view.jobs {
             if self.classifier.get(j.id).is_none() {
-                let cat = self.classifier.classify(j.id, j.demand, view.free, view.total);
+                let cat =
+                    self.classifier.classify(j.id, j.demand, view.free_vec(), view.total_vec());
                 self.estimator.register(j.id, cat.index());
             }
         }
@@ -319,8 +341,10 @@ impl Scheduler for DressScheduler {
         let ac2 = ld_quota
             .saturating_sub(occ_ld)
             .min(view.free.saturating_sub(ac1 as u32)) as f64;
-        let mut sd_demands: Vec<u32> = sd_wait.iter().map(|j| j.demand).collect();
-        let mut ld_demands: Vec<u32> = ld_wait.iter().map(|j| j.demand).collect();
+        // Reserve arithmetic stays on the cpu axis — δ splits the grant
+        // currency; the mem axis is enforced as a feasibility clamp below.
+        let mut sd_demands: Vec<u32> = sd_wait.iter().map(|j| j.demand.cpu).collect();
+        let mut ld_demands: Vec<u32> = ld_wait.iter().map(|j| j.demand.cpu).collect();
         sd_demands.sort_unstable();
         ld_demands.sort_unstable();
         if !self.freeze_delta {
@@ -349,35 +373,53 @@ impl Scheduler for DressScheduler {
         let mut sd_free = sd_quota.saturating_sub(occ_sd);
         let mut ld_free = ld_quota.saturating_sub(occ_ld);
         let mut free = view.free;
+        let mut free_mem = view.free_mem;
         let mut allocs: Vec<Allocation> = Vec::new();
 
-        // 4a. refill running jobs from their own pools.
+        // 4a. refill running jobs from their own pools (mem clamp is a
+        // no-op for scalar demands: mpt == 1 and free_mem tracks free).
         for j in &running {
             if free == 0 {
                 break;
             }
-            let budget = j.demand.saturating_sub(j.occupied).min(j.pending_tasks);
+            let budget = j.demand.cpu.saturating_sub(j.occupied).min(j.pending_tasks);
             if budget == 0 {
                 continue;
             }
+            let mpt = j.demand.mem_per_container().max(1);
             let pool = match self.category(j.id) {
                 Category::Sd => &mut sd_free,
                 Category::Ld => &mut ld_free,
             };
-            let n = budget.min(*pool).min(free);
+            let n = budget.min(*pool).min(free).min(free_mem / mpt);
             if n > 0 {
                 allocs.push(Allocation { job: j.id, n });
                 *pool -= n;
                 free -= n;
+                free_mem -= n * mpt;
             }
         }
 
         // 4b. admit waiting jobs per category.
         let mut no_borrow = 0u32;
-        self.admit_category(&sd_wait, &mut sd_free, &mut no_borrow, &mut free, &mut allocs);
+        self.admit_category(
+            &sd_wait,
+            &mut sd_free,
+            &mut no_borrow,
+            &mut free,
+            &mut free_mem,
+            &mut allocs,
+        );
         // LD may borrow the idle SD reserve when no SD job is waiting for it.
         let mut sd_idle = if sd_wait.is_empty() { sd_free } else { 0 };
-        self.admit_category(&ld_wait, &mut ld_free, &mut sd_idle, &mut free, &mut allocs);
+        self.admit_category(
+            &ld_wait,
+            &mut ld_free,
+            &mut sd_idle,
+            &mut free,
+            &mut free_mem,
+            &mut allocs,
+        );
         if sd_wait.is_empty() {
             sd_free = sd_idle;
         }
@@ -394,10 +436,11 @@ impl Scheduler for DressScheduler {
                 .filter(|j| !granted.contains(&j.id))
                 .copied()
                 .collect();
-            rest.sort_by_key(|j| (j.demand, j.submit_ms));
+            rest.sort_by_key(|j| (j.demand.cpu, j.submit_ms));
             for j in rest {
-                let want = j.demand.min(j.pending_tasks);
-                let room = (sd_free + ld_free).min(free);
+                let mpt = j.demand.mem_per_container().max(1);
+                let want = j.demand.cpu.min(j.pending_tasks);
+                let room = (sd_free + ld_free).min(free).min(free_mem / mpt);
                 if want == 0 || want > room {
                     continue;
                 }
@@ -406,6 +449,7 @@ impl Scheduler for DressScheduler {
                 sd_free -= from_sd;
                 ld_free -= want - from_sd;
                 free -= want;
+                free_mem -= want * mpt;
                 // δ grows with each migrated reservation (line 23).
                 if !self.freeze_delta {
                     self.delta = (self.delta + want as f64 / total as f64)
@@ -465,6 +509,8 @@ mod tests {
                 now: t * 1_000,
                 free: 40,
                 total: 40,
+                free_mem: 40,
+                total_mem: 40,
                 jobs: &[],
                 transitions: &[],
             };
@@ -505,5 +551,18 @@ mod tests {
         let allocs = s.schedule(&view(5, 40, jobs));
         let total: u32 = allocs.iter().map(|a| a.n).sum();
         assert!(total <= 5, "over-allocated: {allocs:?}");
+    }
+
+    #[test]
+    fn memory_axis_clamps_vector_grants() {
+        // 40 slots but only 8 memory units free.  A vector job wanting 10
+        // containers at 2 units each can place at most 4 — the cpu pools
+        // alone would have granted all 10.
+        use crate::jobs::Demand;
+        let jobs = vec![jv_vec(1, Demand::new(10, 20), 10)];
+        let mut s = dress(40);
+        let allocs = s.schedule(&view_mem(40, 40, 8, 40, jobs));
+        let granted: u32 = allocs.iter().filter(|a| a.job == 1).map(|a| a.n).sum();
+        assert!(granted <= 4, "memory axis must clamp the grant: {allocs:?}");
     }
 }

@@ -9,7 +9,7 @@
 //! borrowable by larger buckets, so the scheduler is livelock-free.
 
 use super::super::{Allocation, ClusterView, JobView, Scheduler};
-use crate::jobs::JobId;
+use crate::jobs::{Demand, JobId};
 
 /// N-category DRESS scheduler.
 pub struct MultiDress {
@@ -47,7 +47,12 @@ impl MultiDress {
     }
 
     /// Sticky bucket assignment against the capacity observed at arrival.
-    fn classify(&mut self, job: JobId, demand: u32, total: u32) -> usize {
+    ///
+    /// Vector generalization: the ladder is applied on the job's dominant
+    /// resource axis (largest share of `total`, ties to cpu), in the same
+    /// multiplicative form as the scalar rule — so uniform demands bucket
+    /// on bit-identical arithmetic to the pre-vector scheme.
+    fn classify(&mut self, job: JobId, demand: Demand, total: Demand) -> usize {
         let idx = job as usize;
         if idx >= self.cats.len() {
             self.cats.resize(idx + 1, None);
@@ -55,10 +60,11 @@ impl MultiDress {
         if let Some(b) = self.cats[idx] {
             return b;
         }
+        let axis = demand.dominant_axis(total);
         let b = self
             .thresholds
             .iter()
-            .position(|&t| (demand as f64) <= t * total as f64)
+            .position(|&t| (demand.axis(axis) as f64) <= t * total.axis(axis) as f64)
             .unwrap_or(self.thresholds.len());
         self.cats[idx] = Some(b);
         b
@@ -114,7 +120,7 @@ impl Scheduler for MultiDress {
         // the share floor — so bail early while keeping buckets sticky.
         let total = view.total;
         for j in view.jobs {
-            self.classify(j.id, j.demand, total);
+            self.classify(j.id, j.demand, view.total_vec());
         }
         if total == 0 {
             return Vec::new();
@@ -125,8 +131,8 @@ impl Scheduler for MultiDress {
         let mut min_pending = vec![0u32; n];
         for j in view.jobs.iter().filter(|j| !j.started && !j.finished) {
             let b = self.bucket_of(j.id);
-            pending[b] += j.demand as f64;
-            let d = j.demand.min(total);
+            pending[b] += j.demand.cpu as f64;
+            let d = j.demand.cpu.min(total);
             min_pending[b] = if min_pending[b] == 0 { d } else { min_pending[b].min(d) };
         }
         self.adjust_shares(&pending, &min_pending, total);
@@ -144,20 +150,24 @@ impl Scheduler for MultiDress {
             .collect();
 
         let mut free = view.free;
+        let mut free_mem = view.free_mem;
         let mut allocs = Vec::new();
 
-        // Refill running jobs from their pools.
+        // Refill running jobs from their pools (the memory clamp is a
+        // no-op for scalar demands: footprint 1, free_mem tracks free).
         for j in view.jobs.iter().filter(|j| j.started && !j.finished) {
             if free == 0 {
                 break;
             }
             let b = self.bucket_of(j.id);
-            let budget = j.demand.saturating_sub(j.occupied).min(j.pending_tasks);
-            let m = budget.min(pool[b]).min(free);
+            let mpt = j.demand.mem_per_container().max(1);
+            let budget = j.demand.cpu.saturating_sub(j.occupied).min(j.pending_tasks);
+            let m = budget.min(pool[b]).min(free).min(free_mem / mpt);
             if m > 0 {
                 allocs.push(Allocation { job: j.id, n: m });
                 pool[b] -= m;
                 free -= m;
+                free_mem -= m * mpt;
             }
         }
 
@@ -170,7 +180,8 @@ impl Scheduler for MultiDress {
                 .filter(|j| !j.started && !j.finished && self.bucket_of(j.id) == b)
                 .collect();
             for j in waiting {
-                let want = j.demand.min(j.pending_tasks).min(total);
+                let mpt = j.demand.mem_per_container().max(1);
+                let want = j.demand.cpu.min(j.pending_tasks).min(total);
                 if want == 0 || free == 0 {
                     continue;
                 }
@@ -179,7 +190,7 @@ impl Scheduler for MultiDress {
                     .filter(|&k| pending[k] == 0.0)
                     .map(|k| pool[k])
                     .sum();
-                let room = (pool[b] + idle_smaller).min(free);
+                let room = (pool[b] + idle_smaller).min(free).min(free_mem / mpt);
                 if want > room {
                     continue; // ascending-demand: later (smaller) jobs may fit
                 }
@@ -198,6 +209,7 @@ impl Scheduler for MultiDress {
                     }
                 }
                 free -= want;
+                free_mem -= want * mpt;
             }
         }
 
@@ -209,9 +221,11 @@ impl Scheduler for MultiDress {
                 .jobs
                 .iter()
                 .filter(|j| !j.started && !j.finished && j.pending_tasks > 0)
-                .min_by_key(|j| (j.demand, j.submit_ms))
+                .min_by_key(|j| (j.demand.cpu, j.submit_ms))
             {
-                let want = j.demand.min(j.pending_tasks).min(view.free);
+                let mpt = j.demand.mem_per_container().max(1);
+                let want =
+                    j.demand.cpu.min(j.pending_tasks).min(view.free).min(view.free_mem / mpt);
                 if want > 0 {
                     allocs.push(Allocation { job: j.id, n: want });
                 }
@@ -235,15 +249,28 @@ mod tests {
         MultiDress::new(vec![0.1, 0.4], 40)
     }
 
+    fn s(n: u32) -> Demand {
+        Demand::scalar(n)
+    }
+
     #[test]
     fn classification_ladder() {
         let mut m = md();
-        assert_eq!(m.classify(1, 3, 40), 0);
-        assert_eq!(m.classify(2, 10, 40), 1);
-        assert_eq!(m.classify(3, 30, 40), 2);
+        assert_eq!(m.classify(1, s(3), s(40)), 0);
+        assert_eq!(m.classify(2, s(10), s(40)), 1);
+        assert_eq!(m.classify(3, s(30), s(40)), 2);
         // sticky: re-seen jobs keep their bucket even as demand/total move
-        assert_eq!(m.classify(1, 30, 40), 0);
-        assert_eq!(m.classify(2, 10, 20), 1);
+        assert_eq!(m.classify(1, s(30), s(40)), 0);
+        assert_eq!(m.classify(2, s(10), s(20)), 1);
+    }
+
+    #[test]
+    fn vector_jobs_bucket_on_dominant_axis() {
+        let mut m = md();
+        // 3 containers but 20/40 of memory: mem share 0.5 -> top bucket.
+        assert_eq!(m.classify(1, Demand::new(3, 20), s(40)), 2);
+        // Memory-light vector job keeps its cpu-axis bucket.
+        assert_eq!(m.classify(2, Demand::new(3, 4), s(40)), 0);
     }
 
     #[test]

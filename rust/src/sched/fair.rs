@@ -27,9 +27,10 @@ impl Scheduler for FairScheduler {
             .jobs
             .iter()
             .enumerate()
-            .filter(|(_, j)| !j.finished && j.pending_tasks > 0 && j.occupied < j.demand)
+            .filter(|(_, j)| !j.finished && j.pending_tasks > 0 && j.occupied < j.demand.cpu)
             .map(|(i, j)| {
-                let cap = j.occupied + j.demand.saturating_sub(j.occupied).min(j.pending_tasks);
+                let cap =
+                    j.occupied + j.demand.cpu.saturating_sub(j.occupied).min(j.pending_tasks);
                 (i as u32, j.occupied, cap)
             })
             .collect();

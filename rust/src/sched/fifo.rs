@@ -57,7 +57,7 @@ impl Scheduler for FifoScheduler {
             if free == 0 {
                 break;
             }
-            let want = j.demand.min(j.pending_tasks);
+            let want = j.demand.cpu.min(j.pending_tasks);
             if want == 0 {
                 continue;
             }

@@ -10,17 +10,19 @@ pub mod capacity;
 pub mod dress;
 pub mod fair;
 pub mod fifo;
+pub mod maxweight;
 pub mod shadow;
 
 pub use capacity::CapacityScheduler;
 pub use dress::DressScheduler;
 pub use fair::FairScheduler;
 pub use fifo::FifoScheduler;
+pub use maxweight::MaxWeightScheduler;
 pub use shadow::{SchedSnapshot, ShadowEvent, ShadowScore, ShadowWindow};
 
 use crate::cluster::Transition;
 use crate::config::{SchedConfig, SchedKind};
-use crate::jobs::JobId;
+use crate::jobs::{Demand, JobId};
 use crate::util::Time;
 
 /// What the scheduler can see about one job (observable via YARN requests
@@ -28,8 +30,12 @@ use crate::util::Time;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct JobView {
     pub id: JobId,
-    /// Containers requested at submission (`r_i`).
-    pub demand: u32,
+    /// Resource vector requested at submission.  Axis 0 (`demand.cpu`) is
+    /// the paper's `r_i` — the container-count grant currency every
+    /// scheduler reasons in; axis 1 (`demand.mem`) is job-level memory.
+    /// `demand.mem_per_container()` is the per-grant memory footprint
+    /// (exactly 1 for scalar demands).
+    pub demand: Demand,
     pub submit_ms: Time,
     /// Job has at least one task past Pending.
     pub started: bool,
@@ -57,6 +63,12 @@ pub struct ClusterView<'a> {
     /// view every heartbeat rather than caching a construction-time total.
     /// May be 0 while every node is down.
     pub total: u32,
+    /// Free memory units (axis 1).  In scalar runs every container has a
+    /// one-unit footprint, so `free_mem == free` invariantly.
+    pub free_mem: u32,
+    /// Total memory units across live nodes — time-varying under a fault
+    /// plan exactly like `total`.
+    pub total_mem: u32,
     /// Submitted jobs in submission order.  May include already-finished
     /// entries with `finished = true` — the engine tombstones completed
     /// jobs until its next compaction, and live mode plus the engine's
@@ -72,6 +84,16 @@ impl ClusterView<'_> {
     pub fn active_jobs(&self) -> impl Iterator<Item = &JobView> {
         self.jobs.iter().filter(|j| !j.finished)
     }
+
+    /// Free capacity as a resource vector (cpu slots, memory units).
+    pub fn free_vec(&self) -> Demand {
+        Demand::new(self.free, self.free_mem)
+    }
+
+    /// Total capacity as a resource vector.
+    pub fn total_vec(&self) -> Demand {
+        Demand::new(self.total, self.total_mem)
+    }
 }
 
 /// A grant of `n` containers to a job this round.
@@ -82,14 +104,32 @@ pub struct Allocation {
 }
 
 /// The scheduler interface.
+///
+/// Two required methods drive simulation; everything else is the
+/// **SchedIntrospect** surface below — optional hooks with no-op defaults,
+/// so a new scheduler implements exactly `name` + `schedule` and inherits
+/// correct (empty) introspection for free.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
     /// Called once per heartbeat. Must return feasible allocations; the
-    /// engine additionally clamps to free capacity and pending tasks.
+    /// engine additionally clamps to free capacity and pending tasks, and
+    /// enforces per-node memory feasibility at allocation time.
     fn schedule(&mut self, view: &ClusterView) -> Vec<Allocation>;
 
+    // ------------------------------------------------------------------
+    // SchedIntrospect: optional observation & tuning hooks.
+    //
+    // Contract: every method here has a default impl that reports
+    // "nothing to see" and changes no behavior.  Reports, the CLI, and
+    // the admission front call these on `dyn Scheduler` without knowing
+    // the concrete type; only DRESS-family schedulers override them.
+    // Do NOT copy-paste no-op bodies into new schedulers — the defaults
+    // are the no-ops.
+    // ------------------------------------------------------------------
+
     /// Introspection for reports: DRESS's current reserve ratio δ.
+    /// `None` for schedulers without a reservation split.
     fn reserve_ratio(&self) -> Option<f64> {
         None
     }
@@ -119,6 +159,7 @@ pub fn build(cfg: &SchedConfig, total: u32) -> Box<dyn Scheduler> {
         SchedKind::Fair => Box::new(FairScheduler::new()),
         SchedKind::Capacity => Box::new(CapacityScheduler::new(cfg.gang)),
         SchedKind::Dress => Box::new(DressScheduler::new(cfg, total)),
+        SchedKind::MaxWeight => Box::new(MaxWeightScheduler::new()),
     }
 }
 
@@ -131,7 +172,7 @@ pub(crate) fn refill_started(view: &ClusterView, mut free: u32) -> (Vec<Allocati
         if free == 0 {
             break;
         }
-        let budget = j.demand.saturating_sub(j.occupied);
+        let budget = j.demand.cpu.saturating_sub(j.occupied);
         let want = budget.min(j.pending_tasks).min(free);
         if want > 0 {
             out.push(Allocation { job: j.id, n: want });
@@ -152,6 +193,27 @@ pub(crate) mod testutil {
             now: 0,
             free,
             total,
+            free_mem: free,
+            total_mem: total,
+            jobs: Box::leak(jobs.into_boxed_slice()),
+            transitions: &[],
+        }
+    }
+
+    /// A test view where the memory axis differs from the cpu axis.
+    pub fn view_mem(
+        free: u32,
+        total: u32,
+        free_mem: u32,
+        total_mem: u32,
+        jobs: Vec<JobView>,
+    ) -> ClusterView<'static> {
+        ClusterView {
+            now: 0,
+            free,
+            total,
+            free_mem,
+            total_mem,
             jobs: Box::leak(jobs.into_boxed_slice()),
             transitions: &[],
         }
@@ -160,13 +222,18 @@ pub(crate) mod testutil {
     pub fn jv(id: JobId, demand: u32, pending: u32) -> JobView {
         JobView {
             id,
-            demand,
+            demand: Demand::scalar(demand),
             submit_ms: id as Time * 1_000,
             started: false,
             finished: false,
             pending_tasks: pending,
             occupied: 0,
         }
+    }
+
+    /// A job view with a true vector demand.
+    pub fn jv_vec(id: JobId, demand: Demand, pending: u32) -> JobView {
+        JobView { demand, ..jv(id, demand.cpu, pending) }
     }
 
     pub fn started(mut j: JobView, occupied: u32) -> JobView {
@@ -184,11 +251,34 @@ mod tests {
 
     #[test]
     fn build_all_kinds() {
-        for kind in [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress] {
+        for kind in [
+            SchedKind::Fifo,
+            SchedKind::Fair,
+            SchedKind::Capacity,
+            SchedKind::Dress,
+            SchedKind::MaxWeight,
+        ] {
             let cfg = SchedConfig { kind, ..SchedConfig::default() };
             let s = build(&cfg, 40);
             assert_eq!(s.name(), kind.name());
         }
+    }
+
+    #[test]
+    fn introspect_defaults_report_nothing() {
+        // The SchedIntrospect surface must be inherited, not copy-pasted:
+        // schedulers without hidden state get None/no-op from the trait.
+        for kind in [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::MaxWeight] {
+            let cfg = SchedConfig { kind, ..SchedConfig::default() };
+            let mut s = build(&cfg, 40);
+            assert_eq!(s.reserve_ratio(), None, "{}", s.name());
+            s.set_tune_delta(true); // must be a harmless no-op
+            let v = view(4, 40, vec![jv(1, 2, 2)]);
+            assert!(s.snapshot(&v).is_none(), "{}", s.name());
+        }
+        let cfg = SchedConfig { kind: SchedKind::Dress, ..SchedConfig::default() };
+        let s = build(&cfg, 40);
+        assert!(s.reserve_ratio().is_some(), "dress overrides the introspect surface");
     }
 
     #[test]

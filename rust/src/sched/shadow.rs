@@ -19,7 +19,7 @@ use super::dress::reserve::{DELTA_MAX, DELTA_MIN};
 use super::dress::{Category, Classifier};
 use super::JobView;
 use crate::estimator::EstimatorBank;
-use crate::jobs::JobId;
+use crate::jobs::{Demand, JobId};
 use crate::util::Time;
 
 /// Default ring capacity for the recent-event window.
@@ -144,7 +144,7 @@ impl SchedSnapshot {
         self.jobs
             .iter()
             .filter(|j| !j.finished && !j.started)
-            .map(|j| j.demand as u64)
+            .map(|j| j.demand.cpu as u64)
             .sum()
     }
 }
@@ -208,10 +208,15 @@ pub fn replay(
         .iter()
         .filter(|j| !j.finished)
         .map(|j| ShadowJob {
-            demand: j.demand.max(1),
+            demand: j.demand.cpu.max(1),
             remaining: j.pending_tasks + j.occupied,
             occupied: 0,
-            cat: classifier.classify(j.id, j.demand, snap.free, total),
+            cat: classifier.classify(
+                j.id,
+                j.demand,
+                Demand::scalar(snap.free),
+                Demand::scalar(total),
+            ),
             arrive: 0,
             done: false,
         })
@@ -239,7 +244,14 @@ pub fn replay(
                 occupied: 0,
                 // Re-arrivals keep their real id: the sticky classifier
                 // reuses the live category when the job was already seen.
-                cat: classifier.classify(job, demand, snap.free, total),
+                // The window records axis-0 (container) demand only, so
+                // replayed arrivals classify as uniform vectors.
+                cat: classifier.classify(
+                    job,
+                    Demand::scalar(demand),
+                    Demand::scalar(snap.free),
+                    Demand::scalar(total),
+                ),
                 arrive,
                 done: false,
             });
@@ -342,7 +354,7 @@ mod tests {
     fn jv(id: JobId, demand: u32, pending: u32, started: bool) -> JobView {
         JobView {
             id,
-            demand,
+            demand: Demand::scalar(demand),
             submit_ms: id as Time * 500,
             started,
             finished: false,

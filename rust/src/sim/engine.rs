@@ -36,7 +36,7 @@ use super::sink::{SinkKind, TraceSink};
 use super::trace::{TaskTrace, TraceRecorder};
 use crate::cluster::{Cluster, ContainerState, HeartbeatLog, Transition};
 use crate::config::ExperimentConfig;
-use crate::jobs::{JobLayout, JobSpec, JobStore};
+use crate::jobs::{Demand, JobLayout, JobSpec, JobStore};
 use crate::metrics::{DeltaSummary, JobMetrics, SystemMetrics, UtilSummary};
 use crate::sched::shadow::{self, SchedSnapshot, ShadowEvent, ShadowWindow};
 use crate::sched::{Allocation, ClusterView, JobView, Scheduler};
@@ -417,21 +417,33 @@ impl Engine {
 
     // --- incremental view maintenance -----------------------------------
 
+    /// A job's demand as the engine honors it.  Two clamps, both no-ops
+    /// for uniform (scalar) demands:
+    ///
+    /// * per axis to the *nominal* cluster totals — a demand above cluster
+    ///   capacity can never gang-start, and nominal (not live) capacity
+    ///   means a transient outage does not truncate the request forever;
+    /// * on the memory axis to `cpu × max_node_mem` — a per-container
+    ///   footprint wider than the fattest node fits nowhere, so an
+    ///   unclamped value would starve the job (and hang the run).
+    fn effective_demand(&self, slot: usize) -> Demand {
+        let d = self.store.demand(slot).min_each(Demand::new(
+            self.nominal_total,
+            self.cluster.nominal_total_mem(),
+        ));
+        let fit = d.cpu.max(1).saturating_mul(self.cluster.max_node_mem().max(1));
+        Demand::new(d.cpu, d.mem.min(fit))
+    }
+
     /// Admit `slot` into the scheduler view at its submission-order
     /// position.  Submissions arrive in event-time order, which for every
     /// workload in this repo is also slot order, so the common case is an
     /// O(1) push; an out-of-order submit time falls back to a sorted
     /// insert.
     fn view_insert(&mut self, slot: usize) {
-        // A demand above cluster capacity can never gang-start; YARN callers
-        // are granted at most the cluster, so the view clamps (prevents
-        // head-of-line livelock for oversized requests).  Clamped to the
-        // *nominal* capacity: a transient outage must not truncate the
-        // request forever (the node comes back, gang jobs must too).
-        let total = self.nominal_total;
         let jv = JobView {
             id: self.store.id(slot),
-            demand: self.store.demand(slot).min(total),
+            demand: self.effective_demand(slot),
             submit_ms: self.store.submit_ms(slot),
             started: self.store.started(slot),
             finished: false,
@@ -499,12 +511,11 @@ impl Engine {
     /// ones included with `finished = true` (schedulers filter them).
     /// Reference path for `EngineOptions::naive_hot_path`.
     fn naive_view_jobs(&self) -> Vec<JobView> {
-        let total = self.nominal_total;
         (0..self.store.len())
             .filter(|&slot| self.store.submitted(slot))
             .map(|slot| JobView {
                 id: self.store.id(slot),
-                demand: self.store.demand(slot).min(total),
+                demand: self.effective_demand(slot),
                 submit_ms: self.store.submit_ms(slot),
                 started: self.store.started(slot),
                 finished: self.store.finished(slot),
@@ -554,6 +565,7 @@ impl Engine {
     /// machine for up to `n` pending tasks of the job.
     fn apply_allocation(&mut self, alloc: Allocation) {
         let ji = self.job_index(alloc.job);
+        let mem = self.effective_demand(ji).mem_per_container().max(1);
         for _ in 0..alloc.n {
             if self.cluster.free() == 0 {
                 break;
@@ -561,10 +573,13 @@ impl Engine {
             let Some((phase, task)) = self.store.next_pending(ji) else {
                 break;
             };
-            let cid = self
-                .cluster
-                .allocate(alloc.job, phase, task, self.now)
-                .expect("free checked above");
+            // With vector demands a slot-feasible grant can still fail
+            // node-level memory packing (fragmentation); for uniform
+            // demands `mem == 1` and free slots always admit, as before.
+            let Some(cid) = self.cluster.allocate(alloc.job, phase, task, mem, self.now)
+            else {
+                break;
+            };
             self.store.begin_launch(ji, phase, task, cid);
             let v = self.view_entry(ji);
             v.occupied += 1;
@@ -787,20 +802,27 @@ impl Engine {
             now: self.now,
             free: self.cluster.free(),
             total: self.cluster.total(),
+            free_mem: self.cluster.free_mem(),
+            total_mem: self.cluster.total_mem(),
             jobs: view_jobs,
             transitions: &transitions,
         };
         let allocs = self.sched.schedule(&view);
-        // Feasibility enforcement: total grants bounded by free capacity.
+        // Feasibility enforcement: total grants bounded by free capacity
+        // on every axis (the memory clamp is a no-op for uniform demands,
+        // where footprint is 1 and free_mem tracks free exactly).
         let mut free = self.cluster.free();
+        let mut free_mem = self.cluster.free_mem();
         for a in allocs {
             let ji = self.job_index(a.job);
             let pending = self.store.pending_tasks(ji);
-            let n = a.n.min(pending).min(free);
+            let mem = self.effective_demand(ji).mem_per_container().max(1);
+            let n = a.n.min(pending).min(free).min(free_mem / mem);
             if n == 0 {
                 continue;
             }
             free -= n;
+            free_mem -= n * mem;
             self.apply_allocation(Allocation { job: a.job, n });
         }
         let used = self.cluster.used();
@@ -869,6 +891,8 @@ impl Engine {
             now: self.now,
             free: self.cluster.free(),
             total: self.cluster.total(),
+            free_mem: self.cluster.free_mem(),
+            total_mem: self.cluster.total_mem(),
             jobs: &jobs,
             transitions: &[],
         };
@@ -900,6 +924,8 @@ impl Engine {
             now: self.now,
             free: self.cluster.free(),
             total: self.cluster.total(),
+            free_mem: self.cluster.free_mem(),
+            total_mem: self.cluster.total_mem(),
             jobs: &jobs,
             transitions: &[],
         };
@@ -1011,7 +1037,7 @@ mod tests {
             name: format!("job{id}"),
             platform: Platform::MapReduce,
             submit_ms: submit,
-            demand,
+            demand: Demand::scalar(demand),
             phases: vec![PhaseSpec::new(PhaseKind::Map, durs)],
         }
     }
@@ -1043,7 +1069,13 @@ mod tests {
             tiny_job(3, 2_000, 2, &[3_000, 3_000]),
             tiny_job(4, 3_000, 2, &[4_000, 4_000]),
         ];
-        for kind in [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress] {
+        for kind in [
+            SchedKind::Fifo,
+            SchedKind::Fair,
+            SchedKind::Capacity,
+            SchedKind::Dress,
+            SchedKind::MaxWeight,
+        ] {
             let res = run_experiment(&cfg(kind), specs.clone());
             assert_eq!(res.jobs.len(), 4, "{kind:?}");
             assert!(res.system.makespan_ms > 0);
@@ -1072,7 +1104,7 @@ mod tests {
             name: "two-phase".into(),
             platform: Platform::MapReduce,
             submit_ms: 0,
-            demand: 3,
+            demand: Demand::scalar(3),
             phases: vec![
                 PhaseSpec::new(PhaseKind::Map, &[4_000, 4_500, 5_000]),
                 PhaseSpec::new(PhaseKind::Reduce, &[3_000]),

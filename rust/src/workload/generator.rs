@@ -3,7 +3,7 @@
 //! one-by-one, 5 s apart), plus the hand-built Fig. 1 motivating example.
 
 use super::hibench::{build_job, Benchmark};
-use crate::jobs::{JobSpec, PhaseKind, PhaseSpec, Platform};
+use crate::jobs::{Demand, JobSpec, PhaseKind, PhaseSpec, Platform};
 use crate::util::rng::{Rng, ZipfSampler};
 use crate::util::Time;
 
@@ -75,7 +75,7 @@ pub fn generate(
                 size,
                 &mut rng,
             );
-            spec.demand = spec.demand.min(DEMAND_CAP);
+            spec.demand = spec.demand.min_each(Demand::scalar(DEMAND_CAP));
             spec
         })
         .collect()
@@ -137,6 +137,47 @@ pub fn congested_burst(n: u32, arrival_mean_ms: Time, seed: u64) -> Vec<JobSpec>
                 name: format!("burst-{}", i + 1),
                 platform: if i % 2 == 0 { Platform::MapReduce } else { Platform::Spark },
                 submit_ms: submit,
+                demand: Demand::scalar(demand),
+                phases,
+            }
+        })
+        .collect()
+}
+
+/// [`congested_burst`] with true *vector* demands: container counts are
+/// Zipf-distributed as before, and each job additionally draws a
+/// stochastic memory demand — a per-job multiplier in `1..=4` of its
+/// container count, plus sub-container jitter so per-container footprints
+/// exercise the round-up path (`Demand::mem_per_container`).
+///
+/// The RNG stream is salted differently from every other preset, so the
+/// same seed yields independent draws here, in [`congested_burst`], and
+/// in the engine (isolated-stream discipline, docs/RESOURCES.md).
+/// Deterministic per seed.
+pub fn congested_burst_vec(n: u32, arrival_mean_ms: Time, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed ^ 0xB0B5_7EC0);
+    let zipf = ZipfSampler::new(DEMAND_CAP as usize, 1.1);
+    let mut submit: Time = 0;
+    (0..n)
+        .map(|i| {
+            let cpu = (zipf.draw(&mut rng) as u32).max(1);
+            // Memory ≥ cpu keeps every phase (width == cpu) legal on both
+            // axes under JobSpec::validate's vector width check.
+            let mult = 1 + rng.index(4) as u32;
+            let jitter = rng.index(cpu as usize) as u32;
+            let demand = Demand::new(cpu, cpu * mult + jitter);
+            let width = cpu;
+            let mut phases = vec![burst_phase(&mut rng, PhaseKind::Map, width)];
+            if rng.chance(0.25) {
+                phases.push(burst_phase(&mut rng, PhaseKind::Reduce, (width / 2).max(1)));
+            }
+            let gap = (-rng.next_f64().max(1e-12).ln() * arrival_mean_ms as f64) as Time;
+            submit += gap;
+            JobSpec {
+                id: i + 1,
+                name: format!("burst-vec-{}", i + 1),
+                platform: if i % 2 == 0 { Platform::MapReduce } else { Platform::Spark },
+                submit_ms: submit,
                 demand,
                 phases,
             }
@@ -153,7 +194,7 @@ pub fn motivating_example() -> Vec<JobSpec> {
         name: format!("fig1-j{id}"),
         platform: Platform::MapReduce,
         submit_ms: submit_s * 1_000,
-        demand: r,
+        demand: Demand::scalar(r),
         phases: vec![PhaseSpec::new(
             PhaseKind::Map,
             &vec![len_s * 1_000; r as usize],
@@ -180,7 +221,7 @@ mod tests {
     #[test]
     fn small_fraction_respected() {
         let jobs = generate(20, WorkloadMix::Mixed, 0.3, 5_000, 7);
-        let small = jobs.iter().filter(|j| j.demand <= 4).count();
+        let small = jobs.iter().filter(|j| j.demand.cpu <= 4).count();
         assert!(small >= 6, "expected >= 6 small jobs, got {small}");
     }
 
@@ -208,8 +249,8 @@ mod tests {
     fn motivating_example_matches_fig1() {
         let jobs = motivating_example();
         assert_eq!(jobs.len(), 4);
-        assert_eq!(jobs[0].demand, 3);
-        assert_eq!(jobs[1].demand, 4);
+        assert_eq!(jobs[0].demand, Demand::scalar(3));
+        assert_eq!(jobs[1].demand, Demand::scalar(4));
         assert_eq!(jobs[0].critical_path_ms(), 10_000);
         assert_eq!(jobs[1].critical_path_ms(), 20_000);
         assert_eq!(jobs[3].submit_ms, 3_000);
@@ -221,18 +262,46 @@ mod tests {
         assert_eq!(jobs.len(), 500);
         for j in &jobs {
             j.validate().unwrap();
-            assert!((1..=DEMAND_CAP).contains(&j.demand));
+            assert!((1..=DEMAND_CAP).contains(&j.demand.cpu));
+            assert!(j.demand.is_uniform(), "scalar preset must stay uniform");
         }
         // Arrivals are a non-decreasing burst.
         assert!(jobs.windows(2).all(|w| w[0].submit_ms <= w[1].submit_ms));
         // Zipf head (many small demands) and tail (some near-cap demands).
-        let small = jobs.iter().filter(|j| j.demand <= 3).count();
-        let large = jobs.iter().filter(|j| j.demand >= 15).count();
+        let small = jobs.iter().filter(|j| j.demand.cpu <= 3).count();
+        let large = jobs.iter().filter(|j| j.demand.cpu >= 15).count();
         assert!(small * 5 > jobs.len() * 2, "zipf head too thin: {small}/500");
         assert!(large > 0, "zipf tail missing");
         // Deterministic per seed, distinct across seeds.
         assert_eq!(congested_burst(500, 100, 42), jobs);
         assert_ne!(congested_burst(500, 100, 43), jobs);
+    }
+
+    #[test]
+    fn congested_burst_vec_draws_vector_demands() {
+        let jobs = congested_burst_vec(300, 100, 42);
+        assert_eq!(jobs.len(), 300);
+        for j in &jobs {
+            j.validate().unwrap();
+            assert!((1..=DEMAND_CAP).contains(&j.demand.cpu));
+            assert!(j.demand.mem >= j.demand.cpu, "mem axis must cover every task");
+        }
+        // The memory draws actually vary: some jobs are non-uniform, and
+        // some footprints exceed one unit per container.
+        assert!(jobs.iter().any(|j| !j.demand.is_uniform()), "no vector demands drawn");
+        assert!(
+            jobs.iter().any(|j| j.demand.mem_per_container() > 1),
+            "no fat containers drawn"
+        );
+        // Deterministic per seed, distinct across seeds, and on a stream
+        // independent from the scalar burst preset.
+        assert_eq!(congested_burst_vec(300, 100, 42), jobs);
+        assert_ne!(congested_burst_vec(300, 100, 43), jobs);
+        let scalar = congested_burst(300, 100, 42);
+        assert!(
+            jobs.iter().zip(&scalar).any(|(a, b)| a.demand.cpu != b.demand.cpu),
+            "vector preset must not reuse the scalar preset's RNG stream"
+        );
     }
 
     #[test]

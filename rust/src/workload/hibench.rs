@@ -264,7 +264,7 @@ pub fn build_job(
         name: format!("{}-{}", b.name(), if small { "small" } else { "full" }),
         platform,
         submit_ms,
-        demand,
+        demand: crate::jobs::Demand::scalar(demand),
         phases,
     }
 }
@@ -279,7 +279,7 @@ mod tests {
         for (i, b) in Benchmark::ALL.iter().enumerate() {
             let j = build_job(i as u32 + 1, *b, Platform::MapReduce, false, 0, 1.0, &mut rng);
             j.validate().unwrap();
-            assert!(j.demand >= 1);
+            assert!(j.demand.cpu >= 1);
         }
     }
 
@@ -337,9 +337,9 @@ mod tests {
     fn small_variant_has_small_demand() {
         let mut rng = Rng::new(7);
         let j = build_job(1, Benchmark::Scan, Platform::MapReduce, true, 0, 1.0, &mut rng);
-        assert!(j.demand <= 4, "small job demand {} > 4", j.demand);
+        assert!(j.demand.cpu <= 4, "small job demand {} > 4", j.demand);
         let big = build_job(2, Benchmark::TeraSort, Platform::MapReduce, false, 0, 1.0, &mut rng);
-        assert!(big.demand > 10);
+        assert!(big.demand.cpu > 10);
     }
 
     #[test]

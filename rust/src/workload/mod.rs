@@ -15,7 +15,118 @@ pub mod skew;
 pub mod tracefile;
 
 pub use dataset::Dataset;
-pub use generator::{congested_burst, generate, motivating_example, WorkloadMix};
+pub use generator::{
+    congested_burst, congested_burst_vec, generate, motivating_example, WorkloadMix,
+};
 pub use hibench::{benchmark_names, build_job, Benchmark};
 pub use skew::zipf_partition_weights;
 pub use tracefile::{from_trace, to_trace};
+
+use crate::jobs::JobSpec;
+use crate::util::Time;
+
+/// One workload axis point of a sweep; `build(seed)` materializes the
+/// spec list.  This is the unified source type behind `dress run`,
+/// `dress sweep`, and the shard runner — synthetic presets and recorded
+/// traces flow through the same grid machinery.
+///
+/// The `Debug` form of a `WorkloadSource` feeds the sweep grid
+/// fingerprint (`expt::shard::grid_fingerprint`), so a [`Self::Trace`]
+/// carries its full text: shards of different traces — or of a trace vs
+/// a synthetic preset — refuse to merge.
+#[derive(Debug, Clone)]
+pub enum WorkloadSource {
+    /// [`generate`] — the paper's HiBench mixes.
+    Generate { n: u32, mix: WorkloadMix, small_frac: f64, arrival_ms: Time },
+    /// [`congested_burst`] — heavy-tailed demands, Poisson burst.
+    CongestedBurst { n: u32, arrival_mean_ms: u64 },
+    /// [`congested_burst_vec`] — the burst preset with stochastic
+    /// *vector* (cpu × mem) demand draws on an isolated RNG stream.
+    CongestedBurstVec { n: u32, arrival_mean_ms: u64 },
+    /// A recorded trace ([`tracefile`]): seed-independent job specs.
+    /// `label` is the display name (usually the file path); `text` is the
+    /// full trace body, validated at construction by [`Self::trace`].
+    Trace { label: String, text: String },
+}
+
+impl WorkloadSource {
+    /// Build a trace-backed source, validating the text up front so
+    /// [`Self::build`] cannot fail later.
+    pub fn trace(label: impl Into<String>, text: impl Into<String>) -> Result<Self, String> {
+        let label = label.into();
+        let text = text.into();
+        from_trace(&text).map_err(|e| format!("trace {label}: {e}"))?;
+        Ok(WorkloadSource::Trace { label, text })
+    }
+
+    /// Short display name for reports and sweep progress lines.
+    pub fn label(&self) -> String {
+        match self {
+            WorkloadSource::Generate { n, mix, .. } => format!("generate-{n}-{mix:?}"),
+            WorkloadSource::CongestedBurst { n, .. } => format!("burst-{n}"),
+            WorkloadSource::CongestedBurstVec { n, .. } => format!("burst-vec-{n}"),
+            WorkloadSource::Trace { label, .. } => label.clone(),
+        }
+    }
+
+    /// Materialize the spec list for one seed.  Traces are
+    /// seed-independent: every cell replays the recorded jobs verbatim
+    /// (engine delay sampling still varies with the configured seed).
+    pub fn build(&self, seed: u64) -> Vec<JobSpec> {
+        match self {
+            WorkloadSource::Generate { n, mix, small_frac, arrival_ms } => {
+                generate(*n, *mix, *small_frac, *arrival_ms, seed)
+            }
+            WorkloadSource::CongestedBurst { n, arrival_mean_ms } => {
+                congested_burst(*n, *arrival_mean_ms, seed)
+            }
+            WorkloadSource::CongestedBurstVec { n, arrival_mean_ms } => {
+                congested_burst_vec(*n, *arrival_mean_ms, seed)
+            }
+            WorkloadSource::Trace { label: _, text } => {
+                from_trace(text).expect("trace validated by WorkloadSource::trace")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_source_validates_up_front_and_ignores_seed() {
+        let text = "job 1 a mapreduce 0 2 phases map:1000,1000\n";
+        let src = WorkloadSource::trace("t.trace", text).unwrap();
+        assert_eq!(src.build(1), src.build(99), "traces must be seed-independent");
+        assert_eq!(src.build(1).len(), 1);
+        assert_eq!(src.label(), "t.trace");
+        let err = WorkloadSource::trace("bad.trace", "job zero").unwrap_err();
+        assert!(err.contains("bad.trace"), "error must name the trace: {err}");
+    }
+
+    #[test]
+    fn synthetic_sources_build_their_presets() {
+        let g = WorkloadSource::Generate {
+            n: 4,
+            mix: WorkloadMix::Mixed,
+            small_frac: 0.3,
+            arrival_ms: 2_000,
+        };
+        assert_eq!(g.build(42), generate(4, WorkloadMix::Mixed, 0.3, 2_000, 42));
+        let b = WorkloadSource::CongestedBurst { n: 5, arrival_mean_ms: 100 };
+        assert_eq!(b.build(42), congested_burst(5, 100, 42));
+        let v = WorkloadSource::CongestedBurstVec { n: 5, arrival_mean_ms: 100 };
+        assert_eq!(v.build(42), congested_burst_vec(5, 100, 42));
+        assert_eq!(v.build(42).len(), 5);
+    }
+
+    #[test]
+    fn trace_debug_form_is_content_addressed() {
+        // The grid fingerprint hashes Debug output: two traces with equal
+        // labels but different bodies must not collide.
+        let a = WorkloadSource::trace("t", "job 1 a mapreduce 0 2 phases map:1,1\n").unwrap();
+        let b = WorkloadSource::trace("t", "job 1 a mapreduce 0 1 phases map:9\n").unwrap();
+        assert_ne!(format!("{a:?}"), format!("{b:?}"));
+    }
+}

@@ -7,9 +7,14 @@
 //! ```text
 //! job <id> <name> <platform> <submit_ms> <demand> phases <kind>:<ms>,<ms>... [<kind>:...]
 //! job 1 wordcount mapreduce 0 4 phases map:28000,27500,7000 reduce:16000
+//! job 2 fatjoin spark 4000 4x12 phases stage:9000,9000,8000,7000
 //! ```
+//!
+//! The demand token is [`Demand`]'s display form: a bare count for
+//! uniform (scalar) demands, `<cpu>x<mem>` for vector demands — so
+//! traces written before the vector-demand redesign parse unchanged.
 
-use crate::jobs::{JobSpec, PhaseKind, PhaseSpec, Platform, TaskSpec};
+use crate::jobs::{Demand, JobSpec, PhaseKind, PhaseSpec, Platform, TaskSpec};
 use crate::util::Time;
 
 /// Trace names are single whitespace-delimited tokens on `#`-commentable
@@ -81,11 +86,8 @@ pub fn from_trace(text: &str) -> Result<Vec<JobSpec>, String> {
             .ok_or_else(|| err("missing submit_ms"))?
             .parse()
             .map_err(|e| err(&format!("submit_ms: {e}")))?;
-        let demand: u32 = it
-            .next()
-            .ok_or_else(|| err("missing demand"))?
-            .parse()
-            .map_err(|e| err(&format!("demand: {e}")))?;
+        let demand = Demand::parse(it.next().ok_or_else(|| err("missing demand"))?)
+            .map_err(|e| err(&e))?;
         if it.next() != Some("phases") {
             return Err(err("expected `phases`"));
         }
@@ -190,7 +192,7 @@ mod tests {
                 name: "my job #7".into(),
                 platform: Platform::MapReduce,
                 submit_ms: 0,
-                demand: 2,
+                demand: Demand::scalar(2),
                 phases: vec![PhaseSpec::new(PhaseKind::Map, &[1_000, 2_000])],
             },
             JobSpec {
@@ -198,7 +200,7 @@ mod tests {
                 name: String::new(),
                 platform: Platform::Spark,
                 submit_ms: 500,
-                demand: 1,
+                demand: Demand::scalar(1),
                 phases: vec![PhaseSpec::new(PhaseKind::SparkStage, &[3_000])],
             },
         ];
@@ -207,7 +209,10 @@ mod tests {
         assert_eq!(back[0].name, "my_job__7");
         assert_eq!(back[1].name, "_");
         // Everything except the name survives exactly.
-        assert_eq!((back[0].id, back[0].demand, &back[0].phases), (1, 2, &specs[0].phases));
+        assert_eq!(
+            (back[0].id, back[0].demand, &back[0].phases),
+            (1, Demand::scalar(2), &specs[0].phases)
+        );
         assert_eq!((back[1].id, back[1].submit_ms), (2, 500));
     }
 
@@ -224,6 +229,27 @@ mod tests {
         let text2 = to_trace(&parsed);
         assert_eq!(text1, text2, "render is not a fixed point of parse∘render");
         assert_eq!(from_trace(&text2).unwrap(), parsed);
+    }
+
+    #[test]
+    fn vector_demands_roundtrip() {
+        // Hand-written vector token parses, and rendering is a fixed point.
+        let specs = from_trace(
+            "job 1 fatjoin spark 4000 4x12 phases stage:9000,9000,8000,7000\n\
+             job 2 thin mapreduce 5000 3 phases map:1000,1000,1000\n",
+        )
+        .unwrap();
+        assert_eq!(specs[0].demand, Demand::new(4, 12));
+        assert_eq!(specs[0].demand.mem_per_container(), 3);
+        assert_eq!(specs[1].demand, Demand::scalar(3));
+        let text = to_trace(&specs);
+        assert!(text.contains(" 4x12 "), "vector demand must render as cpu x mem:\n{text}");
+        assert_eq!(from_trace(&text).unwrap(), specs);
+        assert_eq!(to_trace(&from_trace(&text).unwrap()), text);
+        // A vector demand too narrow for its widest phase is rejected with
+        // the offending axis named (JobSpec::validate).
+        let e = from_trace("job 1 a spark 0 2x9 phases stage:1,1,1").unwrap_err();
+        assert!(e.contains("cpu"), "axis missing from `{e}`");
     }
 
     #[test]

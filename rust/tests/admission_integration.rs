@@ -2,12 +2,13 @@
 //!
 //! The lifecycle matrix — probe → reserve → commit, probe → reserve →
 //! expire, and reserve under outage-degraded capacity — runs against a
-//! snapshot taken from each of the four schedulers, and every scenario is
+//! snapshot taken from each of the five schedulers, and every scenario is
 //! seed-stable: repeating it reproduces the controller's full Debug state
 //! byte-for-byte.  The tuner smoke pins the adopted δ to the legal band
 //! and the tuned trajectory to run-to-run bit-identity.
 
 use dress::config::{ExperimentConfig, SchedKind};
+use dress::jobs::Demand;
 use dress::live::{AdmissionConfig, AdmissionCtl, ProbeDecision, TicketState};
 use dress::sched::dress::reserve::{DELTA_MAX, DELTA_MIN};
 use dress::sched::{ClusterView, JobView, SchedSnapshot};
@@ -15,8 +16,13 @@ use dress::sim::run_experiment_with;
 use dress::sim::EngineOptions;
 use dress::workload::{congested_burst, generate, WorkloadMix};
 
-const KINDS: [SchedKind; 4] =
-    [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress];
+const KINDS: [SchedKind; 5] = [
+    SchedKind::Fifo,
+    SchedKind::Fair,
+    SchedKind::Capacity,
+    SchedKind::Dress,
+    SchedKind::MaxWeight,
+];
 
 const TOTAL: u32 = 8;
 const TIMEOUT: u64 = 5_000;
@@ -24,7 +30,7 @@ const TIMEOUT: u64 = 5_000;
 fn jv(id: u32, demand: u32, started: bool) -> JobView {
     JobView {
         id,
-        demand,
+        demand: Demand::scalar(demand),
         submit_ms: id as u64 * 500,
         started,
         finished: false,
@@ -41,7 +47,15 @@ fn snapshot_for(kind: SchedKind, jobs: &[JobView], free: u32) -> SchedSnapshot {
     let mut sched_cfg = cfg.sched;
     sched_cfg.kind = kind;
     let sched = dress::sched::build(&sched_cfg, TOTAL);
-    let view = ClusterView { now: 10_000, free, total: TOTAL, jobs, transitions: &[] };
+    let view = ClusterView {
+        now: 10_000,
+        free,
+        total: TOTAL,
+        free_mem: free,
+        total_mem: TOTAL,
+        jobs,
+        transitions: &[],
+    };
     sched.snapshot(&view).unwrap_or_else(|| {
         SchedSnapshot::of_view(10_000, free, TOTAL, jobs, sched_cfg.delta0, sched_cfg.theta)
     })

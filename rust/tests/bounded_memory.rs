@@ -17,8 +17,13 @@ use dress::config::{ExperimentConfig, SchedKind};
 use dress::sim::{run_experiment_with, EngineOptions, RunResult};
 use dress::workload::congested_burst;
 
-const KINDS: [SchedKind; 4] =
-    [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress];
+const KINDS: [SchedKind; 5] = [
+    SchedKind::Fifo,
+    SchedKind::Fair,
+    SchedKind::Capacity,
+    SchedKind::Dress,
+    SchedKind::MaxWeight,
+];
 
 fn run(kind: SchedKind, n: u32, opts: EngineOptions) -> RunResult {
     let mut cfg = ExperimentConfig::default();
@@ -70,7 +75,7 @@ fn counting_sinks_bound_congested_run_memory() {
 #[ignore = "10k-job release-mode CI smoke; debug-build tick cross-checks make it minutes-slow"]
 fn counting_sinks_bound_10k_job_congested_run_memory() {
     // The acceptance-criteria scale: 10k heavy-tailed jobs in a Poisson
-    // burst, all four schedulers, zero retained per-tick samples, exact
+    // burst, all five schedulers, zero retained per-tick samples, exact
     // time-weighted utilization.
     for kind in KINDS {
         let full = run(kind, 10_000, EngineOptions::default());

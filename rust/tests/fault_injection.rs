@@ -15,8 +15,13 @@ use dress::sim::engine::run_experiment;
 use dress::sim::{FaultPlan, RunResult};
 use dress::workload::{generate, WorkloadMix};
 
-const KINDS: [SchedKind; 4] =
-    [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress];
+const KINDS: [SchedKind; 5] = [
+    SchedKind::Fifo,
+    SchedKind::Fair,
+    SchedKind::Capacity,
+    SchedKind::Dress,
+    SchedKind::MaxWeight,
+];
 
 /// 24 mixed jobs every 2 s on the default 5x8 cluster: congested from the
 /// first minute, so a crash in that window always has victims.

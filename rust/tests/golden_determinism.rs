@@ -1,7 +1,7 @@
 //! Golden determinism / refactor-equivalence suite for the indexed engine.
 //!
-//! Two guarantees, for Fifo, Fair, Capacity and Dress on congested mixed
-//! workloads:
+//! Two guarantees, for Fifo, Fair, Capacity, Dress and MaxWeight on
+//! congested mixed workloads:
 //!
 //! 1. **Determinism** — the same `(seed, scheduler)` produces the identical
 //!    `(makespan_ms, total waiting_ms, trace len, failures, δ history)`
@@ -26,8 +26,13 @@ use dress::sim::{run_experiment_with, EngineOptions, QueueKind, RunResult};
 use dress::util::json::Json;
 use dress::workload::{congested_burst, generate, WorkloadMix};
 
-const KINDS: [SchedKind; 4] =
-    [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress];
+const KINDS: [SchedKind; 5] = [
+    SchedKind::Fifo,
+    SchedKind::Fair,
+    SchedKind::Capacity,
+    SchedKind::Dress,
+    SchedKind::MaxWeight,
+];
 
 /// The comparable fingerprint of one run.
 #[derive(Debug, Clone, PartialEq)]
@@ -167,7 +172,7 @@ fn sweep_fingerprint(r: &RunResult) -> (Golden, Vec<dress::sim::TaskTrace>, Stri
 #[test]
 fn sweep_parallel_output_identical_to_serial() {
     // run_sweep(jobs=1) and run_sweep(jobs=N) must produce byte-identical
-    // RunResult vectors for a 3-seed x 4-scheduler grid: results land by
+    // RunResult vectors for a 3-seed x 5-scheduler grid: results land by
     // grid index, not completion order, and every cell is deterministic.
     let grid = SweepGrid {
         base: ExperimentConfig::default(),
@@ -182,7 +187,7 @@ fn sweep_parallel_output_identical_to_serial() {
         opts: EngineOptions::default(),
     };
     let serial = run_sweep(&grid, 1);
-    assert_eq!(serial.len(), 12);
+    assert_eq!(serial.len(), 15);
     for workers in [2, 5] {
         let parallel = run_sweep(&grid, workers);
         assert_eq!(parallel.len(), serial.len());
@@ -218,7 +223,7 @@ fn shard_roundtrip_merge(grid: &SweepGrid, meta: &SweepMeta, n: usize) -> Vec<Ce
 fn shard_merge_bit_identical_to_unsharded_sweep_all_schedulers() {
     // shard(N) + JSON round-trip + merge must equal the unsharded
     // run_sweep cell-for-cell — per-job metrics included — for N in
-    // {2, 3}, on a grid covering all four schedulers; and the rendered
+    // {2, 3}, on a grid covering all five schedulers; and the rendered
     // report (tables + seed aggregates) must be byte-identical.
     let grid = SweepGrid {
         base: ExperimentConfig::default(),
@@ -238,7 +243,7 @@ fn shard_merge_bit_identical_to_unsharded_sweep_all_schedulers() {
         .enumerate()
         .map(|(i, r)| CellSummary::of(&grid, i, r))
         .collect();
-    assert_eq!(unsharded.len(), 12);
+    assert_eq!(unsharded.len(), 15);
     let reference_report = render_sweep_report(&meta, &unsharded);
     for n in [2, 3] {
         let merged = shard_roundtrip_merge(&grid, &meta, n);
@@ -280,7 +285,7 @@ fn shard_merge_paper_claim_report_bit_identical() {
 #[test]
 fn metric_sink_retention_never_changes_reported_statistics() {
     // Full vs Counting metric retention on the same congested burst, all
-    // four schedulers: the simulation, the exact utilization integers and
+    // five schedulers: the simulation, the exact utilization integers and
     // the final float must be identical — the Counting run just retains
     // zero per-tick samples.  This is the engine-level face of the
     // "reports are byte-identical under Full, exact under Counting"
@@ -633,6 +638,67 @@ fn tuned_dress_runs_are_deterministic_and_in_band() {
         assert!(
             (DELTA_MIN..=DELTA_MAX).contains(&d),
             "adopted δ {d} at t={at} outside [{DELTA_MIN}, {DELTA_MAX}]"
+        );
+    }
+}
+
+#[test]
+fn vector_demand_burst_deterministic_and_reference_equivalent() {
+    // The stochastic vector-demand preset through the whole equivalence
+    // matrix: every scheduler is run-to-run bit-identical on cpu × mem
+    // demands, and the indexed hot path still reproduces the naive
+    // per-tick reference exactly.
+    let specs = dress::workload::congested_burst_vec(150, 100, 0xFEED);
+    assert!(specs.iter().any(|s| !s.demand.is_uniform()), "preset drew no vector demands");
+    for kind in KINDS {
+        let fast = run(kind, specs.clone(), false, 0.0);
+        let again = run(kind, specs.clone(), false, 0.0);
+        assert_eq!(fast, again, "{kind:?}: vector-demand run not deterministic");
+        let naive = run(kind, specs.clone(), true, 0.0);
+        assert_eq!(fast, naive, "{kind:?}: vector-demand hot path diverged from reference");
+        assert!(fast.makespan_ms > 0 && fast.trace_len > 0, "{kind:?}: empty vector run");
+    }
+}
+
+#[test]
+fn memory_axis_changes_scheduling_when_fat() {
+    // Sensitivity proof for the scalar bit-identity claim: the memory
+    // axis must be *live* — a workload whose only difference from its
+    // scalar twin is a 4-units-per-container memory footprint has to
+    // produce a different golden for every scheduler (the per-node and
+    // per-tick memory clamps restrict concurrency).  If this failed, the
+    // "scalar runs are unchanged" goldens above would prove nothing.
+    use dress::jobs::{Demand, JobSpec, PhaseKind, PhaseSpec, Platform};
+    let mk = |demand: Demand| -> Vec<JobSpec> {
+        (0..8u32)
+            .map(|i| {
+                let s = JobSpec {
+                    id: i + 1,
+                    name: format!("mem{}", i + 1),
+                    platform: Platform::MapReduce,
+                    submit_ms: i as u64 * 500,
+                    demand,
+                    phases: vec![
+                        PhaseSpec::new(PhaseKind::Map, &[5_000; 4]),
+                        PhaseSpec::new(PhaseKind::Reduce, &[5_000; 4]),
+                    ],
+                };
+                s.validate().expect("sensitivity specs must be valid");
+                s
+            })
+            .collect()
+    };
+    let scalar = mk(Demand::scalar(4));
+    let fat = mk(Demand::new(4, 16)); // 4 memory units per container
+    for kind in KINDS {
+        let thin = run(kind, scalar.clone(), false, 0.0);
+        let wide = run(kind, fat.clone(), false, 0.0);
+        assert_ne!(thin, wide, "{kind:?}: memory axis invisible to scheduling");
+        assert!(
+            wide.makespan_ms >= thin.makespan_ms,
+            "{kind:?}: fat memory demands somehow finished earlier ({} < {})",
+            wide.makespan_ms,
+            thin.makespan_ms
         );
     }
 }

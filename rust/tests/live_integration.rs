@@ -16,7 +16,7 @@ fn tiny_specs(n: u32, seed: u64) -> Vec<dress::jobs::JobSpec> {
                 t.duration_ms = t.duration_ms.min(1_000);
             }
         }
-        s.demand = s.demand.min(2);
+        s.demand = s.demand.min_each(dress::jobs::Demand::scalar(2));
     }
     specs
 }

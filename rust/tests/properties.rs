@@ -9,6 +9,14 @@ use dress::util::propcheck::forall;
 use dress::util::rng::Rng;
 use dress::workload::{generate, WorkloadMix};
 
+const ALL_KINDS: [SchedKind; 5] = [
+    SchedKind::Fifo,
+    SchedKind::Fair,
+    SchedKind::Capacity,
+    SchedKind::Dress,
+    SchedKind::MaxWeight,
+];
+
 /// Random small experiment: 4-10 jobs on a 2-4 node cluster.
 fn gen_world(rng: &mut Rng) -> (ExperimentConfig, u64, u32) {
     let mut cfg = ExperimentConfig::default();
@@ -27,8 +35,7 @@ fn every_job_completes_under_every_scheduler() {
         12,
         |rng| {
             let (cfg, seed, jobs) = gen_world(rng);
-            let kind = [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress]
-                [(rng.next_u64() % 4) as usize];
+            let kind = ALL_KINDS[(rng.next_u64() % ALL_KINDS.len() as u64) as usize];
             (cfg, seed, jobs, kind)
         },
         |(cfg, seed, jobs, kind)| {
@@ -162,8 +169,7 @@ fn crashed_tasks_eventually_complete_with_work_conserved() {
         12,
         |rng| {
             let (mut cfg, seed, jobs) = gen_world(rng);
-            let kind = [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress]
-                [(rng.next_u64() % 4) as usize];
+            let kind = ALL_KINDS[(rng.next_u64() % ALL_KINDS.len() as u64) as usize];
             cfg.sched.kind = kind;
             let node = (rng.next_u64() % cfg.cluster.nodes as u64) as u16;
             let at = rng.next_u64() % 60_000;
@@ -542,8 +548,7 @@ fn probes_never_perturb_engine_state_or_outcome() {
         8,
         |rng| {
             let (cfg, seed, jobs) = gen_world(rng);
-            let kind = [SchedKind::Fifo, SchedKind::Fair, SchedKind::Capacity, SchedKind::Dress]
-                [(rng.next_u64() % 4) as usize];
+            let kind = ALL_KINDS[(rng.next_u64() % ALL_KINDS.len() as u64) as usize];
             let probe_every = 1 + rng.next_u64() % 5;
             let demands: Vec<u32> =
                 (0..3).map(|_| 1 + (rng.next_u64() % 9) as u32).collect();
@@ -810,6 +815,146 @@ fn paired_delta_ci_sign_consistent_with_per_seed_deltas() {
             }
             if deltas.iter().all(|d| *d < 0.0) && ci.lo() >= 0.0 {
                 return Err("all-negative deltas but CI lower bound >= 0".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn per_axis_allocation_never_exceeds_capacity() {
+    use dress::cluster::{Cluster, ContainerId, ContainerState};
+
+    // Random vector-demand allocate/release/crash/recover scripts driven
+    // straight at the cluster substrate: after every operation each node
+    // must respect BOTH axes (slots and memory units), a down node must
+    // hold nothing, and the cluster-wide ledgers must conserve per axis —
+    // including while outages leave the live totals degraded.
+    forall(
+        "per-axis capacity",
+        16,
+        |rng| {
+            let nodes = 2 + (rng.next_u64() % 3) as u16;
+            let slots = 3 + (rng.next_u64() % 6) as u32;
+            // (op selector, per-container memory footprint) — footprints
+            // deliberately range past a node's capacity so refusal paths
+            // are exercised too.
+            let script: Vec<(u8, u32)> = (0..120)
+                .map(|_| {
+                    (
+                        (rng.next_u64() % 100) as u8,
+                        1 + (rng.next_u64() % (slots as u64 + 2)) as u32,
+                    )
+                })
+                .collect();
+            (nodes, slots, script)
+        },
+        |(nodes, slots, script)| {
+            let mut cl = Cluster::new(*nodes, *slots);
+            let mut live: Vec<ContainerId> = Vec::new();
+            let mut down: Vec<u16> = Vec::new();
+            let mut now = 0u64;
+            for &(op, mem) in script {
+                now += 10;
+                match op {
+                    0..=59 => {
+                        if let Some(cid) = cl.allocate(1, 0, 0, mem, now) {
+                            live.push(cid);
+                        } else if cl.nodes.iter().any(|n| {
+                            n.up && n.free() > 0 && n.mem_free() >= mem
+                        }) {
+                            return Err(format!(
+                                "allocate({mem}) refused although a node fits"
+                            ));
+                        }
+                    }
+                    60..=79 => {
+                        if let Some(cid) = live.pop() {
+                            cl.container_mut(cid).state = ContainerState::Completed;
+                            cl.release(cid);
+                        }
+                    }
+                    80..=89 => {
+                        if let Some(n) = cl.nodes.iter().position(|n| n.up) {
+                            let killed = cl.fail_node(n as u16, now);
+                            live.retain(|c| !killed.contains(c));
+                            down.push(n as u16);
+                        }
+                    }
+                    _ => {
+                        if let Some(n) = down.pop() {
+                            cl.recover_node(n);
+                        }
+                    }
+                }
+                for n in &cl.nodes {
+                    if n.in_use > n.capacity {
+                        return Err(format!(
+                            "node {}: {} slots in use > capacity {}",
+                            n.id, n.in_use, n.capacity
+                        ));
+                    }
+                    if n.mem_in_use > n.mem_capacity {
+                        return Err(format!(
+                            "node {}: {} mem in use > capacity {}",
+                            n.id, n.mem_in_use, n.mem_capacity
+                        ));
+                    }
+                    if !n.up && (n.in_use != 0 || n.mem_in_use != 0) {
+                        return Err(format!("down node {} still holds resources", n.id));
+                    }
+                }
+                if !cl.conservation_holds() {
+                    return Err(format!("per-axis conservation violated at t={now}"));
+                }
+                if cl.used() > cl.total() || cl.used_mem() > cl.total_mem() {
+                    return Err(format!("cluster-wide axis overflow at t={now}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn vector_workloads_complete_under_degraded_capacity() {
+    // End-to-end per-axis safety: random vector-demand bursts, every
+    // scheduler (the memory-aware ones and the cpu-axis baselines alike),
+    // and a random single-node outage degrading both axes mid-run.  Every
+    // task must still complete exactly once with attempt conservation —
+    // and the engine's internal debug assertions (per-axis cluster
+    // conservation on every tick) run the whole time under `cargo test`.
+    forall(
+        "vector demands under outage",
+        10,
+        |rng| {
+            let (mut cfg, seed, jobs) = gen_world(rng);
+            cfg.sched.kind = ALL_KINDS[(rng.next_u64() % ALL_KINDS.len() as u64) as usize];
+            let node = (rng.next_u64() % cfg.cluster.nodes as u64) as u16;
+            let at = rng.next_u64() % 40_000;
+            let downtime = 1_000 + rng.next_u64() % 20_000;
+            cfg.faults = dress::sim::FaultPlan::empty().with_outage(at, node, downtime);
+            (cfg, seed, jobs)
+        },
+        |(cfg, seed, jobs)| {
+            let specs = dress::workload::congested_burst_vec(*jobs + 4, 150, *seed);
+            if !specs.iter().any(|s| !s.demand.is_uniform()) {
+                return Err("burst-vec preset drew no vector demands".into());
+            }
+            let expected: u32 = specs.iter().map(|s| s.total_tasks()).sum();
+            let res = run_experiment(cfg, specs);
+            if res.trace.tasks.len() as u32 != expected {
+                return Err(format!(
+                    "{:?}: ran {} tasks, expected {expected}",
+                    cfg.sched.kind,
+                    res.trace.tasks.len()
+                ));
+            }
+            if res.attempts != expected + res.failures + res.lost_attempts {
+                return Err(format!(
+                    "{:?} conservation: {} attempts != {expected} done + {} failed + {} lost",
+                    cfg.sched.kind, res.attempts, res.failures, res.lost_attempts
+                ));
             }
             Ok(())
         },

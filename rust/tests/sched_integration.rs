@@ -82,7 +82,7 @@ fn capacity_two_queue_ablation_unblocks_other_queue() {
     // Demands must fit the 4-container queue guarantee to gang-start.
     let mut specs = generate(6, WorkloadMix::Mixed, 0.5, 1_000, 5);
     for s in specs.iter_mut() {
-        s.demand = s.demand.min(3);
+        s.demand = s.demand.min_each(dress::jobs::Demand::scalar(3));
     }
     fn route(j: u32) -> usize {
         (j % 2) as usize
