@@ -18,7 +18,9 @@ USAGE:
               [--small-frac F] [--seed S] [--csv out-prefix]
               [--metric-sink full|counting|ring:N|decimate:K]
               [--fault-plan SPEC] [--trace in.trace] [--export-trace out.trace]
-              [--tune-delta]
+              [--tune-delta] [--tune-every K] [--shadow-window W]
+              [--cells N] [--router by-category|least-load|round-robin]
+              [--migrate-threshold K] [--cell-faults SPEC]
   dress compare [--jobs N] [--platform mapreduce|spark|mixed] [--seed S]
   dress repro <fig1|fig2|fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table2|all>
               [--seed S]
@@ -26,19 +28,26 @@ USAGE:
   dress live  [--jobs N] [--workers W] [--sched dress|capacity] [--seed S]
               [--simulate-deaths K] [--admission] [--commit-timeout-ms T]
   dress sweep [--seeds K] [--seed S] [--jobs W | --workers W] [--njobs N]
-              [--platform mapreduce|spark|mixed|burst|burst-vec] [--small-frac F]
-              [--trace in.trace]
+              [--platform mapreduce|spark|mixed|burst|burst-vec|burst-vec-jitter]
+              [--small-frac F] [--trace in.trace]
               [--metric-sink full|counting|ring:N|decimate:K]
-              [--fault-plan SPEC] [--tune-delta] [--paper] [--shard i/N]
+              [--fault-plan SPEC] [--tune-delta] [--tune-every K]
+              [--shadow-window W] [--cells N] [--router POLICY]
+              [--migrate-threshold K] [--cell-faults SPEC]
+              [--paper] [--shard i/N]
               [--out shard.json] [--report report.txt] [--csv out-prefix]
   dress sweep-merge <shard.json...> [--partial] [--report report.txt]
               [--csv out-prefix]
   dress bench
 
-`sweep` fans a K-seed x 5-scheduler grid across W worker threads
-(--jobs 0 = all cores; results are bit-identical to --jobs 1) with
-counting trace sinks (O(active) memory).  --platform burst-vec draws
-stochastic vector (cpu x mem) demands; --trace FILE replays a recorded
+`run` simulates one workload under one of the five schedulers (FIFO,
+Fair, Capacity, DRESS, MaxWeight), all of which schedule full vector
+(cpu x mem) demands.  `sweep` fans a K-seed x 5-scheduler grid across
+W worker threads (--jobs 0 = all cores; results are bit-identical to
+--jobs 1) with counting trace sinks (O(active) memory).  --platform
+burst-vec draws stochastic vector (cpu x mem) demands, and
+burst-vec-jitter adds per-task memory jitter on top (a separate preset
+so burst-vec runs stay bit-stable); --trace FILE replays a recorded
 trace instead of a synthetic preset (the trace text is part of the grid
 fingerprint, so trace and synthetic shards refuse to merge).
 --paper instead sweeps the
@@ -66,10 +75,27 @@ The plan is part of the sweep-grid fingerprint.
 --tune-delta turns on the online shadow δ auto-tuner (DRESS only — see
 docs/ADMISSION.md): the scheduler replays its recent submit/complete
 window against candidate δ values every few heartbeats and adopts the
-winner, clamped to the reserve band.  Deterministic given the seed, and
-part of the sweep-grid fingerprint.  `dress live --admission` fronts
-arriving jobs with the probe → reserve (commit timeout) → commit
-lifecycle; --commit-timeout-ms sets the reservation expiry.
+winner, clamped to the reserve band.  --tune-every sets the re-tune
+cadence in heartbeats and --shadow-window the replay-window capacity
+in events; both default to the historical hard-wired values and both
+are part of the sweep-grid fingerprint.  Deterministic given the seed.
+`dress live --admission` fronts arriving jobs with the probe → reserve
+(commit timeout) → commit lifecycle; --commit-timeout-ms sets the
+reservation expiry.
+
+--cells N > 1 federates the run across N lock-stepped simulation cells
+(see docs/FEDERATION.md): --router picks the deterministic routing
+policy (by-category classifies jobs SD/LD the DRESS way and pins each
+class to its own cell group; least-load routes to the cell with the
+least outstanding work; round-robin is the reference), and
+--migrate-threshold K migrates queued jobs off a cell whenever its
+pending queue exceeds the least-loaded cell's by more than K (0
+disables rebalancing).  --cell-faults takes the same `T:N:D` grammar
+as --fault-plan with *cell indices* in the node field and kills whole
+cells: their unfinished jobs are salvaged and re-routed.  A 1-cell
+federation is bit-identical to a plain run; cells and router are part
+of the sweep-grid fingerprint, so federated and single-cell shards
+refuse to merge.
 ";
 
 /// Entry point used by `main.rs`; returns a process exit code.
@@ -119,8 +145,39 @@ fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(s) = args.flag("fault-plan") {
         cfg.faults = crate::sim::FaultPlan::parse(s)?;
     }
+    apply_federation_flags(args, &mut cfg)?;
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Fold the federation flags into `cfg.federation` (shared by `run` and
+/// `sweep`; validation happens in `ExperimentConfig::validate`).
+fn apply_federation_flags(args: &Args, cfg: &mut ExperimentConfig) -> Result<(), String> {
+    cfg.federation.cells = args.flag_u64("cells", cfg.federation.cells as u64)? as u32;
+    if let Some(s) = args.flag("router") {
+        cfg.federation.router = crate::config::RouterKind::parse(s)?;
+    }
+    cfg.federation.migrate_threshold =
+        args.flag_u64("migrate-threshold", cfg.federation.migrate_threshold as u64)? as u32;
+    if let Some(s) = args.flag("cell-faults") {
+        cfg.federation.cell_faults = crate::sim::FaultPlan::parse(s)?;
+    }
+    Ok(())
+}
+
+/// Fold the δ-tuner cadence flags into `opts` (shared by `run` and
+/// `sweep`; both knobs are part of the sweep-grid fingerprint).
+fn apply_tuner_flags(args: &Args, opts: &mut crate::sim::EngineOptions) -> Result<(), String> {
+    opts.tune_delta = opts.tune_delta || args.switch("tune-delta");
+    opts.tune_every = args.flag_u64("tune-every", opts.tune_every as u64)? as u32;
+    if opts.tune_every == 0 {
+        return Err("--tune-every must be >= 1 heartbeat".into());
+    }
+    opts.shadow_window = args.flag_u64("shadow-window", opts.shadow_window as u64)? as usize;
+    if opts.shadow_window == 0 {
+        return Err("--shadow-window must be >= 1 event".into());
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<(), String> {
@@ -159,7 +216,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if let Some(sink) = args.flag("metric-sink") {
         opts.metrics = crate::sim::MetricSinkKind::parse(sink)?;
     }
-    opts.tune_delta = args.switch("tune-delta");
+    apply_tuner_flags(args, &mut opts)?;
     let res = crate::sim::run_experiment_with(&cfg, specs, opts);
     let header = ["Job", "Demand", "Waiting (s)", "Completion (s)"];
     let rows: Vec<Vec<String>> = res
@@ -235,6 +292,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             );
         }
     }
+    print!("{}", report::federation_summary(cfg.federation.router.name(), &res));
     if let Some(base) = args.flag("csv") {
         for (suffix, text) in [
             ("jobs", report::jobs_csv(&res)),
@@ -537,6 +595,9 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
                 ("burst-vec", _) => {
                     SweepWorkload::CongestedBurstVec { n: njobs, arrival_mean_ms: 100 }
                 }
+                ("burst-vec-jitter", _) => {
+                    SweepWorkload::CongestedBurstVecJitter { n: njobs, arrival_mean_ms: 100 }
+                }
                 (_, Ok(mix)) => {
                     SweepWorkload::Generate { n: njobs, mix, small_frac, arrival_ms: 5_000 }
                 }
@@ -568,13 +629,15 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     // shards swept with different plans must refuse to merge.
     if let Some(spec) = args.flag("fault-plan") {
         grid.base.faults = crate::sim::FaultPlan::parse(spec)?;
-        grid.base.validate()?;
     }
+    // Federation topology too: a federated sweep and a single-cell sweep
+    // are different experiments (the base config is in the fingerprint),
+    // and each worker thread runs its whole federation in-process.
+    apply_federation_flags(args, &mut grid.base)?;
+    grid.base.validate()?;
     // And the shadow tuner: tuned and untuned sweeps are different
     // experiments (EngineOptions is part of the fingerprint).
-    if args.switch("tune-delta") {
-        grid.opts.tune_delta = true;
-    }
+    apply_tuner_flags(args, &mut grid.opts)?;
     let meta = SweepMeta::of(&grid, mode);
 
     if let Some(spec) = args.flag("shard") {
@@ -842,6 +905,119 @@ mod tests {
         assert_eq!(run_cli(&args("run --jobs 4 --sched dress --seed 3 --tune-delta")), 0);
         // Harmless on schedulers with no δ to tune.
         assert_eq!(run_cli(&args("run --jobs 4 --sched fifo --seed 3 --tune-delta")), 0);
+    }
+
+    #[test]
+    fn run_accepts_tuner_cadence_flags() {
+        assert_eq!(
+            run_cli(&args(
+                "run --jobs 4 --sched dress --seed 3 --tune-delta --tune-every 8 --shadow-window 64"
+            )),
+            0
+        );
+        assert_eq!(run_cli(&args("run --jobs 4 --sched dress --tune-delta --tune-every 0")), 1);
+        assert_eq!(run_cli(&args("run --jobs 4 --sched dress --tune-delta --shadow-window 0")), 1);
+    }
+
+    #[test]
+    fn run_accepts_federation_flags() {
+        for router in ["round-robin", "least-load", "by-category"] {
+            assert_eq!(
+                run_cli(&args(&format!(
+                    "run --jobs 6 --sched dress --seed 3 --cells 3 --router {router}"
+                ))),
+                0
+            );
+        }
+        assert_eq!(
+            run_cli(&args("run --jobs 6 --seed 3 --cells 2 --migrate-threshold 1")),
+            0
+        );
+        assert_eq!(run_cli(&args("run --jobs 4 --cells 0")), 1);
+        assert_eq!(run_cli(&args("run --jobs 4 --cells 2 --router bogus")), 1);
+    }
+
+    #[test]
+    fn run_accepts_cell_fault_plans() {
+        // Cell 1 of 3 dies at 4s for 5s: the downtime elapses inside the
+        // run, so recovery is observable.
+        assert_eq!(
+            run_cli(&args("run --jobs 8 --seed 3 --cells 3 --cell-faults 4000:1:5000")),
+            0
+        );
+        // Cell faults need a federation to kill cells of.
+        assert_eq!(run_cli(&args("run --jobs 4 --cell-faults 4000:0:5000")), 1);
+        // Node-level and cell-level fault layers cannot be combined.
+        assert_eq!(
+            run_cli(&args(
+                "run --jobs 4 --cells 2 --cell-faults 4000:1:5000 --fault-plan 5000:0:2000"
+            )),
+            1
+        );
+        // Cell index beyond the federation: rejected by validate.
+        assert_eq!(
+            run_cli(&args("run --jobs 4 --cells 2 --cell-faults 4000:7:5000")),
+            1
+        );
+    }
+
+    #[test]
+    fn sweep_runs_burst_vec_jitter_platform() {
+        assert_eq!(
+            run_cli(&args("sweep --seeds 2 --njobs 4 --platform burst-vec-jitter --seed 7")),
+            0
+        );
+    }
+
+    #[test]
+    fn sweep_federation_is_part_of_the_fingerprint() {
+        // A federated shard and a single-cell shard describe different
+        // experiments and must refuse to merge.
+        let (a, b) = (tmp("fed-a.json"), tmp("fed-b.json"));
+        let base = "sweep --seeds 2 --njobs 3";
+        assert_eq!(
+            run_cli(&args(&format!("{base} --shard 0/2 --out {a} --cells 2 --router least-load"))),
+            0
+        );
+        assert_eq!(run_cli(&args(&format!("{base} --shard 1/2 --out {b}"))), 0);
+        assert_eq!(run_cli(&args(&format!("sweep-merge {a} {b}"))), 1);
+    }
+
+    #[test]
+    fn sweep_tuner_cadence_is_part_of_the_fingerprint() {
+        let (a, b) = (tmp("cadence-a.json"), tmp("cadence-b.json"));
+        let base = "sweep --seeds 2 --njobs 3 --tune-delta";
+        assert_eq!(
+            run_cli(&args(&format!("{base} --shard 0/2 --out {a} --tune-every 8"))),
+            0
+        );
+        assert_eq!(run_cli(&args(&format!("{base} --shard 1/2 --out {b}"))), 0);
+        assert_eq!(run_cli(&args(&format!("sweep-merge {a} {b}"))), 1);
+    }
+
+    #[test]
+    fn federated_sweep_shard_merge_matches_full_run() {
+        // Per-cell federated configurations ride the existing shard
+        // machinery: a sharded federated sweep merges back to the bytes of
+        // the unsharded federated sweep.
+        let (s0, s1, s2) = (tmp("fshard0.json"), tmp("fshard1.json"), tmp("fshard2.json"));
+        let (merged, full) = (tmp("fmerged.txt"), tmp("ffull.txt"));
+        let base = "sweep --seeds 2 --njobs 4 --seed 5 --jobs 2 --cells 2 --router by-category";
+        assert_eq!(run_cli(&args(&format!("{base} --shard 0/3 --out {s0}"))), 0);
+        assert_eq!(run_cli(&args(&format!("{base} --shard 1/3 --out {s1}"))), 0);
+        assert_eq!(run_cli(&args(&format!("{base} --shard 2/3 --out {s2}"))), 0);
+        assert_eq!(
+            run_cli(&args(&format!("sweep-merge {s0} {s1} {s2} --report {merged}"))),
+            0
+        );
+        assert_eq!(run_cli(&args(&format!("{base} --report {full}"))), 0);
+        let merged_text = std::fs::read_to_string(&merged).unwrap();
+        assert!(!merged_text.is_empty());
+        assert_eq!(
+            merged_text,
+            std::fs::read_to_string(&full).unwrap(),
+            "merged federated report diverged from full run"
+        );
     }
 
     #[test]

@@ -144,6 +144,13 @@ impl Cluster {
         killed
     }
 
+    /// Whether `node` is currently up (cell-level fault handling guards
+    /// on this before `fail_node`/`recover_node`, whose debug asserts
+    /// require a state change).
+    pub fn node_up(&self, node: NodeId) -> bool {
+        self.nodes[node as usize].up
+    }
+
     /// Bring a crashed node back. Its slots rejoin `total`/`free` empty.
     pub fn recover_node(&mut self, node: NodeId) {
         let n = &mut self.nodes[node as usize];

@@ -4,5 +4,8 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{ClusterConfig, DelayConfig, ExperimentConfig, SchedKind, SchedConfig, WorkloadConfig};
+pub use schema::{
+    ClusterConfig, DelayConfig, ExperimentConfig, FederationConfig, RouterKind, SchedConfig,
+    SchedKind, WorkloadConfig,
+};
 pub use toml::{parse, TomlValue};

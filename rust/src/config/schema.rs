@@ -131,6 +131,72 @@ impl Default for SchedConfig {
     }
 }
 
+/// Cross-cell routing policy for federated (multi-cell) runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Reference policy: cells in rotation, skipping dead cells.
+    RoundRobin,
+    /// Route to the alive cell with the least outstanding work.
+    LeastLoad,
+    /// DRESS classification made topological: SD jobs to one cell group,
+    /// LD jobs to the other (docs/FEDERATION.md).
+    ByCategory,
+}
+
+impl RouterKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" => Ok(RouterKind::RoundRobin),
+            "least-load" => Ok(RouterKind::LeastLoad),
+            "by-category" => Ok(RouterKind::ByCategory),
+            other => {
+                Err(format!("unknown router `{other}` (round-robin|least-load|by-category)"))
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastLoad => "least-load",
+            RouterKind::ByCategory => "by-category",
+        }
+    }
+}
+
+/// Federated multi-cell topology.  The default (`cells = 1`) runs the
+/// plain single-cell engine; `cells > 1` lock-steps N identical cells on
+/// a global clock with cross-cell routing and migration
+/// (docs/FEDERATION.md).  Part of the `Debug` representation, so cells,
+/// router, threshold and cell-fault plan all enter the sweep-grid
+/// fingerprint — federated and single-cell shards refuse to merge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationConfig {
+    /// Number of cells; each is a full copy of `[cluster]`.
+    pub cells: u32,
+    /// Cross-cell routing policy.
+    pub router: RouterKind,
+    /// Queue-imbalance migration threshold: at each heartbeat, jobs move
+    /// from the longest to the shortest pending queue while the gap
+    /// exceeds this many jobs.  0 disables migration.
+    pub migrate_threshold: u32,
+    /// Cell-level outage plan; same grammar as node fault plans but the
+    /// "node" field names a cell index.  A dead cell loses all nodes at
+    /// once and its salvageable jobs are re-routed.
+    pub cell_faults: FaultPlan,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            cells: 1,
+            router: RouterKind::RoundRobin,
+            migrate_threshold: 4,
+            cell_faults: FaultPlan::empty(),
+        }
+    }
+}
+
 /// Workload shape for generated experiments.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadConfig {
@@ -166,6 +232,8 @@ pub struct ExperimentConfig {
     /// the `Debug` representation, so it enters the sweep-grid fingerprint
     /// and shards with different plans refuse to merge.
     pub faults: FaultPlan,
+    /// Multi-cell federation topology (default: one cell, plain engine).
+    pub federation: FederationConfig,
 }
 
 impl ExperimentConfig {
@@ -243,6 +311,18 @@ impl ExperimentConfig {
         if let Some(s) = toml::get_str(doc, "faults", "plan") {
             self.faults = FaultPlan::parse(s)?;
         }
+        if let Some(v) = toml::get_int(doc, "federation", "cells") {
+            self.federation.cells = v as u32;
+        }
+        if let Some(s) = toml::get_str(doc, "federation", "router") {
+            self.federation.router = RouterKind::parse(s)?;
+        }
+        if let Some(v) = toml::get_int(doc, "federation", "migrate_threshold") {
+            self.federation.migrate_threshold = v as u32;
+        }
+        if let Some(s) = toml::get_str(doc, "federation", "cell_faults") {
+            self.federation.cell_faults = FaultPlan::parse(s)?;
+        }
         Ok(())
     }
 
@@ -275,9 +355,30 @@ impl ExperimentConfig {
         }
         // Materialization re-checks node ranges/overlap with stochastic
         // draws included; here it doubles as plan validation.
-        self.faults
-            .materialize(self.cluster.nodes, self.workload.seed)
-            .map(|_| ())
+        self.faults.materialize(self.cluster.nodes, self.workload.seed)?;
+        if self.federation.cells == 0 {
+            return Err("federation.cells must be >= 1".into());
+        }
+        if self.federation.cells > u16::MAX as u32 {
+            return Err("federation.cells exceeds the cell-index range".into());
+        }
+        if !self.federation.cell_faults.is_empty() {
+            if self.federation.cells < 2 {
+                return Err("cell_faults require federation.cells >= 2".into());
+            }
+            if !self.faults.is_empty() {
+                // A node fault firing inside a cell that a cell fault has
+                // already killed would double-crash the node; the two
+                // plan layers are mutually exclusive.
+                return Err("cell_faults cannot be combined with node fault plans".into());
+            }
+            // Cell plans materialize against the cell count: the plan's
+            // "node" field names a cell index.
+            self.federation
+                .cell_faults
+                .materialize(self.federation.cells as u16, self.workload.seed)?;
+        }
+        Ok(())
     }
 }
 
@@ -345,6 +446,46 @@ seed = 7
         // Plans referencing out-of-range nodes are rejected at validate.
         assert!(ExperimentConfig::from_toml("[faults]\nplan = \"1000:9:500\"").is_err());
         assert!(ExperimentConfig::from_toml("[faults]\nplan = \"garbage\"").is_err());
+    }
+
+    #[test]
+    fn federation_from_toml() {
+        let cfg = ExperimentConfig::from_toml(
+            "[federation]\ncells = 3\nrouter = \"by-category\"\nmigrate_threshold = 2\ncell_faults = \"60000:1:30000\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.federation.cells, 3);
+        assert_eq!(cfg.federation.router, RouterKind::ByCategory);
+        assert_eq!(cfg.federation.migrate_threshold, 2);
+        assert_eq!(cfg.federation.cell_faults.fixed.len(), 1);
+        // Defaults: single cell, round-robin, no cell faults.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.federation.cells, 1);
+        assert_eq!(d.federation.router, RouterKind::RoundRobin);
+        assert!(d.federation.cell_faults.is_empty());
+        assert!(d.validate().is_ok());
+        // Rejections: zero cells, cell faults without federation, cell
+        // faults naming out-of-range cells, mixing fault layers.
+        assert!(ExperimentConfig::from_toml("[federation]\ncells = 0").is_err());
+        assert!(
+            ExperimentConfig::from_toml("[federation]\ncell_faults = \"1000:0:500\"").is_err()
+        );
+        assert!(ExperimentConfig::from_toml(
+            "[federation]\ncells = 2\ncell_faults = \"1000:5:500\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[federation]\ncells = 2\ncell_faults = \"1000:0:500\"\n[faults]\nplan = \"1000:0:500\""
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn router_kind_roundtrip() {
+        for r in ["round-robin", "least-load", "by-category"] {
+            assert_eq!(RouterKind::parse(r).unwrap().name(), r);
+        }
+        assert!(RouterKind::parse("hash").is_err());
     }
 
     #[test]

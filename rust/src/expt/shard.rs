@@ -30,7 +30,10 @@ pub const SHARD_FORMAT: &str = "dress-sweep-shard";
 /// Bumped whenever the shard schema changes incompatibly.
 /// v2: fault/recovery counters (lost attempts, lost/wasted/useful work,
 /// outage count) joined the cell summary.
-pub const SHARD_VERSION: u64 = 2;
+/// v3: federation counters (simulation cells, migrations, cell outages,
+/// summed recovery latency, imbalance milli-ratios) joined the cell
+/// summary.
+pub const SHARD_VERSION: u64 = 3;
 
 // ------------------------------------------------------------ fingerprint
 
@@ -225,6 +228,21 @@ pub struct CellSummary {
     pub useful_work_ms: u64,
     /// Node outages that fired during the run.
     pub outages: u32,
+    /// Simulation cells behind this result (1 = plain engine run, >1 =
+    /// a federated run merged by `federation::FederationResult::merged`).
+    pub fed_cells: u32,
+    /// Cross-cell migrations (threshold rebalancing + death salvage).
+    pub migrations: u32,
+    /// Cell-level outages that fired during the run.
+    pub cell_outages: u32,
+    /// Σ time-to-recover over *healed* cell outages, ms (unhealed outages
+    /// contribute nothing — they have no finite latency to sum).
+    pub cell_recover_ms: u64,
+    /// Peak cross-cell imbalance ratio in exact milli-units
+    /// (`round(ratio × 1000)`): integers cross the wire, floats do not.
+    pub imbalance_max_milli: u64,
+    /// Time-mean imbalance ratio in the same milli-units.
+    pub imbalance_mean_milli: u64,
     pub jobs: Vec<JobMetrics>,
 }
 
@@ -252,6 +270,16 @@ impl CellSummary {
             wasted_work_ms: r.wasted_work_ms,
             useful_work_ms: r.useful_work_ms,
             outages: r.outages.len() as u32,
+            fed_cells: r.cells,
+            migrations: r.migrations,
+            cell_outages: r.cell_outages.len() as u32,
+            cell_recover_ms: r
+                .cell_outages
+                .iter()
+                .filter_map(|o| o.time_to_recover_ms())
+                .sum(),
+            imbalance_max_milli: (r.imbalance_max * 1000.0).round() as u64,
+            imbalance_mean_milli: (r.imbalance_mean * 1000.0).round() as u64,
             jobs: r.jobs.clone(),
         }
     }
@@ -301,6 +329,12 @@ impl CellSummary {
         o.set("wasted_work_ms", Json::Num(self.wasted_work_ms as f64));
         o.set("useful_work_ms", Json::Num(self.useful_work_ms as f64));
         o.set("outages", Json::Num(self.outages as f64));
+        o.set("fed_cells", Json::Num(self.fed_cells as f64));
+        o.set("migrations", Json::Num(self.migrations as f64));
+        o.set("cell_outages", Json::Num(self.cell_outages as f64));
+        o.set("cell_recover_ms", Json::Num(self.cell_recover_ms as f64));
+        o.set("imbalance_max_milli", Json::Num(self.imbalance_max_milli as f64));
+        o.set("imbalance_mean_milli", Json::Num(self.imbalance_mean_milli as f64));
         let jobs: Vec<Json> = self
             .jobs
             .iter()
@@ -372,6 +406,18 @@ impl CellSummary {
                  (crash losses are a subset of waste)"
             ));
         }
+        let fed_cells = u64_field(v, "fed_cells")? as u32;
+        let migrations = u64_field(v, "migrations")? as u32;
+        let cell_outages = u64_field(v, "cell_outages")? as u32;
+        if fed_cells == 0 {
+            return Err("fed_cells must be >= 1".into());
+        }
+        if fed_cells == 1 && (migrations > 0 || cell_outages > 0) {
+            return Err(format!(
+                "single-cell run carries federation counters \
+                 (migrations {migrations}, cell_outages {cell_outages})"
+            ));
+        }
         Ok(CellSummary {
             index: u64_field(v, "index")? as usize,
             seed: u64_field(v, "seed")?,
@@ -393,6 +439,12 @@ impl CellSummary {
             wasted_work_ms,
             useful_work_ms: u64_field(v, "useful_work_ms")?,
             outages: u64_field(v, "outages")? as u32,
+            fed_cells,
+            migrations,
+            cell_outages,
+            cell_recover_ms: u64_field(v, "cell_recover_ms")?,
+            imbalance_max_milli: u64_field(v, "imbalance_max_milli")?,
+            imbalance_mean_milli: u64_field(v, "imbalance_mean_milli")?,
             jobs,
         })
     }
@@ -702,7 +754,7 @@ pub fn sweep_claim_checks(meta: &SweepMeta, cells: &[CellSummary]) -> Vec<SweepC
 fn cell_table(meta: &SweepMeta, cells: &[CellSummary]) -> String {
     let header = [
         "Cell", "Wkld", "Seed", "Scheduler", "Makespan (s)", "Avg wait (s)", "Util (%)",
-        "Events", "Lost", "Goodput",
+        "Events", "Lost", "Migr", "Goodput",
     ];
     let rows: Vec<Vec<String>> = cells
         .iter()
@@ -718,6 +770,7 @@ fn cell_table(meta: &SweepMeta, cells: &[CellSummary]) -> String {
                 format!("{:.1}", 100.0 * c.util().mean_utilization()),
                 c.events.to_string(),
                 c.lost_attempts.to_string(),
+                c.migrations.to_string(),
                 format!("{:.3}", c.goodput()),
             ]
         })
@@ -1090,6 +1143,34 @@ mod tests {
         let mut bad = cell.to_json();
         bad.set("lost_work_ms", Json::Num(cell.wasted_work_ms as f64 + 1.0));
         assert!(CellSummary::from_json(&bad).unwrap_err().contains("lost_work_ms"));
+    }
+
+    #[test]
+    fn cell_summary_carries_federation_integers() {
+        // A federated grid cell rides the same wire format: the per-run
+        // federation counters survive the JSON round-trip exactly, and
+        // impossible combinations are rejected.
+        let mut g = tiny_grid(vec![5]);
+        g.base.federation.cells = 2;
+        let (cfg, specs) = g.cell(0);
+        let r = crate::sim::run_experiment_with(&cfg, specs, g.opts);
+        assert_eq!(r.cells, 2);
+        let cell = CellSummary::of(&g, 0, &r);
+        assert_eq!(cell.fed_cells, 2);
+        assert_eq!(cell.migrations, r.migrations);
+        assert_eq!(cell.imbalance_max_milli, (r.imbalance_max * 1000.0).round() as u64);
+        let back = CellSummary::from_json(&cell.to_json()).unwrap();
+        assert_eq!(back, cell, "federation integers must round-trip exactly");
+
+        let mut bad = cell.to_json();
+        bad.set("fed_cells", Json::Num(0.0));
+        assert!(CellSummary::from_json(&bad).unwrap_err().contains("fed_cells"));
+        let mut bad = cell.to_json();
+        bad.set("fed_cells", Json::Num(1.0));
+        bad.set("migrations", Json::Num(3.0));
+        assert!(CellSummary::from_json(&bad)
+            .unwrap_err()
+            .contains("federation counters"));
     }
 
     #[test]

@@ -123,6 +123,17 @@ impl JobStore {
         }
     }
 
+    /// Undo a submission (federation withdraws a queued job to migrate it
+    /// to another cell).  Task state is left as-is: a job returning to
+    /// this cell resumes exactly where it stopped, and its first-start /
+    /// finish timestamps stay attached to wherever it actually ran.
+    pub fn mark_withdrawn(&mut self, slot: usize) {
+        match self {
+            JobStore::Aos(s) => s.jobs[slot].submitted = false,
+            JobStore::Soa(s) => s.submitted[slot] = false,
+        }
+    }
+
     pub fn started(&self, slot: usize) -> bool {
         match self {
             JobStore::Aos(s) => s.jobs[slot].started(),
@@ -308,6 +319,15 @@ impl JobStore {
         match self {
             JobStore::Aos(s) => s.jobs.iter().map(JobMetrics::of).collect(),
             JobStore::Soa(s) => (0..s.specs.len()).map(|slot| s.metrics(slot)).collect(),
+        }
+    }
+
+    /// Final metrics of one job (federation cells report only the jobs
+    /// they finished).  Panics if the job never started or never finished.
+    pub fn metrics_of(&self, slot: usize) -> JobMetrics {
+        match self {
+            JobStore::Aos(s) => JobMetrics::of(&s.jobs[slot]),
+            JobStore::Soa(s) => s.metrics(slot),
         }
     }
 }

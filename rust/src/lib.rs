@@ -35,6 +35,7 @@ pub mod cluster;
 pub mod config;
 pub mod estimator;
 pub mod expt;
+pub mod federation;
 pub mod jobs;
 pub mod live;
 pub mod metrics;

@@ -186,6 +186,29 @@ impl DeltaSummary {
         self.sum += delta;
     }
 
+    /// Pool another δ stream into this one (federation result merging:
+    /// one summary per cell, combined into the run-level view).  Counters
+    /// and integrals add, extrema combine, and `last` takes the other
+    /// stream's tail, so `mean()` becomes the span-weighted average of the
+    /// per-stream means.  Merge order is fixed (cell index), so the result
+    /// is deterministic.
+    pub fn merge(&mut self, other: &DeltaSummary) {
+        if other.samples == 0 {
+            return;
+        }
+        if self.samples == 0 {
+            *self = *other;
+            return;
+        }
+        self.samples += other.samples;
+        self.span_ms += other.span_ms;
+        self.area += other.area;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.last = other.last;
+    }
+
     /// Time-weighted mean δ (unweighted for a zero-length span; 0 empty).
     pub fn mean(&self) -> f64 {
         if self.samples == 0 {

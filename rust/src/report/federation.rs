@@ -1,0 +1,74 @@
+//! Federation report block: routing distribution, migration counters,
+//! cross-cell imbalance, and per-cell outage recovery (docs/FEDERATION.md
+//! defines each metric).  Pure function of the merged [`RunResult`], so
+//! `dress run --cells N` output is deterministic byte-for-byte.
+
+use crate::sim::RunResult;
+
+/// Render the federation section of a `dress run` report.  Empty for
+/// single-cell results so callers can `print!` unconditionally.
+pub fn federation_summary(router: &str, res: &RunResult) -> String {
+    if res.cells <= 1 {
+        return String::new();
+    }
+    let mut out = format!(
+        "federation: {} cells via `{router}` | routed {:?} | {} migration(s) | \
+         imbalance max {:.2} mean {:.2}\n",
+        res.cells, res.routing, res.migrations, res.imbalance_max, res.imbalance_mean
+    );
+    for o in &res.cell_outages {
+        let ttr = match o.time_to_recover_ms() {
+            Some(ms) => format!("time-to-recover {:.1}s", ms as f64 / 1000.0),
+            None => "unrecovered at run end".into(),
+        };
+        out.push_str(&format!(
+            "  cell {} down at {:.1}s for {:.1}s: salvaged {} job(s), {ttr}\n",
+            o.cell,
+            o.at_ms as f64 / 1000.0,
+            o.down_ms as f64 / 1000.0,
+            o.salvaged,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::sim::CellOutageRecord;
+    use crate::workload::{generate, WorkloadMix};
+
+    #[test]
+    fn single_cell_results_render_nothing() {
+        let cfg = ExperimentConfig::default();
+        let specs = generate(3, WorkloadMix::Mixed, 0.3, 2_000, 7);
+        let res = crate::sim::engine::run_experiment(&cfg, specs);
+        assert_eq!(res.cells, 1);
+        assert_eq!(federation_summary("round-robin", &res), "");
+    }
+
+    #[test]
+    fn federated_results_render_counters_and_outages() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.federation.cells = 2;
+        let specs = generate(4, WorkloadMix::Mixed, 0.3, 2_000, 7);
+        let mut res = crate::sim::run_experiment_with(
+            &cfg,
+            specs,
+            crate::sim::EngineOptions::default(),
+        );
+        assert_eq!(res.cells, 2);
+        res.cell_outages.push(CellOutageRecord {
+            cell: 1,
+            at_ms: 4_000,
+            down_ms: 5_000,
+            salvaged: 3,
+            recovered_at: Some(11_000),
+        });
+        let s = federation_summary("least-load", &res);
+        assert!(s.contains("2 cells via `least-load`"), "{s}");
+        assert!(s.contains("cell 1 down at 4.0s"), "{s}");
+        assert!(s.contains("salvaged 3 job(s), time-to-recover 7.0s"), "{s}");
+    }
+}

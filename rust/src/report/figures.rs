@@ -186,6 +186,12 @@ mod tests {
             tasks_recorded: 0,
             transitions_recorded: 0,
             retained_transitions: 0,
+            cells: 1,
+            migrations: 0,
+            routing: vec![],
+            imbalance_max: 0.0,
+            imbalance_mean: 0.0,
+            cell_outages: vec![],
         }
     }
 

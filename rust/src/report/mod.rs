@@ -3,10 +3,12 @@
 
 pub mod compare;
 pub mod csv;
+pub mod federation;
 pub mod figures;
 pub mod table;
 
 pub use compare::{ci_holds, comparison_row, comparison_row_ci, PaperClaim};
+pub use federation::federation_summary;
 pub use csv::{claims_csv, delta_csv, jobs_csv, sweep_stats_csv, trace_csv, util_csv};
 pub use figures::{
     fig_ci_bars, fig_completion_bars, fig_stacked_bars, fig_trace, fig_utilization,

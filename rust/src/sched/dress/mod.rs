@@ -254,6 +254,11 @@ impl Scheduler for DressScheduler {
         self.tune_delta = on;
     }
 
+    fn set_tune_params(&mut self, every: u32, window: usize) {
+        self.tune_every = every.max(1);
+        self.window = ShadowWindow::new(window.max(1));
+    }
+
     fn snapshot(&self, view: &ClusterView) -> Option<SchedSnapshot> {
         Some(DressScheduler::snapshot(self, view))
     }

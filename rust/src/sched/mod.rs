@@ -141,6 +141,14 @@ pub trait Scheduler {
         let _ = on;
     }
 
+    /// Configure the shadow tuner's re-tune cadence (heartbeats) and
+    /// window capacity (events) — `EngineOptions::{tune_every,
+    /// shadow_window}`.  Default is a no-op for schedulers with no tuner;
+    /// inert for DRESS too unless `set_tune_delta(true)` arms it.
+    fn set_tune_params(&mut self, every: u32, window: usize) {
+        let _ = (every, window);
+    }
+
     /// Freeze the scheduler's tunable state into a [`shadow::SchedSnapshot`]
     /// for what-if evaluation.  `None` for schedulers with no hidden state
     /// (callers fall back to [`shadow::SchedSnapshot::of_view`]).

@@ -1,0 +1,1126 @@
+//! The self-contained simulation cell — the discrete-event core extracted
+//! from `sim/engine.rs` (see that module for the hot-path design notes).
+//!
+//! A [`Cell`] owns everything one cluster needs to simulate itself: event
+//! queue, scheduler, cluster state, job store, fault plan, RNG stream, and
+//! metric sinks.  Two driving modes share the exact same event loop:
+//!
+//! * **Engine mode** — `sim/engine.rs` wraps a single cell and drives
+//!   [`Cell::step`] to completion, exactly as the pre-split engine did.
+//!   The golden suite (tests/golden_determinism.rs and the federation
+//!   goldens) proves the split bit-identical for all five schedulers,
+//!   with and without fault plans and the δ tuner.
+//! * **Federation mode** — `federation/` lock-steps N cells on a global
+//!   clock via [`Cell::advance_to`], which processes every event up to a
+//!   deadline and surfaces job completions, container releases, and
+//!   heartbeat summaries as [`CellOutput`] data instead of terminal state.
+//!
+//! Federation support is strictly additive: the output buffer is only
+//! populated when [`Cell::collect_outputs`] is armed, and the membership
+//! APIs ([`Cell::accept`], [`Cell::withdraw_unfinished`],
+//! [`Cell::fail_cell`]) are never called on a single-cell run, so the
+//! wrapped engine's event sequence — and therefore its RNG stream — is
+//! untouched by the refactor.
+
+use super::engine::{EngineOptions, RunResult};
+use super::event::{Event, EventQueue};
+use super::fault::OutageRecord;
+use super::metric::MetricSink;
+use super::sink::TraceSink;
+use super::trace::{TaskTrace, TraceRecorder};
+use crate::cluster::{Cluster, ContainerState, HeartbeatLog, Transition};
+use crate::config::ExperimentConfig;
+use crate::jobs::{Demand, JobId, JobSpec, JobStore};
+use crate::metrics::{DeltaSummary, JobMetrics, SystemMetrics, UtilSummary};
+use crate::sched::shadow::{self, SchedSnapshot, ShadowEvent, ShadowWindow};
+use crate::sched::{Allocation, ClusterView, JobView, Scheduler};
+use crate::util::rng::Rng;
+use crate::util::Time;
+
+/// Observable output of one cell, surfaced by [`Cell::advance_to`] so a
+/// federation can react to completions without reaching into cell state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellOutput {
+    /// A job completed its last task.
+    JobDone { job: JobId, at: Time },
+    /// A container was released back to the cell (task completed or
+    /// coin-flip failed; crash kills release nothing — the node vanished).
+    Release { job: JobId, at: Time },
+    /// One scheduler heartbeat executed.
+    Heartbeat { at: Time, used: u32, free: u32, active_jobs: u32 },
+}
+
+/// O(1) `JobId -> slot` lookup.  Job ids in this system are small
+/// sequential integers, so a dense table is the common case; a sorted
+/// pair list covers pathologically sparse id spaces without blowing up
+/// memory.
+#[derive(Debug)]
+enum JobIndex {
+    Dense(Vec<u32>),
+    Sorted(Vec<(u32, u32)>),
+}
+
+impl JobIndex {
+    fn build(specs: &[JobSpec]) -> Self {
+        let max_id = specs.iter().map(|s| s.id).max().unwrap_or(0) as usize;
+        if max_id <= 8 * specs.len() + 1024 {
+            let mut dense = vec![u32::MAX; max_id + 1];
+            for (slot, s) in specs.iter().enumerate() {
+                assert_eq!(dense[s.id as usize], u32::MAX, "duplicate job id {}", s.id);
+                dense[s.id as usize] = slot as u32;
+            }
+            JobIndex::Dense(dense)
+        } else {
+            let mut pairs: Vec<(u32, u32)> = specs
+                .iter()
+                .enumerate()
+                .map(|(slot, s)| (s.id, slot as u32))
+                .collect();
+            pairs.sort_unstable();
+            for w in pairs.windows(2) {
+                assert_ne!(w[0].0, w[1].0, "duplicate job id {}", w[0].0);
+            }
+            JobIndex::Sorted(pairs)
+        }
+    }
+
+    fn lookup(&self, id: u32) -> usize {
+        let slot = match self {
+            JobIndex::Dense(v) => v.get(id as usize).copied().unwrap_or(u32::MAX),
+            JobIndex::Sorted(v) => v
+                .binary_search_by_key(&id, |&(i, _)| i)
+                .map(|i| v[i].1)
+                .unwrap_or(u32::MAX),
+        };
+        if slot == u32::MAX {
+            panic!("unknown job {id}");
+        }
+        slot as usize
+    }
+}
+
+/// Cell-side state of one planned node outage.
+#[derive(Debug)]
+struct OutageState {
+    rec: OutageRecord,
+    /// Whether the crash event has fired (outages scheduled past the end
+    /// of the run never do and are excluded from results).
+    fired: bool,
+    /// When the node came back up (None while still down).
+    node_back_at: Option<Time>,
+    /// Killed tasks `(job slot, phase, task)` not yet re-completed.
+    waiting: Vec<(usize, usize, usize)>,
+}
+
+/// One self-contained simulation cell. Owns everything for one cluster.
+pub struct Cell {
+    cfg: ExperimentConfig,
+    cluster: Cluster,
+    /// Per-job execution state, SoA or AoS per `opts.jobs`.
+    store: JobStore,
+    queue: EventQueue,
+    heartbeats: HeartbeatLog,
+    sched: Box<dyn Scheduler>,
+    rng: Rng,
+    now: Time,
+    sink: TraceSink,
+    /// Per-tick utilization retention (policy: `opts.metrics`).
+    util_sink: MetricSink<u32>,
+    /// Per-tick δ retention (schedulers without a reserve ratio yield no
+    /// samples).
+    delta_sink: MetricSink<f64>,
+    /// Exact online utilization accumulator — fed on every tick
+    /// regardless of sink policy.
+    util_accum: UtilSummary,
+    /// Exact online δ accumulator.
+    delta_accum: DeltaSummary,
+    failures: u32,
+    /// Provisioned capacity (crash-independent), for demand clamping:
+    /// a transient outage must not permanently truncate a job's request.
+    nominal_total: u32,
+    /// Materialized fault plan, indexed by `Event::NodeFail/NodeRecover`
+    /// payloads.
+    outages: Vec<OutageState>,
+    /// Outages that have crashed but not fully healed — gates the
+    /// per-finish recovery bookkeeping so an empty plan pays nothing.
+    open_outages: usize,
+    lost_attempts: u32,
+    lost_work_ms: Time,
+    useful_work_ms: Time,
+    wasted_work_ms: Time,
+    /// Safety valve against pathological schedules.
+    max_ms: Time,
+    opts: EngineOptions,
+    /// JobId -> slot in the store (replaces the seed's linear scan).
+    index: JobIndex,
+    /// Jobs this cell is responsible for completing.  Equal to the store
+    /// length for single-cell runs; a federation assigns a subset and may
+    /// move membership at runtime ([`Self::accept`] / withdraw).
+    assigned: usize,
+    /// Jobs with `finish` set (replaces the seed's all-jobs scan).
+    finished_jobs: usize,
+    /// Submitted-and-unfinished jobs currently resident in this cell.
+    submitted_active: usize,
+    /// Whether a SchedTick is queued or self-rechaining.  Only consulted
+    /// by [`Self::accept`] to revive the heartbeat chain after the cell
+    /// drained; inert bookkeeping for single-cell runs.
+    tick_armed: bool,
+    /// Populate the [`CellOutput`] buffer (federation mode only).
+    collect: bool,
+    outputs: Vec<CellOutput>,
+    /// Incrementally-maintained scheduler view: submitted jobs in
+    /// submission order.  Completion tombstones the entry (`finished =
+    /// true`, exactly what the seed exposed; schedulers filter) and the
+    /// vector is compacted once tombstones outnumber live entries, so
+    /// retirement is O(1) amortized instead of an O(active) `Vec::remove`.
+    view_jobs: Vec<JobView>,
+    /// Slot of each `view_jobs` entry (parallel vector).
+    view_slots: Vec<usize>,
+    /// slot -> position in `view_jobs` (usize::MAX when absent/retired).
+    view_pos: Vec<usize>,
+    /// Tombstoned (finished but not yet compacted) entries in `view_jobs`.
+    view_tombstones: usize,
+    events: u64,
+    ticks: u64,
+    /// Debug-build view cross-check cadence in ticks (1 = every tick).
+    #[cfg(debug_assertions)]
+    view_check_every: u64,
+    #[cfg(debug_assertions)]
+    ticks_since_check: u64,
+}
+
+impl Cell {
+    /// Build a cell owning every job in `specs` — the single-cell engine
+    /// configuration.
+    pub fn with_options(
+        cfg: ExperimentConfig,
+        specs: Vec<JobSpec>,
+        sched: Box<dyn Scheduler>,
+        opts: EngineOptions,
+    ) -> Self {
+        Cell::with_assignment(cfg, specs, None, sched, opts)
+    }
+
+    /// Build a cell that knows every spec but only *owns* the jobs whose
+    /// mask entry is true (None = all).  Unowned jobs get no submit event
+    /// and never surface in the scheduler view; a federation routes them
+    /// to other cells and may later [`Self::accept`] them here.
+    pub fn with_assignment(
+        cfg: ExperimentConfig,
+        specs: Vec<JobSpec>,
+        assigned: Option<&[bool]>,
+        mut sched: Box<dyn Scheduler>,
+        opts: EngineOptions,
+    ) -> Self {
+        // Arm the opt-in shadow tuner before the first heartbeat; with the
+        // flag off this is a no-op for every scheduler (default trait impl)
+        // and the run stays bit-identical (tests/golden_determinism.rs).
+        sched.set_tune_delta(opts.tune_delta);
+        sched.set_tune_params(opts.tune_every, opts.shadow_window);
+        if let Some(mask) = assigned {
+            assert_eq!(mask.len(), specs.len(), "assignment mask length");
+        }
+        for s in &specs {
+            s.validate().unwrap_or_else(|e| panic!("invalid job spec: {e}"));
+        }
+        let cluster = Cluster::new(cfg.cluster.nodes, cfg.cluster.slots_per_node);
+        let seed = cfg.workload.seed ^ 0xD8E5_5000;
+        let mut queue = EventQueue::with_kind(opts.queue);
+        let mut owned = 0usize;
+        for (slot, s) in specs.iter().enumerate() {
+            if assigned.is_none_or(|m| m[slot]) {
+                queue.push(s.submit_ms, Event::JobSubmit(s.id));
+                owned += 1;
+            }
+        }
+        queue.push(0, Event::SchedTick);
+        // Fault events go in last so an empty plan leaves the sequence
+        // numbers of every pre-existing event untouched (bit-identity).
+        // Stochastic draws use the dedicated fault stream, never `rng`.
+        let planned = cfg
+            .faults
+            .materialize(cfg.cluster.nodes, cfg.workload.seed)
+            .unwrap_or_else(|e| panic!("invalid fault plan: {e}"));
+        let mut outages = Vec::with_capacity(planned.len());
+        for (i, o) in planned.iter().enumerate() {
+            queue.push(o.at_ms, Event::NodeFail(i as u32));
+            queue.push(o.at_ms + o.down_ms, Event::NodeRecover(i as u32));
+            outages.push(OutageState {
+                rec: OutageRecord {
+                    node: o.node,
+                    at_ms: o.at_ms,
+                    down_ms: o.down_ms,
+                    killed: 0,
+                    lost_work_ms: 0,
+                    recovered_at: None,
+                },
+                fired: false,
+                node_back_at: None,
+                waiting: Vec::new(),
+            });
+        }
+        let index = JobIndex::build(&specs);
+        let n = specs.len();
+        let total = cluster.total();
+        // Debug-build view-check cadence: every tick for test-sized runs
+        // (the historical behavior the small goldens exercise), sampled at
+        // 64 for big scenarios so debug `cargo test` survives 100k-job
+        // horizons.  `DRESS_VIEW_CHECK_EVERY` overrides either default.
+        #[cfg(debug_assertions)]
+        let view_check_every = match std::env::var("DRESS_VIEW_CHECK_EVERY")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            Some(k) => k.max(1),
+            None if n <= 1_024 => 1,
+            None => 64,
+        };
+        Cell {
+            cfg,
+            cluster,
+            store: JobStore::new(specs, opts.jobs),
+            queue,
+            heartbeats: HeartbeatLog::with_retention(opts.trace),
+            sched,
+            rng: Rng::new(seed),
+            now: 0,
+            sink: TraceSink::new(opts.trace),
+            util_sink: MetricSink::new(opts.metrics),
+            delta_sink: MetricSink::new(opts.metrics),
+            util_accum: UtilSummary::new(total),
+            delta_accum: DeltaSummary::default(),
+            failures: 0,
+            nominal_total: total,
+            outages,
+            open_outages: 0,
+            lost_attempts: 0,
+            lost_work_ms: 0,
+            useful_work_ms: 0,
+            wasted_work_ms: 0,
+            max_ms: 40 * 3_600 * 1_000, // 40 simulated hours
+            opts,
+            index,
+            assigned: owned,
+            finished_jobs: 0,
+            submitted_active: 0,
+            tick_armed: true,
+            collect: false,
+            outputs: Vec::new(),
+            view_jobs: Vec::new(),
+            view_slots: Vec::new(),
+            view_pos: vec![usize::MAX; n],
+            view_tombstones: 0,
+            events: 0,
+            ticks: 0,
+            #[cfg(debug_assertions)]
+            view_check_every,
+            #[cfg(debug_assertions)]
+            ticks_since_check: 0,
+        }
+    }
+
+    /// Arm (or disarm) the [`CellOutput`] buffer.  Off by default so the
+    /// single-cell engine never pays the push.
+    pub fn collect_outputs(&mut self, on: bool) {
+        self.collect = on;
+    }
+
+    fn job_index(&self, id: u32) -> usize {
+        self.index.lookup(id)
+    }
+
+    /// Every job this cell owns has finished.
+    pub fn all_finished(&self) -> bool {
+        self.finished_jobs == self.assigned
+    }
+
+    /// Current simulated time (last processed event).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Containers currently busy.
+    pub fn used(&self) -> u32 {
+        self.cluster.used()
+    }
+
+    /// Provisioned (crash-independent) container capacity.
+    pub fn nominal_total(&self) -> u32 {
+        self.nominal_total
+    }
+
+    /// Provisioned capacity as a demand vector (router reference).
+    pub fn capacity(&self) -> Demand {
+        Demand::new(self.nominal_total, self.cluster.nominal_total_mem())
+    }
+
+    /// Submitted-and-unfinished jobs resident in this cell.
+    pub fn active_jobs(&self) -> u32 {
+        self.submitted_active as u32
+    }
+
+    /// Active jobs holding zero containers — the cell's pending queue,
+    /// the imbalance signal federations migrate on.
+    pub fn queued_jobs(&self) -> u32 {
+        self.view_jobs
+            .iter()
+            .filter(|v| !v.finished && v.occupied == 0)
+            .count() as u32
+    }
+
+    // --- incremental view maintenance -----------------------------------
+
+    /// A job's demand as the cell honors it.  Two clamps, both no-ops
+    /// for uniform (scalar) demands:
+    ///
+    /// * per axis to the *nominal* cluster totals — a demand above cluster
+    ///   capacity can never gang-start, and nominal (not live) capacity
+    ///   means a transient outage does not truncate the request forever;
+    /// * on the memory axis to `cpu × max_node_mem` — a per-container
+    ///   footprint wider than the fattest node fits nowhere, so an
+    ///   unclamped value would starve the job (and hang the run).
+    fn effective_demand(&self, slot: usize) -> Demand {
+        let d = self.store.demand(slot).min_each(Demand::new(
+            self.nominal_total,
+            self.cluster.nominal_total_mem(),
+        ));
+        let fit = d.cpu.max(1).saturating_mul(self.cluster.max_node_mem().max(1));
+        Demand::new(d.cpu, d.mem.min(fit))
+    }
+
+    /// Admit `slot` into the scheduler view at its submission-order
+    /// position.  Submissions arrive in event-time order, which for every
+    /// workload in this repo is also slot order, so the common case is an
+    /// O(1) push; an out-of-order submit time falls back to a sorted
+    /// insert.
+    fn view_insert(&mut self, slot: usize) {
+        let jv = JobView {
+            id: self.store.id(slot),
+            demand: self.effective_demand(slot),
+            submit_ms: self.store.submit_ms(slot),
+            started: self.store.started(slot),
+            finished: false,
+            pending_tasks: self.store.pending_tasks(slot),
+            occupied: self.store.occupied(slot),
+        };
+        if self.view_slots.last().is_none_or(|&s| s < slot) {
+            self.view_pos[slot] = self.view_jobs.len();
+            self.view_jobs.push(jv);
+            self.view_slots.push(slot);
+            return;
+        }
+        let pos = self.view_slots.partition_point(|&s| s < slot);
+        self.view_jobs.insert(pos, jv);
+        self.view_slots.insert(pos, slot);
+        for &s in &self.view_slots[pos + 1..] {
+            if self.view_pos[s] != usize::MAX {
+                self.view_pos[s] += 1;
+            }
+        }
+        self.view_pos[slot] = pos;
+    }
+
+    /// Retire a completed (or withdrawn) job from the view: tombstone the
+    /// entry (`finished = true` — the seed exposed exactly this and every
+    /// scheduler filters it) and compact once tombstones outnumber live
+    /// entries, so retirement is O(1) amortized.
+    fn view_retire(&mut self, slot: usize) {
+        let pos = self.view_pos[slot];
+        debug_assert_ne!(pos, usize::MAX, "retire of job not in view");
+        self.view_jobs[pos].finished = true;
+        self.view_pos[slot] = usize::MAX;
+        self.view_tombstones += 1;
+        if self.view_tombstones * 2 > self.view_jobs.len() {
+            self.view_compact();
+        }
+    }
+
+    /// Drop tombstoned entries, preserving order (O(len), amortized O(1)
+    /// per retirement by the doubling rule in [`Self::view_retire`]).
+    fn view_compact(&mut self) {
+        let mut w = 0;
+        for r in 0..self.view_jobs.len() {
+            if !self.view_jobs[r].finished {
+                let slot = self.view_slots[r];
+                self.view_jobs[w] = self.view_jobs[r];
+                self.view_slots[w] = slot;
+                self.view_pos[slot] = w;
+                w += 1;
+            }
+        }
+        self.view_jobs.truncate(w);
+        self.view_slots.truncate(w);
+        self.view_tombstones = 0;
+    }
+
+    /// The view entry of an active job (O(1)).
+    fn view_entry(&mut self, slot: usize) -> &mut JobView {
+        let pos = self.view_pos[slot];
+        debug_assert_ne!(pos, usize::MAX, "view entry of inactive job");
+        &mut self.view_jobs[pos]
+    }
+
+    /// Seed-identical per-tick view rebuild: every submitted job, finished
+    /// ones included with `finished = true` (schedulers filter them).
+    /// Reference path for `EngineOptions::naive_hot_path`.
+    fn naive_view_jobs(&self) -> Vec<JobView> {
+        (0..self.store.len())
+            .filter(|&slot| self.store.submitted(slot))
+            .map(|slot| JobView {
+                id: self.store.id(slot),
+                demand: self.effective_demand(slot),
+                submit_ms: self.store.submit_ms(slot),
+                started: self.store.started(slot),
+                finished: self.store.finished(slot),
+                pending_tasks: self.store.pending_tasks(slot),
+                occupied: self.store.occupied(slot),
+            })
+            .collect()
+    }
+
+    /// Debug-build cross-check: the incremental view must equal ground
+    /// truth derived from the job store (runs every
+    /// `view_check_every`-th tick under `cargo test`, so the whole suite
+    /// exercises the equivalence).
+    #[cfg(debug_assertions)]
+    fn assert_view_consistent(&self) {
+        let mut live = 0;
+        for slot in 0..self.store.len() {
+            let id = self.store.id(slot);
+            if self.store.submitted(slot) && !self.store.finished(slot) {
+                let pos = self.view_pos[slot];
+                assert_ne!(pos, usize::MAX, "active job {id} missing from view");
+                let v = &self.view_jobs[pos];
+                assert_eq!(v.id, id);
+                assert!(!v.finished, "J{id} live entry tombstoned");
+                assert_eq!(v.started, self.store.started(slot), "J{id} started drift");
+                assert_eq!(
+                    v.pending_tasks,
+                    self.store.pending_tasks(slot),
+                    "J{id} pending drift"
+                );
+                assert_eq!(v.occupied, self.store.occupied(slot), "J{id} occupied drift");
+                live += 1;
+            } else {
+                assert_eq!(self.view_pos[slot], usize::MAX, "inactive job indexed in view");
+            }
+        }
+        assert_eq!(self.view_jobs.iter().filter(|v| !v.finished).count(), live);
+        assert_eq!(
+            self.view_jobs.iter().filter(|v| v.finished).count(),
+            self.view_tombstones
+        );
+    }
+
+    // --- event handlers --------------------------------------------------
+
+    /// Apply one feasible allocation: create containers in the YARN state
+    /// machine for up to `n` pending tasks of the job.
+    fn apply_allocation(&mut self, alloc: Allocation) {
+        let ji = self.job_index(alloc.job);
+        let mem = self.effective_demand(ji).mem_per_container().max(1);
+        for _ in 0..alloc.n {
+            if self.cluster.free() == 0 {
+                break;
+            }
+            let Some((phase, task)) = self.store.next_pending(ji) else {
+                break;
+            };
+            // With vector demands a slot-feasible grant can still fail
+            // node-level memory packing (fragmentation); for uniform
+            // demands `mem == 1` and free slots always admit, as before.
+            let Some(cid) = self.cluster.allocate(alloc.job, phase, task, mem, self.now)
+            else {
+                break;
+            };
+            self.store.begin_launch(ji, phase, task, cid);
+            let v = self.view_entry(ji);
+            v.occupied += 1;
+            v.pending_tasks -= 1;
+            self.record_transition(cid, ContainerState::New);
+            self.schedule_advance(cid);
+        }
+    }
+
+    fn record_transition(&mut self, cid: u32, to: ContainerState) {
+        let c = self.cluster.container(cid);
+        self.heartbeats.record(Transition {
+            time: self.now,
+            container: cid,
+            job: c.job,
+            task: c.task,
+            to,
+        });
+    }
+
+    /// Sample the delay for the container's next state hop and enqueue it.
+    fn schedule_advance(&mut self, cid: u32) {
+        let state = self.cluster.container(cid).state;
+        let d = &self.cfg.cluster.delays;
+        let median = match state {
+            ContainerState::New => d.new_to_reserved_ms,
+            ContainerState::Reserved => d.reserved_to_allocated_ms,
+            ContainerState::Allocated => d.allocated_to_acquired_ms,
+            ContainerState::Acquired => d.acquired_to_running_ms,
+            _ => return,
+        };
+        let delay = self.rng.lognormal(median, d.sigma).max(1.0) as Time;
+        self.queue.push(self.now + delay, Event::ContainerAdvance(cid));
+    }
+
+    fn on_container_advance(&mut self, cid: u32) {
+        // The queue cannot remove entries, so events for containers killed
+        // by a node crash still fire — and must be ignored.
+        if self.cluster.container(cid).dead {
+            return;
+        }
+        let new_state = self.cluster.container_mut(cid).advance(self.now);
+        self.record_transition(cid, new_state);
+        let (job, phase, task) = {
+            let c = self.cluster.container(cid);
+            (c.job, c.phase, c.task)
+        };
+        if new_state == ContainerState::Running {
+            let ji = self.job_index(job);
+            let dur = self.store.begin_run(ji, phase, task, cid, self.now);
+            self.view_entry(ji).started = true;
+            // Failure injection: the container may die mid-task; the task
+            // is then re-attempted in a fresh container (YARN AM behavior).
+            let pf = self.cfg.cluster.task_failure_prob;
+            if pf > 0.0 && self.rng.chance(pf) {
+                let at = self.now + (dur as f64 * self.rng.range_f64(0.1, 0.9)) as Time;
+                self.queue.push(at.max(self.now + 1), Event::TaskFail(cid));
+            } else {
+                self.queue.push(self.now + dur, Event::TaskFinish(cid));
+            }
+        } else {
+            self.schedule_advance(cid);
+        }
+    }
+
+    fn on_task_finish(&mut self, cid: u32) {
+        if self.cluster.container(cid).dead {
+            return;
+        }
+        let new_state = self.cluster.container_mut(cid).advance(self.now);
+        debug_assert_eq!(new_state, ContainerState::Completed);
+        self.record_transition(cid, ContainerState::Completed);
+        let (job, phase, task, run_start) = {
+            let c = self.cluster.container(cid);
+            (c.job, c.phase, c.task, c.run_start)
+        };
+        self.cluster.release(cid);
+
+        let ji = self.job_index(job);
+        let fin = self.store.finish_task(ji, phase, task, self.now);
+        debug_assert_eq!(fin.start, run_start);
+        self.view_entry(ji).occupied -= 1;
+        self.useful_work_ms += self.now - fin.start;
+        if self.open_outages > 0 {
+            self.note_recompletion(ji, phase, task);
+        }
+        self.sink.record(TaskTrace {
+            job,
+            phase,
+            task,
+            granted: run_start, // grant time folded into startup elsewhere
+            start: fin.start,
+            finish: self.now,
+        });
+        if self.collect {
+            self.outputs.push(CellOutput::Release { job, at: self.now });
+        }
+        if fin.finished_job {
+            self.finished_jobs += 1;
+            self.submitted_active -= 1;
+            self.view_retire(ji);
+            if self.collect {
+                self.outputs.push(CellOutput::JobDone { job, at: self.now });
+            }
+        } else if fin.phase_advanced {
+            // Barrier crossed: the newly-runnable phase is all-Pending.
+            let pending = self.store.pending_tasks(ji);
+            self.view_entry(ji).pending_tasks = pending;
+        }
+    }
+
+    /// Container dies mid-task: release the slot, reset the task to
+    /// Pending so the scheduler re-grants it.
+    fn on_task_fail(&mut self, cid: u32) {
+        if self.cluster.container(cid).dead {
+            return;
+        }
+        let new_state = self.cluster.container_mut(cid).advance(self.now);
+        debug_assert_eq!(new_state, ContainerState::Completed);
+        self.record_transition(cid, ContainerState::Completed);
+        let (job, phase, task, run_start) = {
+            let c = self.cluster.container(cid);
+            (c.job, c.phase, c.task, c.run_start)
+        };
+        self.cluster.release(cid);
+        self.wasted_work_ms += self.now - run_start;
+        let ji = self.job_index(job);
+        let was_running = self.store.requeue_task(ji, phase, task);
+        debug_assert!(was_running.is_some(), "coin-flip fail of non-running task");
+        let v = self.view_entry(ji);
+        v.occupied -= 1;
+        v.pending_tasks += 1;
+        self.failures += 1;
+        if self.collect {
+            self.outputs.push(CellOutput::Release { job, at: self.now });
+        }
+    }
+
+    /// A node crashes: its capacity leaves `total`, every container on it
+    /// dies, and the killed tasks requeue as Pending (with their accrued
+    /// run-time counted as lost).  No Completed heartbeat transition is
+    /// recorded for killed containers — the node vanished, it did not
+    /// report.
+    fn on_node_fail(&mut self, oidx: u32) {
+        let oidx = oidx as usize;
+        let node = self.outages[oidx].rec.node;
+        let killed = self.cluster.fail_node(node, self.now);
+        let mut lost: Time = 0;
+        for &cid in &killed {
+            let (job, phase, task) = {
+                let c = self.cluster.container(cid);
+                (c.job, c.phase, c.task)
+            };
+            let ji = self.job_index(job);
+            if let Some(start) = self.store.requeue_task(ji, phase, task) {
+                lost += self.now - start;
+            }
+            let v = self.view_entry(ji);
+            v.occupied -= 1;
+            v.pending_tasks += 1;
+            self.outages[oidx].waiting.push((ji, phase, task));
+        }
+        self.lost_attempts += killed.len() as u32;
+        self.lost_work_ms += lost;
+        self.wasted_work_ms += lost;
+        let o = &mut self.outages[oidx];
+        o.fired = true;
+        o.rec.killed = killed.len() as u32;
+        o.rec.lost_work_ms = lost;
+        self.open_outages += 1;
+    }
+
+    /// The node comes back: its (empty) slots rejoin capacity.  The outage
+    /// is healed once the node is up AND every task it killed re-completed.
+    fn on_node_recover(&mut self, oidx: u32) {
+        let oidx = oidx as usize;
+        let node = self.outages[oidx].rec.node;
+        self.cluster.recover_node(node);
+        let o = &mut self.outages[oidx];
+        o.node_back_at = Some(self.now);
+        if o.waiting.is_empty() && o.rec.recovered_at.is_none() {
+            o.rec.recovered_at = Some(self.now);
+            self.open_outages -= 1;
+        }
+    }
+
+    /// A task just completed; clear it from every open outage still
+    /// waiting on it (a task can appear in several if re-killed).  Only
+    /// called while an outage is open, so the empty-plan fast path never
+    /// touches this.
+    fn note_recompletion(&mut self, ji: usize, phase: usize, task: usize) {
+        let now = self.now;
+        let mut healed = 0;
+        for o in self.outages.iter_mut() {
+            if !o.fired || o.rec.recovered_at.is_some() {
+                continue;
+            }
+            if let Some(p) = o.waiting.iter().position(|&w| w == (ji, phase, task)) {
+                o.waiting.swap_remove(p);
+                if o.waiting.is_empty() && o.node_back_at.is_some() {
+                    o.rec.recovered_at = Some(now);
+                    healed += 1;
+                }
+            }
+        }
+        self.open_outages -= healed;
+    }
+
+    fn on_sched_tick(&mut self) {
+        self.ticks += 1;
+        let transitions = self.heartbeats.drain();
+        #[cfg(debug_assertions)]
+        {
+            self.ticks_since_check += 1;
+            if self.ticks_since_check >= self.view_check_every {
+                self.ticks_since_check = 0;
+                self.assert_view_consistent();
+            }
+        }
+        // Indexed path: borrow the maintained active-job slice — O(1).
+        // Naive path: rebuild from scratch like the seed engine did.
+        let scratch: Vec<JobView>;
+        let view_jobs: &[JobView] = if self.opts.naive_hot_path {
+            scratch = self.naive_view_jobs();
+            &scratch
+        } else {
+            &self.view_jobs
+        };
+        let view = ClusterView {
+            now: self.now,
+            free: self.cluster.free(),
+            total: self.cluster.total(),
+            free_mem: self.cluster.free_mem(),
+            total_mem: self.cluster.total_mem(),
+            jobs: view_jobs,
+            transitions: &transitions,
+        };
+        let allocs = self.sched.schedule(&view);
+        // Feasibility enforcement: total grants bounded by free capacity
+        // on every axis (the memory clamp is a no-op for uniform demands,
+        // where footprint is 1 and free_mem tracks free exactly).
+        let mut free = self.cluster.free();
+        let mut free_mem = self.cluster.free_mem();
+        for a in allocs {
+            let ji = self.job_index(a.job);
+            let pending = self.store.pending_tasks(ji);
+            let mem = self.effective_demand(ji).mem_per_container().max(1);
+            let n = a.n.min(pending).min(free).min(free_mem / mem);
+            if n == 0 {
+                continue;
+            }
+            free -= n;
+            free_mem -= n * mem;
+            self.apply_allocation(Allocation { job: a.job, n });
+        }
+        let used = self.cluster.used();
+        self.util_sink.record(self.now, used);
+        self.util_accum.push(self.now, used);
+        if let Some(delta) = self.sched.reserve_ratio() {
+            self.delta_sink.record(self.now, delta);
+            self.delta_accum.push(self.now, delta);
+        }
+        if self.collect {
+            self.outputs.push(CellOutput::Heartbeat {
+                at: self.now,
+                used,
+                free: self.cluster.free(),
+                active_jobs: self.submitted_active as u32,
+            });
+        }
+        debug_assert!(self.cluster.conservation_holds());
+        if !self.all_finished() {
+            self.queue
+                .push(self.now + self.cfg.cluster.hb_ms, Event::SchedTick);
+            self.tick_armed = true;
+        } else {
+            self.tick_armed = false;
+        }
+    }
+
+    /// Advance the simulation by exactly one event.  Returns `false` once
+    /// the run is over (every owned job finished, or the queue drained).
+    ///
+    /// `Engine::run()` is just `while self.step() {}` + [`Self::finish`];
+    /// the stepping form exists so tests can interleave read-only
+    /// [`Self::probe`]s with live execution and fingerprint the state
+    /// between events (tests/properties.rs probe-purity property).
+    pub fn step(&mut self) -> bool {
+        if self.all_finished() {
+            return false;
+        }
+        let Some((t, ev)) = self.queue.pop() else {
+            return false;
+        };
+        assert!(t >= self.now, "time went backwards");
+        self.now = t;
+        if self.now > self.max_ms {
+            panic!("simulation exceeded {} ms — livelocked schedule?", self.max_ms);
+        }
+        self.events += 1;
+        match ev {
+            Event::JobSubmit(id) => {
+                let ji = self.job_index(id);
+                self.store.mark_submitted(ji);
+                self.submitted_active += 1;
+                self.view_insert(ji);
+            }
+            Event::SchedTick => self.on_sched_tick(),
+            Event::ContainerAdvance(cid) => self.on_container_advance(cid),
+            Event::TaskFinish(cid) => self.on_task_finish(cid),
+            Event::TaskFail(cid) => self.on_task_fail(cid),
+            Event::NodeFail(o) => self.on_node_fail(o),
+            Event::NodeRecover(o) => self.on_node_recover(o),
+            // Reservation timeouts live in the admission layer's private
+            // queue (live/admission.rs), never in the cell's; the arm
+            // exists only for exhaustiveness and is inert by design.
+            Event::ReservationExpire(_) => {}
+        }
+        !self.all_finished()
+    }
+
+    /// Process every queued event with `time <= t`, stopping early when
+    /// all owned jobs are done, and drain the [`CellOutput`] buffer.
+    /// Completion stops the heartbeat chain exactly as in engine mode, so
+    /// chunked driving (`advance_to(hb)`, `advance_to(2·hb)`, …) pops the
+    /// identical event sequence `Engine::run` does — the federation
+    /// goldens pin this.
+    pub fn advance_to(&mut self, t: Time) -> Vec<CellOutput> {
+        while !self.all_finished() {
+            match self.queue.peek_time() {
+                Some(next) if next <= t => {
+                    self.step();
+                }
+                _ => break,
+            }
+        }
+        std::mem::take(&mut self.outputs)
+    }
+
+    // --- federation membership -------------------------------------------
+
+    /// Hand this cell a job it does not currently own (migration /
+    /// salvage).  The job surfaces through a normal `JobSubmit` event at
+    /// `at`, so schedulers observe an ordinary arrival; its original
+    /// `submit_ms` keeps feeding waiting-time metrics, so migration never
+    /// erases queueing history.  Revives the heartbeat chain if this cell
+    /// had drained.
+    pub fn accept(&mut self, id: JobId, at: Time) {
+        let slot = self.job_index(id);
+        assert!(at >= self.now, "accept in the past");
+        assert!(
+            !self.store.submitted(slot) && !self.store.finished(slot),
+            "accept of a job this cell already holds"
+        );
+        self.assigned += 1;
+        self.queue.push(at, Event::JobSubmit(id));
+        if !self.tick_armed {
+            let hb = self.cfg.cluster.hb_ms;
+            let next_tick = at.div_ceil(hb) * hb;
+            self.queue.push(next_tick.max(at), Event::SchedTick);
+            self.tick_armed = true;
+        }
+    }
+
+    /// Withdraw one cold queued job (never started, zero containers) for
+    /// threshold migration — the youngest first, so long-waiting jobs keep
+    /// their place.  Returns `None` when nothing is migratable.
+    pub fn withdraw_one_queued(&mut self) -> Option<JobId> {
+        for pos in (0..self.view_jobs.len()).rev() {
+            let v = &self.view_jobs[pos];
+            if !v.finished && !v.started && v.occupied == 0 {
+                let slot = self.view_slots[pos];
+                let id = self.store.id(slot);
+                self.withdraw_slot(slot);
+                return Some(id);
+            }
+        }
+        None
+    }
+
+    /// Withdraw every submitted-but-unfinished job (cell-death salvage).
+    /// Callers must have killed the cell's containers first
+    /// ([`Self::fail_cell`]) — withdrawing a job holding containers is a
+    /// logic error.  Jobs routed here whose submit event has not fired yet
+    /// stay owned: they arrive during the outage and wait it out, exactly
+    /// like jobs submitted to a down YARN cluster.
+    pub fn withdraw_unfinished(&mut self) -> Vec<JobId> {
+        let mut out = Vec::new();
+        for slot in 0..self.store.len() {
+            if self.store.submitted(slot) && !self.store.finished(slot) {
+                assert_eq!(self.store.occupied(slot), 0, "withdraw of a running job");
+                out.push(self.store.id(slot));
+                self.withdraw_slot(slot);
+            }
+        }
+        out
+    }
+
+    fn withdraw_slot(&mut self, slot: usize) {
+        debug_assert!(self.store.submitted(slot) && !self.store.finished(slot));
+        debug_assert_eq!(self.store.occupied(slot), 0);
+        self.store.mark_withdrawn(slot);
+        self.view_retire(slot);
+        self.submitted_active -= 1;
+        self.assigned -= 1;
+    }
+
+    /// Cell-level failure at `at`: every up node crashes at once, killing
+    /// all containers and requeueing their tasks with full lost-work
+    /// accounting (the node-level crash machinery applied cluster-wide).
+    /// The federation then salvages survivors via
+    /// [`Self::withdraw_unfinished`] and re-routes them.
+    pub fn fail_cell(&mut self, at: Time) {
+        // `now` stays at the last processed event: a dormant cell may hold
+        // a stale queued SchedTick older than `at`, and fast-forwarding
+        // `now` would break the pop-monotonicity assert when the cell is
+        // later revived by an accept.
+        assert!(at >= self.now, "cell death in the past");
+        let mut killed_total = 0u32;
+        let mut lost: Time = 0;
+        for node in 0..self.cfg.cluster.nodes {
+            if !self.cluster.node_up(node) {
+                continue;
+            }
+            for cid in self.cluster.fail_node(node, at) {
+                let (job, phase, task) = {
+                    let c = self.cluster.container(cid);
+                    (c.job, c.phase, c.task)
+                };
+                let ji = self.job_index(job);
+                if let Some(start) = self.store.requeue_task(ji, phase, task) {
+                    lost += at - start;
+                }
+                let v = self.view_entry(ji);
+                v.occupied -= 1;
+                v.pending_tasks += 1;
+                killed_total += 1;
+            }
+        }
+        self.lost_attempts += killed_total;
+        self.lost_work_ms += lost;
+        self.wasted_work_ms += lost;
+    }
+
+    /// Bring a dead cell back at `at`: every down node rejoins capacity
+    /// empty.  The heartbeat chain revives on the next [`Self::accept`].
+    pub fn recover_cell(&mut self, at: Time) {
+        assert!(at >= self.now, "cell recovery in the past");
+        for node in 0..self.cfg.cluster.nodes {
+            if !self.cluster.node_up(node) {
+                self.cluster.recover_node(node);
+            }
+        }
+    }
+
+    // --- probes & results -------------------------------------------------
+
+    /// Read-only admission probe against the live cell: snapshot the
+    /// scheduler's tunable state (or a neutral view-only snapshot for
+    /// baselines), overlay one hypothetical `demand`-container arrival,
+    /// and shadow-replay it.  Purity is structural — `&self`, no RNG
+    /// stream access, no event pushes — and is property-tested: N probes
+    /// leave [`Self::state_fingerprint`] exactly unchanged.
+    pub fn probe(&self, demand: u32) -> shadow::ShadowScore {
+        let jobs = self.naive_view_jobs();
+        let view = ClusterView {
+            now: self.now,
+            free: self.cluster.free(),
+            total: self.cluster.total(),
+            free_mem: self.cluster.free_mem(),
+            total_mem: self.cluster.total_mem(),
+            jobs: &jobs,
+            transitions: &[],
+        };
+        let snap = self.sched.snapshot(&view).unwrap_or_else(|| {
+            SchedSnapshot::of_view(
+                view.now,
+                view.free,
+                view.total,
+                view.jobs,
+                self.sched.reserve_ratio().unwrap_or(self.cfg.sched.delta0),
+                self.cfg.sched.theta,
+            )
+        });
+        let mut window = ShadowWindow::new(1);
+        let next_id = jobs.iter().map(|j| j.id).max().unwrap_or(0) + 1;
+        window.push(ShadowEvent::Submit { job: next_id, demand, at: self.now });
+        shadow::replay(&snap, &window, snap.delta, shadow::REPLAY_TICKS)
+    }
+
+    /// FNV-1a-64 digest of the full observable simulation state: job-store
+    /// lanes, event-queue shape, the scheduler view, classifier/estimator
+    /// state and δ (via the scheduler snapshot), the exact metric
+    /// accumulators, and every progress counter.  Equal fingerprints mean
+    /// the two cells are in identical simulation states; the probe-purity
+    /// property (tests/properties.rs) pins that probes never move it.
+    pub fn state_fingerprint(&self) -> u64 {
+        let jobs = self.naive_view_jobs();
+        let view = ClusterView {
+            now: self.now,
+            free: self.cluster.free(),
+            total: self.cluster.total(),
+            free_mem: self.cluster.free_mem(),
+            total_mem: self.cluster.total_mem(),
+            jobs: &jobs,
+            transitions: &[],
+        };
+        let snap = self.sched.snapshot(&view);
+        let repr = format!(
+            "{}|{}|{}|{}|{:?}|{}|{}|{:?}|{:?}|{}|{}|{:?}|{:?}|{:?}|{:?}",
+            self.now,
+            self.events,
+            self.ticks,
+            self.queue.len(),
+            self.queue.peek_time(),
+            self.cluster.free(),
+            self.cluster.total(),
+            self.sched.reserve_ratio(),
+            snap,
+            self.finished_jobs,
+            self.failures,
+            jobs,
+            self.store,
+            self.util_accum,
+            self.delta_accum,
+        );
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in repr.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+
+    /// Consume a completed cell into its [`RunResult`].  Panics if owned
+    /// jobs remain unfinished (starvation) — callers drive [`Self::step`]
+    /// or [`Self::advance_to`] until done first.  Jobs withdrawn by a
+    /// federation are excluded: they complete (and report) elsewhere.
+    pub fn finish(self) -> RunResult {
+        assert!(self.all_finished(), "run ended with unfinished jobs (starvation)");
+
+        let jobs: Vec<JobMetrics> = (0..self.store.len())
+            .filter(|&slot| self.store.finished(slot))
+            .map(|slot| self.store.metrics_of(slot))
+            .collect();
+        // Utilization comes from the online accumulator, never from the
+        // retained samples — exact under every metric-sink policy.
+        let system = SystemMetrics::of(&jobs, &self.util_accum);
+        let (trace, tasks_recorded) = self.sink.finish();
+        let (util_history, util_recorded) = self.util_sink.finish();
+        let (delta_history, delta_recorded) = self.delta_sink.finish();
+        RunResult {
+            scheduler: self.sched.name().to_string(),
+            jobs,
+            system,
+            trace,
+            delta_history,
+            util_history,
+            util: self.util_accum,
+            delta: self.delta_accum,
+            util_recorded,
+            delta_recorded,
+            failures: self.failures,
+            lost_attempts: self.lost_attempts,
+            lost_work_ms: self.lost_work_ms,
+            useful_work_ms: self.useful_work_ms,
+            wasted_work_ms: self.wasted_work_ms,
+            attempts: self.cluster.containers.len() as u32,
+            outages: self
+                .outages
+                .iter()
+                .filter(|o| o.fired)
+                .map(|o| o.rec)
+                .collect(),
+            events: self.events,
+            sched_ticks: self.ticks,
+            tasks_recorded,
+            transitions_recorded: self.heartbeats.recorded(),
+            retained_transitions: self.heartbeats.history_len(),
+            cells: 1,
+            migrations: 0,
+            routing: Vec::new(),
+            imbalance_max: 0.0,
+            imbalance_mean: 0.0,
+            cell_outages: Vec::new(),
+        }
+    }
+}
+
+/// The trace recorder type re-exported for federation result merging.
+pub type CellTrace = TraceRecorder;

@@ -1,49 +1,34 @@
-//! The discrete-event simulation engine: drives jobs, containers, and the
-//! scheduler through heartbeat rounds, enforcing feasibility and recording
-//! metrics + traces.
+//! The single-cell simulation engine: a thin wrapper over [`Cell`]
+//! (sim/cell.rs), which owns the discrete-event core — jobs, containers,
+//! scheduler heartbeats, feasibility enforcement, metrics and traces.
 //!
-//! Hot-path design (perf iter 4 — the indexed engine): the seed engine paid
-//! an O(jobs) scan on every event (`job_index`), a second O(jobs) scan after
-//! every event (`all_finished`), and rebuilt the scheduler's `ClusterView`
-//! from scratch every heartbeat, so congested runs degraded quadratically
-//! with job count.  This engine is O(1) per event in the job count:
+//! Historically this module *was* the core (~1.5k lines).  The federation
+//! refactor extracted it into `sim/cell.rs` so N cells can run side by
+//! side under `federation/`; the split is proven bit-identical for all
+//! five schedulers (± fault plans, ± tuner, scalar and vector demands) by
+//! tests/golden_determinism.rs and the 1-cell federation goldens, exactly
+//! as the SoA/AoS and calendar/heap refactors were.  This file keeps the
+//! public surface: [`Engine`], [`EngineOptions`], [`RunResult`], and the
+//! `run_experiment*` helpers.
 //!
-//! * `JobId -> slot` lookups go through a dense index ([`JobIndex`]);
-//! * completion is a counter (`finished_jobs`), not a scan;
-//! * the active-job view (`view_jobs`) is maintained incrementally at the
-//!   event sites that change it (submit / grant / run / finish / fail) and
-//!   handed to the scheduler as a borrowed slice; finished jobs are
-//!   tombstoned on completion and compacted away once they outnumber live
-//!   entries (O(1) amortized).
-//!
-//! `EngineOptions::naive_hot_path` keeps the seed's rebuild-every-tick
-//! reference path alive for equivalence tests (tests/golden_determinism.rs)
-//! and for the speedup measurement in benches/perf_throughput.rs.  Debug
-//! builds additionally cross-check the incremental view against ground
-//! truth — every tick for test-sized runs, sampled every
-//! `DRESS_VIEW_CHECK_EVERY` ticks (default 64) at scale.
-//!
-//! Job state lives behind [`JobStore`] (perf iter 6): the default
-//! struct-of-arrays layout keeps hot per-job lanes dense and all task
-//! states in flat arrays, while `EngineOptions::jobs = JobLayout::Aos`
-//! selects the original `JobRt` record layout as the reference path — the
-//! golden suite proves both bit-identical.
+//! Hot-path design notes (the indexed O(1)-per-event engine, the SoA job
+//! store, the incremental scheduler view) live at the top of sim/cell.rs
+//! with the code they describe.
 
-use super::event::{Event, EventQueue, QueueKind};
-use super::fault::OutageRecord;
-use super::metric::{MetricSink, MetricSinkKind};
-use super::sink::{SinkKind, TraceSink};
-use super::trace::{TaskTrace, TraceRecorder};
-use crate::cluster::{Cluster, ContainerState, HeartbeatLog, Transition};
+pub use super::cell::{Cell, CellOutput};
+use super::event::QueueKind;
+use super::fault::{CellOutageRecord, OutageRecord};
+use super::metric::MetricSinkKind;
+use super::sink::SinkKind;
+use super::trace::TraceRecorder;
 use crate::config::ExperimentConfig;
-use crate::jobs::{Demand, JobLayout, JobSpec, JobStore};
+use crate::jobs::{JobLayout, JobSpec};
 use crate::metrics::{DeltaSummary, JobMetrics, SystemMetrics, UtilSummary};
-use crate::sched::shadow::{self, SchedSnapshot, ShadowEvent, ShadowWindow};
-use crate::sched::{Allocation, ClusterView, JobView, Scheduler};
-use crate::util::rng::Rng;
+use crate::sched::shadow;
+use crate::sched::Scheduler;
 use crate::util::Time;
 
-/// Outcome of one simulated experiment.
+/// Outcome of one simulated experiment (one cell, or a merged federation).
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub scheduler: String,
@@ -101,6 +86,22 @@ pub struct RunResult {
     /// Heartbeat transitions still held in memory at run end — bounded by
     /// the sink policy (0 for counting, `cap` for ring, all for full).
     pub retained_transitions: usize,
+    /// Cells that produced this result (1 for a plain engine run).
+    pub cells: u32,
+    /// Cross-cell job migrations (threshold rebalancing + death salvage).
+    /// Always 0 for a single-cell run.
+    pub migrations: u32,
+    /// Jobs initially routed to each cell, indexed by cell (empty for a
+    /// single-cell run).
+    pub routing: Vec<u32>,
+    /// Peak cross-cell imbalance: max over heartbeats of
+    /// `max(queued) / mean(queued)` across alive cells (0.0 when never
+    /// sampled — single cell, or no heartbeat saw a nonempty queue).
+    pub imbalance_max: f64,
+    /// Time-mean of the same per-heartbeat imbalance ratio.
+    pub imbalance_mean: f64,
+    /// Cell-level outage accounting (federation only), in injection order.
+    pub cell_outages: Vec<CellOutageRecord>,
 }
 
 impl RunResult {
@@ -148,6 +149,14 @@ pub struct EngineOptions {
     /// off by tests/golden_determinism.rs: zero RNG draws, zero events,
     /// zero allocations.  No-op for the baseline schedulers.
     pub tune_delta: bool,
+    /// δ auto-tuner re-tune cadence in heartbeats (CLI `--tune-every`).
+    /// Ignored unless `tune_delta` is on; the default matches the
+    /// historical hard-wired cadence, so existing goldens are bit-stable.
+    pub tune_every: u32,
+    /// δ auto-tuner shadow-window capacity in events (CLI
+    /// `--shadow-window`).  Ignored unless `tune_delta` is on; the default
+    /// matches the historical hard-wired size.
+    pub shadow_window: usize,
 }
 
 impl Default for EngineOptions {
@@ -159,6 +168,8 @@ impl Default for EngineOptions {
             naive_hot_path: false,
             jobs: JobLayout::Soa,
             tune_delta: false,
+            tune_every: shadow::DEFAULT_TUNE_EVERY,
+            shadow_window: shadow::DEFAULT_WINDOW,
         }
     }
 }
@@ -176,130 +187,12 @@ impl EngineOptions {
     }
 }
 
-/// O(1) `JobId -> slot` lookup.  Job ids in this system are small
-/// sequential integers, so a dense table is the common case; a sorted
-/// pair list covers pathologically sparse id spaces without blowing up
-/// memory.
-#[derive(Debug)]
-enum JobIndex {
-    Dense(Vec<u32>),
-    Sorted(Vec<(u32, u32)>),
-}
-
-impl JobIndex {
-    fn build(specs: &[JobSpec]) -> Self {
-        let max_id = specs.iter().map(|s| s.id).max().unwrap_or(0) as usize;
-        if max_id <= 8 * specs.len() + 1024 {
-            let mut dense = vec![u32::MAX; max_id + 1];
-            for (slot, s) in specs.iter().enumerate() {
-                assert_eq!(dense[s.id as usize], u32::MAX, "duplicate job id {}", s.id);
-                dense[s.id as usize] = slot as u32;
-            }
-            JobIndex::Dense(dense)
-        } else {
-            let mut pairs: Vec<(u32, u32)> = specs
-                .iter()
-                .enumerate()
-                .map(|(slot, s)| (s.id, slot as u32))
-                .collect();
-            pairs.sort_unstable();
-            for w in pairs.windows(2) {
-                assert_ne!(w[0].0, w[1].0, "duplicate job id {}", w[0].0);
-            }
-            JobIndex::Sorted(pairs)
-        }
-    }
-
-    fn lookup(&self, id: u32) -> usize {
-        let slot = match self {
-            JobIndex::Dense(v) => v.get(id as usize).copied().unwrap_or(u32::MAX),
-            JobIndex::Sorted(v) => v
-                .binary_search_by_key(&id, |&(i, _)| i)
-                .map(|i| v[i].1)
-                .unwrap_or(u32::MAX),
-        };
-        if slot == u32::MAX {
-            panic!("unknown job {id}");
-        }
-        slot as usize
-    }
-}
-
-/// Engine-side state of one planned outage.
-#[derive(Debug)]
-struct OutageState {
-    rec: OutageRecord,
-    /// Whether the crash event has fired (outages scheduled past the end
-    /// of the run never do and are excluded from results).
-    fired: bool,
-    /// When the node came back up (None while still down).
-    node_back_at: Option<Time>,
-    /// Killed tasks `(job slot, phase, task)` not yet re-completed.
-    waiting: Vec<(usize, usize, usize)>,
-}
-
-/// The engine. Owns everything for one run.
+/// The single-cell engine: one [`Cell`] driven to completion.  All
+/// simulation state and logic live in the cell; this wrapper only fixes
+/// the membership mode (every job owned, no output collection) so the
+/// historical engine surface keeps working unchanged.
 pub struct Engine {
-    cfg: ExperimentConfig,
-    cluster: Cluster,
-    /// Per-job execution state, SoA or AoS per `opts.jobs`.
-    store: JobStore,
-    queue: EventQueue,
-    heartbeats: HeartbeatLog,
-    sched: Box<dyn Scheduler>,
-    rng: Rng,
-    now: Time,
-    sink: TraceSink,
-    /// Per-tick utilization retention (policy: `opts.metrics`).
-    util_sink: MetricSink<u32>,
-    /// Per-tick δ retention (schedulers without a reserve ratio yield no
-    /// samples).
-    delta_sink: MetricSink<f64>,
-    /// Exact online utilization accumulator — fed on every tick
-    /// regardless of sink policy.
-    util_accum: UtilSummary,
-    /// Exact online δ accumulator.
-    delta_accum: DeltaSummary,
-    failures: u32,
-    /// Provisioned capacity (crash-independent), for demand clamping:
-    /// a transient outage must not permanently truncate a job's request.
-    nominal_total: u32,
-    /// Materialized fault plan, indexed by `Event::NodeFail/NodeRecover`
-    /// payloads.
-    outages: Vec<OutageState>,
-    /// Outages that have crashed but not fully healed — gates the
-    /// per-finish recovery bookkeeping so an empty plan pays nothing.
-    open_outages: usize,
-    lost_attempts: u32,
-    lost_work_ms: Time,
-    useful_work_ms: Time,
-    wasted_work_ms: Time,
-    /// Safety valve against pathological schedules.
-    max_ms: Time,
-    opts: EngineOptions,
-    /// JobId -> slot in `jobs` (replaces the seed's linear scan).
-    index: JobIndex,
-    /// Jobs with `finish` set (replaces the seed's all-jobs scan).
-    finished_jobs: usize,
-    /// Incrementally-maintained scheduler view: submitted jobs in
-    /// submission order.  Completion tombstones the entry (`finished =
-    /// true`, exactly what the seed exposed; schedulers filter) and the
-    /// vector is compacted once tombstones outnumber live entries, so
-    /// retirement is O(1) amortized instead of an O(active) `Vec::remove`.
-    view_jobs: Vec<JobView>,
-    /// Slot of each `view_jobs` entry (parallel vector).
-    view_slots: Vec<usize>,
-    /// slot -> position in `view_jobs` (usize::MAX when absent/retired).
-    view_pos: Vec<usize>,
-    /// Tombstoned (finished but not yet compacted) entries in `view_jobs`.
-    view_tombstones: usize,
-    events: u64,
-    ticks: u64,
-    /// Debug-build view cross-check cadence in ticks (1 = every tick).
-    #[cfg(debug_assertions)]
-    view_check_every: u64,
-    #[cfg(debug_assertions)]
-    ticks_since_check: u64,
+    cell: Cell,
 }
 
 impl Engine {
@@ -310,650 +203,28 @@ impl Engine {
     pub fn with_options(
         cfg: ExperimentConfig,
         specs: Vec<JobSpec>,
-        mut sched: Box<dyn Scheduler>,
+        sched: Box<dyn Scheduler>,
         opts: EngineOptions,
     ) -> Self {
-        // Arm the opt-in shadow tuner before the first heartbeat; with the
-        // flag off this is a no-op for every scheduler (default trait impl)
-        // and the run stays bit-identical (tests/golden_determinism.rs).
-        sched.set_tune_delta(opts.tune_delta);
-        for s in &specs {
-            s.validate().unwrap_or_else(|e| panic!("invalid job spec: {e}"));
-        }
-        let cluster = Cluster::new(cfg.cluster.nodes, cfg.cluster.slots_per_node);
-        let seed = cfg.workload.seed ^ 0xD8E5_5000;
-        let mut queue = EventQueue::with_kind(opts.queue);
-        for s in &specs {
-            queue.push(s.submit_ms, Event::JobSubmit(s.id));
-        }
-        queue.push(0, Event::SchedTick);
-        // Fault events go in last so an empty plan leaves the sequence
-        // numbers of every pre-existing event untouched (bit-identity).
-        // Stochastic draws use the dedicated fault stream, never `rng`.
-        let planned = cfg
-            .faults
-            .materialize(cfg.cluster.nodes, cfg.workload.seed)
-            .unwrap_or_else(|e| panic!("invalid fault plan: {e}"));
-        let mut outages = Vec::with_capacity(planned.len());
-        for (i, o) in planned.iter().enumerate() {
-            queue.push(o.at_ms, Event::NodeFail(i as u32));
-            queue.push(o.at_ms + o.down_ms, Event::NodeRecover(i as u32));
-            outages.push(OutageState {
-                rec: OutageRecord {
-                    node: o.node,
-                    at_ms: o.at_ms,
-                    down_ms: o.down_ms,
-                    killed: 0,
-                    lost_work_ms: 0,
-                    recovered_at: None,
-                },
-                fired: false,
-                node_back_at: None,
-                waiting: Vec::new(),
-            });
-        }
-        let index = JobIndex::build(&specs);
-        let n = specs.len();
-        let total = cluster.total();
-        // Debug-build view-check cadence: every tick for test-sized runs
-        // (the historical behavior the small goldens exercise), sampled at
-        // 64 for big scenarios so debug `cargo test` survives 100k-job
-        // horizons.  `DRESS_VIEW_CHECK_EVERY` overrides either default.
-        #[cfg(debug_assertions)]
-        let view_check_every = match std::env::var("DRESS_VIEW_CHECK_EVERY")
-            .ok()
-            .and_then(|s| s.parse::<u64>().ok())
-        {
-            Some(k) => k.max(1),
-            None if n <= 1_024 => 1,
-            None => 64,
-        };
-        Engine {
-            cfg,
-            cluster,
-            store: JobStore::new(specs, opts.jobs),
-            queue,
-            heartbeats: HeartbeatLog::with_retention(opts.trace),
-            sched,
-            rng: Rng::new(seed),
-            now: 0,
-            sink: TraceSink::new(opts.trace),
-            util_sink: MetricSink::new(opts.metrics),
-            delta_sink: MetricSink::new(opts.metrics),
-            util_accum: UtilSummary::new(total),
-            delta_accum: DeltaSummary::default(),
-            failures: 0,
-            nominal_total: total,
-            outages,
-            open_outages: 0,
-            lost_attempts: 0,
-            lost_work_ms: 0,
-            useful_work_ms: 0,
-            wasted_work_ms: 0,
-            max_ms: 40 * 3_600 * 1_000, // 40 simulated hours
-            opts,
-            index,
-            finished_jobs: 0,
-            view_jobs: Vec::new(),
-            view_slots: Vec::new(),
-            view_pos: vec![usize::MAX; n],
-            view_tombstones: 0,
-            events: 0,
-            ticks: 0,
-            #[cfg(debug_assertions)]
-            view_check_every,
-            #[cfg(debug_assertions)]
-            ticks_since_check: 0,
-        }
-    }
-
-    fn job_index(&self, id: u32) -> usize {
-        self.index.lookup(id)
-    }
-
-    fn all_finished(&self) -> bool {
-        self.finished_jobs == self.store.len()
-    }
-
-    // --- incremental view maintenance -----------------------------------
-
-    /// A job's demand as the engine honors it.  Two clamps, both no-ops
-    /// for uniform (scalar) demands:
-    ///
-    /// * per axis to the *nominal* cluster totals — a demand above cluster
-    ///   capacity can never gang-start, and nominal (not live) capacity
-    ///   means a transient outage does not truncate the request forever;
-    /// * on the memory axis to `cpu × max_node_mem` — a per-container
-    ///   footprint wider than the fattest node fits nowhere, so an
-    ///   unclamped value would starve the job (and hang the run).
-    fn effective_demand(&self, slot: usize) -> Demand {
-        let d = self.store.demand(slot).min_each(Demand::new(
-            self.nominal_total,
-            self.cluster.nominal_total_mem(),
-        ));
-        let fit = d.cpu.max(1).saturating_mul(self.cluster.max_node_mem().max(1));
-        Demand::new(d.cpu, d.mem.min(fit))
-    }
-
-    /// Admit `slot` into the scheduler view at its submission-order
-    /// position.  Submissions arrive in event-time order, which for every
-    /// workload in this repo is also slot order, so the common case is an
-    /// O(1) push; an out-of-order submit time falls back to a sorted
-    /// insert.
-    fn view_insert(&mut self, slot: usize) {
-        let jv = JobView {
-            id: self.store.id(slot),
-            demand: self.effective_demand(slot),
-            submit_ms: self.store.submit_ms(slot),
-            started: self.store.started(slot),
-            finished: false,
-            pending_tasks: self.store.pending_tasks(slot),
-            occupied: self.store.occupied(slot),
-        };
-        if self.view_slots.last().is_none_or(|&s| s < slot) {
-            self.view_pos[slot] = self.view_jobs.len();
-            self.view_jobs.push(jv);
-            self.view_slots.push(slot);
-            return;
-        }
-        let pos = self.view_slots.partition_point(|&s| s < slot);
-        self.view_jobs.insert(pos, jv);
-        self.view_slots.insert(pos, slot);
-        for &s in &self.view_slots[pos + 1..] {
-            if self.view_pos[s] != usize::MAX {
-                self.view_pos[s] += 1;
-            }
-        }
-        self.view_pos[slot] = pos;
-    }
-
-    /// Retire a completed job from the view: tombstone the entry
-    /// (`finished = true` — the seed exposed exactly this and every
-    /// scheduler filters it) and compact once tombstones outnumber live
-    /// entries, so retirement is O(1) amortized.
-    fn view_retire(&mut self, slot: usize) {
-        let pos = self.view_pos[slot];
-        debug_assert_ne!(pos, usize::MAX, "retire of job not in view");
-        self.view_jobs[pos].finished = true;
-        self.view_pos[slot] = usize::MAX;
-        self.view_tombstones += 1;
-        if self.view_tombstones * 2 > self.view_jobs.len() {
-            self.view_compact();
-        }
-    }
-
-    /// Drop tombstoned entries, preserving order (O(len), amortized O(1)
-    /// per retirement by the doubling rule in [`Self::view_retire`]).
-    fn view_compact(&mut self) {
-        let mut w = 0;
-        for r in 0..self.view_jobs.len() {
-            if !self.view_jobs[r].finished {
-                let slot = self.view_slots[r];
-                self.view_jobs[w] = self.view_jobs[r];
-                self.view_slots[w] = slot;
-                self.view_pos[slot] = w;
-                w += 1;
-            }
-        }
-        self.view_jobs.truncate(w);
-        self.view_slots.truncate(w);
-        self.view_tombstones = 0;
-    }
-
-    /// The view entry of an active job (O(1)).
-    fn view_entry(&mut self, slot: usize) -> &mut JobView {
-        let pos = self.view_pos[slot];
-        debug_assert_ne!(pos, usize::MAX, "view entry of inactive job");
-        &mut self.view_jobs[pos]
-    }
-
-    /// Seed-identical per-tick view rebuild: every submitted job, finished
-    /// ones included with `finished = true` (schedulers filter them).
-    /// Reference path for `EngineOptions::naive_hot_path`.
-    fn naive_view_jobs(&self) -> Vec<JobView> {
-        (0..self.store.len())
-            .filter(|&slot| self.store.submitted(slot))
-            .map(|slot| JobView {
-                id: self.store.id(slot),
-                demand: self.effective_demand(slot),
-                submit_ms: self.store.submit_ms(slot),
-                started: self.store.started(slot),
-                finished: self.store.finished(slot),
-                pending_tasks: self.store.pending_tasks(slot),
-                occupied: self.store.occupied(slot),
-            })
-            .collect()
-    }
-
-    /// Debug-build cross-check: the incremental view must equal ground
-    /// truth derived from the job store (runs every
-    /// `view_check_every`-th tick under `cargo test`, so the whole suite
-    /// exercises the equivalence).
-    #[cfg(debug_assertions)]
-    fn assert_view_consistent(&self) {
-        let mut live = 0;
-        for slot in 0..self.store.len() {
-            let id = self.store.id(slot);
-            if self.store.submitted(slot) && !self.store.finished(slot) {
-                let pos = self.view_pos[slot];
-                assert_ne!(pos, usize::MAX, "active job {id} missing from view");
-                let v = &self.view_jobs[pos];
-                assert_eq!(v.id, id);
-                assert!(!v.finished, "J{id} live entry tombstoned");
-                assert_eq!(v.started, self.store.started(slot), "J{id} started drift");
-                assert_eq!(
-                    v.pending_tasks,
-                    self.store.pending_tasks(slot),
-                    "J{id} pending drift"
-                );
-                assert_eq!(v.occupied, self.store.occupied(slot), "J{id} occupied drift");
-                live += 1;
-            } else {
-                assert_eq!(self.view_pos[slot], usize::MAX, "inactive job indexed in view");
-            }
-        }
-        assert_eq!(self.view_jobs.iter().filter(|v| !v.finished).count(), live);
-        assert_eq!(
-            self.view_jobs.iter().filter(|v| v.finished).count(),
-            self.view_tombstones
-        );
-    }
-
-    // --- event handlers --------------------------------------------------
-
-    /// Apply one feasible allocation: create containers in the YARN state
-    /// machine for up to `n` pending tasks of the job.
-    fn apply_allocation(&mut self, alloc: Allocation) {
-        let ji = self.job_index(alloc.job);
-        let mem = self.effective_demand(ji).mem_per_container().max(1);
-        for _ in 0..alloc.n {
-            if self.cluster.free() == 0 {
-                break;
-            }
-            let Some((phase, task)) = self.store.next_pending(ji) else {
-                break;
-            };
-            // With vector demands a slot-feasible grant can still fail
-            // node-level memory packing (fragmentation); for uniform
-            // demands `mem == 1` and free slots always admit, as before.
-            let Some(cid) = self.cluster.allocate(alloc.job, phase, task, mem, self.now)
-            else {
-                break;
-            };
-            self.store.begin_launch(ji, phase, task, cid);
-            let v = self.view_entry(ji);
-            v.occupied += 1;
-            v.pending_tasks -= 1;
-            self.record_transition(cid, ContainerState::New);
-            self.schedule_advance(cid);
-        }
-    }
-
-    fn record_transition(&mut self, cid: u32, to: ContainerState) {
-        let c = self.cluster.container(cid);
-        self.heartbeats.record(Transition {
-            time: self.now,
-            container: cid,
-            job: c.job,
-            task: c.task,
-            to,
-        });
-    }
-
-    /// Sample the delay for the container's next state hop and enqueue it.
-    fn schedule_advance(&mut self, cid: u32) {
-        let state = self.cluster.container(cid).state;
-        let d = &self.cfg.cluster.delays;
-        let median = match state {
-            ContainerState::New => d.new_to_reserved_ms,
-            ContainerState::Reserved => d.reserved_to_allocated_ms,
-            ContainerState::Allocated => d.allocated_to_acquired_ms,
-            ContainerState::Acquired => d.acquired_to_running_ms,
-            _ => return,
-        };
-        let delay = self.rng.lognormal(median, d.sigma).max(1.0) as Time;
-        self.queue.push(self.now + delay, Event::ContainerAdvance(cid));
-    }
-
-    fn on_container_advance(&mut self, cid: u32) {
-        // The queue cannot remove entries, so events for containers killed
-        // by a node crash still fire — and must be ignored.
-        if self.cluster.container(cid).dead {
-            return;
-        }
-        let new_state = self.cluster.container_mut(cid).advance(self.now);
-        self.record_transition(cid, new_state);
-        let (job, phase, task) = {
-            let c = self.cluster.container(cid);
-            (c.job, c.phase, c.task)
-        };
-        if new_state == ContainerState::Running {
-            let ji = self.job_index(job);
-            let dur = self.store.begin_run(ji, phase, task, cid, self.now);
-            self.view_entry(ji).started = true;
-            // Failure injection: the container may die mid-task; the task
-            // is then re-attempted in a fresh container (YARN AM behavior).
-            let pf = self.cfg.cluster.task_failure_prob;
-            if pf > 0.0 && self.rng.chance(pf) {
-                let at = self.now + (dur as f64 * self.rng.range_f64(0.1, 0.9)) as Time;
-                self.queue.push(at.max(self.now + 1), Event::TaskFail(cid));
-            } else {
-                self.queue.push(self.now + dur, Event::TaskFinish(cid));
-            }
-        } else {
-            self.schedule_advance(cid);
-        }
-    }
-
-    fn on_task_finish(&mut self, cid: u32) {
-        if self.cluster.container(cid).dead {
-            return;
-        }
-        let new_state = self.cluster.container_mut(cid).advance(self.now);
-        debug_assert_eq!(new_state, ContainerState::Completed);
-        self.record_transition(cid, ContainerState::Completed);
-        let (job, phase, task, run_start) = {
-            let c = self.cluster.container(cid);
-            (c.job, c.phase, c.task, c.run_start)
-        };
-        self.cluster.release(cid);
-
-        let ji = self.job_index(job);
-        let fin = self.store.finish_task(ji, phase, task, self.now);
-        debug_assert_eq!(fin.start, run_start);
-        self.view_entry(ji).occupied -= 1;
-        self.useful_work_ms += self.now - fin.start;
-        if self.open_outages > 0 {
-            self.note_recompletion(ji, phase, task);
-        }
-        self.sink.record(TaskTrace {
-            job,
-            phase,
-            task,
-            granted: run_start, // grant time folded into startup elsewhere
-            start: fin.start,
-            finish: self.now,
-        });
-        if fin.finished_job {
-            self.finished_jobs += 1;
-            self.view_retire(ji);
-        } else if fin.phase_advanced {
-            // Barrier crossed: the newly-runnable phase is all-Pending.
-            let pending = self.store.pending_tasks(ji);
-            self.view_entry(ji).pending_tasks = pending;
-        }
-    }
-
-    /// Container dies mid-task: release the slot, reset the task to
-    /// Pending so the scheduler re-grants it.
-    fn on_task_fail(&mut self, cid: u32) {
-        if self.cluster.container(cid).dead {
-            return;
-        }
-        let new_state = self.cluster.container_mut(cid).advance(self.now);
-        debug_assert_eq!(new_state, ContainerState::Completed);
-        self.record_transition(cid, ContainerState::Completed);
-        let (job, phase, task, run_start) = {
-            let c = self.cluster.container(cid);
-            (c.job, c.phase, c.task, c.run_start)
-        };
-        self.cluster.release(cid);
-        self.wasted_work_ms += self.now - run_start;
-        let ji = self.job_index(job);
-        let was_running = self.store.requeue_task(ji, phase, task);
-        debug_assert!(was_running.is_some(), "coin-flip fail of non-running task");
-        let v = self.view_entry(ji);
-        v.occupied -= 1;
-        v.pending_tasks += 1;
-        self.failures += 1;
-    }
-
-    /// A node crashes: its capacity leaves `total`, every container on it
-    /// dies, and the killed tasks requeue as Pending (with their accrued
-    /// run-time counted as lost).  No Completed heartbeat transition is
-    /// recorded for killed containers — the node vanished, it did not
-    /// report.
-    fn on_node_fail(&mut self, oidx: u32) {
-        let oidx = oidx as usize;
-        let node = self.outages[oidx].rec.node;
-        let killed = self.cluster.fail_node(node, self.now);
-        let mut lost: Time = 0;
-        for &cid in &killed {
-            let (job, phase, task) = {
-                let c = self.cluster.container(cid);
-                (c.job, c.phase, c.task)
-            };
-            let ji = self.job_index(job);
-            if let Some(start) = self.store.requeue_task(ji, phase, task) {
-                lost += self.now - start;
-            }
-            let v = self.view_entry(ji);
-            v.occupied -= 1;
-            v.pending_tasks += 1;
-            self.outages[oidx].waiting.push((ji, phase, task));
-        }
-        self.lost_attempts += killed.len() as u32;
-        self.lost_work_ms += lost;
-        self.wasted_work_ms += lost;
-        let o = &mut self.outages[oidx];
-        o.fired = true;
-        o.rec.killed = killed.len() as u32;
-        o.rec.lost_work_ms = lost;
-        self.open_outages += 1;
-    }
-
-    /// The node comes back: its (empty) slots rejoin capacity.  The outage
-    /// is healed once the node is up AND every task it killed re-completed.
-    fn on_node_recover(&mut self, oidx: u32) {
-        let oidx = oidx as usize;
-        let node = self.outages[oidx].rec.node;
-        self.cluster.recover_node(node);
-        let o = &mut self.outages[oidx];
-        o.node_back_at = Some(self.now);
-        if o.waiting.is_empty() && o.rec.recovered_at.is_none() {
-            o.rec.recovered_at = Some(self.now);
-            self.open_outages -= 1;
-        }
-    }
-
-    /// A task just completed; clear it from every open outage still
-    /// waiting on it (a task can appear in several if re-killed).  Only
-    /// called while an outage is open, so the empty-plan fast path never
-    /// touches this.
-    fn note_recompletion(&mut self, ji: usize, phase: usize, task: usize) {
-        let now = self.now;
-        let mut healed = 0;
-        for o in self.outages.iter_mut() {
-            if !o.fired || o.rec.recovered_at.is_some() {
-                continue;
-            }
-            if let Some(p) = o.waiting.iter().position(|&w| w == (ji, phase, task)) {
-                o.waiting.swap_remove(p);
-                if o.waiting.is_empty() && o.node_back_at.is_some() {
-                    o.rec.recovered_at = Some(now);
-                    healed += 1;
-                }
-            }
-        }
-        self.open_outages -= healed;
-    }
-
-    fn on_sched_tick(&mut self) {
-        self.ticks += 1;
-        let transitions = self.heartbeats.drain();
-        #[cfg(debug_assertions)]
-        {
-            self.ticks_since_check += 1;
-            if self.ticks_since_check >= self.view_check_every {
-                self.ticks_since_check = 0;
-                self.assert_view_consistent();
-            }
-        }
-        // Indexed path: borrow the maintained active-job slice — O(1).
-        // Naive path: rebuild from scratch like the seed engine did.
-        let scratch: Vec<JobView>;
-        let view_jobs: &[JobView] = if self.opts.naive_hot_path {
-            scratch = self.naive_view_jobs();
-            &scratch
-        } else {
-            &self.view_jobs
-        };
-        let view = ClusterView {
-            now: self.now,
-            free: self.cluster.free(),
-            total: self.cluster.total(),
-            free_mem: self.cluster.free_mem(),
-            total_mem: self.cluster.total_mem(),
-            jobs: view_jobs,
-            transitions: &transitions,
-        };
-        let allocs = self.sched.schedule(&view);
-        // Feasibility enforcement: total grants bounded by free capacity
-        // on every axis (the memory clamp is a no-op for uniform demands,
-        // where footprint is 1 and free_mem tracks free exactly).
-        let mut free = self.cluster.free();
-        let mut free_mem = self.cluster.free_mem();
-        for a in allocs {
-            let ji = self.job_index(a.job);
-            let pending = self.store.pending_tasks(ji);
-            let mem = self.effective_demand(ji).mem_per_container().max(1);
-            let n = a.n.min(pending).min(free).min(free_mem / mem);
-            if n == 0 {
-                continue;
-            }
-            free -= n;
-            free_mem -= n * mem;
-            self.apply_allocation(Allocation { job: a.job, n });
-        }
-        let used = self.cluster.used();
-        self.util_sink.record(self.now, used);
-        self.util_accum.push(self.now, used);
-        if let Some(delta) = self.sched.reserve_ratio() {
-            self.delta_sink.record(self.now, delta);
-            self.delta_accum.push(self.now, delta);
-        }
-        debug_assert!(self.cluster.conservation_holds());
-        if !self.all_finished() {
-            self.queue
-                .push(self.now + self.cfg.cluster.hb_ms, Event::SchedTick);
-        }
+        Engine { cell: Cell::with_options(cfg, specs, sched, opts) }
     }
 
     /// Advance the simulation by exactly one event.  Returns `false` once
-    /// the run is over (every job finished, or the queue drained).
-    ///
-    /// `run()` is just `while self.step() {}` + [`Self::finish`]; the
-    /// stepping form exists so tests can interleave read-only
-    /// [`Self::probe`]s with live execution and fingerprint the state
-    /// between events (tests/properties.rs probe-purity property).
+    /// the run is over.  See [`Cell::step`].
     pub fn step(&mut self) -> bool {
-        if self.all_finished() {
-            return false;
-        }
-        let Some((t, ev)) = self.queue.pop() else {
-            return false;
-        };
-        assert!(t >= self.now, "time went backwards");
-        self.now = t;
-        if self.now > self.max_ms {
-            panic!("simulation exceeded {} ms — livelocked schedule?", self.max_ms);
-        }
-        self.events += 1;
-        match ev {
-            Event::JobSubmit(id) => {
-                let ji = self.job_index(id);
-                self.store.mark_submitted(ji);
-                self.view_insert(ji);
-            }
-            Event::SchedTick => self.on_sched_tick(),
-            Event::ContainerAdvance(cid) => self.on_container_advance(cid),
-            Event::TaskFinish(cid) => self.on_task_finish(cid),
-            Event::TaskFail(cid) => self.on_task_fail(cid),
-            Event::NodeFail(o) => self.on_node_fail(o),
-            Event::NodeRecover(o) => self.on_node_recover(o),
-            // Reservation timeouts live in the admission layer's private
-            // queue (live/admission.rs), never in the engine's; the arm
-            // exists only for exhaustiveness and is inert by design.
-            Event::ReservationExpire(_) => {}
-        }
-        !self.all_finished()
+        self.cell.step()
     }
 
-    /// Read-only admission probe against the live engine: snapshot the
-    /// scheduler's tunable state (or a neutral view-only snapshot for
-    /// baselines), overlay one hypothetical `demand`-container arrival,
-    /// and shadow-replay it.  Purity is structural — `&self`, no RNG
-    /// stream access, no event pushes — and is property-tested: N probes
-    /// leave [`Self::state_fingerprint`] exactly unchanged.
+    /// Read-only admission probe against the live engine.  See
+    /// [`Cell::probe`].
     pub fn probe(&self, demand: u32) -> shadow::ShadowScore {
-        let jobs = self.naive_view_jobs();
-        let view = ClusterView {
-            now: self.now,
-            free: self.cluster.free(),
-            total: self.cluster.total(),
-            free_mem: self.cluster.free_mem(),
-            total_mem: self.cluster.total_mem(),
-            jobs: &jobs,
-            transitions: &[],
-        };
-        let snap = self.sched.snapshot(&view).unwrap_or_else(|| {
-            SchedSnapshot::of_view(
-                view.now,
-                view.free,
-                view.total,
-                view.jobs,
-                self.sched.reserve_ratio().unwrap_or(self.cfg.sched.delta0),
-                self.cfg.sched.theta,
-            )
-        });
-        let mut window = ShadowWindow::new(1);
-        let next_id = jobs.iter().map(|j| j.id).max().unwrap_or(0) + 1;
-        window.push(ShadowEvent::Submit { job: next_id, demand, at: self.now });
-        shadow::replay(&snap, &window, snap.delta, shadow::REPLAY_TICKS)
+        self.cell.probe(demand)
     }
 
-    /// FNV-1a-64 digest of the full observable simulation state: job-store
-    /// lanes, event-queue shape, the scheduler view, classifier/estimator
-    /// state and δ (via the scheduler snapshot), the exact metric
-    /// accumulators, and every progress counter.  Equal fingerprints mean
-    /// the two engines are in identical simulation states; the probe-purity
-    /// property (tests/properties.rs) pins that probes never move it.
+    /// FNV-1a-64 digest of the full observable simulation state.  See
+    /// [`Cell::state_fingerprint`].
     pub fn state_fingerprint(&self) -> u64 {
-        let jobs = self.naive_view_jobs();
-        let view = ClusterView {
-            now: self.now,
-            free: self.cluster.free(),
-            total: self.cluster.total(),
-            free_mem: self.cluster.free_mem(),
-            total_mem: self.cluster.total_mem(),
-            jobs: &jobs,
-            transitions: &[],
-        };
-        let snap = self.sched.snapshot(&view);
-        let repr = format!(
-            "{}|{}|{}|{}|{:?}|{}|{}|{:?}|{:?}|{}|{}|{:?}|{:?}|{:?}|{:?}",
-            self.now,
-            self.events,
-            self.ticks,
-            self.queue.len(),
-            self.queue.peek_time(),
-            self.cluster.free(),
-            self.cluster.total(),
-            self.sched.reserve_ratio(),
-            snap,
-            self.finished_jobs,
-            self.failures,
-            jobs,
-            self.store,
-            self.util_accum,
-            self.delta_accum,
-        );
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in repr.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
-        h
+        self.cell.state_fingerprint()
     }
 
     /// Run to completion and produce the result bundle.
@@ -966,60 +237,28 @@ impl Engine {
     /// remain unfinished (starvation) — callers drive [`Self::step`] to
     /// `false` first.
     pub fn finish(self) -> RunResult {
-        assert!(self.all_finished(), "run ended with unfinished jobs (starvation)");
-
-        let jobs: Vec<JobMetrics> = self.store.metrics();
-        // Utilization comes from the online accumulator, never from the
-        // retained samples — exact under every metric-sink policy.
-        let system = SystemMetrics::of(&jobs, &self.util_accum);
-        let (trace, tasks_recorded) = self.sink.finish();
-        let (util_history, util_recorded) = self.util_sink.finish();
-        let (delta_history, delta_recorded) = self.delta_sink.finish();
-        RunResult {
-            scheduler: self.sched.name().to_string(),
-            jobs,
-            system,
-            trace,
-            delta_history,
-            util_history,
-            util: self.util_accum,
-            delta: self.delta_accum,
-            util_recorded,
-            delta_recorded,
-            failures: self.failures,
-            lost_attempts: self.lost_attempts,
-            lost_work_ms: self.lost_work_ms,
-            useful_work_ms: self.useful_work_ms,
-            wasted_work_ms: self.wasted_work_ms,
-            attempts: self.cluster.containers.len() as u32,
-            outages: self
-                .outages
-                .iter()
-                .filter(|o| o.fired)
-                .map(|o| o.rec)
-                .collect(),
-            events: self.events,
-            sched_ticks: self.ticks,
-            tasks_recorded,
-            transitions_recorded: self.heartbeats.recorded(),
-            retained_transitions: self.heartbeats.history_len(),
-        }
+        self.cell.finish()
     }
 }
 
 /// Convenience: build + run one experiment with the configured scheduler.
 pub fn run_experiment(cfg: &ExperimentConfig, specs: Vec<JobSpec>) -> RunResult {
-    let sched = crate::sched::build(&cfg.sched, cfg.cluster.total_containers());
-    Engine::new(cfg.clone(), specs, sched).run()
+    run_experiment_with(cfg, specs, EngineOptions::default())
 }
 
 /// `run_experiment` with explicit [`EngineOptions`] (benches use this for
-/// trace opt-out and for the naive-path speedup baseline).
+/// trace opt-out and for the naive-path speedup baseline).  A config with
+/// `federation.cells > 1` runs the full federation and returns the merged
+/// result, so sweeps and shards parallelize federated configurations on
+/// the existing infrastructure with no further plumbing.
 pub fn run_experiment_with(
     cfg: &ExperimentConfig,
     specs: Vec<JobSpec>,
     opts: EngineOptions,
 ) -> RunResult {
+    if cfg.federation.cells > 1 {
+        return crate::federation::run_federation(cfg, specs, opts).merged();
+    }
     let sched = crate::sched::build(&cfg.sched, cfg.cluster.total_containers());
     Engine::with_options(cfg.clone(), specs, sched, opts).run()
 }
@@ -1028,7 +267,7 @@ pub fn run_experiment_with(
 mod tests {
     use super::*;
     use crate::config::SchedKind;
-    use crate::jobs::{PhaseKind, PhaseSpec, Platform};
+    use crate::jobs::{Demand, PhaseKind, PhaseSpec, Platform};
     use crate::sched::dress::reserve::{DELTA_MAX, DELTA_MIN};
 
     fn tiny_job(id: u32, submit: Time, demand: u32, durs: &[Time]) -> JobSpec {

@@ -276,6 +276,32 @@ impl OutageRecord {
     }
 }
 
+/// What one *cell-level* outage did to a federated run — filled in by
+/// `federation::Federation`.  A cell outage reuses the [`FaultPlan`]
+/// grammar with cell indices in place of node ids: every node of the cell
+/// crashes at `at_ms` and recovers at `at_ms + down_ms`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellOutageRecord {
+    /// Index of the cell that died.
+    pub cell: u32,
+    pub at_ms: Time,
+    pub down_ms: Time,
+    /// Submitted-but-unfinished jobs salvaged from the dead cell and
+    /// re-routed to surviving cells.
+    pub salvaged: u32,
+    /// When the outage was fully healed: the cell is back up AND every
+    /// job salvaged from it has completed somewhere in the federation.
+    /// `None` when the federation finished before the downtime elapsed.
+    pub recovered_at: Option<Time>,
+}
+
+impl CellOutageRecord {
+    /// Cell death → fully-healed latency.
+    pub fn time_to_recover_ms(&self) -> Option<Time> {
+        self.recovered_at.map(|t| t - self.at_ms)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

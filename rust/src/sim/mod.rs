@@ -1,6 +1,9 @@
-//! Discrete-event simulation core: event queue (calendar or heap), engine,
-//! pluggable trace + per-tick metric sinks, trace recording.
+//! Discrete-event simulation core: the reusable [`cell::Cell`] (event
+//! queue, scheduler, cluster, job store, fault plan, metric sinks), the
+//! single-cell [`Engine`] wrapper, and the pluggable trace + per-tick
+//! metric sinks.  `federation/` composes N cells on top of this module.
 
+pub mod cell;
 pub mod engine;
 pub mod event;
 pub mod fault;
@@ -8,10 +11,11 @@ pub mod metric;
 pub mod sink;
 pub mod trace;
 
+pub use cell::{Cell, CellOutput};
 pub use engine::{run_experiment, run_experiment_with, Engine, EngineOptions, RunResult};
 pub use event::{Event, EventQueue, QueueKind};
 pub use crate::jobs::JobLayout;
-pub use fault::{FaultPlan, Outage, OutageRecord, StochasticFaults};
+pub use fault::{CellOutageRecord, FaultPlan, Outage, OutageRecord, StochasticFaults};
 pub use metric::{MetricSink, MetricSinkKind};
 pub use sink::{SinkKind, TraceSink};
 pub use trace::{TaskTrace, TraceRecorder};

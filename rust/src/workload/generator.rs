@@ -185,6 +185,50 @@ pub fn congested_burst_vec(n: u32, arrival_mean_ms: Time, seed: u64) -> Vec<JobS
         .collect()
 }
 
+/// [`congested_burst_vec`] with **per-task** memory jitter: on top of the
+/// per-job multiplier and sub-container jitter, every task of the map
+/// phase draws its own `0..=2` extra memory units, summed into the job's
+/// memory demand.  This widens the spread of `mem_per_container()`
+/// footprints well beyond the per-job draw, which is what federated
+/// `least-load`/`by-category` routing needs to differentiate cells on.
+///
+/// A separate preset (CLI `burst-vec-jitter`) rather than a flag on
+/// [`congested_burst_vec`]: the extra draws shift the shared
+/// `seed ^ 0xB0B5_7EC0` stream, and the existing `burst-vec` goldens must
+/// stay bit-stable.  Deterministic per seed.
+pub fn congested_burst_vec_jitter(n: u32, arrival_mean_ms: Time, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed ^ 0xB0B5_7EC0);
+    let zipf = ZipfSampler::new(DEMAND_CAP as usize, 1.1);
+    let mut submit: Time = 0;
+    (0..n)
+        .map(|i| {
+            let cpu = (zipf.draw(&mut rng) as u32).max(1);
+            let mult = 1 + rng.index(4) as u32;
+            let jitter = rng.index(cpu as usize) as u32;
+            // Per-task jitter: one draw per map task, summed so the
+            // job-level vector stays the single source of truth (mem >=
+            // cpu still holds, keeping every phase width legal).
+            let task_jitter: u32 = (0..cpu).map(|_| rng.index(3) as u32).sum();
+            let demand = Demand::new(cpu, cpu * mult + jitter + task_jitter);
+            let width = cpu;
+            let mut phases = vec![burst_phase(&mut rng, PhaseKind::Map, width)];
+            if rng.chance(0.25) {
+                phases.push(burst_phase(&mut rng, PhaseKind::Reduce, (width / 2).max(1)));
+            }
+            let gap = (-rng.next_f64().max(1e-12).ln() * arrival_mean_ms as f64) as Time;
+            submit += gap;
+            JobSpec {
+                id: i + 1,
+                name: format!("burst-vec-jitter-{}", i + 1),
+                platform: if i % 2 == 0 { Platform::MapReduce } else { Platform::Spark },
+                submit_ms: submit,
+                demand,
+                phases,
+            }
+        })
+        .collect()
+}
+
 /// The paper's Fig. 1 motivating workload: 6-container cluster, 4 jobs
 /// submitted 1 s apart — J1 (R3, L10), J2 (R4, L20), J3 (R2, L5),
 /// J4 (R2, L8).  Single-phase jobs with uniform task lengths.
@@ -301,6 +345,29 @@ mod tests {
         assert!(
             jobs.iter().zip(&scalar).any(|(a, b)| a.demand.cpu != b.demand.cpu),
             "vector preset must not reuse the scalar preset's RNG stream"
+        );
+    }
+
+    #[test]
+    fn congested_burst_vec_jitter_widens_footprints_without_touching_base() {
+        let jobs = congested_burst_vec_jitter(300, 100, 42);
+        assert_eq!(jobs.len(), 300);
+        for j in &jobs {
+            j.validate().unwrap();
+            assert!((1..=DEMAND_CAP).contains(&j.demand.cpu));
+            assert!(j.demand.mem >= j.demand.cpu, "mem axis must cover every task");
+        }
+        assert!(jobs.iter().any(|j| j.demand.mem_per_container() > 1));
+        // Deterministic per seed, distinct across seeds.
+        assert_eq!(congested_burst_vec_jitter(300, 100, 42), jobs);
+        assert_ne!(congested_burst_vec_jitter(300, 100, 43), jobs);
+        // The base preset is untouched: same seed, different draws (the
+        // per-task jitter shifts the stream), and the base's own golden
+        // (congested_burst_vec_draws_vector_demands) still pins its bytes.
+        let base = congested_burst_vec(300, 100, 42);
+        assert!(
+            jobs.iter().zip(&base).any(|(a, b)| a.demand != b.demand),
+            "jitter preset must not collapse into the base preset"
         );
     }
 

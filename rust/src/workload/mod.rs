@@ -16,7 +16,8 @@ pub mod tracefile;
 
 pub use dataset::Dataset;
 pub use generator::{
-    congested_burst, congested_burst_vec, generate, motivating_example, WorkloadMix,
+    congested_burst, congested_burst_vec, congested_burst_vec_jitter, generate,
+    motivating_example, WorkloadMix,
 };
 pub use hibench::{benchmark_names, build_job, Benchmark};
 pub use skew::zipf_partition_weights;
@@ -43,6 +44,9 @@ pub enum WorkloadSource {
     /// [`congested_burst_vec`] — the burst preset with stochastic
     /// *vector* (cpu × mem) demand draws on an isolated RNG stream.
     CongestedBurstVec { n: u32, arrival_mean_ms: u64 },
+    /// [`congested_burst_vec_jitter`] — the vector preset plus per-task
+    /// memory jitter (own preset so `burst-vec` goldens stay bit-stable).
+    CongestedBurstVecJitter { n: u32, arrival_mean_ms: u64 },
     /// A recorded trace ([`tracefile`]): seed-independent job specs.
     /// `label` is the display name (usually the file path); `text` is the
     /// full trace body, validated at construction by [`Self::trace`].
@@ -65,6 +69,9 @@ impl WorkloadSource {
             WorkloadSource::Generate { n, mix, .. } => format!("generate-{n}-{mix:?}"),
             WorkloadSource::CongestedBurst { n, .. } => format!("burst-{n}"),
             WorkloadSource::CongestedBurstVec { n, .. } => format!("burst-vec-{n}"),
+            WorkloadSource::CongestedBurstVecJitter { n, .. } => {
+                format!("burst-vec-jitter-{n}")
+            }
             WorkloadSource::Trace { label, .. } => label.clone(),
         }
     }
@@ -82,6 +89,9 @@ impl WorkloadSource {
             }
             WorkloadSource::CongestedBurstVec { n, arrival_mean_ms } => {
                 congested_burst_vec(*n, *arrival_mean_ms, seed)
+            }
+            WorkloadSource::CongestedBurstVecJitter { n, arrival_mean_ms } => {
+                congested_burst_vec_jitter(*n, *arrival_mean_ms, seed)
             }
             WorkloadSource::Trace { label: _, text } => {
                 from_trace(text).expect("trace validated by WorkloadSource::trace")
@@ -119,6 +129,9 @@ mod tests {
         let v = WorkloadSource::CongestedBurstVec { n: 5, arrival_mean_ms: 100 };
         assert_eq!(v.build(42), congested_burst_vec(5, 100, 42));
         assert_eq!(v.build(42).len(), 5);
+        let j = WorkloadSource::CongestedBurstVecJitter { n: 5, arrival_mean_ms: 100 };
+        assert_eq!(j.build(42), congested_burst_vec_jitter(5, 100, 42));
+        assert_eq!(j.label(), "burst-vec-jitter-5");
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Federation acceptance suite.
+//!
+//! 1. **1-cell bit-identity** — a federation of one cell, under every
+//!    router policy, is bit-identical to the plain engine for all five
+//!    schedulers, with and without fault plans, with and without the
+//!    shadow δ tuner, on scalar and vector demands.  The `Cell` extraction
+//!    and the federation driver are pure re-plumbing: same event order,
+//!    same RNG draws, same metrics.
+//! 2. **Migration conservation** — across randomized cell-failure
+//!    scripts, every attempt is accounted for
+//!    (`attempts == tasks_recorded + failures + lost_attempts`) and every
+//!    job completes exactly once, even when jobs migrate between cells.
+//! 3. **Cell-death recovery** — a 3-cell `by-category` federation under a
+//!    cell-death plan reports nonzero migrations and a finite
+//!    time-to-recover through the merged `RunResult`.
+//! 4. **Fingerprints** — federated and single-cell sweep grids (and
+//!    different tuner cadences) hash to different fingerprints, so their
+//!    shards refuse to merge.
+
+use dress::config::{ExperimentConfig, RouterKind, SchedKind};
+use dress::expt::shard::grid_fingerprint;
+use dress::expt::sweep::{SweepGrid, SweepWorkload};
+use dress::federation::run_federation;
+use dress::jobs::{Demand, JobSpec, PhaseKind, PhaseSpec, Platform};
+use dress::sim::{run_experiment_with, EngineOptions, FaultPlan, RunResult};
+use dress::workload::{congested_burst_vec, generate, WorkloadMix};
+
+const KINDS: [SchedKind; 5] = [
+    SchedKind::Fifo,
+    SchedKind::Fair,
+    SchedKind::Capacity,
+    SchedKind::Dress,
+    SchedKind::MaxWeight,
+];
+
+const ROUTERS: [RouterKind; 3] =
+    [RouterKind::RoundRobin, RouterKind::LeastLoad, RouterKind::ByCategory];
+
+/// The simulation fields of a run — everything except the federation
+/// metadata (`cells`/`routing`), which legitimately differs between a
+/// plain engine run (no routing table) and a 1-cell federation (routing
+/// `[n]`).  Bit-identity is judged on this.
+fn sim_fingerprint(r: &RunResult) -> (u64, u64, u64, String, Vec<(u64, f64)>, u64, u64, u64, u32, u32, u64) {
+    (
+        r.system.makespan_ms,
+        r.events,
+        r.tasks_recorded,
+        format!("{:?}", r.jobs),
+        r.delta_history.clone(),
+        r.util.area_ms,
+        r.util.span_ms,
+        r.util.samples,
+        r.failures,
+        r.lost_attempts,
+        r.jobs.iter().map(|j| j.waiting_ms).sum(),
+    )
+}
+
+fn federated_vs_plain(cfg: &ExperimentConfig, specs: Vec<JobSpec>, opts: EngineOptions) {
+    let plain = run_experiment_with(cfg, specs.clone(), opts);
+    let fed = run_federation(cfg, specs, opts).merged();
+    assert_eq!(fed.cells, 1);
+    assert_eq!(fed.migrations, 0, "a 1-cell federation cannot migrate");
+    assert_eq!(
+        sim_fingerprint(&fed),
+        sim_fingerprint(&plain),
+        "1-cell federation diverged from plain engine ({:?}, {:?})",
+        cfg.sched.kind,
+        cfg.federation.router,
+    );
+    assert_eq!(fed.trace.tasks, plain.trace.tasks, "trace drift");
+}
+
+#[test]
+fn one_cell_federation_bit_identical_all_schedulers_and_routers() {
+    let specs = generate(12, WorkloadMix::Mixed, 0.3, 2_000, 42);
+    for kind in KINDS {
+        for router in ROUTERS {
+            let mut cfg = ExperimentConfig::default();
+            cfg.sched.kind = kind;
+            cfg.federation.cells = 1;
+            cfg.federation.router = router;
+            federated_vs_plain(&cfg, specs.clone(), EngineOptions::default());
+        }
+    }
+}
+
+#[test]
+fn one_cell_federation_bit_identical_under_node_faults() {
+    // Node-level fault plans live inside the cell; driving the cell
+    // through `advance_to` chunks must pop the identical event sequence.
+    let specs = generate(16, WorkloadMix::Mixed, 0.3, 1_500, 11);
+    for kind in KINDS {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sched.kind = kind;
+        cfg.faults = FaultPlan::empty().with_outage(30_000, 0, 45_000);
+        cfg.federation.cells = 1;
+        federated_vs_plain(&cfg, specs.clone(), EngineOptions::default());
+    }
+}
+
+#[test]
+fn one_cell_federation_bit_identical_with_tuner_and_failures() {
+    let specs = generate(12, WorkloadMix::Mixed, 0.4, 1_500, 7);
+    let tuned = EngineOptions { tune_delta: true, ..Default::default() };
+    for kind in [SchedKind::Dress, SchedKind::Capacity] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sched.kind = kind;
+        cfg.cluster.task_failure_prob = 0.2;
+        cfg.federation.cells = 1;
+        cfg.federation.router = RouterKind::ByCategory;
+        federated_vs_plain(&cfg, specs.clone(), tuned);
+    }
+}
+
+#[test]
+fn one_cell_federation_bit_identical_on_vector_demands() {
+    let specs = congested_burst_vec(80, 100, 0xFEED);
+    assert!(specs.iter().any(|s| !s.demand.is_uniform()), "preset drew no vector demands");
+    for kind in KINDS {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sched.kind = kind;
+        cfg.federation.cells = 1;
+        cfg.federation.router = RouterKind::LeastLoad;
+        federated_vs_plain(&cfg, specs.clone(), EngineOptions::default());
+    }
+}
+
+/// Deterministic hand-built workload for the death/recovery tests: SD
+/// jobs (demand 2 « θ·capacity = 4) and LD jobs (demand 30), explicit
+/// task durations so the timeline is analyzable.
+fn split_specs(n_sd: u32, n_ld: u32) -> Vec<JobSpec> {
+    let mut specs = Vec::new();
+    for i in 0..(n_sd + n_ld) {
+        let demand = if i < n_sd { Demand::scalar(2) } else { Demand::scalar(30) };
+        let s = JobSpec {
+            id: i + 1,
+            name: format!("j{}", i + 1),
+            platform: Platform::MapReduce,
+            submit_ms: i as u64 * 200,
+            demand,
+            phases: vec![PhaseSpec::new(PhaseKind::Map, &[8_000; 4])],
+        };
+        s.validate().expect("split specs must be valid");
+        specs.push(s);
+    }
+    specs
+}
+
+#[test]
+fn three_cell_by_category_death_reports_migrations_and_recovery() {
+    // 3 cells: SD group {0, 1}, LD group {2}.  Cell 1 holds every other
+    // SD job; it dies at 3s (all jobs already submitted by 2.2s, none can
+    // have finished — each needs 2 rounds of 8s tasks) and comes back at
+    // 8s, well inside the run (the LD cell works far longer).  Salvaged
+    // jobs re-route within the SD group, so migrations are guaranteed.
+    let mut cfg = ExperimentConfig::default();
+    cfg.sched.kind = SchedKind::Dress;
+    cfg.federation.cells = 3;
+    cfg.federation.router = RouterKind::ByCategory;
+    cfg.federation.cell_faults = FaultPlan::empty().with_outage(3_000, 1, 5_000);
+    cfg.validate().expect("config must validate");
+    let specs = split_specs(8, 4);
+    let res = run_federation(&cfg, specs, EngineOptions::default()).merged();
+
+    assert_eq!(res.cells, 3);
+    assert_eq!(res.routing.len(), 3);
+    assert_eq!(res.routing.iter().sum::<u32>(), 12, "every job routed exactly once");
+    assert_eq!(res.routing[2], 4, "LD group is cell 2 alone");
+    assert!(res.migrations > 0, "cell death must migrate the salvaged jobs");
+
+    assert_eq!(res.cell_outages.len(), 1);
+    let o = &res.cell_outages[0];
+    assert_eq!(o.cell, 1);
+    assert!(o.salvaged > 0, "dead cell held jobs; none salvaged");
+    let ttr = o
+        .time_to_recover_ms()
+        .expect("downtime elapses inside the run: recovery must be observed");
+    assert!(ttr >= o.down_ms, "cannot fully heal before the cell is back up");
+
+    // Every job completes exactly once, with queueing history intact.
+    assert_eq!(res.jobs.len(), 12);
+    let mut ids: Vec<u32> = res.jobs.iter().map(|j| j.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 12, "a job completed in more than one cell");
+
+    // The imbalance stream sampled a real ratio at some heartbeat.
+    assert!(res.imbalance_max >= 1.0, "imbalance never sampled");
+    assert!(res.imbalance_mean > 0.0 && res.imbalance_mean <= res.imbalance_max);
+}
+
+#[test]
+fn migration_conserves_attempts_across_random_failure_scripts() {
+    // Property: under randomized cell-death scripts (different cells,
+    // times, downtimes, thresholds, schedulers), the merged attempt
+    // ledger balances exactly and no job is lost or duplicated.
+    for trial in 0u64..6 {
+        let cells = 2 + (trial % 2) as u32; // 2 or 3 cells
+        let victim = (trial % cells as u64) as u16;
+        let at = 2_000 + (trial * 137) % 3_000;
+        let down = 3_000 + (trial * 911) % 4_000;
+        let mut cfg = ExperimentConfig::default();
+        cfg.sched.kind = KINDS[(trial % 5) as usize];
+        cfg.cluster.task_failure_prob = if trial % 2 == 0 { 0.1 } else { 0.0 };
+        cfg.federation.cells = cells;
+        cfg.federation.router = ROUTERS[(trial % 3) as usize];
+        cfg.federation.migrate_threshold = (trial % 3) as u32;
+        cfg.federation.cell_faults = FaultPlan::empty().with_outage(at, victim, down);
+        cfg.validate().expect("script config must validate");
+
+        let n_jobs = 10 + (trial as u32 % 5);
+        let specs = generate(n_jobs, WorkloadMix::Mixed, 0.4, 700, 100 + trial);
+        let res = run_federation(&cfg, specs, EngineOptions::default()).merged();
+
+        assert_eq!(
+            res.attempts as u64,
+            res.tasks_recorded + res.failures as u64 + res.lost_attempts as u64,
+            "trial {trial}: attempt ledger out of balance \
+             (attempts {}, tasks {}, failures {}, lost {})",
+            res.attempts,
+            res.tasks_recorded,
+            res.failures,
+            res.lost_attempts,
+        );
+        assert_eq!(res.jobs.len(), n_jobs as usize, "trial {trial}: job lost or duplicated");
+        let mut ids: Vec<u32> = res.jobs.iter().map(|j| j.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n_jobs as usize, "trial {trial}: duplicate completion");
+        assert_eq!(res.routing.iter().sum::<u32>(), n_jobs, "trial {trial}: routing leak");
+
+        // Determinism: the same script replays bit-identically.
+        let specs = generate(n_jobs, WorkloadMix::Mixed, 0.4, 700, 100 + trial);
+        let again = run_federation(&cfg, specs, EngineOptions::default()).merged();
+        assert_eq!(sim_fingerprint(&res), sim_fingerprint(&again), "trial {trial}: non-deterministic");
+        assert_eq!(res.migrations, again.migrations, "trial {trial}: migration drift");
+    }
+}
+
+#[test]
+fn federation_changes_the_grid_fingerprint() {
+    let grid = |cells: u32, router: RouterKind, tune_every: u32| -> SweepGrid {
+        let mut base = ExperimentConfig::default();
+        base.federation.cells = cells;
+        base.federation.router = router;
+        let mut opts = EngineOptions::default();
+        opts.tune_every = tune_every;
+        SweepGrid {
+            base,
+            seeds: vec![1, 2],
+            scheds: KINDS.to_vec(),
+            workloads: vec![SweepWorkload::Generate {
+                n: 4,
+                mix: WorkloadMix::Mixed,
+                small_frac: 0.3,
+                arrival_ms: 2_000,
+            }],
+            opts,
+        }
+    };
+    let single = grid_fingerprint(&grid(1, RouterKind::RoundRobin, 16));
+    let fed = grid_fingerprint(&grid(3, RouterKind::RoundRobin, 16));
+    assert_ne!(single, fed, "cells count invisible to the fingerprint");
+    let by_cat = grid_fingerprint(&grid(3, RouterKind::ByCategory, 16));
+    assert_ne!(fed, by_cat, "router policy invisible to the fingerprint");
+    let cadence = grid_fingerprint(&grid(1, RouterKind::RoundRobin, 8));
+    assert_ne!(single, cadence, "tuner cadence invisible to the fingerprint");
+}
